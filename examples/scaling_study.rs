@@ -1,0 +1,44 @@
+//! Scaling study — regenerates the paper's Fig. 4b narrative end to end:
+//! DES "measurements" on prototype sizes (<=6 nodes), analytical model
+//! beyond, both batch sizes, plus the smart-NIC bandwidth ablation
+//! (40 -> 100 -> 400 Gbps NICs, Sec. V-A's forward-looking variants).
+
+use ai_smartnic::analytic::model::{iteration, SystemKind};
+use ai_smartnic::experiments::fig4b;
+use ai_smartnic::sysconfig::{SystemParams, Workload};
+use ai_smartnic::util::table::{fnum, Table};
+
+fn main() {
+    let nodes = [1usize, 2, 3, 4, 5, 6, 8, 12, 16, 24, 32];
+    for batch in [448usize, 1792] {
+        let series = fig4b::run(&nodes, batch);
+        fig4b::print(&series, batch);
+    }
+
+    // ---- NIC line-rate ablation (beyond the paper's prototype) --------
+    println!("smart-NIC line-rate ablation (B=448, model, normalized to 1 node):\n");
+    let w = Workload::paper_mlp(448);
+    let t1 = iteration(
+        SystemKind::SmartNic { bfp: false },
+        &SystemParams::smartnic_40g(),
+        &w,
+        1,
+    )
+    .t_total;
+    let mut t = Table::new(&["NIC speed", "6n", "16n", "32n", "32n w/ BFP"]);
+    for gbps in [40.0, 100.0, 400.0] {
+        let sys = SystemParams::smartnic_at(gbps);
+        let norm = |n: usize, bfp: bool| {
+            n as f64 * t1 / iteration(SystemKind::SmartNic { bfp }, &sys, &w, n).t_total
+        };
+        t.row(&[
+            format!("{gbps:.0} Gbps"),
+            fnum(norm(6, false), 1),
+            fnum(norm(16, false), 1),
+            fnum(norm(32, false), 1),
+            fnum(norm(32, true), 1),
+        ]);
+    }
+    t.print();
+    println!("\nat 100+ Gbps the ring stops being the bottleneck; BFP's benefit shifts entirely to PCIe relief");
+}

@@ -1,0 +1,124 @@
+//! E8 — the end-to-end training driver (the repo's full-stack proof).
+//!
+//! Trains the paper's workload shape — a deep symmetric MLP — across
+//! data-parallel workers with every layer of this repo in the loop:
+//!
+//!   L1  Pallas kernels (matmul / BFP / adder) inside the AOT artifacts
+//!   L2  the layerwise JAX model, AOT-lowered to HLO text
+//!   L3  this Rust coordinator: PJRT execution + real ring all-reduce
+//!       with real BFP16 wire quantization, per the Fig. 3b schedule
+//!
+//! The paper's full-size experiment is a 20-layer 2048^2 MLP (83.9M
+//! params); on this 1-core CPU testbed the default is the same *depth*
+//! at reduced width (8 x 256^2, via the standard artifact set) for a few
+//! hundred steps, logging the loss curve.  `--paper-scale` runs the real
+//! 2048-wide, 448-batch shape for a few steps (requires
+//! `make artifacts-full`) and reports per-phase times used to calibrate
+//! the simulator's compute model.
+//!
+//! Run: `cargo run --release --example train_e2e -- [--steps N]
+//!       [--workers N] [--backend fp32|bfp16] [--paper-scale]`
+
+use ai_smartnic::coordinator::{ArBackend, Trainer, TrainerConfig};
+use ai_smartnic::util::cli::Command;
+use ai_smartnic::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("train_e2e", "end-to-end training driver")
+        .opt("steps", "300", "training steps")
+        .opt("workers", "6", "data-parallel workers (paper prototype: 6)")
+        .opt("layers", "8", "MLP depth")
+        .opt("backend", "bfp16", "gradient wire format: fp32 | bfp16")
+        .opt("lr", "0.03", "learning rate")
+        .opt("seed", "17", "rng seed")
+        .opt("out", "results/train_e2e.json", "loss-curve output")
+        .flag("paper-scale", "20-layer 2048^2, B=448 (needs artifacts-full)");
+    let a = match cmd.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+
+    let paper = a.flag("paper-scale");
+    let cfg = TrainerConfig {
+        layers: if paper { 20 } else { a.get_usize("layers", 8) },
+        hidden: if paper { 2048 } else { 256 },
+        batch_per_worker: if paper { 448 } else { 32 },
+        workers: a.get_usize("workers", 6),
+        lr: a.get_f64("lr", 0.03) as f32,
+        seed: a.get_u64("seed", 17),
+        backend: match a.get_str("backend", "bfp16").as_str() {
+            "fp32" => ArBackend::Fp32,
+            _ => ArBackend::Bfp16,
+        },
+        optimizer: Default::default(),
+    };
+    let steps = if paper { 3.min(a.get_usize("steps", 3)) } else { a.get_usize("steps", 300) };
+    let params = cfg.layers * cfg.hidden * cfg.hidden;
+    println!(
+        "e2e training: {}-layer {}^2 MLP ({:.1}M params), {} workers, B={}/worker, {:?} wire",
+        cfg.layers,
+        cfg.hidden,
+        params as f64 / 1e6,
+        cfg.workers,
+        cfg.batch_per_worker,
+        cfg.backend
+    );
+
+    let mut trainer = Trainer::new("artifacts", cfg.clone())?;
+    let t0 = std::time::Instant::now();
+    let stats = trainer.train(steps, if paper { 1 } else { 25 })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let first = &stats[0];
+    let last = stats.last().unwrap();
+    println!("\nloss curve: {:.5} -> {:.5} over {} steps", first.loss, last.loss, stats.len());
+    println!(
+        "wall time {wall:.1}s ({:.2} s/step); per-phase means: fwd {:.0} ms, bwd {:.0} ms, allreduce {:.0} ms, update {:.0} ms",
+        wall / stats.len() as f64,
+        1e3 * stats.iter().map(|s| s.t_fwd).sum::<f64>() / stats.len() as f64,
+        1e3 * stats.iter().map(|s| s.t_bwd).sum::<f64>() / stats.len() as f64,
+        1e3 * stats.iter().map(|s| s.t_allreduce).sum::<f64>() / stats.len() as f64,
+        1e3 * stats.iter().map(|s| s.t_update).sum::<f64>() / stats.len() as f64,
+    );
+    println!(
+        "wire traffic: {:.2} MB/node/step (gradient volume {:.2} MB raw)",
+        last.wire_bytes_per_node / 1e6,
+        params as f64 * 4.0 / 1e6
+    );
+
+    // dump the loss curve
+    let curve = Json::Arr(
+        stats
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("step", Json::Num(s.step as f64)),
+                    ("loss", Json::Num(s.loss)),
+                ])
+            })
+            .collect(),
+    );
+    let out = a.get_str("out", "results/train_e2e.json");
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, curve.to_string_pretty())?;
+    println!("loss curve written to {out}");
+
+    // per-artifact execution profile (the PJRT hot path)
+    println!("\nPJRT execution profile:");
+    for (name, s) in trainer.engine().stats().iter().take(8) {
+        println!(
+            "  {:32} {:>8} calls  {:>10.3} ms total  {:>8.3} ms/call",
+            name,
+            s.calls,
+            s.total_secs * 1e3,
+            s.total_secs * 1e3 / s.calls as f64
+        );
+    }
+    Ok(())
+}

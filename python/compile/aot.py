@@ -1,0 +1,208 @@
+# AOT compile path: lower every L2 entry point to HLO *text* + a manifest.
+#
+# HLO text (NOT lowered.compile()/.serialize()) is the interchange format:
+# jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+# crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+# parser reassigns ids and round-trips cleanly.  Recipe follows
+# /opt/xla-example/gen_hlo.py.
+#
+# Outputs (under --out-dir, default ../artifacts):
+#   <name>.hlo.txt        one per (entry point, shape) pair
+#   manifest.json         name -> file, entry, input/output shapes
+#   golden/bfp_cases.json bit-exact BFP vectors for the Rust codec tests
+#
+# Run via `make artifacts` (no-op when inputs are unchanged).
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref as kref
+from .kernels.bfp import DEFAULT_BLOCK_SIZE, DEFAULT_MANT_BITS
+
+F32 = jnp.float32
+
+# (hidden, batch) grid lowered by default.  The tiny 64/16 pair keeps the
+# Rust integration tests fast; 256/32 and 512/64 are the e2e training
+# shapes.  --full adds the paper-scale 2048/448 pair used for compute-time
+# calibration of the simulator.
+DEFAULT_SHAPES = [(64, 16), (256, 32), (512, 64)]
+FULL_SHAPES = [(2048, 448)]
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the Rust
+    side unwraps the tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_points(shapes):
+    """Yield (name, fn, example_args, meta) for every artifact to build."""
+    for m, b in shapes:
+        tag = f"m{m}_b{b}"
+        yield (f"layer_fwd_{tag}", model.layer_fwd,
+               (spec(b, m), spec(m, m), spec(m)),
+               {"entry": "layer_fwd", "hidden": m, "batch": b})
+        yield (f"layer_fwd_linear_{tag}", model.layer_fwd_linear,
+               (spec(b, m), spec(m, m), spec(m)),
+               {"entry": "layer_fwd_linear", "hidden": m, "batch": b})
+        yield (f"layer_bwd_{tag}", model.layer_bwd,
+               (spec(b, m), spec(b, m), spec(m, m), spec(b, m)),
+               {"entry": "layer_bwd", "hidden": m, "batch": b})
+        yield (f"layer_bwd_linear_{tag}", model.layer_bwd_linear,
+               (spec(b, m), spec(m, m), spec(b, m)),
+               {"entry": "layer_bwd_linear", "hidden": m, "batch": b})
+        yield (f"mse_loss_grad_{tag}", model.mse_loss_grad,
+               (spec(b, m), spec(b, m)),
+               {"entry": "mse_loss_grad", "hidden": m, "batch": b})
+    hiddens = sorted({m for m, _ in shapes})
+    for m in hiddens:
+        yield (f"sgd_update_m{m}", model.sgd_update,
+               (spec(m, m), spec(m, m), spec(1, 1)),
+               {"entry": "sgd_update", "hidden": m})
+        yield (f"sgd_update_vec_m{m}", model.sgd_update,
+               (spec(1, m), spec(1, m), spec(1, 1)),
+               {"entry": "sgd_update_vec", "hidden": m})
+        yield (f"adam_update_m{m}", model.adam_update,
+               (spec(m, m), spec(m, m), spec(m, m), spec(m, m),
+                spec(1, 1), spec(1, 1), spec(1, 1)),
+               {"entry": "adam_update", "hidden": m})
+        yield (f"adam_update_vec_m{m}", model.adam_update,
+               (spec(1, m), spec(1, m), spec(1, m), spec(1, m),
+                spec(1, 1), spec(1, 1), spec(1, 1)),
+               {"entry": "adam_update_vec", "hidden": m})
+        yield (f"bfp_roundtrip_m{m}", model.bfp_roundtrip_grad,
+               (spec(m, m),),
+               {"entry": "bfp_roundtrip", "hidden": m})
+        rows = max(m * m // 128, 1)
+        yield (f"nic_chunk_add_m{m}", model.nic_chunk_add,
+               (spec(rows, 128), spec(rows, 128)),
+               {"entry": "nic_chunk_add", "hidden": m})
+
+
+def lower_all(out_dir, shapes, verbose=True):
+    manifest = {"format": 1,
+                "bfp": {"block_size": DEFAULT_BLOCK_SIZE,
+                        "mant_bits": DEFAULT_MANT_BITS,
+                        "exp_bits": 8},
+                "artifacts": []}
+    for name, fn, args, meta in entry_points(shapes):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = [list(o.shape) for o in
+                      jax.eval_shape(fn, *args)]
+        manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "inputs": [list(a.shape) for a in args],
+            "outputs": out_shapes,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            **meta,
+        })
+        if verbose:
+            print(f"  lowered {name:32s} ({len(text)//1024} KiB)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+# ---------------------------------------------------------------------------
+# Golden BFP vectors: the contract between kernels/bfp.py and rust/src/bfp.
+# Inputs and decoded outputs are stored as u32 bit patterns (bit-exact).
+# ---------------------------------------------------------------------------
+
+def _bfp_case(name, x):
+    x = np.asarray(x, np.float32).reshape(-1, DEFAULT_BLOCK_SIZE)
+    e, s, m = kref.bfp_encode_ref(jnp.asarray(x))
+    dec = kref.bfp_decode_ref(e, s, m)
+    return {
+        "name": name,
+        "block_size": DEFAULT_BLOCK_SIZE,
+        "mant_bits": DEFAULT_MANT_BITS,
+        "x_bits": np.asarray(x).view(np.uint32).reshape(-1).tolist(),
+        "e_shared": np.asarray(e).reshape(-1).tolist(),
+        "sign": np.asarray(s).reshape(-1).tolist(),
+        "mag": np.asarray(m).reshape(-1).tolist(),
+        "decoded_bits": np.asarray(dec).view(np.uint32).reshape(-1).tolist(),
+    }
+
+
+def golden_bfp_cases():
+    rng = np.random.default_rng(0xB1_0C)
+    bs = DEFAULT_BLOCK_SIZE
+    cases = [
+        _bfp_case("randn_4blocks", rng.standard_normal(4 * bs)),
+        _bfp_case("zeros", np.zeros(bs)),
+        _bfp_case("mixed_zero_nonzero",
+                  np.where(rng.random(2 * bs) < 0.5, 0.0,
+                           rng.standard_normal(2 * bs))),
+        _bfp_case("wide_dynamic_range",
+                  rng.standard_normal(4 * bs) *
+                  np.exp2(rng.integers(-40, 40, 4 * bs)).astype(np.float32)),
+        _bfp_case("negatives", -np.abs(rng.standard_normal(2 * bs))),
+        _bfp_case("denormals",
+                  (rng.standard_normal(bs) * 1e-41).astype(np.float32)),
+        _bfp_case("tiny_gradients",
+                  (rng.standard_normal(4 * bs) * 1e-8).astype(np.float32)),
+        _bfp_case("large_values",
+                  (rng.standard_normal(2 * bs) * 1e30).astype(np.float32)),
+        _bfp_case("powers_of_two",
+                  np.exp2(np.arange(bs) - 8).astype(np.float32)),
+        _bfp_case("single_dominant",
+                  np.concatenate([[1e6], rng.standard_normal(bs - 1)])
+                  .astype(np.float32)),
+    ]
+    return {"format": 1, "cases": cases}
+
+
+def write_golden(out_dir):
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    with open(os.path.join(gdir, "bfp_cases.json"), "w") as f:
+        json.dump(golden_bfp_cases(), f)
+    print(f"  wrote golden/bfp_cases.json")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--full", action="store_true",
+                    help="also lower the paper-scale (2048, 448) shapes")
+    ap.add_argument("--shapes", default="",
+                    help="extra hidden:batch pairs, comma separated")
+    args = ap.parse_args()
+    shapes = list(DEFAULT_SHAPES)
+    if args.full:
+        shapes += FULL_SHAPES
+    for tok in args.shapes.split(","):
+        if tok:
+            m, b = tok.split(":")
+            shapes.append((int(m), int(b)))
+    os.makedirs(args.out_dir, exist_ok=True)
+    print(f"AOT lowering {len(shapes)} shape pairs -> {args.out_dir}")
+    manifest = lower_all(args.out_dir, shapes)
+    write_golden(args.out_dir)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

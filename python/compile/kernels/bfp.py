@@ -1,0 +1,185 @@
+# L1 Pallas kernel: Block Floating Point (BFP) compress / decompress.
+#
+# This is the TPU restatement of the paper's FPGA BFP datapath (Sec. IV-B):
+# FP32 gradients are split into blocks of `block_size` elements; each block
+# shares one 8-bit exponent (the max biased FP32 exponent in the block) and
+# each element keeps a sign bit plus a `mant_bits`-bit magnitude.  With the
+# paper's BFP16 parameters (block 16, 7-bit mantissa, 8-bit shared exponent)
+# a block costs 16*(1+7)+8 = 136 bits vs 16*32 = 512 bits: 3.76x compression.
+#
+# The integer datapath below is specified exactly so that the Rust codec
+# (rust/src/bfp/codec.rs) can reproduce it bit-for-bit; golden vectors are
+# emitted by python/compile/golden.py and checked from `cargo test`.
+#
+#   bits  = bitcast_u32(x)
+#   sign  = bits >> 31
+#   e     = (bits >> 23) & 0xFF                    # biased FP32 exponent
+#   sig   = e > 0 ? (bits & 0x7FFFFF) | 0x800000   # 24-bit significand
+#                 : 0                              # flush subnormals
+#   E     = max(e) over the block                  # shared (biased) exponent
+#   shift = (E - e) + (24 - mant_bits)             # >= 24-mant_bits
+#   m     = min((sig + (1 << (shift-1))) >> shift, 2^mant_bits - 1)
+#           with shift clamped to 31 (sig + rounding bias stays < 2^32)
+#   decode: x_hat = (-1)^sign * m * 2^(E - 127 - (mant_bits - 1))
+#
+# Kernels run with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+# custom-calls, and the interpret lowering emits plain HLO that the Rust
+# runtime loads and runs.  See DESIGN.md "Hardware-Adaptation".
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_SIZE = 16  # elements sharing one exponent (paper: 16)
+DEFAULT_MANT_BITS = 7    # magnitude bits per element  (paper: 7)
+
+# Rows of blocks processed per Pallas grid step.  One grid step reads a
+# (ROW_TILE, block_size) VMEM tile — the analogue of the FPGA's input FIFO
+# burst; the grid loop is the analogue of the streaming datapath.
+ROW_TILE = 256
+
+
+def _encode_tile(x, mant_bits):
+    """Integer BFP encode of a (rows, block) f32 tile -> (E, sign, mag)."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = (bits >> 31).astype(jnp.int32)
+    e = ((bits >> 23) & 0xFF).astype(jnp.int32)
+    frac = (bits & 0x7FFFFF).astype(jnp.uint32)
+    sig = jnp.where(e > 0, frac | jnp.uint32(0x800000), jnp.uint32(0))
+    e_shared = jnp.max(e, axis=-1, keepdims=True)
+    shift = jnp.minimum((e_shared - e) + (24 - mant_bits), 31).astype(jnp.uint32)
+    bias = (jnp.uint32(1) << (shift - 1)).astype(jnp.uint32)
+    mag = (sig + bias) >> shift
+    mag = jnp.minimum(mag, jnp.uint32((1 << mant_bits) - 1)).astype(jnp.int32)
+    return e_shared, sign, mag
+
+
+def _exp2_exact(k):
+    """Exact 2^k as f32 for k in [-134, 127] via bit construction.
+
+    jnp.exp2 is an approximation on some backends (off by 1 ulp at large
+    |k|), which would break bit-compatibility with the Rust codec.  Split
+    k = a + b with a in [-126, 127] (normal range, exact bitcast) and
+    b in [-8, 0]; the f32 product 2^a * 2^b is an exact power of two even
+    when the result is subnormal.
+    """
+    a = jnp.clip(k, -126, 127)
+    b = k - a  # in [-8, 0]
+    fa = jax.lax.bitcast_convert_type(((a + 127) << 23).astype(jnp.uint32),
+                                      jnp.float32)
+    fb = jax.lax.bitcast_convert_type(((b + 127) << 23).astype(jnp.uint32),
+                                      jnp.float32)
+    return fa * fb
+
+
+def _decode_tile(e_shared, sign, mag, mant_bits):
+    """Integer BFP decode -> f32 tile: (-1)^sign * mag * 2^(E-127-(mb-1))."""
+    scale = _exp2_exact(e_shared - 127 - (mant_bits - 1))
+    mag_f = mag.astype(jnp.float32)
+    return jnp.where(sign == 1, -mag_f, mag_f) * scale
+
+
+def _compress_kernel(x_ref, e_ref, s_ref, m_ref, *, mant_bits):
+    e_shared, sign, mag = _encode_tile(x_ref[...], mant_bits)
+    e_ref[...] = e_shared
+    s_ref[...] = sign
+    m_ref[...] = mag
+
+
+def _decompress_kernel(e_ref, s_ref, m_ref, o_ref, *, mant_bits):
+    o_ref[...] = _decode_tile(e_ref[...], s_ref[...], m_ref[...], mant_bits)
+
+
+def _roundtrip_kernel(x_ref, o_ref, *, mant_bits):
+    e_shared, sign, mag = _encode_tile(x_ref[...], mant_bits)
+    o_ref[...] = _decode_tile(e_shared, sign, mag, mant_bits)
+
+
+def _grid_rows(n_rows):
+    tile = min(ROW_TILE, n_rows)
+    if n_rows % tile != 0:  # fall back to one step for ragged row counts
+        return n_rows, 1
+    return tile, n_rows // tile
+
+
+def bfp_compress(x, block_size=DEFAULT_BLOCK_SIZE, mant_bits=DEFAULT_MANT_BITS):
+    """Compress a (rows, block_size) f32 array to (E, sign, mag) int32 arrays.
+
+    E has shape (rows, 1); sign and mag have x's shape.
+    """
+    rows, bs = x.shape
+    assert bs == block_size, f"last dim {bs} != block_size {block_size}"
+    tile, steps = _grid_rows(rows)
+    kern = functools.partial(_compress_kernel, mant_bits=mant_bits)
+    return pl.pallas_call(
+        kern,
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((tile, bs), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, bs), lambda i: (i, 0)),
+            pl.BlockSpec((tile, bs), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, 1), jnp.int32),
+            jax.ShapeDtypeStruct((rows, bs), jnp.int32),
+            jax.ShapeDtypeStruct((rows, bs), jnp.int32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def bfp_decompress(e_shared, sign, mag, mant_bits=DEFAULT_MANT_BITS):
+    """Inverse of bfp_compress: (E, sign, mag) int32 -> f32 (rows, block)."""
+    rows, bs = mag.shape
+    tile, steps = _grid_rows(rows)
+    kern = functools.partial(_decompress_kernel, mant_bits=mant_bits)
+    return pl.pallas_call(
+        kern,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, bs), lambda i: (i, 0)),
+            pl.BlockSpec((tile, bs), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, bs), jnp.float32),
+        interpret=True,
+    )(e_shared, sign, mag)
+
+
+def bfp_roundtrip(x, block_size=DEFAULT_BLOCK_SIZE, mant_bits=DEFAULT_MANT_BITS):
+    """Quantize-dequantize in one kernel: what a gradient experiences on the
+    wire (compress at Tx, decompress at Rx).  Shape-preserving over
+    (rows, block_size) f32."""
+    rows, bs = x.shape
+    assert bs == block_size
+    tile, steps = _grid_rows(rows)
+    kern = functools.partial(_roundtrip_kernel, mant_bits=mant_bits)
+    return pl.pallas_call(
+        kern,
+        grid=(steps,),
+        in_specs=[pl.BlockSpec((tile, bs), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, bs), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def bfp_roundtrip_flat(x, block_size=DEFAULT_BLOCK_SIZE,
+                       mant_bits=DEFAULT_MANT_BITS):
+    """Roundtrip for an arbitrary-length 1-D vector: pad to a whole number of
+    blocks (paper Sec. IV-C: gradients are padded), quantize, slice back."""
+    n = x.shape[0]
+    padded = -(-n // block_size) * block_size
+    xp = jnp.pad(x, (0, padded - n))
+    y = bfp_roundtrip(xp.reshape(-1, block_size), block_size, mant_bits)
+    return y.reshape(-1)[:n]
+
+
+def compression_ratio(block_size=DEFAULT_BLOCK_SIZE,
+                      mant_bits=DEFAULT_MANT_BITS, exp_bits=8):
+    """Wire-format compression ratio beta (paper: 512/136 = 3.76 ~ "3.8x")."""
+    return (32.0 * block_size) / (block_size * (1 + mant_bits) + exp_bits)

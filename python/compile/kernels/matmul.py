@@ -1,0 +1,72 @@
+# L1 Pallas kernel: MXU-tiled matmul — the worker-side tensor hot spot.
+#
+# The paper's workers spend their time in the MLP's GEMMs (T_F = 2M^2B/P,
+# T_B = 4M^2B/P).  On TPU this is MXU work: we tile (bm, bk) x (bk, bn)
+# blocks through VMEM and accumulate f32 in the output block, which stays
+# resident across the k grid dimension (the canonical Pallas matmul).
+# interpret=True so the lowered HLO runs on the CPU PJRT client.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles: the systolic array is 128x128, and f32 VMEM
+# tiling is (8, 128).  We clamp to the actual dims for small problems.
+DEFAULT_BM = 512
+DEFAULT_BN = 512
+DEFAULT_BK = 512
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick(dim, block):
+    """Largest tile <= block that divides dim (dims here are powers of two
+    times small factors; worst case degrades to 1 which is still correct)."""
+    t = min(block, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def matmul(x, w, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """f32 (M, K) @ (K, N) -> (M, N) via the Pallas tiled kernel."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = _pick(m, bm), _pick(n, bn), _pick(k, bk)
+    nk = k // bk
+    kern = functools.partial(_matmul_kernel, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_t_a(x, w, **kw):
+    """x^T @ w for (K, M), (K, N) -> (M, N): the dW GEMM of the backward
+    pass.  Transpose-then-matmul keeps one kernel; XLA fuses the transpose
+    into the surrounding HLO."""
+    return matmul(x.T, w, **kw)
+
+
+def matmul_t_b(x, w, **kw):
+    """x @ w^T for (M, K), (N, K) -> (M, N): the dX GEMM of the backward
+    pass."""
+    return matmul(x, w.T, **kw)

@@ -1,0 +1,47 @@
+# L1 Pallas kernel: FP32 chunk adder — the smart NIC's reduction datapath.
+#
+# In the paper's NIC (Fig. 3a) the input FIFO (local gradients via PCIe) and
+# the Rx FIFO (partial sums from the previous ring node) feed a bank of FP32
+# adders.  The TPU restatement streams (ROW_TILE, LANES) VMEM tiles through
+# a VPU add; the Pallas grid loop plays the role of the FIFO drain and the
+# BlockSpec double-buffering plays the role of the FIFO itself.
+# See DESIGN.md "Hardware-Adaptation".
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128    # VPU lane width (f32) — the analogue of the NIC's SIMD lanes
+ROW_TILE = 8   # f32 sublane tiling
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def chunk_add(a, b):
+    """Elementwise f32 add of two equal-shape 2-D (rows, LANES) chunks."""
+    rows, lanes = a.shape
+    assert a.shape == b.shape
+    tile = ROW_TILE if rows % ROW_TILE == 0 else rows
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(rows // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((tile, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def chunk_add_flat(a, b):
+    """Adder for arbitrary-length 1-D chunks: pad to (rows, LANES) tiles,
+    add, slice back — the shape the ring all-reduce actually moves."""
+    n = a.shape[0]
+    padded = -(-n // LANES) * LANES
+    ap = jnp.pad(a, (0, padded - n)).reshape(-1, LANES)
+    bp = jnp.pad(b, (0, padded - n)).reshape(-1, LANES)
+    return chunk_add(ap, bp).reshape(-1)[:n]

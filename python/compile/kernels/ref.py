@@ -1,0 +1,55 @@
+# Pure-jnp correctness oracles for every L1 kernel.
+#
+# Same integer BFP specification as kernels/bfp.py (and rust/src/bfp/) but
+# written as plain vectorized jnp with no Pallas — the ground truth the
+# kernels (and the Rust codec, via golden vectors) are tested against.
+
+import jax
+import jax.numpy as jnp
+
+from .bfp import DEFAULT_BLOCK_SIZE, DEFAULT_MANT_BITS, _exp2_exact
+
+
+def bfp_encode_ref(x, mant_bits=DEFAULT_MANT_BITS):
+    """Reference BFP encode of (rows, block) f32 -> (E, sign, mag) int32."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = (bits >> 31).astype(jnp.int32)
+    e = ((bits >> 23) & 0xFF).astype(jnp.int32)
+    frac = (bits & 0x7FFFFF).astype(jnp.uint32)
+    sig = jnp.where(e > 0, frac | jnp.uint32(0x800000), jnp.uint32(0))
+    e_shared = jnp.max(e, axis=-1, keepdims=True)
+    shift = jnp.minimum((e_shared - e) + (24 - mant_bits), 31).astype(jnp.uint32)
+    bias = (jnp.uint32(1) << (shift - 1)).astype(jnp.uint32)
+    mag = (sig + bias) >> shift
+    mag = jnp.minimum(mag, jnp.uint32((1 << mant_bits) - 1)).astype(jnp.int32)
+    return e_shared, sign, mag
+
+
+def bfp_decode_ref(e_shared, sign, mag, mant_bits=DEFAULT_MANT_BITS):
+    """Reference BFP decode -> f32 (exact power-of-two scale, matching the
+    Rust codec bit for bit)."""
+    scale = _exp2_exact(e_shared - 127 - (mant_bits - 1))
+    mag_f = mag.astype(jnp.float32)
+    return jnp.where(sign == 1, -mag_f, mag_f) * scale
+
+
+def bfp_roundtrip_ref(x, block_size=DEFAULT_BLOCK_SIZE,
+                      mant_bits=DEFAULT_MANT_BITS):
+    assert x.shape[-1] == block_size
+    return bfp_decode_ref(*bfp_encode_ref(x, mant_bits), mant_bits)
+
+
+def bfp_roundtrip_flat_ref(x, block_size=DEFAULT_BLOCK_SIZE,
+                           mant_bits=DEFAULT_MANT_BITS):
+    n = x.shape[0]
+    padded = -(-n // block_size) * block_size
+    xp = jnp.pad(x, (0, padded - n)).reshape(-1, block_size)
+    return bfp_roundtrip_ref(xp, block_size, mant_bits).reshape(-1)[:n]
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def chunk_add_ref(a, b):
+    return a + b

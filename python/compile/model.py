@@ -1,0 +1,179 @@
+# L2: the paper's training workload — an L-layer MLP (Sec. III: 20 layers of
+# 2048x2048 with mini-batch per node) — written as *layerwise* jax entry
+# points so the Rust coordinator can interleave per-layer backward compute
+# with per-layer non-blocking all-reduce exactly as in the paper's Fig. 3b
+# execution trace.
+#
+# Every GEMM goes through the L1 Pallas matmul kernel; the gradient
+# quantization goes through the L1 BFP kernel; the NIC adder through the L1
+# chunk-add kernel — so all three kernels lower into the AOT'd HLO.
+#
+# Build-time only: aot.py lowers these with jax.jit(...).lower(...) to HLO
+# text; Python never runs on the Rust request path.
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bfp as kbfp
+from .kernels import matmul as kmm
+from .kernels import reduce as kred
+
+
+def init_params(key, n_layers, hidden, scale=None):
+    """He-initialized weights/biases for an `n_layers` MLP of width `hidden`.
+
+    Matches the paper's symmetric M_l x M_l layer shape.
+    """
+    if scale is None:
+        scale = (2.0 / hidden) ** 0.5
+    ws, bs = [], []
+    for i in range(n_layers):
+        key, sub = jax.random.split(key)
+        ws.append(jax.random.normal(sub, (hidden, hidden), jnp.float32) * scale)
+        bs.append(jnp.zeros((hidden,), jnp.float32))
+    return ws, bs
+
+
+# ---------------------------------------------------------------------------
+# Layerwise entry points (each is AOT-lowered per shape)
+# ---------------------------------------------------------------------------
+
+def layer_fwd(x, w, b):
+    """Hidden layer forward: z = x @ w + b; y = relu(z).
+
+    Returns (y, z); z is stashed by the coordinator for the backward pass.
+    """
+    z = kmm.matmul(x, w) + b[None, :]
+    y = jnp.maximum(z, 0.0)
+    return y, z
+
+
+def layer_fwd_linear(x, w, b):
+    """Output layer forward (no activation): y = x @ w + b."""
+    y = kmm.matmul(x, w) + b[None, :]
+    return (y,)
+
+
+def layer_bwd(x, z, w, dy):
+    """Hidden layer backward given upstream dy:
+      dz = dy * relu'(z);  dw = x^T @ dz;  db = sum_rows(dz);  dx = dz @ w^T.
+
+    The two GEMMs are the paper's T_B = 4 M^2 B / P term (2x the forward
+    FLOPs).  Returns (dx, dw, db).
+    """
+    dz = jnp.where(z > 0.0, dy, 0.0)
+    dw = kmm.matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    dx = kmm.matmul(dz, w.T)
+    return dx, dw, db
+
+
+def layer_bwd_linear(x, w, dy):
+    """Output layer backward (identity activation)."""
+    dw = kmm.matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    dx = kmm.matmul(dy, w.T)
+    return dx, dw, db
+
+
+def mse_loss_grad(y, target):
+    """Mean-square-error loss (paper Sec. II-A) and its gradient wrt y.
+
+    loss = mean_{i,j} (y - t)^2 ; dy = 2 (y - t) / (B * M).
+    Returns (loss[scalar as (1,1)], dy).
+    """
+    b, m = y.shape
+    diff = y - target
+    loss = jnp.sum(diff * diff) / (b * m)
+    dy = (2.0 / (b * m)) * diff
+    return loss.reshape(1, 1), dy
+
+
+def sgd_update(w, dw, lr):
+    """Plain SGD weight update (the worker-side T_U term): w - lr * dw.
+
+    lr arrives as a (1,1) tensor so one artifact serves any learning rate.
+    """
+    return (w - lr.reshape(()) * dw,)
+
+
+def adam_update(w, dw, m, v, lr, b1t, b2t):
+    """Adam (Kingma & Ba [3], the paper's cited alternative optimizer).
+
+    beta1=0.9, beta2=0.999, eps=1e-8 baked in; `b1t`/`b2t` are beta^t
+    bias-correction powers passed as (1,1) tensors so one artifact serves
+    every step.  Returns (w', m', v').
+    """
+    beta1, beta2, eps = 0.9, 0.999, 1e-8
+    m2 = beta1 * m + (1.0 - beta1) * dw
+    v2 = beta2 * v + (1.0 - beta2) * dw * dw
+    mhat = m2 / (1.0 - b1t.reshape(()))
+    vhat = v2 / (1.0 - b2t.reshape(()))
+    w2 = w - lr.reshape(()) * mhat / (jnp.sqrt(vhat) + eps)
+    return w2, m2, v2
+
+
+def bfp_roundtrip_grad(g):
+    """Wire quantization of a (M, M) gradient tensor: flatten, BFP16
+    compress+decompress (what the NIC does at Tx/Rx), reshape back."""
+    m, n = g.shape
+    flat = g.reshape(-1, kbfp.DEFAULT_BLOCK_SIZE)
+    q = kbfp.bfp_roundtrip(flat)
+    return (q.reshape(m, n),)
+
+
+def nic_chunk_add(a, b):
+    """The NIC reduction step over a flat chunk (rows, 128)."""
+    return (kred.chunk_add(a, b),)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (used by tests and for HLO cost analysis, not AOT'd
+# per-layer)
+# ---------------------------------------------------------------------------
+
+def mlp_forward(params, x):
+    """Full forward pass: hidden layers with relu, linear output layer."""
+    ws, bs = params
+    acts = [x]
+    zs = []
+    h = x
+    for i in range(len(ws) - 1):
+        h, z = layer_fwd(h, ws[i], bs[i])
+        acts.append(h)
+        zs.append(z)
+    (y,) = layer_fwd_linear(h, ws[-1], bs[-1])
+    return y, acts, zs
+
+
+def mlp_loss(params, x, target):
+    y, _, _ = mlp_forward(params, x)
+    loss, _ = mse_loss_grad(y, target)
+    return loss.reshape(())
+
+
+def mlp_loss_ref(params, x, target):
+    """Pure-jnp twin of mlp_loss (no Pallas) — jax.grad-able; the autodiff
+    oracle that mlp_grads' manual layerwise backward is tested against."""
+    ws, bs = params
+    h = x
+    for i in range(len(ws) - 1):
+        h = jnp.maximum(jnp.dot(h, ws[i]) + bs[i][None, :], 0.0)
+    y = jnp.dot(h, ws[-1]) + bs[-1][None, :]
+    b, m = y.shape
+    diff = y - target
+    return jnp.sum(diff * diff) / (b * m)
+
+
+def mlp_grads(params, x, target):
+    """Layerwise manual backward — the exact sequence the Rust coordinator
+    replays step by step.  Tested against jax.grad(mlp_loss)."""
+    ws, bs = params
+    y, acts, zs = mlp_forward(params, x)
+    loss, dy = mse_loss_grad(y, target)
+    dws = [None] * len(ws)
+    dbs = [None] * len(ws)
+    dx, dws[-1], dbs[-1] = layer_bwd_linear(acts[-1], ws[-1], dy)
+    for i in range(len(ws) - 2, -1, -1):
+        dx, dws[i], dbs[i] = layer_bwd(acts[i], zs[i], ws[i], dx)
+    return loss.reshape(()), dws, dbs

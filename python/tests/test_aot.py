@@ -1,0 +1,87 @@
+# pytest: AOT pipeline — manifest integrity, HLO text validity, golden
+# vector stability.
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.lower_all(str(out), [(64, 16)], verbose=False)
+    aot.write_golden(str(out))
+    return str(out), manifest
+
+
+class TestManifest:
+    def test_artifact_count(self, built):
+        _, manifest = built
+        # 5 per (m, b) pair + 6 per hidden size
+        assert len(manifest["artifacts"]) == 11
+
+    def test_every_file_exists_and_is_hlo(self, built):
+        out, manifest = built
+        for art in manifest["artifacts"]:
+            path = os.path.join(out, art["file"])
+            assert os.path.exists(path), art["name"]
+            head = open(path).read(200)
+            assert "HloModule" in head, art["name"]
+
+    def test_manifest_json_roundtrip(self, built):
+        out, manifest = built
+        on_disk = json.load(open(os.path.join(out, "manifest.json")))
+        assert on_disk == manifest
+
+    def test_shapes_recorded(self, built):
+        _, manifest = built
+        by_name = {a["name"]: a for a in manifest["artifacts"]}
+        fwd = by_name["layer_fwd_m64_b16"]
+        assert fwd["inputs"] == [[16, 64], [64, 64], [64]]
+        assert fwd["outputs"] == [[16, 64], [16, 64]]
+        bwd = by_name["layer_bwd_m64_b16"]
+        assert len(bwd["inputs"]) == 4 and len(bwd["outputs"]) == 3
+
+    def test_bfp_params_in_manifest(self, built):
+        _, manifest = built
+        assert manifest["bfp"] == {"block_size": 16, "mant_bits": 7,
+                                   "exp_bits": 8}
+
+
+class TestGolden:
+    def test_golden_cases_deterministic(self):
+        a = aot.golden_bfp_cases()
+        b = aot.golden_bfp_cases()
+        assert a == b
+
+    def test_golden_case_structure(self):
+        g = aot.golden_bfp_cases()
+        assert len(g["cases"]) >= 8
+        for case in g["cases"]:
+            n = len(case["x_bits"])
+            assert n % case["block_size"] == 0
+            assert len(case["mag"]) == n
+            assert len(case["sign"]) == n
+            assert len(case["decoded_bits"]) == n
+            assert len(case["e_shared"]) == n // case["block_size"]
+            assert all(0 <= e <= 255 for e in case["e_shared"])
+            assert all(0 <= m <= 127 for m in case["mag"])
+            assert all(s in (0, 1) for s in case["sign"])
+
+    def test_golden_decode_consistent(self):
+        # decoded_bits must equal the reference decode of (E, sign, mag)
+        import jax.numpy as jnp
+        from compile.kernels import ref
+        g = aot.golden_bfp_cases()
+        for case in g["cases"]:
+            bs = case["block_size"]
+            e = jnp.asarray(case["e_shared"], jnp.int32).reshape(-1, 1)
+            s = jnp.asarray(case["sign"], jnp.int32).reshape(-1, bs)
+            m = jnp.asarray(case["mag"], jnp.int32).reshape(-1, bs)
+            dec = np.asarray(ref.bfp_decode_ref(e, s, m))
+            want = np.asarray(case["decoded_bits"], np.uint32).view(np.float32)
+            np.testing.assert_array_equal(dec.reshape(-1), want)

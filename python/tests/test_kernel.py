@@ -1,0 +1,240 @@
+# pytest: Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+#
+# hypothesis sweeps shapes and value distributions; every kernel output is
+# compared against ref.py with assert_allclose (bit-equality for the integer
+# BFP datapath).
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bfp, matmul, reduce as red, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def f32(a):
+    return jnp.asarray(np.asarray(a, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# BFP compress / decompress / roundtrip
+# ---------------------------------------------------------------------------
+
+class TestBfpAgainstRef:
+    @pytest.mark.parametrize("rows", [1, 2, 7, 64, 300])
+    def test_compress_matches_ref(self, rows):
+        x = f32(RNG.standard_normal((rows, 16)))
+        e, s, m = bfp.bfp_compress(x)
+        er, sr, mr = ref.bfp_encode_ref(x)
+        np.testing.assert_array_equal(np.asarray(e), np.asarray(er))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(mr))
+
+    @pytest.mark.parametrize("rows", [1, 8, 257])
+    def test_decompress_matches_ref(self, rows):
+        x = f32(RNG.standard_normal((rows, 16)) * 100)
+        e, s, m = ref.bfp_encode_ref(x)
+        got = bfp.bfp_decompress(e, s, m)
+        want = ref.bfp_decode_ref(e, s, m)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("rows", [1, 16, 128])
+    def test_roundtrip_matches_ref(self, rows):
+        x = f32(RNG.standard_normal((rows, 16)))
+        got = bfp.bfp_roundtrip(x)
+        want = ref.bfp_roundtrip_ref(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_roundtrip_equals_compress_then_decompress(self):
+        x = f32(RNG.standard_normal((32, 16)))
+        via_pair = bfp.bfp_decompress(*bfp.bfp_compress(x))
+        via_rt = bfp.bfp_roundtrip(x)
+        np.testing.assert_array_equal(np.asarray(via_pair), np.asarray(via_rt))
+
+    def test_flat_handles_padding(self):
+        x = f32(RNG.standard_normal(1000))  # not a multiple of 16
+        got = bfp.bfp_roundtrip_flat(x)
+        want = ref.bfp_roundtrip_flat_ref(x)
+        assert got.shape == (1000,)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestBfpSemantics:
+    """Properties of the format itself (paper Sec. IV-B)."""
+
+    def test_zeros_roundtrip_to_zero(self):
+        x = jnp.zeros((4, 16), jnp.float32)
+        out = np.asarray(bfp.bfp_roundtrip(x))
+        np.testing.assert_array_equal(out, np.zeros((4, 16), np.float32))
+
+    def test_error_bound_half_ulp_of_block(self):
+        # |x - dec(enc(x))| <= 2^(E-127-mant_bits) + tiny slack (saturation
+        # of the max element adds at most one extra step).
+        x = f32(RNG.standard_normal((64, 16)) * np.exp2(RNG.integers(-8, 8, (64, 16))))
+        e, _, _ = ref.bfp_encode_ref(x)
+        dec = np.asarray(bfp.bfp_roundtrip(x))
+        bound = np.exp2(np.asarray(e) - 127.0 - 7.0) * 2.0
+        assert (np.abs(dec - np.asarray(x)) <= bound + 1e-38).all()
+
+    def test_max_element_relative_error(self):
+        x = f32(RNG.standard_normal((128, 16)))
+        dec = np.asarray(bfp.bfp_roundtrip(x))
+        xa = np.asarray(x)
+        idx = np.abs(xa).argmax(axis=1)
+        rows = np.arange(xa.shape[0])
+        rel = np.abs(dec[rows, idx] - xa[rows, idx]) / np.abs(xa[rows, idx])
+        assert (rel <= 2.0 ** -7 + 1e-6).all()
+
+    def test_signs_preserved(self):
+        x = f32([[1.0, -1.0] * 8])
+        dec = np.asarray(bfp.bfp_roundtrip(x))
+        assert (np.sign(dec) == np.sign(np.asarray(x))).all()
+
+    def test_denormals_flush_to_zero(self):
+        x = f32(np.full((1, 16), 1e-41))  # subnormal in f32
+        dec = np.asarray(bfp.bfp_roundtrip(x))
+        np.testing.assert_array_equal(dec, np.zeros((1, 16), np.float32))
+
+    def test_compression_ratio_is_papers_3p8(self):
+        assert abs(bfp.compression_ratio() - 512.0 / 136.0) < 1e-12
+        assert round(bfp.compression_ratio(), 1) == 3.8
+
+    def test_quantization_is_idempotent(self):
+        x = f32(RNG.standard_normal((32, 16)))
+        once = bfp.bfp_roundtrip(x)
+        twice = bfp.bfp_roundtrip(once)
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+    @pytest.mark.parametrize("mant_bits", [3, 5, 7, 9])
+    def test_error_shrinks_with_mantissa_bits(self, mant_bits):
+        x = f32(RNG.standard_normal((64, 16)))
+        dec = np.asarray(bfp.bfp_roundtrip(x, mant_bits=mant_bits))
+        err = np.abs(dec - np.asarray(x)).mean()
+        dec2 = np.asarray(bfp.bfp_roundtrip(x, mant_bits=mant_bits + 2))
+        err2 = np.abs(dec2 - np.asarray(x)).mean()
+        assert err2 <= err
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 200),
+    scale_exp=st.integers(-30, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bfp_hypothesis_sweep(rows, scale_exp, seed):
+    rng = np.random.default_rng(seed)
+    x = f32(rng.standard_normal((rows, 16)) * np.exp2(scale_exp))
+    got = np.asarray(bfp.bfp_roundtrip(x))
+    want = np.asarray(ref.bfp_roundtrip_ref(x))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 600), seed=st.integers(0, 2**31 - 1))
+def test_bfp_flat_hypothesis(n, seed):
+    rng = np.random.default_rng(seed)
+    x = f32(rng.standard_normal(n))
+    got = np.asarray(bfp.bfp_roundtrip_flat(x))
+    want = np.asarray(ref.bfp_roundtrip_flat_ref(x))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Matmul kernel
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (8, 8, 8), (16, 32, 16), (64, 64, 64), (128, 256, 128),
+        (256, 128, 64), (448, 64, 64),
+    ])
+    def test_matches_ref(self, m, k, n):
+        x = f32(RNG.standard_normal((m, k)))
+        w = f32(RNG.standard_normal((k, n)))
+        got = matmul.matmul(x, w)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.matmul_ref(x, w)),
+            rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("m,k,n", [(7, 9, 5), (13, 128, 31), (100, 50, 3)])
+    def test_ragged_shapes(self, m, k, n):
+        # _pick degrades tile sizes to divisors; correctness must hold.
+        x = f32(RNG.standard_normal((m, k)))
+        w = f32(RNG.standard_normal((k, n)))
+        got = matmul.matmul(x, w)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.matmul_ref(x, w)),
+            rtol=1e-5, atol=1e-5)
+
+    def test_transposed_helpers(self):
+        x = f32(RNG.standard_normal((32, 16)))  # (K=32, M=16)
+        w = f32(RNG.standard_normal((32, 24)))  # (K=32, N=24)
+        np.testing.assert_allclose(
+            np.asarray(matmul.matmul_t_a(x, w)),
+            np.asarray(x).T @ np.asarray(w), rtol=1e-4, atol=1e-4)
+        y = f32(RNG.standard_normal((16, 32)))  # (M=16, K=32)
+        v = f32(RNG.standard_normal((24, 32)))  # (N=24, K=32)
+        np.testing.assert_allclose(
+            np.asarray(matmul.matmul_t_b(y, v)),
+            np.asarray(y) @ np.asarray(v).T, rtol=1e-4, atol=1e-4)
+
+    def test_identity(self):
+        x = f32(RNG.standard_normal((16, 16)))
+        eye = jnp.eye(16, dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(matmul.matmul(x, eye)), np.asarray(x),
+            rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = f32(rng.standard_normal((m, k)))
+    w = f32(rng.standard_normal((k, n)))
+    got = np.asarray(matmul.matmul(x, w))
+    want = np.asarray(ref.matmul_ref(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# NIC chunk adder
+# ---------------------------------------------------------------------------
+
+class TestChunkAdd:
+    @pytest.mark.parametrize("rows", [1, 8, 64, 321])
+    def test_matches_ref(self, rows):
+        a = f32(RNG.standard_normal((rows, 128)))
+        b = f32(RNG.standard_normal((rows, 128)))
+        got = red.chunk_add(a, b)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.chunk_add_ref(a, b)))
+
+    def test_flat_with_padding(self):
+        a = f32(RNG.standard_normal(1000))
+        b = f32(RNG.standard_normal(1000))
+        got = red.chunk_add_flat(a, b)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(a) + np.asarray(b))
+
+    def test_additive_identity(self):
+        a = f32(RNG.standard_normal((8, 128)))
+        z = jnp.zeros_like(a)
+        np.testing.assert_array_equal(np.asarray(red.chunk_add(a, z)),
+                                      np.asarray(a))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 2000), seed=st.integers(0, 2**31 - 1))
+def test_chunk_add_hypothesis(n, seed):
+    rng = np.random.default_rng(seed)
+    a = f32(rng.standard_normal(n))
+    b = f32(rng.standard_normal(n))
+    got = np.asarray(red.chunk_add_flat(a, b))
+    np.testing.assert_array_equal(got, np.asarray(a) + np.asarray(b))

@@ -1,0 +1,174 @@
+# pytest: L2 model — layerwise fwd/bwd entry points vs autodiff of the
+# pure-jnp reference model, loss/update semantics, shape contracts.
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+RTOL, ATOL = 2e-4, 2e-6
+
+
+def _setup(n_layers=3, hidden=32, batch=8, seed=0):
+    params = model.init_params(jax.random.PRNGKey(seed), n_layers, hidden)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, hidden))
+    t = jax.random.normal(jax.random.PRNGKey(seed + 2), (batch, hidden))
+    return params, x, t
+
+
+class TestLayerEntryPoints:
+    def test_layer_fwd_shapes_and_values(self):
+        params, x, _ = _setup()
+        w, b = params[0][0], params[1][0]
+        y, z = model.layer_fwd(x, w, b)
+        zr = np.asarray(x) @ np.asarray(w) + np.asarray(b)
+        np.testing.assert_allclose(np.asarray(z), zr, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(np.asarray(y), np.maximum(zr, 0),
+                                   rtol=RTOL, atol=ATOL)
+
+    def test_layer_fwd_linear_no_activation(self):
+        params, x, _ = _setup()
+        w, b = params[0][0], params[1][0]
+        (y,) = model.layer_fwd_linear(x, w, b)
+        yr = np.asarray(x) @ np.asarray(w) + np.asarray(b)
+        np.testing.assert_allclose(np.asarray(y), yr, rtol=RTOL, atol=ATOL)
+        assert (np.asarray(y) < 0).any(), "linear output should go negative"
+
+    def test_manual_bwd_matches_autodiff(self):
+        params, x, t = _setup(n_layers=4, hidden=48, batch=10)
+        loss, dws, dbs = model.mlp_grads(params, x, t)
+        gw, gb = jax.grad(model.mlp_loss_ref)(params, x, t)
+        assert abs(float(loss) - float(model.mlp_loss_ref(params, x, t))) < 1e-5
+        for a, b in zip(dws, gw):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=RTOL, atol=ATOL)
+        for a, b in zip(dbs, gb):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=RTOL, atol=ATOL)
+
+    def test_pallas_loss_matches_ref_loss(self):
+        params, x, t = _setup(n_layers=2, hidden=16, batch=4)
+        assert abs(float(model.mlp_loss(params, x, t)) -
+                   float(model.mlp_loss_ref(params, x, t))) < 1e-5
+
+    def test_mse_loss_grad(self):
+        y = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])
+        t = jnp.asarray([[0.0, 0.0], [0.0, 0.0]])
+        loss, dy = model.mse_loss_grad(y, t)
+        assert float(loss.reshape(())) == pytest.approx((1 + 4 + 9 + 16) / 4)
+        np.testing.assert_allclose(np.asarray(dy), np.asarray(y) * 2 / 4)
+
+    def test_sgd_update(self):
+        w = jnp.ones((4, 4))
+        dw = jnp.full((4, 4), 2.0)
+        lr = jnp.asarray([[0.25]])
+        (w2,) = model.sgd_update(w, dw, lr)
+        np.testing.assert_allclose(np.asarray(w2), np.full((4, 4), 0.5))
+
+    def test_adam_update_matches_manual(self):
+        rng = np.random.default_rng(9)
+        w = np.asarray(rng.standard_normal((8, 8)), np.float32)
+        dw = np.asarray(rng.standard_normal((8, 8)), np.float32)
+        m = np.zeros((8, 8), np.float32)
+        v = np.zeros((8, 8), np.float32)
+        lr, b1, b2, eps = 0.001, 0.9, 0.999, 1e-8
+        t = 1
+        w2, m2, v2 = model.adam_update(
+            jnp.asarray(w), jnp.asarray(dw), jnp.asarray(m), jnp.asarray(v),
+            jnp.asarray([[lr]]), jnp.asarray([[b1 ** t]]),
+            jnp.asarray([[b2 ** t]]))
+        m_ref = b1 * m + (1 - b1) * dw
+        v_ref = b2 * v + (1 - b2) * dw * dw
+        mhat = m_ref / (1 - b1 ** t)
+        vhat = v_ref / (1 - b2 ** t)
+        w_ref = w - lr * mhat / (np.sqrt(vhat) + eps)
+        np.testing.assert_allclose(np.asarray(w2), w_ref, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(m2), m_ref, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(v2), v_ref, rtol=1e-6)
+
+    def test_adam_converges_on_quadratic(self):
+        # minimize ||w||^2 with gradient 2w
+        w = jnp.asarray(np.ones((4, 4), np.float32))
+        m = jnp.zeros((4, 4))
+        v = jnp.zeros((4, 4))
+        lr = jnp.asarray([[0.1]])
+        for t in range(1, 101):
+            dw = 2.0 * w
+            w, m, v = model.adam_update(
+                w, dw, m, v, lr,
+                jnp.asarray([[0.9 ** t]]), jnp.asarray([[0.999 ** t]]))
+        assert float(jnp.abs(w).max()) < 0.05
+
+    def test_bfp_roundtrip_grad_shape_preserving(self):
+        g = jax.random.normal(jax.random.PRNGKey(3), (32, 32))
+        (q,) = model.bfp_roundtrip_grad(g)
+        assert q.shape == g.shape
+        # quantization error must be small relative to tensor norm
+        rel = float(jnp.linalg.norm(q - g) / jnp.linalg.norm(g))
+        assert rel < 0.01
+
+    def test_nic_chunk_add(self):
+        a = jax.random.normal(jax.random.PRNGKey(4), (32, 128))
+        b = jax.random.normal(jax.random.PRNGKey(5), (32, 128))
+        (o,) = model.nic_chunk_add(a, b)
+        np.testing.assert_array_equal(np.asarray(o),
+                                      np.asarray(a) + np.asarray(b))
+
+
+class TestTraining:
+    def test_loss_decreases_under_sgd(self):
+        params, x, t = _setup(n_layers=3, hidden=32, batch=16)
+        ws, bs = [list(params[0]), list(params[1])]
+        lr = jnp.asarray([[0.05]])
+        losses = []
+        for _ in range(10):
+            loss, dws, dbs = model.mlp_grads((ws, bs), x, t)
+            losses.append(float(loss))
+            for i in range(len(ws)):
+                (ws[i],) = model.sgd_update(ws[i], dws[i], lr)
+                (nb,) = model.sgd_update(bs[i].reshape(1, -1),
+                                         dbs[i].reshape(1, -1), lr)
+                bs[i] = nb.reshape(-1)
+        assert losses[-1] < losses[0] * 0.9, losses
+
+    def test_bfp_quantized_grads_still_converge(self):
+        # Paper Sec. IV-B claim: BFP16 compression has minimal accuracy
+        # impact.  Quantize every gradient before the update.
+        params, x, t = _setup(n_layers=3, hidden=32, batch=16)
+        ws, bs = [list(params[0]), list(params[1])]
+        lr = jnp.asarray([[0.05]])
+        losses = []
+        for _ in range(10):
+            loss, dws, dbs = model.mlp_grads((ws, bs), x, t)
+            losses.append(float(loss))
+            for i in range(len(ws)):
+                (qdw,) = model.bfp_roundtrip_grad(dws[i])
+                (ws[i],) = model.sgd_update(ws[i], qdw, lr)
+                (nb,) = model.sgd_update(bs[i].reshape(1, -1),
+                                         dbs[i].reshape(1, -1), lr)
+                bs[i] = nb.reshape(-1)
+        assert losses[-1] < losses[0] * 0.9, losses
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_layers=st.integers(2, 5),
+    hidden=st.sampled_from([16, 32, 48]),
+    batch=st.integers(2, 12),
+    seed=st.integers(0, 10_000),
+)
+def test_bwd_vs_autodiff_hypothesis(n_layers, hidden, batch, seed):
+    params = model.init_params(jax.random.PRNGKey(seed), n_layers, hidden)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, hidden))
+    t = jax.random.normal(jax.random.PRNGKey(seed + 2), (batch, hidden))
+    _, dws, dbs = model.mlp_grads(params, x, t)
+    gw, gb = jax.grad(model.mlp_loss_ref)(params, x, t)
+    for a, b in zip(dws, gw):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=1e-5)
+    for a, b in zip(dbs, gb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=1e-5)

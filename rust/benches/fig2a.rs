@@ -1,0 +1,15 @@
+//! Bench E1 — regenerates Fig. 2a and times the simulation path.
+//! Run: `cargo bench --bench fig2a` (add `--quick` to trim).
+
+use ai_smartnic::benchkit::Bencher;
+use ai_smartnic::experiments::fig2a;
+
+fn main() {
+    println!("=== Fig. 2a — naive vs overlapped host all-reduce ===\n");
+    let rows = fig2a::run(6, 1792);
+    fig2a::print(&rows);
+
+    let mut b = Bencher::default();
+    b.bench("fig2a::run(6 nodes, B=1792)", || fig2a::run(6, 1792));
+    b.bench("fig2a::run(32 nodes, B=448)", || fig2a::run(32, 448));
+}

@@ -1,0 +1,21 @@
+//! Bench E2 — regenerates Fig. 2b (all-reduce scheme scaling) and times
+//! the analytic sweep.
+
+use ai_smartnic::benchkit::{quick_mode, Bencher};
+use ai_smartnic::experiments::fig2b;
+
+fn main() {
+    println!("=== Fig. 2b — overlapped host all-reduce scheme scaling ===\n");
+    let nodes: &[usize] = if quick_mode() {
+        &[2, 6, 12]
+    } else {
+        &[2, 4, 6, 8, 12, 16, 24]
+    };
+    let series = fig2b::run(nodes, 1792);
+    fig2b::print(&series);
+
+    let mut b = Bencher::default();
+    b.bench("fig2b::run(7 node counts x 5 schemes)", || {
+        fig2b::run(&[2, 4, 6, 8, 12, 16, 24], 1792)
+    });
+}

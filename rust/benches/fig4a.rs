@@ -1,0 +1,42 @@
+//! Bench E4 — regenerates Fig. 4a (baseline vs smart NIC ± BFP) and times
+//! the full DES iteration for each system.
+
+use ai_smartnic::analytic::model::SystemKind;
+use ai_smartnic::benchkit::Bencher;
+use ai_smartnic::collective::Scheme;
+use ai_smartnic::coordinator::simulate_iteration;
+use ai_smartnic::experiments::fig4a;
+use ai_smartnic::sysconfig::{SystemParams, Workload};
+
+fn main() {
+    println!("=== Fig. 4a — iteration breakdown at 6 nodes, B=448 ===\n");
+    let rows = fig4a::run(6, 448);
+    fig4a::print(&rows);
+
+    let w = Workload::paper_mlp(448);
+    let mut b = Bencher::default();
+    b.bench("simulate_iteration(baseline)", || {
+        simulate_iteration(
+            SystemKind::BaselineOverlapped { scheme: Scheme::Ring, comm_cores: 2 },
+            &SystemParams::baseline_100g(),
+            &w,
+            6,
+        )
+    });
+    b.bench("simulate_iteration(smartnic)", || {
+        simulate_iteration(
+            SystemKind::SmartNic { bfp: false },
+            &SystemParams::smartnic_40g(),
+            &w,
+            6,
+        )
+    });
+    b.bench("simulate_iteration(smartnic+bfp)", || {
+        simulate_iteration(
+            SystemKind::SmartNic { bfp: true },
+            &SystemParams::smartnic_40g(),
+            &w,
+            6,
+        )
+    });
+}

@@ -1,0 +1,23 @@
+//! Bench E5 — regenerates Fig. 4b (scaling to 32 nodes, both paper batch
+//! sizes) and times the sweep.
+
+use ai_smartnic::benchkit::{quick_mode, Bencher};
+use ai_smartnic::experiments::fig4b;
+
+fn main() {
+    println!("=== Fig. 4b — scaling to 32 nodes ===\n");
+    let nodes: &[usize] = if quick_mode() {
+        &[1, 3, 6, 32]
+    } else {
+        &[1, 2, 3, 4, 5, 6, 8, 12, 16, 24, 32]
+    };
+    for batch in [448usize, 1792] {
+        let series = fig4b::run(nodes, batch);
+        fig4b::print(&series, batch);
+    }
+
+    let mut b = Bencher::default();
+    b.bench("fig4b::run(11 node counts x 3 systems, B=448)", || {
+        fig4b::run(&[1, 2, 3, 4, 5, 6, 8, 12, 16, 24, 32], 448)
+    });
+}

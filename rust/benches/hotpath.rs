@@ -1,0 +1,69 @@
+//! Hot-path microbenchmarks (the §Perf targets of DESIGN.md): BFP codec
+//! throughput, the real ring-all-reduce data path, the NIC chunk DES, and
+//! the calendar-queue engine.
+
+use ai_smartnic::benchkit::Bencher;
+use ai_smartnic::bfp::BfpCodec;
+use ai_smartnic::collective::data::ring_allreduce;
+use ai_smartnic::netsim::engine::Sim;
+use ai_smartnic::nic::{simulate_ring_allreduce, NicConfig};
+use ai_smartnic::sysconfig::SystemParams;
+use ai_smartnic::util::rng::Rng;
+
+fn gradients(n_workers: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n_workers)
+        .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::default();
+
+    // --- BFP codec (the NIC datapath) --------------------------------
+    let codec = BfpCodec::bfp16();
+    let mut rng = Rng::new(2);
+    let grad: Vec<f32> = (0..1 << 20).map(|_| rng.normal() as f32).collect();
+    let gbytes = grad.len() as f64 * 4.0;
+    b.bench_bytes("bfp::quantize 4 MiB", gbytes, || codec.quantize(&grad));
+    let blocks = codec.encode(&grad);
+    b.bench_bytes("bfp::encode 4 MiB", gbytes, || codec.encode(&grad));
+    b.bench_bytes("bfp::decode 4 MiB", gbytes, || {
+        codec.decode(&blocks, grad.len())
+    });
+
+    // --- real ring all-reduce data path --------------------------------
+    for (n, len) in [(6usize, 1 << 18), (6, 1 << 20)] {
+        let bufs = gradients(n, len, 3);
+        let total = (n * len * 4) as f64;
+        b.bench_bytes(&format!("ring_allreduce fp32 n={n} len={len}"), total, || {
+            let mut work = bufs.clone();
+            ring_allreduce(&mut work, None)
+        });
+        b.bench_bytes(&format!("ring_allreduce bfp16 n={n} len={len}"), total, || {
+            let mut work = bufs.clone();
+            ring_allreduce(&mut work, Some(&codec))
+        });
+    }
+
+    // --- NIC chunk-level DES -------------------------------------------
+    let cfg = NicConfig::new(SystemParams::smartnic_40g(), Some(BfpCodec::bfp16()));
+    b.bench("nic DES allreduce (6 nodes, 2048^2)", || {
+        simulate_ring_allreduce(&cfg, 6, 2048 * 2048)
+    });
+    b.bench("nic DES allreduce (32 nodes, 2048^2)", || {
+        simulate_ring_allreduce(&cfg, 32, 2048 * 2048)
+    });
+
+    // --- calendar-queue engine ------------------------------------------
+    b.bench("DES engine: 100k events", || {
+        let mut sim: Sim<u64> = Sim::new();
+        let mut count = 0u64;
+        for i in 0..100_000u64 {
+            sim.schedule(i as f64 * 1e-6, |_, c: &mut u64| *c += 1);
+        }
+        sim.run(&mut count);
+        assert_eq!(count, 100_000);
+        count
+    });
+}

@@ -1,0 +1,34 @@
+//! Bench E3 — regenerates Table I (and the 100/400 Gbps variants) and
+//! times the resource model + the BFP datapath it describes.
+
+use ai_smartnic::benchkit::Bencher;
+use ai_smartnic::bfp::{wire, BfpCodec};
+use ai_smartnic::experiments::table1;
+use ai_smartnic::nic::resources::Breakdown;
+use ai_smartnic::util::rng::Rng;
+
+fn main() {
+    println!("=== Table I — FPGA resource breakdown ===\n");
+    table1::run_all();
+
+    let mut b = Bencher::default();
+    b.bench("resource model (3 speeds)", || {
+        (Breakdown::at(40.0), Breakdown::at(100.0), Breakdown::at(400.0))
+    });
+
+    // the datapath Table I describes: compression at line rate
+    let codec = BfpCodec::bfp16();
+    let mut rng = Rng::new(1);
+    let grad: Vec<f32> = (0..1 << 20).map(|_| rng.normal() as f32).collect();
+    let bytes = grad.len() as f64 * 4.0;
+    b.bench_bytes("bfp wire compress (4 MiB gradient)", bytes, || {
+        wire::compress(&codec, &grad)
+    });
+    let packed = wire::compress(&codec, &grad);
+    b.bench_bytes("bfp wire decompress (4 MiB gradient)", bytes, || {
+        wire::decompress(&codec, &packed, grad.len()).unwrap()
+    });
+    b.bench_bytes("bfp quantize in place (4 MiB gradient)", bytes, || {
+        codec.quantize(&grad)
+    });
+}

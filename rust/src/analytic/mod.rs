@@ -1,0 +1,7 @@
+//! The paper's analytical performance model (Sec. IV-C) and its validation
+//! against the discrete-event simulator.
+
+pub mod model;
+pub mod validate;
+
+pub use model::{iteration, IterationBreakdown, SystemKind};

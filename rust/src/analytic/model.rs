@@ -1,0 +1,325 @@
+//! Closed-form iteration-time model — a faithful transcription of the
+//! equations in Sec. IV-C:
+//!
+//!   T_F_l  = 2 M_l² B / P_worker          T_B_l = 4 M_l² B / P_worker
+//!   R_l    = b · N · ⌈M_l² / N⌉                       (bits, b = 32)
+//!   T_ring = R_l · 2(N−1) / (N · α·BW_eth · β)
+//!   T_add  = R_l · 2(N−1) / (N · P_FPGA · b)
+//!   T_mem  = 2 R_l / BW_pcie
+//!   T_AR_l = max(T_ring, T_add, T_mem)
+//!
+//!   T_total = Σ T_F + T_B_L + max(T_B_{L−1}, T_AR_L)
+//!           + Σ_{l=2}^{L−1} max(T_U_{l+1} + T_B_{l−1}, T_AR_l)
+//!           + max(T_U_2, T_AR_1) + T_U_1
+//!
+//! The same trace composition covers the baseline systems: for the
+//! overlapped host baseline, T_AR comes from the software collective cost
+//! model and T_B carries the core-stealing slowdown; for the naive
+//! baseline all terms serialize.
+
+use crate::bfp::BfpCodec;
+use crate::collective::host::HostStrategy;
+use crate::collective::timing::{allreduce_time, HostNet};
+use crate::collective::Scheme;
+use crate::sysconfig::{SystemParams, Workload};
+
+/// Which system variant the model evaluates (paper Figs. 2a / 4a / 4b).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SystemKind {
+    /// conventional NICs, blocking host all-reduce
+    BaselineNaive { scheme: Scheme },
+    /// conventional NICs, dedicated comm cores overlap AR with backward
+    BaselineOverlapped { scheme: Scheme, comm_cores: usize },
+    /// FPGA AI smart NIC (optionally with BFP wire compression)
+    SmartNic { bfp: bool },
+}
+
+impl SystemKind {
+    pub fn name(&self) -> String {
+        match self {
+            SystemKind::BaselineNaive { scheme } => format!("baseline-naive({})", scheme.name()),
+            SystemKind::BaselineOverlapped { scheme, comm_cores } => {
+                format!("baseline-overlapped({}, k={comm_cores})", scheme.name())
+            }
+            SystemKind::SmartNic { bfp: false } => "smartnic".to_string(),
+            SystemKind::SmartNic { bfp: true } => "smartnic+bfp".to_string(),
+        }
+    }
+}
+
+/// Fig. 2a / 4a style iteration breakdown (all seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct IterationBreakdown {
+    pub t_fwd: f64,
+    /// backward-pass compute on the critical path (slowdown included)
+    pub t_bwd: f64,
+    /// all-reduce time NOT hidden behind compute
+    pub t_exposed_ar: f64,
+    /// weight-update time on the critical path
+    pub t_update: f64,
+    pub t_total: f64,
+    /// raw all-reduce time per layer (before overlap), for reporting
+    pub t_ar_raw: f64,
+}
+
+impl IterationBreakdown {
+    /// Throughput in training samples/second for a given global batch.
+    pub fn throughput(&self, global_batch: usize) -> f64 {
+        global_batch as f64 / self.t_total
+    }
+}
+
+/// Per-layer primitive times for a (system, workload, N) configuration.
+#[derive(Clone, Debug)]
+pub struct LayerTimes {
+    pub t_f: f64,
+    pub t_b: f64,
+    pub t_ar: f64,
+    pub t_u: f64,
+    pub layers: usize,
+}
+
+/// Weight-update time: touches grad + read/write weights ≈ 3 streams of
+/// 4·M² bytes at the worker's update memory bandwidth (the paper measures
+/// T_U and scales it linearly in layer size).
+fn t_update_layer(sys: &SystemParams, w: &Workload) -> f64 {
+    3.0 * w.grad_bytes_per_layer() / sys.worker.update_membw
+}
+
+/// Smart-NIC all-reduce time for one layer (the Sec. IV-C max of three).
+pub fn smartnic_ar_time(sys: &SystemParams, w: &Workload, n: usize, bfp: bool) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let b_bits = 32.0;
+    let r_bits = b_bits * nf * (w.grad_elems_per_layer() as f64 / nf).ceil();
+    let beta = if bfp {
+        BfpCodec::bfp16().compression_ratio()
+    } else {
+        1.0
+    };
+    let t_ring = r_bits * 2.0 * (nf - 1.0) / (nf * sys.net.alpha * sys.net.eth_bw * 8.0 * beta);
+    let t_add = r_bits * 2.0 * (nf - 1.0) / (nf * sys.nic.add_flops * b_bits);
+    // Sec. IV-C's T_mem = 2R/BW_pcie.  The DES shows the dependency
+    // structure precisely: the full R must come down before the last
+    // reduce completes, and only the first R/N of the writeback overlaps
+    // that fetch tail — so T_mem = R(2N−1)/(N·BW_pcie), which converges
+    // to the paper's 2R/BW_pcie as N grows.
+    let t_mem = r_bits * (2.0 * nf - 1.0) / (nf * sys.nic.pcie_bw * 8.0);
+    t_ring.max(t_add).max(t_mem) + sys.nic_request_overhead
+}
+
+/// Compute the per-layer primitive times for a system variant.
+pub fn layer_times(kind: SystemKind, sys: &SystemParams, w: &Workload, n: usize) -> LayerTimes {
+    let strategy = match kind {
+        SystemKind::BaselineNaive { .. } => HostStrategy::Naive,
+        SystemKind::BaselineOverlapped { comm_cores, .. } => {
+            HostStrategy::Overlapped { comm_cores }
+        }
+        // smart NIC: the FPGA does the work; all cores compute
+        SystemKind::SmartNic { .. } => HostStrategy::Naive,
+    };
+    let p = sys.worker.flops(strategy.compute_cores(&sys.worker));
+    let t_f = w.fwd_flops_per_layer() / p;
+    let t_b = w.bwd_flops_per_layer() / p * strategy.bwd_slowdown(&sys.worker);
+    let t_ar = match kind {
+        SystemKind::SmartNic { bfp } => smartnic_ar_time(sys, w, n, bfp),
+        SystemKind::BaselineNaive { scheme } | SystemKind::BaselineOverlapped { scheme, .. } => {
+            // the host software stack, not the 100G link, is the real
+            // bottleneck: one volunteer thread for naive, k dedicated
+            // progress cores for overlapped, with per-node efficiency
+            // decay at scale (calibration: DESIGN.md §6)
+            let cap = match kind {
+                SystemKind::BaselineOverlapped { comm_cores, .. } => {
+                    sys.worker.host_comm_bw(Some(comm_cores), n)
+                }
+                _ => sys.worker.host_comm_bw(None, n),
+            };
+            let env = HostNet {
+                net: sys.net,
+                step_overhead: sys.host_step_overhead,
+                comm_bw_cap: cap,
+            };
+            allreduce_time(scheme, n, w.grad_bytes_per_layer(), &env)
+        }
+    };
+    LayerTimes {
+        t_f,
+        t_b,
+        t_ar,
+        t_u: t_update_layer(sys, w),
+        layers: w.layers,
+    }
+}
+
+/// Compose per-layer times along the Fig. 3b execution trace.
+/// `overlap=false` serializes everything (the naive baseline).
+pub fn compose_trace(lt: &LayerTimes, overlap: bool) -> IterationBreakdown {
+    let l = lt.layers;
+    let (t_f, t_b, t_ar, t_u) = (lt.t_f, lt.t_b, lt.t_ar, lt.t_u);
+    let fwd = t_f * l as f64;
+    let bwd = t_b * l as f64;
+    let upd = t_u * l as f64;
+    let ar_raw = t_ar * l as f64;
+    let t_total = if !overlap {
+        fwd + bwd + ar_raw + upd
+    } else if l == 1 {
+        fwd + t_b + t_ar + t_u
+    } else {
+        // Sec. IV-C composition (1-based layer indices; symmetric layers
+        // make every T_X_l identical, but keep the structure explicit)
+        let mut t = fwd + t_b; // Σ T_F + T_B_L
+        t += t_b.max(t_ar); // max(T_B_{L-1}, T_AR_L)
+        for _l in 2..l {
+            // Σ_{l=2}^{L-1} max(T_U_{l+1} + T_B_{l-1}, T_AR_l)
+            t += (t_u + t_b).max(t_ar);
+        }
+        t += t_u.max(t_ar); // max(T_U_2, T_AR_1)
+        t += t_u; // T_U_1
+        t
+    };
+    IterationBreakdown {
+        t_fwd: fwd,
+        t_bwd: bwd,
+        t_exposed_ar: (t_total - fwd - bwd - upd).max(0.0),
+        t_update: upd,
+        t_total,
+        t_ar_raw: ar_raw,
+    }
+}
+
+/// Full analytical iteration model for a system variant.
+pub fn iteration(
+    kind: SystemKind,
+    sys: &SystemParams,
+    w: &Workload,
+    n: usize,
+) -> IterationBreakdown {
+    let lt = layer_times(kind, sys, w, n);
+    let overlap = !matches!(kind, SystemKind::BaselineNaive { .. });
+    compose_trace(&lt, overlap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sysconfig::SystemParams;
+
+    fn paper_workload(b: usize) -> Workload {
+        Workload::paper_mlp(b)
+    }
+
+    #[test]
+    fn naive_serializes_everything() {
+        let sys = SystemParams::baseline_100g();
+        let w = paper_workload(1792);
+        let lt = layer_times(SystemKind::BaselineNaive { scheme: Scheme::Ring }, &sys, &w, 6);
+        let bd = compose_trace(&lt, false);
+        let sum = bd.t_fwd + bd.t_bwd + bd.t_exposed_ar + bd.t_update;
+        assert!((bd.t_total - sum).abs() < 1e-12);
+        assert!((bd.t_exposed_ar - lt.t_ar * 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig2a_naive_ar_fraction_near_half() {
+        // paper: exposed AR is 51% of naive iteration time at 6 nodes,
+        // B=1792.  Accept 40-60% — the shape, not the exact constant.
+        let sys = SystemParams::baseline_100g();
+        let w = paper_workload(1792);
+        let bd = iteration(SystemKind::BaselineNaive { scheme: Scheme::Ring }, &sys, &w, 6);
+        let frac = bd.t_exposed_ar / bd.t_total;
+        assert!((0.40..=0.60).contains(&frac), "AR fraction {frac:.2}");
+    }
+
+    #[test]
+    fn fig2a_overlap_hides_most_ar() {
+        // paper: overlapped exposed AR is ~50x less; total ~1.85x better
+        let sys = SystemParams::baseline_100g();
+        let w = paper_workload(1792);
+        let naive = iteration(SystemKind::BaselineNaive { scheme: Scheme::Ring }, &sys, &w, 6);
+        let over = iteration(
+            SystemKind::BaselineOverlapped { scheme: Scheme::Ring, comm_cores: 2 },
+            &sys,
+            &w,
+            6,
+        );
+        // the paper reports ~50x on their testbed; our calibration gives
+        // the same qualitative collapse (naive's half-the-bar sliver vs a
+        // thin residue), quantitatively >5x
+        assert!(
+            naive.t_exposed_ar / over.t_exposed_ar.max(1e-9) > 5.0,
+            "naive {} over {}",
+            naive.t_exposed_ar,
+            over.t_exposed_ar
+        );
+        let speedup = naive.t_total / over.t_total;
+        assert!((1.5..=2.2).contains(&speedup), "speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn smartnic_beats_overlapped_baseline_at_b448() {
+        let w = paper_workload(448);
+        let base = iteration(
+            SystemKind::BaselineOverlapped { scheme: Scheme::Ring, comm_cores: 2 },
+            &SystemParams::baseline_100g(),
+            &w,
+            6,
+        );
+        let nic = iteration(
+            SystemKind::SmartNic { bfp: false },
+            &SystemParams::smartnic_40g(),
+            &w,
+            6,
+        );
+        let bfp = iteration(
+            SystemKind::SmartNic { bfp: true },
+            &SystemParams::smartnic_40g(),
+            &w,
+            6,
+        );
+        assert!(nic.t_total < base.t_total);
+        assert!(bfp.t_total < nic.t_total);
+        // paper Fig. 4a: ~18% and ~40% total reduction
+        let red_nic = 1.0 - nic.t_total / base.t_total;
+        let red_bfp = 1.0 - bfp.t_total / base.t_total;
+        assert!((0.10..=0.30).contains(&red_nic), "nic reduction {red_nic:.2}");
+        assert!((0.30..=0.50).contains(&red_bfp), "bfp reduction {red_bfp:.2}");
+    }
+
+    #[test]
+    fn large_batch_hides_ar_entirely() {
+        // B=1792: smart NIC reaches compute-bound; BFP adds nothing
+        let w = paper_workload(1792);
+        let sys = SystemParams::smartnic_40g();
+        let nic = iteration(SystemKind::SmartNic { bfp: false }, &sys, &w, 6);
+        let bfp = iteration(SystemKind::SmartNic { bfp: true }, &sys, &w, 6);
+        assert!(nic.t_exposed_ar / nic.t_total < 0.05);
+        assert!((nic.t_total - bfp.t_total).abs() / nic.t_total < 0.02);
+    }
+
+    #[test]
+    fn single_node_has_no_ar() {
+        let w = paper_workload(448);
+        let bd = iteration(
+            SystemKind::SmartNic { bfp: false },
+            &SystemParams::smartnic_40g(),
+            &w,
+            1,
+        );
+        assert!(bd.t_exposed_ar < 1e-6);
+    }
+
+    #[test]
+    fn throughput_definition() {
+        let bd = IterationBreakdown {
+            t_fwd: 0.0,
+            t_bwd: 0.0,
+            t_exposed_ar: 0.0,
+            t_update: 0.0,
+            t_total: 2.0,
+            t_ar_raw: 0.0,
+        };
+        assert_eq!(bd.throughput(100), 50.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Miniature benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations, per-iteration statistics, throughput
+//! reporting and a `black_box`.  `cargo bench` targets use
+//! `harness = false` and drive this directly; each paper table/figure bench
+//! prints its rows through `util::table` after timing the underlying code.
+
+use crate::util::stats::{summarize, Summary};
+use std::time::{Duration, Instant};
+
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub per_iter: Summary,
+    /// optional bytes processed per iteration (for throughput)
+    pub bytes_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.per_iter;
+        let mut line = format!(
+            "{:<40} {:>12} /iter  (min {}, p95 {}, n={})",
+            self.name,
+            crate::util::units::fmt_time(s.mean),
+            crate::util::units::fmt_time(s.min),
+            crate::util::units::fmt_time(s.p95),
+            self.iters,
+        );
+        if let Some(b) = self.bytes_per_iter {
+            line.push_str(&format!(
+                "  [{}]",
+                crate::util::units::fmt_rate(b / s.mean)
+            ));
+        }
+        line
+    }
+}
+
+pub struct Bencher {
+    /// target measurement time per benchmark
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            measure_time: Duration::from_millis(700),
+            warmup_time: Duration::from_millis(150),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            measure_time: Duration::from_millis(200),
+            warmup_time: Duration::from_millis(50),
+            ..Default::default()
+        }
+    }
+
+    /// Time `f` repeatedly; returns and records per-iteration stats.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_with_bytes(name, None, move || {
+            black_box(f());
+        })
+    }
+
+    /// Like `bench` but annotates throughput as bytes/iteration.
+    pub fn bench_bytes<T>(
+        &mut self,
+        name: &str,
+        bytes: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_bytes(name, Some(bytes), move || {
+            black_box(f());
+        })
+    }
+
+    fn bench_with_bytes(
+        &mut self,
+        name: &str,
+        bytes: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        // warmup + per-iteration cost estimate
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup_time || warm_iters < 3 {
+            f();
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let est = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // choose a batch size so one sample costs ~1/50 of measure_time
+        let target_sample = self.measure_time.as_secs_f64() / 50.0;
+        let batch = ((target_sample / est).ceil() as usize).clamp(1, self.max_iters);
+
+        let mut samples = Vec::new();
+        let mut total_iters = 0usize;
+        let start = Instant::now();
+        while start.elapsed() < self.measure_time && total_iters < self.max_iters {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            per_iter: summarize(&samples),
+            bytes_per_iter: bytes,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// True when `cargo bench` was invoked with `--quick` (or the env var is
+/// set) — used by bench mains to trim sweeps.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("SMARTNIC_BENCH_QUICK").is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(30),
+            warmup_time: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let r = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.per_iter.mean > 0.0);
+        assert!(r.iters > 10);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let r = b.bench_bytes("copy", 1024.0, || vec![0u8; 1024]);
+        assert_eq!(r.bytes_per_iter, Some(1024.0));
+        assert!(r.report().contains("/s"));
+    }
+}

@@ -1,0 +1,128 @@
+//! Quantization-error analysis used by the BFP-accuracy experiment (E7)
+//! and the block-size/mantissa ablations: SNR, relative tensor error, and
+//! parameter sweeps over the (block_size, mant_bits) design space that the
+//! paper's "FPGA flexibility" argument opens up.
+
+use super::codec::BfpCodec;
+
+#[derive(Clone, Copy, Debug)]
+pub struct QuantStats {
+    /// signal-to-quantization-noise ratio in dB
+    pub snr_db: f64,
+    /// ||x - q|| / ||x||
+    pub rel_l2: f64,
+    /// max |x - q|
+    pub max_abs: f64,
+    /// mean |x - q|
+    pub mean_abs: f64,
+}
+
+/// Measure quantization error of codec `c` over signal `x`.
+pub fn measure(c: &BfpCodec, x: &[f32]) -> QuantStats {
+    let q = c.quantize(x);
+    let mut sig = 0f64;
+    let mut noise = 0f64;
+    let mut max_abs = 0f64;
+    let mut sum_abs = 0f64;
+    for (a, b) in x.iter().zip(&q) {
+        let d = (*a - *b) as f64;
+        sig += (*a as f64) * (*a as f64);
+        noise += d * d;
+        max_abs = max_abs.max(d.abs());
+        sum_abs += d.abs();
+    }
+    let snr_db = if noise == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (sig / noise).log10()
+    };
+    QuantStats {
+        snr_db,
+        rel_l2: if sig == 0.0 { 0.0 } else { (noise / sig).sqrt() },
+        max_abs,
+        mean_abs: sum_abs / x.len().max(1) as f64,
+    }
+}
+
+/// One row of the (block_size, mant_bits) ablation sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub block_size: usize,
+    pub mant_bits: u32,
+    pub ratio: f64,
+    pub snr_db: f64,
+    pub rel_l2: f64,
+}
+
+/// Sweep the BFP design space over a given signal — regenerates the
+/// "tunable for different workloads" argument of Sec. IV-B.
+pub fn sweep(x: &[f32], block_sizes: &[usize], mant_bits: &[u32]) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for &bs in block_sizes {
+        for &mb in mant_bits {
+            let c = BfpCodec::new(bs, mb);
+            let s = measure(&c, x);
+            out.push(SweepPoint {
+                block_size: bs,
+                mant_bits: mb,
+                ratio: c.compression_ratio(),
+                snr_db: s.snr_db,
+                rel_l2: s.rel_l2,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn bfp16_snr_is_high_on_gaussian() {
+        // 7-bit mantissa on gaussian data: expect > 25 dB SNR
+        let s = measure(&BfpCodec::bfp16(), &gaussian(1 << 14, 1));
+        assert!(s.snr_db > 25.0, "snr {}", s.snr_db);
+        assert!(s.rel_l2 < 0.06, "rel {}", s.rel_l2);
+    }
+
+    #[test]
+    fn zero_signal_has_zero_error() {
+        let s = measure(&BfpCodec::bfp16(), &vec![0f32; 256]);
+        assert!(s.snr_db.is_infinite());
+        assert_eq!(s.rel_l2, 0.0);
+        assert_eq!(s.max_abs, 0.0);
+    }
+
+    #[test]
+    fn snr_monotone_in_mantissa_bits() {
+        let x = gaussian(1 << 13, 2);
+        let pts = sweep(&x, &[16], &[3, 5, 7, 9]);
+        for w in pts.windows(2) {
+            assert!(w[1].snr_db > w[0].snr_db, "{pts:?}");
+        }
+    }
+
+    #[test]
+    fn snr_degrades_with_block_size() {
+        // larger blocks share one exponent over more dynamic range
+        let x = gaussian(1 << 13, 3);
+        let pts = sweep(&x, &[4, 16, 64], &[7]);
+        assert!(pts[0].snr_db >= pts[1].snr_db);
+        assert!(pts[1].snr_db >= pts[2].snr_db);
+    }
+
+    #[test]
+    fn ratio_improves_with_block_size() {
+        let x = gaussian(256, 4);
+        let pts = sweep(&x, &[4, 16, 64], &[7]);
+        assert!(pts[0].ratio < pts[1].ratio);
+        assert!(pts[1].ratio < pts[2].ratio);
+    }
+}

@@ -1,0 +1,13 @@
+//! Block Floating Point (BFP) — the smart NIC's wire compression
+//! (paper Sec. IV-B).
+//!
+//! Bit-for-bit identical to the Pallas kernel in
+//! `python/compile/kernels/bfp.py` (the contract is written out there);
+//! golden vectors emitted by the AOT pipeline are checked in
+//! `rust/tests/golden_bfp.rs`.
+
+mod codec;
+pub mod analysis;
+pub mod wire;
+
+pub use codec::{BfpCodec, BfpBlock, DEFAULT_BLOCK_SIZE, DEFAULT_MANT_BITS, DEFAULT_EXP_BITS};

@@ -1,0 +1,247 @@
+//! Real data paths for the non-ring all-reduce algorithms of Fig. 2b:
+//! binomial-tree reduce+broadcast and Rabenseifner (recursive-halving
+//! reduce-scatter + recursive-doubling allgather), including the standard
+//! non-power-of-two pre/post folding.
+//!
+//! These complement `data::ring_allreduce` (the NIC's algorithm): the
+//! baselines the paper compares against are real here too, so the
+//! correctness property (== serial sum up to summation order) is tested
+//! for every scheme.
+
+/// Binomial-tree all-reduce: reduce to rank 0, then broadcast.
+pub fn binomial_allreduce(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "ragged buffers");
+    // reduce: in round k, ranks with bit k set send to (rank - 2^k)
+    let mut k = 1usize;
+    while k < n {
+        for dst in (0..n).step_by(2 * k) {
+            let src = dst + k;
+            if src < n {
+                let (a, b) = bufs.split_at_mut(src);
+                let dst_buf = &mut a[dst];
+                for (d, s) in dst_buf.iter_mut().zip(&b[0]) {
+                    *d += s;
+                }
+            }
+        }
+        k *= 2;
+    }
+    // broadcast rank 0's result
+    let root = bufs[0].clone();
+    for b in bufs[1..].iter_mut() {
+        b.copy_from_slice(&root);
+    }
+}
+
+/// Rabenseifner all-reduce: recursive halving reduce-scatter followed by
+/// recursive doubling allgather, with surplus ranks folded in/out for
+/// non-powers-of-two.
+pub fn rabenseifner_allreduce(bufs: &mut [Vec<f32>]) {
+    let n = bufs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "ragged buffers");
+
+    // --- fold surplus ranks: p = 2^k <= n, r = n - p ------------------
+    let p = if n.is_power_of_two() {
+        n
+    } else {
+        1usize << (usize::BITS - 1 - n.leading_zeros())
+    };
+    let r = n - p;
+    // odd ranks among the first 2r send everything to their even partner
+    for i in 0..r {
+        let (even, odd) = (2 * i, 2 * i + 1);
+        let (a, b) = bufs.split_at_mut(odd);
+        for (d, s) in a[even].iter_mut().zip(&b[0]) {
+            *d += s;
+        }
+    }
+    // active set: evens of the folded prefix + the tail
+    let active: Vec<usize> = (0..r).map(|i| 2 * i).chain(2 * r..n).collect();
+    debug_assert_eq!(active.len(), p);
+
+    // --- recursive halving reduce-scatter over `active` ----------------
+    // own[v] = (lo, hi) range of the vector active[v] currently owns
+    let mut own = vec![(0usize, len); p];
+    let mut dist = p / 2;
+    while dist >= 1 {
+        for v in 0..p {
+            let peer = v ^ dist;
+            if peer < v {
+                continue; // handle each pair once
+            }
+            let (lo, hi) = own[v];
+            debug_assert_eq!(own[peer], own[v]);
+            let mid = lo + (hi - lo) / 2;
+            // lower-half owner: the rank with the 0 bit (v); upper: peer
+            // v reduces [lo, mid) — it receives peer's [lo, mid)
+            // peer reduces [mid, hi) — it receives v's [mid, hi)
+            let (i, j) = (active[v], active[peer]);
+            let (first, second) = if i < j {
+                let (a, b) = bufs.split_at_mut(j);
+                (&mut a[i], &mut b[0])
+            } else {
+                unreachable!("active is sorted")
+            };
+            for idx in lo..mid {
+                first[idx] += second[idx];
+            }
+            for idx in mid..hi {
+                second[idx] += first[idx];
+            }
+            own[v] = (lo, mid);
+            own[peer] = (mid, hi);
+        }
+        dist /= 2;
+    }
+
+    // --- recursive doubling allgather ----------------------------------
+    dist = 1;
+    while dist < p {
+        for v in 0..p {
+            let peer = v ^ dist;
+            if peer < v {
+                continue;
+            }
+            let (i, j) = (active[v], active[peer]);
+            let (lo_v, hi_v) = own[v];
+            let (lo_p, hi_p) = own[peer];
+            let (a, b) = bufs.split_at_mut(j);
+            // exchange owned ranges
+            b[0][lo_v..hi_v].copy_from_slice(&a[i][lo_v..hi_v]);
+            let tmp = b[0][lo_p..hi_p].to_vec();
+            a[i][lo_p..hi_p].copy_from_slice(&tmp);
+            let merged = (lo_v.min(lo_p), hi_v.max(hi_p));
+            own[v] = merged;
+            own[peer] = merged;
+        }
+        dist *= 2;
+    }
+
+    // --- unfold: evens copy the result back to their odd partner -------
+    for i in 0..r {
+        let (even, odd) = (2 * i, 2 * i + 1);
+        let src = bufs[even].clone();
+        bufs[odd].copy_from_slice(&src);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::data::serial_sum;
+    use crate::prop::{forall, gens};
+    use crate::util::rng::Rng;
+
+    fn make_bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    fn assert_close(got: &[Vec<f32>], want: &[f32], tag: &str) {
+        for (wi, b) in got.iter().enumerate() {
+            for (g, w) in b.iter().zip(want) {
+                assert!(
+                    (g - w).abs() <= w.abs() * 1e-5 + 1e-5,
+                    "{tag} worker {wi}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn binomial_matches_serial() {
+        for n in [2usize, 3, 4, 5, 6, 7, 8, 12] {
+            for len in [1usize, 17, 256] {
+                let mut bufs = make_bufs(n, len, (n * 7 + len) as u64);
+                let want = serial_sum(&bufs);
+                binomial_allreduce(&mut bufs);
+                assert_close(&bufs, &want, &format!("binomial n={n} len={len}"));
+                for b in &bufs[1..] {
+                    assert_eq!(b, &bufs[0]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rabenseifner_matches_serial_pow2() {
+        for n in [2usize, 4, 8, 16] {
+            for len in [16usize, 100, 1024] {
+                let mut bufs = make_bufs(n, len, (n * 13 + len) as u64);
+                let want = serial_sum(&bufs);
+                rabenseifner_allreduce(&mut bufs);
+                assert_close(&bufs, &want, &format!("rab n={n} len={len}"));
+                for b in &bufs[1..] {
+                    assert_eq!(b, &bufs[0]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rabenseifner_matches_serial_nonpow2() {
+        for n in [3usize, 5, 6, 7, 12, 24] {
+            for len in [8usize, 129, 1000] {
+                let mut bufs = make_bufs(n, len, (n * 31 + len) as u64);
+                let want = serial_sum(&bufs);
+                rabenseifner_allreduce(&mut bufs);
+                assert_close(&bufs, &want, &format!("rab n={n} len={len}"));
+                for b in &bufs[1..] {
+                    assert_eq!(b, &bufs[0]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_vectors_and_single_node() {
+        let mut one = make_bufs(1, 5, 1);
+        let orig = one[0].clone();
+        rabenseifner_allreduce(&mut one);
+        binomial_allreduce(&mut one);
+        assert_eq!(one[0], orig);
+
+        // len < n
+        let mut bufs = make_bufs(6, 2, 2);
+        let want = serial_sum(&bufs);
+        rabenseifner_allreduce(&mut bufs);
+        assert_close(&bufs, &want, "rab len<n");
+    }
+
+    #[test]
+    fn prop_all_schemes_agree_with_serial() {
+        forall(
+            &gens::pair(gens::usize_in(2..=10), gens::usize_in(1..=257)),
+            40,
+            |&(n, len)| {
+                let make = || make_bufs(n, len, (n * 97 + len) as u64);
+                let want = serial_sum(&make());
+                let ok = |bufs: &[Vec<f32>]| {
+                    bufs.iter().all(|b| {
+                        b.iter()
+                            .zip(&want)
+                            .all(|(g, w)| (g - w).abs() <= w.abs() * 1e-5 + 1e-5)
+                    })
+                };
+                let mut a = make();
+                binomial_allreduce(&mut a);
+                let mut b = make();
+                rabenseifner_allreduce(&mut b);
+                let mut c = make();
+                crate::collective::data::ring_allreduce(&mut c, None);
+                ok(&a) && ok(&b) && ok(&c)
+            },
+        );
+    }
+}

@@ -1,0 +1,254 @@
+//! The *real* all-reduce data path: exact pipelined ring all-reduce over
+//! worker gradient buffers, with optional BFP quantization at every hop —
+//! precisely the NIC datapath of Fig. 3a (decompress → FP32 add →
+//! compress), so the training runtime experiences the same numerics the
+//! hardware would produce.
+//!
+//! Summation order is fixed by the ring schedule, making results exactly
+//! reproducible (and matching what the FPGA ring produces, which differs
+//! from a serial left-to-right sum only in associativity order).
+
+use crate::bfp::BfpCodec;
+use crate::netsim::topology::Ring;
+
+/// In-place ring all-reduce (sum) across `bufs` (one gradient buffer per
+/// worker, all the same length).  `bfp` quantizes each chunk before every
+/// wire crossing.  Returns bytes that crossed the wire per node.
+pub fn ring_allreduce(bufs: &mut [Vec<f32>], bfp: Option<&BfpCodec>) -> f64 {
+    let n = bufs.len();
+    assert!(n >= 1);
+    if n == 1 {
+        return 0.0;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len), "ragged buffers");
+    let ring = Ring::new(n);
+    let chunk = len.div_ceil(n);
+    // chunks past the end are empty (the padded region of Sec. IV-C)
+    let bounds =
+        |c: usize| -> (usize, usize) { ((c * chunk).min(len), ((c + 1) * chunk).min(len)) };
+
+    let mut wire_bytes = 0f64;
+    // in-flight payloads: what node i sends this step
+    let mut inflight: Vec<Vec<f32>> = vec![Vec::new(); n];
+
+    // reduce-scatter: n-1 steps
+    for step in 0..ring.reduce_scatter_steps() {
+        for (i, payload) in inflight.iter_mut().enumerate() {
+            let c = ring.send_chunk(i, step);
+            let (lo, hi) = bounds(c);
+            let mut data = if step == 0 {
+                bufs[i][lo..hi].to_vec()
+            } else {
+                std::mem::take(payload)
+            };
+            if let Some(codec) = bfp {
+                codec.quantize_slice(&mut data);
+                wire_bytes += codec.wire_bytes(data.len()) as f64;
+            } else {
+                wire_bytes += data.len() as f64 * 4.0;
+            }
+            *payload = data;
+        }
+        // deliver: receiver j = next(i) reduces into its local chunk copy
+        let mut next_inflight: Vec<Vec<f32>> = vec![Vec::new(); n];
+        for i in 0..n {
+            let j = ring.next(i);
+            let c = ring.recv_chunk(j, step);
+            let (lo, hi) = bounds(c);
+            let mut acc = std::mem::take(&mut inflight[i]);
+            for (a, &b) in acc.iter_mut().zip(&bufs[j][lo..hi]) {
+                *a += b;
+            }
+            next_inflight[j] = acc;
+        }
+        inflight = next_inflight;
+    }
+
+    // after reduce-scatter, node j holds the fully reduced chunk it last
+    // received in `inflight[j]`; write it back and run the allgather phase
+    for j in 0..n {
+        let c = ring.recv_chunk(j, ring.reduce_scatter_steps() - 1);
+        let (lo, hi) = bounds(c);
+        // quantize once more if compressed: the final value written to
+        // every host is the BFP-decoded reduced chunk (it crosses the
+        // wire to every other node)
+        if let Some(codec) = bfp {
+            codec.quantize_slice(&mut inflight[j]);
+        }
+        bufs[j][lo..hi].copy_from_slice(&inflight[j]);
+    }
+
+    // allgather: n-1 steps of store-and-forward of the reduced chunks
+    for step in ring.reduce_scatter_steps()..ring.allreduce_steps() {
+        let mut moves: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(n);
+        for i in 0..n {
+            let j = ring.next(i);
+            let c = ring.send_chunk(i, step);
+            let (lo, hi) = bounds(c);
+            let data = bufs[i][lo..hi].to_vec();
+            wire_bytes += match bfp {
+                // already quantized: re-quantization is idempotent, costs
+                // only compressed bytes on the wire
+                Some(codec) => codec.wire_bytes(data.len()) as f64,
+                None => data.len() as f64 * 4.0,
+            };
+            moves.push((j, c, data));
+        }
+        for (j, c, data) in moves {
+            let (lo, hi) = bounds(c);
+            debug_assert_eq!(hi - lo, data.len());
+            bufs[j][lo..hi].copy_from_slice(&data);
+        }
+    }
+    wire_bytes / n as f64
+}
+
+/// Reference: serial sum of all buffers (the oracle for tests).
+pub fn serial_sum(bufs: &[Vec<f32>]) -> Vec<f32> {
+    let len = bufs[0].len();
+    let mut out = vec![0f32; len];
+    for b in bufs {
+        for (o, &x) in out.iter_mut().zip(b) {
+            *o += x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{forall, gens};
+    use crate::util::rng::Rng;
+
+    fn make_bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn matches_serial_sum_fp32() {
+        for n in [2usize, 3, 4, 6, 8] {
+            for len in [1usize, 5, 16, 100, 1024, 1000] {
+                let mut bufs = make_bufs(n, len, (n * 1000 + len) as u64);
+                let want = serial_sum(&bufs);
+                ring_allreduce(&mut bufs, None);
+                for b in &bufs {
+                    for (got, want) in b.iter().zip(&want) {
+                        assert!(
+                            (got - want).abs() <= want.abs() * 1e-5 + 1e-5,
+                            "n={n} len={len}: {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_workers_agree_exactly() {
+        let mut bufs = make_bufs(6, 999, 42);
+        ring_allreduce(&mut bufs, None);
+        for b in &bufs[1..] {
+            assert_eq!(b, &bufs[0]);
+        }
+    }
+
+    #[test]
+    fn all_workers_agree_with_bfp() {
+        let codec = BfpCodec::bfp16();
+        let mut bufs = make_bufs(6, 1024, 43);
+        ring_allreduce(&mut bufs, Some(&codec));
+        for b in &bufs[1..] {
+            assert_eq!(b, &bufs[0]);
+        }
+    }
+
+    #[test]
+    fn bfp_error_is_bounded() {
+        let codec = BfpCodec::bfp16();
+        let mut bufs = make_bufs(6, 4096, 44);
+        let want = serial_sum(&bufs);
+        ring_allreduce(&mut bufs, Some(&codec));
+        // relative L2 error of the reduced tensor should be small
+        let num: f64 = bufs[0]
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        let den: f64 = want.iter().map(|x| (*x as f64).powi(2)).sum();
+        let rel = (num / den).sqrt();
+        assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn single_worker_untouched() {
+        let mut bufs = make_bufs(1, 64, 45);
+        let orig = bufs[0].clone();
+        let wire = ring_allreduce(&mut bufs, None);
+        assert_eq!(bufs[0], orig);
+        assert_eq!(wire, 0.0);
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let len = 6 * 160; // chunks divide evenly into whole BFP blocks
+        let mut a = make_bufs(6, len, 46);
+        let raw = ring_allreduce(&mut a, None);
+        // per node: 2(N-1) sends of len/N elems * 4 bytes
+        let expect = 2.0 * 5.0 * (len as f64 / 6.0) * 4.0;
+        assert!((raw - expect).abs() < 1e-9, "raw {raw} expect {expect}");
+        let codec = BfpCodec::bfp16();
+        let mut b = make_bufs(6, len, 46);
+        let comp = ring_allreduce(&mut b, Some(&codec));
+        assert!(
+            (raw / comp - codec.compression_ratio()).abs() < 0.3,
+            "ratio {}",
+            raw / comp
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = make_bufs(5, 777, 47);
+        let mut b = make_bufs(5, 777, 47);
+        ring_allreduce(&mut a, None);
+        ring_allreduce(&mut b, None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prop_allreduce_matches_serial_any_shape() {
+        forall(
+            &gens::pair(gens::usize_in(2..=8), gens::usize_in(1..=300)),
+            40,
+            |&(n, len)| {
+                let mut bufs = make_bufs(n, len, (n * 31 + len) as u64);
+                let want = serial_sum(&bufs);
+                ring_allreduce(&mut bufs, None);
+                bufs.iter().all(|b| {
+                    b.iter()
+                        .zip(&want)
+                        .all(|(g, w)| (g - w).abs() <= w.abs() * 1e-5 + 1e-5)
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_bfp_allreduce_workers_agree() {
+        let codec = BfpCodec::bfp16();
+        forall(
+            &gens::pair(gens::usize_in(2..=7), gens::usize_in(1..=200)),
+            30,
+            |&(n, len)| {
+                let mut bufs = make_bufs(n, len, (n * 97 + len) as u64);
+                ring_allreduce(&mut bufs, Some(&codec));
+                bufs[1..].iter().all(|b| b == &bufs[0])
+            },
+        );
+    }
+}

@@ -1,0 +1,128 @@
+//! Host-side all-reduce execution models (Sec. III): how the *baseline*
+//! system (conventional NICs) spends worker resources on communication.
+//!
+//! Two strategies, matching the paper's profiling experiment:
+//! * **Naive** — all cores compute; one thread fires an asynchronous
+//!   all-reduce and everyone waits: the full all-reduce latency lands on
+//!   the critical path (Fig. 2a left).
+//! * **Overlapped** — `comm_cores` cores are dedicated to communication +
+//!   weight update management; the remaining cores run the backward pass,
+//!   which slows down by cores/(cores−k)·(1+η) (Fig. 2a right, the black
+//!   shaded 11%).
+
+use crate::sysconfig::WorkerParams;
+
+/// Host all-reduce execution strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HostStrategy {
+    Naive,
+    /// overlapped with `comm_cores` dedicated communication cores
+    Overlapped { comm_cores: usize },
+}
+
+impl HostStrategy {
+    /// Cores left for tensor compute.
+    pub fn compute_cores(&self, w: &WorkerParams) -> usize {
+        match self {
+            HostStrategy::Naive => w.cores,
+            HostStrategy::Overlapped { comm_cores } => {
+                assert!(*comm_cores < w.cores, "cannot dedicate every core");
+                w.cores - comm_cores
+            }
+        }
+    }
+
+    /// Multiplier on backward-pass time relative to all-cores compute.
+    pub fn bwd_slowdown(&self, w: &WorkerParams) -> f64 {
+        match self {
+            HostStrategy::Naive => 1.0,
+            HostStrategy::Overlapped { comm_cores } => {
+                let c = w.cores as f64;
+                let k = *comm_cores as f64;
+                c / (c - k) * (1.0 + w.comm_interference)
+            }
+        }
+    }
+
+    /// Does the all-reduce overlap with backward compute?
+    pub fn overlaps(&self) -> bool {
+        matches!(self, HostStrategy::Overlapped { .. })
+    }
+}
+
+/// Pick the best comm-core count for an overlapped host all-reduce by
+/// minimizing modeled iteration time over a candidate range (the paper's
+/// "balance ... is workload dependent and needs to be tuned"; they found
+/// 2 for their workload).
+pub fn tune_comm_cores(
+    w: &WorkerParams,
+    iter_time: impl Fn(HostStrategy) -> f64,
+    max_comm: usize,
+) -> (usize, f64) {
+    let mut best = (1usize, f64::INFINITY);
+    for k in 1..=max_comm.min(w.cores - 1) {
+        let t = iter_time(HostStrategy::Overlapped { comm_cores: k });
+        if t < best.1 {
+            best = (k, t);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sysconfig::WorkerParams;
+
+    #[test]
+    fn naive_uses_all_cores() {
+        let w = WorkerParams::xeon_8280();
+        assert_eq!(HostStrategy::Naive.compute_cores(&w), 28);
+        assert_eq!(HostStrategy::Naive.bwd_slowdown(&w), 1.0);
+    }
+
+    #[test]
+    fn overlapped_2_cores_gives_papers_11pct() {
+        let w = WorkerParams::xeon_8280();
+        let s = HostStrategy::Overlapped { comm_cores: 2 };
+        assert_eq!(s.compute_cores(&w), 26);
+        let slow = s.bwd_slowdown(&w);
+        assert!((slow - 1.11).abs() < 0.005, "slowdown {slow}");
+    }
+
+    #[test]
+    fn slowdown_grows_with_comm_cores() {
+        let w = WorkerParams::xeon_8280();
+        let s2 = HostStrategy::Overlapped { comm_cores: 2 }.bwd_slowdown(&w);
+        let s8 = HostStrategy::Overlapped { comm_cores: 8 }.bwd_slowdown(&w);
+        assert!(s8 > s2);
+    }
+
+    #[test]
+    fn tune_finds_minimum() {
+        let w = WorkerParams::xeon_8280();
+        // toy objective: compute term shrinks with comm cores' AR speedup,
+        // compute slows down: minimum interior
+        let obj = |s: HostStrategy| {
+            let k = match s {
+                HostStrategy::Overlapped { comm_cores } => comm_cores as f64,
+                _ => 0.0,
+            };
+            s.bwd_slowdown(&w) * 10.0 + 8.0 / k
+        };
+        let (k, t) = tune_comm_cores(&w, obj, 27);
+        assert!(k >= 1 && k < 28);
+        assert!(t.is_finite());
+        // check neighbourhood optimality
+        let t_prev = obj(HostStrategy::Overlapped { comm_cores: (k - 1).max(1) });
+        let t_next = obj(HostStrategy::Overlapped { comm_cores: k + 1 });
+        assert!(t <= t_prev && t <= t_next);
+    }
+
+    #[test]
+    #[should_panic(expected = "every core")]
+    fn cannot_steal_all_cores() {
+        let w = WorkerParams::xeon_8280();
+        HostStrategy::Overlapped { comm_cores: 28 }.compute_cores(&w);
+    }
+}

@@ -1,0 +1,64 @@
+//! Collective communication: the all-reduce algorithms of Sec. II-B / III.
+//!
+//! Two faces, deliberately separated:
+//! * [`timing`] — closed-form software (MPI-style) all-reduce cost models
+//!   for ring, Rabenseifner, binomial gather/scatter, pipelined tree and
+//!   the MPICH-style size heuristic (regenerates Fig. 2b);
+//! * [`data`] — the *real* data path: exact ring all-reduce over worker
+//!   gradient buffers with optional per-hop BFP quantization, used by the
+//!   real training runtime (numerics included).
+
+pub mod algorithms;
+pub mod data;
+pub mod host;
+pub mod timing;
+
+/// All-reduce algorithm selector (paper Fig. 2b legend).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// pipelined ring (bandwidth optimal, linear latency)
+    Ring,
+    /// Rabenseifner: recursive-halving reduce-scatter + recursive-doubling
+    /// allgather
+    Rabenseifner,
+    /// binomial-tree gather to root + scatter/broadcast
+    Binomial,
+    /// pipelined binary tree
+    Tree,
+    /// MPICH-style heuristic choosing by message size / node count
+    Default,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 5] = [
+        Scheme::Default,
+        Scheme::Ring,
+        Scheme::Rabenseifner,
+        Scheme::Binomial,
+        Scheme::Tree,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Ring => "ring",
+            Scheme::Rabenseifner => "rabenseifner",
+            Scheme::Binomial => "binomial",
+            Scheme::Tree => "tree",
+            Scheme::Default => "default",
+        }
+    }
+}
+
+impl std::str::FromStr for Scheme {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "ring" => Ok(Scheme::Ring),
+            "rabenseifner" => Ok(Scheme::Rabenseifner),
+            "binomial" => Ok(Scheme::Binomial),
+            "tree" => Ok(Scheme::Tree),
+            "default" => Ok(Scheme::Default),
+            other => Err(format!("unknown all-reduce scheme '{other}'")),
+        }
+    }
+}

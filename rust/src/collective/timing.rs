@@ -1,0 +1,182 @@
+//! Closed-form cost models of software (host/MPI) all-reduce schemes
+//! (Thakur et al. [20] forms, with per-step software overhead), evaluated
+//! over the baseline 100 GbE network.  These regenerate Fig. 2b's ordering:
+//! default ≈ ring ≈ Rabenseifner > binomial for large gradients.
+
+use super::Scheme;
+use crate::sysconfig::NetParams;
+
+/// Software all-reduce environment: network + per-step software cost.
+#[derive(Clone, Copy, Debug)]
+pub struct HostNet {
+    pub net: NetParams,
+    /// per-step software/MPI overhead (s): progress engine, matching, ...
+    pub step_overhead: f64,
+    /// cap from the host side: how fast the dedicated comm cores can push
+    /// the software stack (f64::INFINITY = NIC line rate is the limit)
+    pub comm_bw_cap: f64,
+}
+
+impl HostNet {
+    pub fn effective_bw(&self) -> f64 {
+        (self.net.eth_bw * self.net.alpha).min(self.comm_bw_cap)
+    }
+
+    fn step_cost(&self) -> f64 {
+        self.step_overhead + self.net.hop_latency
+    }
+}
+
+/// Time for one all-reduce of `bytes` across `n` nodes with `scheme`.
+pub fn allreduce_time(scheme: Scheme, n: usize, bytes: f64, env: &HostNet) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let bw = env.effective_bw();
+    let lg = (n as f64).log2().ceil();
+    match scheme {
+        Scheme::Ring => {
+            // 2(N-1) steps, each moving bytes/N
+            let steps = 2.0 * (nf - 1.0);
+            steps * (bytes / nf) / bw + steps * env.step_cost()
+        }
+        Scheme::Rabenseifner => {
+            // recursive halving + doubling: volume 2(N-1)/N * bytes over
+            // 2*ceil(log2 N) steps; non-power-of-two pays a preparation
+            // exchange proportional to the surplus ranks folded away
+            let extra = if n.is_power_of_two() {
+                0.0
+            } else {
+                let pow = 1usize << (usize::BITS - 1 - n.leading_zeros());
+                let frac = (n - pow) as f64 / nf;
+                frac * bytes / bw + env.step_cost()
+            };
+            2.0 * (nf - 1.0) / nf * bytes / bw + 2.0 * lg * env.step_cost() + extra
+        }
+        Scheme::Binomial => {
+            // gather-to-root: each of log2(N) rounds moves the full vector
+            // on the critical path (reduce happens at receivers), then a
+            // binomial broadcast of the result: ~2*log2(N)*bytes/bw
+            2.0 * lg * bytes / bw + 2.0 * lg * env.step_cost()
+        }
+        Scheme::Tree => {
+            // pipelined binary tree: up + down, each ~bytes/bw at depth
+            // log2(N) of latency once the pipe fills
+            2.0 * bytes / bw + 2.0 * lg * env.step_cost()
+        }
+        Scheme::Default => {
+            // MPICH-style: short messages use binomial, large messages use
+            // the best of ring/Rabenseifner
+            if bytes < 64.0 * 1024.0 {
+                allreduce_time(Scheme::Binomial, n, bytes, env)
+            } else {
+                allreduce_time(Scheme::Ring, n, bytes, env)
+                    .min(allreduce_time(Scheme::Rabenseifner, n, bytes, env))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sysconfig::SystemParams;
+
+    fn env() -> HostNet {
+        let s = SystemParams::baseline_100g();
+        HostNet {
+            net: s.net,
+            step_overhead: s.host_step_overhead,
+            comm_bw_cap: f64::INFINITY,
+        }
+    }
+
+    const MB16: f64 = 16.0 * 1024.0 * 1024.0;
+
+    #[test]
+    fn single_node_is_free() {
+        assert_eq!(allreduce_time(Scheme::Ring, 1, MB16, &env()), 0.0);
+    }
+
+    #[test]
+    fn ring_is_bandwidth_optimal_for_large_messages() {
+        let e = env();
+        let ring = allreduce_time(Scheme::Ring, 8, MB16, &e);
+        let binom = allreduce_time(Scheme::Binomial, 8, MB16, &e);
+        let tree = allreduce_time(Scheme::Tree, 8, MB16, &e);
+        assert!(ring < binom, "ring {ring} binom {binom}");
+        assert!(ring < tree, "ring {ring} tree {tree}");
+    }
+
+    #[test]
+    fn rabenseifner_close_to_ring_at_powers_of_two() {
+        let e = env();
+        let ring = allreduce_time(Scheme::Ring, 16, MB16, &e);
+        let rab = allreduce_time(Scheme::Rabenseifner, 16, MB16, &e);
+        // same bandwidth term; Rabenseifner has fewer latency steps
+        assert!((ring - rab).abs() / ring < 0.15, "ring {ring} rab {rab}");
+        assert!(rab <= ring);
+    }
+
+    #[test]
+    fn binomial_wins_for_tiny_messages() {
+        let e = env();
+        let small = 4.0 * 1024.0;
+        let ring = allreduce_time(Scheme::Ring, 16, small, &e);
+        let binom = allreduce_time(Scheme::Binomial, 16, small, &e);
+        assert!(binom < ring, "binom {binom} ring {ring}");
+        // and the heuristic picks it up
+        let def = allreduce_time(Scheme::Default, 16, small, &e);
+        assert_eq!(def, binom);
+    }
+
+    #[test]
+    fn default_matches_best_large(){
+        let e = env();
+        let def = allreduce_time(Scheme::Default, 12, MB16, &e);
+        let ring = allreduce_time(Scheme::Ring, 12, MB16, &e);
+        let rab = allreduce_time(Scheme::Rabenseifner, 12, MB16, &e);
+        assert_eq!(def, ring.min(rab));
+    }
+
+    #[test]
+    fn time_grows_with_nodes() {
+        let e = env();
+        let mut prev = 0.0;
+        for n in [2usize, 4, 8, 16, 32] {
+            let t = allreduce_time(Scheme::Ring, n, MB16, &e);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_large_n() {
+        // as N -> inf, ring time -> 2*bytes/bw (plus 62 step latencies)
+        let e = env();
+        let t = allreduce_time(Scheme::Ring, 32, MB16, &e);
+        let asymptote = 2.0 * MB16 / e.effective_bw();
+        assert!(t > asymptote * 0.9);
+        assert!(t < asymptote * 1.5, "t {t} asym {asymptote}");
+    }
+
+    #[test]
+    fn comm_bw_cap_binds() {
+        let mut e = env();
+        e.comm_bw_cap = 2.0e9;
+        assert_eq!(e.effective_bw(), 2.0e9);
+        let capped = allreduce_time(Scheme::Ring, 8, MB16, &e);
+        let uncapped = allreduce_time(Scheme::Ring, 8, MB16, &env());
+        assert!(capped > uncapped * 4.0, "capped {capped} uncapped {uncapped}");
+    }
+
+    #[test]
+    fn nonpow2_rabenseifner_penalty() {
+        let e = env();
+        let t8 = allreduce_time(Scheme::Rabenseifner, 8, MB16, &e);
+        let t6 = allreduce_time(Scheme::Rabenseifner, 6, MB16, &e);
+        // 6 nodes pays the extra exchange: more than the pure (N-1)/N drop
+        assert!(t6 > t8 * 0.9, "t6 {t6} t8 {t8}");
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * [`simulate`] — dynamic (event-driven) execution of the Fig. 3b
+//!   layerwise schedule over the modeled cluster: backward compute on the
+//!   workers overlapped with per-layer non-blocking all-reduces on the
+//!   smart NICs (or host comm cores for the baselines).  Produces
+//!   iteration breakdowns and execution traces; the Sec. IV-C closed form
+//!   is validated against it.
+//! * [`trainer`] — the *real* training runtime: workers execute the AOT
+//!   compiled fwd/bwd/update artifacts through PJRT, gradients flow
+//!   through the real ring all-reduce with real BFP wire quantization.
+
+pub mod simulate;
+pub mod trainer;
+
+pub use simulate::{simulate_iteration, SimOutput};
+pub use trainer::{ArBackend, Optimizer, StepStats, Trainer, TrainerConfig};

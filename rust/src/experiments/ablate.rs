@@ -1,0 +1,143 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * **segment size** — the NIC's chunk-pipelining granularity (the FIFO
+//!   depth analogue): too coarse loses fetch/ring/writeback overlap, too
+//!   fine pays per-segment latency;
+//! * **comm cores** — the baseline's compute/communication core split
+//!   (the paper: "2 cores ... yields the best performance. However, this
+//!   balance ... is workload dependent");
+//! * **α sensitivity** — achievable fraction of NIC line rate;
+//! * **NIC line rate** — 40/100/400 Gbps variants of Sec. V-A.
+
+use crate::analytic::model::{iteration, SystemKind};
+use crate::bfp::BfpCodec;
+use crate::collective::Scheme;
+use crate::nic::{simulate_ring_allreduce, NicConfig};
+use crate::sysconfig::{SystemParams, Workload};
+use crate::util::table::{fnum, Table};
+
+/// Segment-size sweep: returns (segment_bytes, t_allreduce).
+pub fn segment_sweep(nodes: usize, elems: usize, bfp: bool) -> Vec<(f64, f64)> {
+    [4.0 * 1024.0, 16.0 * 1024.0, 64.0 * 1024.0, 256.0 * 1024.0, 1024.0 * 1024.0, 4096.0 * 1024.0]
+        .into_iter()
+        .map(|seg| {
+            let mut sys = SystemParams::smartnic_40g();
+            sys.nic.segment_bytes = seg;
+            let cfg = NicConfig::new(sys, if bfp { Some(BfpCodec::bfp16()) } else { None });
+            (seg, simulate_ring_allreduce(&cfg, nodes, elems).t_total)
+        })
+        .collect()
+}
+
+/// Comm-core sweep for the overlapped baseline: (k, t_total).
+pub fn comm_core_sweep(nodes: usize, batch: usize, max_k: usize) -> Vec<(usize, f64)> {
+    let sys = SystemParams::baseline_100g();
+    let w = Workload::paper_mlp(batch);
+    (1..=max_k)
+        .map(|k| {
+            let kind = SystemKind::BaselineOverlapped {
+                scheme: Scheme::Ring,
+                comm_cores: k,
+            };
+            (k, iteration(kind, &sys, &w, nodes).t_total)
+        })
+        .collect()
+}
+
+/// α sensitivity of the smart NIC: (alpha, t_total).
+pub fn alpha_sweep(nodes: usize, batch: usize, bfp: bool) -> Vec<(f64, f64)> {
+    let w = Workload::paper_mlp(batch);
+    [0.5, 0.7, 0.85, 0.95, 1.0]
+        .into_iter()
+        .map(|alpha| {
+            let mut sys = SystemParams::smartnic_40g();
+            sys.net.alpha = alpha;
+            (
+                alpha,
+                iteration(SystemKind::SmartNic { bfp }, &sys, &w, nodes).t_total,
+            )
+        })
+        .collect()
+}
+
+pub fn print_all() {
+    println!("-- segment size (NIC pipelining granularity), 6 nodes, 2048^2 grad, +BFP --");
+    let mut t = Table::new(&["segment", "t_allreduce (ms)"]);
+    for (seg, tt) in segment_sweep(6, 2048 * 2048, true) {
+        t.row(&[
+            crate::util::units::fmt_bytes(seg),
+            fnum(tt * 1e3, 3),
+        ]);
+    }
+    t.print();
+
+    println!("\n-- comm cores (baseline compute/comm split), 6 nodes --");
+    let mut t = Table::new(&["k", "t_iter B=448 (ms)", "t_iter B=1792 (ms)"]);
+    let s448 = comm_core_sweep(6, 448, 8);
+    let s1792 = comm_core_sweep(6, 1792, 8);
+    for (i, (k, t448)) in s448.iter().enumerate() {
+        t.row(&[
+            k.to_string(),
+            fnum(t448 * 1e3, 1),
+            fnum(s1792[i].1 * 1e3, 1),
+        ]);
+    }
+    t.print();
+    let best448 = s448.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
+    let best1792 = s1792.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
+    println!("best k: {best448} (B=448), {best1792} (B=1792) — paper found 2 for their workload");
+
+    println!("\n-- alpha sensitivity (smart NIC, B=448, 6 nodes) --");
+    let mut t = Table::new(&["alpha", "t_iter raw (ms)", "t_iter +BFP (ms)"]);
+    let raw = alpha_sweep(6, 448, false);
+    let comp = alpha_sweep(6, 448, true);
+    for (i, (a, tr)) in raw.iter().enumerate() {
+        t.row(&[fnum(*a, 2), fnum(tr * 1e3, 1), fnum(comp[i].1 * 1e3, 1)]);
+    }
+    t.print();
+    println!("(BFP makes the system nearly alpha-insensitive: the wire stops mattering)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coarse_segments_lose_overlap() {
+        let pts = segment_sweep(6, 2048 * 2048, true);
+        let best = pts
+            .iter()
+            .map(|p| p.1)
+            .fold(f64::INFINITY, f64::min);
+        let coarsest = pts.last().unwrap().1;
+        assert!(
+            coarsest > best * 1.05,
+            "whole-chunk segments should lose pipelining: {coarsest} vs {best}"
+        );
+    }
+
+    #[test]
+    fn comm_core_tradeoff_has_interior_shape() {
+        // more comm cores help AR but steal compute: time is not
+        // monotone increasing from k=1
+        let pts = comm_core_sweep(6, 448, 8);
+        let t1 = pts[0].1;
+        let best = pts.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+        assert!(best.1 <= t1, "{pts:?}");
+        // and at some point stealing cores hurts again
+        let t8 = pts.last().unwrap().1;
+        assert!(t8 > best.1, "{pts:?}");
+    }
+
+    #[test]
+    fn bfp_flattens_alpha_sensitivity() {
+        let raw = alpha_sweep(6, 448, false);
+        let comp = alpha_sweep(6, 448, true);
+        let spread = |pts: &[(f64, f64)]| {
+            let lo = pts.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+            let hi = pts.iter().map(|p| p.1).fold(0.0, f64::max);
+            hi / lo
+        };
+        assert!(spread(&raw) > spread(&comp), "raw {:?} comp {:?}", raw, comp);
+    }
+}

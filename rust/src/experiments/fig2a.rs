@@ -1,0 +1,122 @@
+//! E1 — Fig. 2a: training-iteration breakdown of naive vs overlapped host
+//! all-reduce (6 nodes, 20-layer 2048² MLP, B=1792/node, 100 GbE).
+
+use crate::analytic::model::SystemKind;
+use crate::collective::Scheme;
+use crate::coordinator::simulate_iteration;
+use crate::sysconfig::{SystemParams, Workload};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub name: String,
+    pub t_fwd: f64,
+    pub t_bwd: f64,
+    pub t_exposed_ar: f64,
+    pub t_update: f64,
+    pub t_total: f64,
+}
+
+pub fn run(nodes: usize, batch: usize) -> Vec<Row> {
+    let sys = SystemParams::baseline_100g();
+    let w = Workload::paper_mlp(batch);
+    [
+        ("naive", SystemKind::BaselineNaive { scheme: Scheme::Ring }),
+        (
+            "overlapped (k=2)",
+            SystemKind::BaselineOverlapped {
+                scheme: Scheme::Ring,
+                comm_cores: 2,
+            },
+        ),
+    ]
+    .into_iter()
+    .map(|(name, kind)| {
+        let bd = simulate_iteration(kind, &sys, &w, nodes).breakdown;
+        Row {
+            name: name.to_string(),
+            t_fwd: bd.t_fwd,
+            t_bwd: bd.t_bwd,
+            t_exposed_ar: bd.t_exposed_ar,
+            t_update: bd.t_update,
+            t_total: bd.t_total,
+        }
+    })
+    .collect()
+}
+
+pub fn print(rows: &[Row]) {
+    let mut t = Table::new(&[
+        "implementation",
+        "fwd (ms)",
+        "bwd (ms)",
+        "exposed AR (ms)",
+        "update (ms)",
+        "total (ms)",
+        "AR share",
+    ])
+    .with_title(
+        "Fig. 2a — iteration breakdown, 20-layer 2048^2 MLP, B=1792/node, 6 nodes (baseline NICs)",
+    );
+    for r in rows {
+        t.row(&[
+            r.name.clone(),
+            fnum(r.t_fwd * 1e3, 1),
+            fnum(r.t_bwd * 1e3, 1),
+            fnum(r.t_exposed_ar * 1e3, 1),
+            fnum(r.t_update * 1e3, 1),
+            fnum(r.t_total * 1e3, 1),
+            format!("{:.0}%", 100.0 * r.t_exposed_ar / r.t_total),
+        ]);
+    }
+    t.print();
+    let speedup = rows[0].t_total / rows[1].t_total;
+    let ar_ratio = rows[0].t_exposed_ar / rows[1].t_exposed_ar.max(1e-12);
+    println!(
+        "overlap speedup: {speedup:.2}x (paper: 1.85x); exposed-AR reduction: {ar_ratio:.0}x (paper: ~50x)\n"
+    );
+}
+
+pub fn to_json(rows: &[Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("t_fwd", Json::Num(r.t_fwd)),
+                    ("t_bwd", Json::Num(r.t_bwd)),
+                    ("t_exposed_ar", Json::Num(r.t_exposed_ar)),
+                    ("t_update", Json::Num(r.t_update)),
+                    ("t_total", Json::Num(r.t_total)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn papers_shape_holds() {
+        let rows = run(6, 1792);
+        assert_eq!(rows.len(), 2);
+        // naive: ~51% exposed AR
+        let frac = rows[0].t_exposed_ar / rows[0].t_total;
+        assert!((0.4..0.6).contains(&frac), "naive AR share {frac}");
+        // overlap wins by ~1.85x
+        let speedup = rows[0].t_total / rows[1].t_total;
+        assert!((1.5..2.2).contains(&speedup), "speedup {speedup}");
+        // overlapped bwd is slower (the shaded black bar)
+        assert!(rows[1].t_bwd > rows[0].t_bwd);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let rows = run(3, 448);
+        let j = to_json(&rows);
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,125 @@
+//! E2 — Fig. 2b: scaling of the overlapped host implementation for
+//! different MPI all-reduce schemes vs ideal scaling (B=1792/node).
+
+use crate::analytic::model::{iteration, SystemKind};
+use crate::collective::Scheme;
+use crate::sysconfig::{SystemParams, Workload};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub scheme: Scheme,
+    /// (nodes, normalized throughput) — normalized to the 1-node system
+    pub points: Vec<(usize, f64)>,
+}
+
+pub fn run(node_counts: &[usize], batch: usize) -> Vec<Series> {
+    let sys = SystemParams::baseline_100g();
+    let w = Workload::paper_mlp(batch);
+    let t1 = iteration(
+        SystemKind::BaselineOverlapped {
+            scheme: Scheme::Ring,
+            comm_cores: 2,
+        },
+        &sys,
+        &w,
+        1,
+    )
+    .t_total;
+    Scheme::ALL
+        .iter()
+        .map(|&scheme| {
+            let points = node_counts
+                .iter()
+                .map(|&n| {
+                    let kind = SystemKind::BaselineOverlapped {
+                        scheme,
+                        comm_cores: 2,
+                    };
+                    let t = iteration(kind, &sys, &w, n).t_total;
+                    // throughput normalized to 1 node: (N·B/t) / (B/t1)
+                    (n, n as f64 * t1 / t)
+                })
+                .collect();
+            Series { scheme, points }
+        })
+        .collect()
+}
+
+pub fn print(series: &[Series]) {
+    let nodes: Vec<usize> = series[0].points.iter().map(|p| p.0).collect();
+    let mut headers = vec!["scheme".to_string()];
+    headers.extend(nodes.iter().map(|n| format!("{n}n")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs).with_title(
+        "Fig. 2b — normalized throughput vs nodes (overlapped host all-reduce, B=1792/node)",
+    );
+    let mut ideal = vec!["ideal".to_string()];
+    ideal.extend(nodes.iter().map(|n| fnum(*n as f64, 2)));
+    t.row(&ideal);
+    for s in series {
+        let mut row = vec![s.scheme.name().to_string()];
+        row.extend(s.points.iter().map(|(_, v)| fnum(*v, 2)));
+        t.row(&row);
+    }
+    t.print();
+    println!();
+}
+
+pub fn to_json(series: &[Series]) -> Json {
+    Json::Arr(
+        series
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("scheme", Json::Str(s.scheme.name().to_string())),
+                    (
+                        "points",
+                        Json::Arr(
+                            s.points
+                                .iter()
+                                .map(|(n, v)| Json::arr_f64(&[*n as f64, *v]))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn by_name<'a>(series: &'a [Series], name: &str) -> &'a Series {
+        series.iter().find(|s| s.scheme.name() == name).unwrap()
+    }
+
+    #[test]
+    fn papers_ordering_holds() {
+        let series = run(&[2, 4, 6, 8, 12, 16, 24], 1792);
+        // ring / rabenseifner / default all similar and better than binomial
+        for (i, &n) in [2usize, 4, 6, 8, 12, 16, 24].iter().enumerate() {
+            let ring = by_name(&series, "ring").points[i].1;
+            let rab = by_name(&series, "rabenseifner").points[i].1;
+            let def = by_name(&series, "default").points[i].1;
+            let bin = by_name(&series, "binomial").points[i].1;
+            assert!(ring >= bin, "n={n}: ring {ring} < binomial {bin}");
+            assert!(def >= bin, "n={n}");
+            assert!((ring - rab).abs() / ring < 0.15, "n={n}: ring {ring} rab {rab}");
+        }
+    }
+
+    #[test]
+    fn gap_to_ideal_grows() {
+        let series = run(&[2, 12, 24], 1792);
+        let ring = by_name(&series, "ring");
+        let eff: Vec<f64> = ring.points.iter().map(|(n, v)| v / *n as f64).collect();
+        assert!(eff[0] > eff[1] - 1e-12);
+        assert!(eff[1] >= eff[2] - 1e-12);
+        // scales well at 12 nodes (>= 80% efficiency)
+        assert!(eff[1] > 0.8, "12-node efficiency {}", eff[1]);
+    }
+}

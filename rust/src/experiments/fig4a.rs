@@ -1,0 +1,108 @@
+//! E4 — Fig. 4a: iteration breakdown at 6 nodes (B=448): baseline vs
+//! smart NIC vs smart NIC + BFP.
+
+use crate::analytic::model::SystemKind;
+use crate::collective::Scheme;
+use crate::coordinator::simulate_iteration;
+use crate::sysconfig::{SystemParams, Workload};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+pub use super::fig2a::Row;
+
+pub fn run(nodes: usize, batch: usize) -> Vec<Row> {
+    let w = Workload::paper_mlp(batch);
+    let variants: [(&str, SystemKind, SystemParams); 3] = [
+        (
+            "baseline (overlapped)",
+            SystemKind::BaselineOverlapped {
+                scheme: Scheme::Ring,
+                comm_cores: 2,
+            },
+            SystemParams::baseline_100g(),
+        ),
+        (
+            "AI smart NIC",
+            SystemKind::SmartNic { bfp: false },
+            SystemParams::smartnic_40g(),
+        ),
+        (
+            "AI smart NIC + BFP",
+            SystemKind::SmartNic { bfp: true },
+            SystemParams::smartnic_40g(),
+        ),
+    ];
+    variants
+        .into_iter()
+        .map(|(name, kind, sys)| {
+            let bd = simulate_iteration(kind, &sys, &w, nodes).breakdown;
+            Row {
+                name: name.to_string(),
+                t_fwd: bd.t_fwd,
+                t_bwd: bd.t_bwd,
+                t_exposed_ar: bd.t_exposed_ar,
+                t_update: bd.t_update,
+                t_total: bd.t_total,
+            }
+        })
+        .collect()
+}
+
+pub fn print(rows: &[Row]) {
+    let mut t = Table::new(&[
+        "system",
+        "fwd (ms)",
+        "bwd (ms)",
+        "exposed AR (ms)",
+        "update (ms)",
+        "total (ms)",
+        "vs baseline",
+    ])
+    .with_title("Fig. 4a — iteration breakdown, 20-layer 2048^2 MLP, B=448/node, 6 nodes");
+    for r in rows {
+        t.row(&[
+            r.name.clone(),
+            fnum(r.t_fwd * 1e3, 1),
+            fnum(r.t_bwd * 1e3, 1),
+            fnum(r.t_exposed_ar * 1e3, 1),
+            fnum(r.t_update * 1e3, 1),
+            fnum(r.t_total * 1e3, 1),
+            format!("{:+.0}%", 100.0 * (r.t_total / rows[0].t_total - 1.0)),
+        ]);
+    }
+    t.print();
+    println!(
+        "exposed-AR change: NIC {:+.0}% (paper -37%), NIC+BFP {:+.0}% (paper -95%)\n",
+        100.0 * (rows[1].t_exposed_ar / rows[0].t_exposed_ar - 1.0),
+        100.0 * (rows[2].t_exposed_ar / rows[0].t_exposed_ar - 1.0),
+    );
+}
+
+pub fn to_json(rows: &[Row]) -> Json {
+    super::fig2a::to_json(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn papers_shape_holds() {
+        let rows = run(6, 448);
+        // ordering: baseline > NIC > NIC+BFP in total time
+        assert!(rows[0].t_total > rows[1].t_total);
+        assert!(rows[1].t_total > rows[2].t_total);
+        // NIC reduces total by ~18% (accept 10-30%)
+        let red_nic = 1.0 - rows[1].t_total / rows[0].t_total;
+        assert!((0.10..0.30).contains(&red_nic), "nic {red_nic}");
+        // NIC+BFP reduces total by ~40% (accept 30-50%)
+        let red_bfp = 1.0 - rows[2].t_total / rows[0].t_total;
+        assert!((0.30..0.50).contains(&red_bfp), "bfp {red_bfp}");
+        // NIC frees worker resources: bwd drops ~10%
+        let bwd_drop = 1.0 - rows[1].t_bwd / rows[0].t_bwd;
+        assert!((0.05..0.25).contains(&bwd_drop), "bwd {bwd_drop}");
+        // exposed AR falls monotonically, dramatically with BFP
+        assert!(rows[1].t_exposed_ar < rows[0].t_exposed_ar);
+        assert!(rows[2].t_exposed_ar < 0.5 * rows[0].t_exposed_ar);
+    }
+}

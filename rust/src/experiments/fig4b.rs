@@ -1,0 +1,212 @@
+//! E5 — Fig. 4b: performance scaling to 32 nodes (normalized to 1 node)
+//! for B=448 and B=1792: baseline vs smart NIC vs smart NIC + BFP.
+//!
+//! Like the paper: "measured" points (the DES plays the prototype's role)
+//! up to 6 nodes, analytical-model points beyond — and the two must agree
+//! where they overlap.
+
+use crate::analytic::model::{iteration, SystemKind};
+use crate::collective::Scheme;
+use crate::coordinator::simulate_iteration;
+use crate::sysconfig::{SystemParams, Workload};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+pub const SIM_MAX_NODES: usize = 6; // the prototype's size
+
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub nodes: usize,
+    /// normalized throughput from the DES ("measured"), <= 6 nodes
+    pub sim: Option<f64>,
+    /// normalized throughput from the analytical model
+    pub model: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub system: String,
+    pub points: Vec<Point>,
+}
+
+fn variants() -> [(&'static str, SystemKind, SystemParams); 3] {
+    [
+        (
+            "baseline",
+            SystemKind::BaselineOverlapped {
+                scheme: Scheme::Ring,
+                comm_cores: 2,
+            },
+            SystemParams::baseline_100g(),
+        ),
+        (
+            "smartnic",
+            SystemKind::SmartNic { bfp: false },
+            SystemParams::smartnic_40g(),
+        ),
+        (
+            "smartnic+bfp",
+            SystemKind::SmartNic { bfp: true },
+            SystemParams::smartnic_40g(),
+        ),
+    ]
+}
+
+pub fn run(node_counts: &[usize], batch: usize) -> Vec<Series> {
+    let w = Workload::paper_mlp(batch);
+    // common 1-worker reference for every curve (the paper normalizes to
+    // "a system with only 1 worker", where NICs are irrelevant): plain
+    // all-cores compute, no all-reduce
+    let t1 = iteration(
+        SystemKind::SmartNic { bfp: false },
+        &SystemParams::smartnic_40g(),
+        &w,
+        1,
+    )
+    .t_total;
+    variants()
+        .into_iter()
+        .map(|(name, kind, sys)| {
+            let points = node_counts
+                .iter()
+                .map(|&n| {
+                    let model = n as f64 * t1 / iteration(kind, &sys, &w, n).t_total;
+                    let sim = (n <= SIM_MAX_NODES).then(|| {
+                        n as f64 * t1 / simulate_iteration(kind, &sys, &w, n).breakdown.t_total
+                    });
+                    Point { nodes: n, sim, model }
+                })
+                .collect();
+            Series {
+                system: name.to_string(),
+                points,
+            }
+        })
+        .collect()
+}
+
+pub fn print(series: &[Series], batch: usize) {
+    let nodes: Vec<usize> = series[0].points.iter().map(|p| p.nodes).collect();
+    let mut headers = vec!["system".to_string()];
+    headers.extend(nodes.iter().map(|n| format!("{n}n")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs).with_title(&format!(
+        "Fig. 4b — normalized throughput vs nodes (B={batch}/node; sim<=6n shown as s/, model as m/)"
+    ));
+    let mut ideal = vec!["ideal".to_string()];
+    ideal.extend(nodes.iter().map(|n| fnum(*n as f64, 1)));
+    t.row(&ideal);
+    for s in series {
+        let mut row = vec![s.system.clone()];
+        row.extend(s.points.iter().map(|p| match p.sim {
+            Some(sv) => format!("s{} m{}", fnum(sv, 1), fnum(p.model, 1)),
+            None => format!("m{}", fnum(p.model, 1)),
+        }));
+        t.row(&row);
+    }
+    t.print();
+    // headline gains at the largest node count
+    let last = nodes.len() - 1;
+    let base = series[0].points[last].model;
+    println!(
+        "gain vs baseline at {} nodes: smartnic {:.1}x, smartnic+bfp {:.1}x\n",
+        nodes[last],
+        series[1].points[last].model / base,
+        series[2].points[last].model / base,
+    );
+}
+
+pub fn to_json(series: &[Series]) -> Json {
+    Json::Arr(
+        series
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("system", Json::Str(s.system.clone())),
+                    (
+                        "points",
+                        Json::Arr(
+                            s.points
+                                .iter()
+                                .map(|p| {
+                                    Json::obj(vec![
+                                        ("nodes", Json::Num(p.nodes as f64)),
+                                        (
+                                            "sim",
+                                            p.sim.map(Json::Num).unwrap_or(Json::Null),
+                                        ),
+                                        ("model", Json::Num(p.model)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn sim_and_model_agree_where_both_exist() {
+        // the paper's "within 3%" claim, at the prototype sizes
+        for batch in [448usize, 1792] {
+            let series = run(&[3, 4, 5, 6], batch);
+            for s in &series {
+                for p in &s.points {
+                    let sim = p.sim.unwrap();
+                    assert!(
+                        rel_err(p.model, sim) < 0.03,
+                        "{} n={} B={batch}: model {} sim {}",
+                        s.system,
+                        p.nodes,
+                        p.model,
+                        sim
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn b448_gains_match_papers_range() {
+        let series = run(&[1, 6, 32], 448);
+        let base32 = series[0].points[2].model;
+        let nic32 = series[1].points[2].model;
+        let bfp32 = series[2].points[2].model;
+        // paper: up to 1.8x (NIC) and 2.5x (NIC+BFP) at 32 nodes — our
+        // calibration lands the same ordering with somewhat larger gains
+        // (see EXPERIMENTS.md E5 for the deltas)
+        assert!((1.3..2.6).contains(&(nic32 / base32)), "nic {:.2}", nic32 / base32);
+        assert!((1.8..3.6).contains(&(bfp32 / base32)), "bfp {:.2}", bfp32 / base32);
+        assert!(bfp32 > nic32);
+    }
+
+    #[test]
+    fn b1792_near_ideal_for_smartnic() {
+        // paper: at B=1792 the smart NIC achieves ~ideal scaling and BFP
+        // adds nothing (compute-bound)
+        let series = run(&[6, 32], 1792);
+        let nic = &series[1];
+        let bfp = &series[2];
+        assert!(nic.points[0].model > 0.9 * 6.0, "{:?}", nic.points[0]);
+        assert!(nic.points[1].model > 0.85 * 32.0, "{:?}", nic.points[1]);
+        for (a, b) in nic.points.iter().zip(&bfp.points) {
+            assert!(
+                (a.model - b.model).abs() / a.model < 0.03,
+                "bfp should not help at B=1792"
+            );
+        }
+        // paper: NIC beats baseline ~1.1x at 6 nodes, ~1.4x at 32
+        let g6 = nic.points[0].model / series[0].points[0].model;
+        let g32 = nic.points[1].model / series[0].points[1].model;
+        assert!((1.02..1.35).contains(&g6), "gain@6 {g6:.2}");
+        assert!((1.15..1.8).contains(&g32), "gain@32 {g32:.2}");
+        assert!(g32 > g6);
+    }
+}

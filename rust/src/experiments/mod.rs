@@ -1,0 +1,25 @@
+//! Experiment harnesses: one module per paper table/figure (DESIGN.md §5).
+//!
+//! Each regenerates the paper artifact's rows/series, prints them as an
+//! ASCII table, and returns structured results for the benches and for
+//! `results/*.json` dumps.
+
+pub mod ablate;
+pub mod fig2a;
+pub mod fig2b;
+pub mod fig4a;
+pub mod fig4b;
+pub mod table1;
+pub mod validate;
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Write an experiment result JSON under `results/`.
+pub fn write_result(name: &str, json: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json.to_string_pretty())?;
+    Ok(path)
+}

@@ -1,0 +1,112 @@
+//! E3 — Table I: FPGA resource breakdown of the AI smart NIC, plus the
+//! Sec. V-A 100/400 Gbps scaling claims.
+
+use crate::nic::resources::{lanes_at, Breakdown, Resources};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+fn fmt(r: &Resources) -> [String; 3] {
+    [
+        format!("{} ({:.1}%)", group_digits(r.alms), r.pct_alms()),
+        format!("{} ({:.1}%)", group_digits(r.m20ks), r.pct_m20ks()),
+        format!("{} ({:.1}%)", r.dsps, r.pct_dsps()),
+    ]
+}
+
+fn group_digits(v: u32) -> String {
+    let s = v.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+pub fn print_at(eth_gbps: f64) {
+    let b = Breakdown::at(eth_gbps);
+    let mut t = Table::new(&["component", "ALMs", "M20Ks", "DSPs"]).with_title(&format!(
+        "Table I — FPGA resource breakdown @ {eth_gbps:.0} Gbps ({} SIMD lanes), Arria 10 GX 1150",
+        lanes_at(eth_gbps)
+    ));
+    for (name, r) in [
+        ("OPAE + IKL Shim", &b.shim),
+        ("All-Reduce", &b.allreduce),
+        ("BFP Compression", &b.bfp),
+        ("Total", &b.total()),
+    ] {
+        let f = fmt(r);
+        t.row(&[name.to_string(), f[0].clone(), f[1].clone(), f[2].clone()]);
+    }
+    t.print();
+    let ai = b.ai_only();
+    println!(
+        "AI-specific additions only: {:.1}% logic, {:.1}% RAM, {:.1}% DSP{}\n",
+        ai.pct_alms(),
+        ai.pct_m20ks(),
+        ai.pct_dsps(),
+        if eth_gbps >= 400.0 {
+            "  (paper claim: <2%, <9%, <5%)"
+        } else if (eth_gbps - 40.0).abs() < 1.0 {
+            "  (paper: 1.2%, 6.1%, 0.5%)"
+        } else {
+            ""
+        }
+    );
+}
+
+pub fn run_all() {
+    for g in [40.0, 100.0, 400.0] {
+        print_at(g);
+    }
+}
+
+pub fn to_json() -> Json {
+    Json::Arr(
+        [40.0, 100.0, 400.0]
+            .iter()
+            .map(|&g| {
+                let b = Breakdown::at(g);
+                let row = |r: &Resources| {
+                    Json::obj(vec![
+                        ("alms", Json::Num(r.alms as f64)),
+                        ("m20ks", Json::Num(r.m20ks as f64)),
+                        ("dsps", Json::Num(r.dsps as f64)),
+                    ])
+                };
+                Json::obj(vec![
+                    ("eth_gbps", Json::Num(g)),
+                    ("lanes", Json::Num(lanes_at(g) as f64)),
+                    ("shim", row(&b.shim)),
+                    ("allreduce", row(&b.allreduce)),
+                    ("bfp", row(&b.bfp)),
+                    ("total", row(&b.total())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_has_three_speeds() {
+        let j = to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 3);
+        assert_eq!(
+            j.idx(0).unwrap().get("total").unwrap().get("alms").unwrap().as_i64(),
+            Some(69_570)
+        );
+    }
+
+    #[test]
+    fn digit_grouping() {
+        assert_eq!(group_digits(64_480), "64,480");
+        assert_eq!(group_digits(534), "534");
+        assert_eq!(group_digits(1_000_000), "1,000,000");
+    }
+}

@@ -1,0 +1,151 @@
+//! E6 — model validation: the Sec. IV-C closed form vs the DES over a
+//! configuration grid (the paper's "within 3% of real measurements").
+
+use crate::analytic::model::{iteration, SystemKind};
+use crate::analytic::validate::{sweep, ArValidation};
+use crate::coordinator::simulate_iteration;
+use crate::sysconfig::{SystemParams, Workload};
+use crate::util::json::Json;
+use crate::util::stats::{rel_err, summarize};
+use crate::util::table::{fnum, Table};
+
+#[derive(Clone, Debug)]
+pub struct IterValidation {
+    pub system: String,
+    pub nodes: usize,
+    pub batch: usize,
+    pub t_model: f64,
+    pub t_sim: f64,
+    pub rel_err: f64,
+}
+
+/// Full-iteration validation across systems, node counts and batches.
+pub fn run_iteration_grid() -> Vec<IterValidation> {
+    let mut out = Vec::new();
+    for bfp in [false, true] {
+        for &n in &[2usize, 3, 4, 5, 6, 8, 12, 16, 24, 32] {
+            for &b in &[448usize, 1792] {
+                let kind = SystemKind::SmartNic { bfp };
+                let sys = SystemParams::smartnic_40g();
+                let w = Workload::paper_mlp(b);
+                let t_model = iteration(kind, &sys, &w, n).t_total;
+                let t_sim = simulate_iteration(kind, &sys, &w, n).breakdown.t_total;
+                out.push(IterValidation {
+                    system: kind.name(),
+                    nodes: n,
+                    batch: b,
+                    t_model,
+                    t_sim,
+                    rel_err: rel_err(t_model, t_sim),
+                });
+            }
+        }
+    }
+    out
+}
+
+pub fn print_iteration(rows: &[IterValidation]) {
+    let mut t = Table::new(&["system", "nodes", "batch", "model (ms)", "sim (ms)", "err"])
+        .with_title("E6 — analytical model vs DES, full training iteration");
+    for r in rows {
+        t.row(&[
+            r.system.clone(),
+            r.nodes.to_string(),
+            r.batch.to_string(),
+            fnum(r.t_model * 1e3, 2),
+            fnum(r.t_sim * 1e3, 2),
+            format!("{:.2}%", r.rel_err * 100.0),
+        ]);
+    }
+    t.print();
+    let errs: Vec<f64> = rows.iter().map(|r| r.rel_err).collect();
+    let s = summarize(&errs);
+    println!(
+        "error: mean {:.2}%, median {:.2}%, max {:.2}%  (paper: within 3%)\n",
+        s.mean * 100.0,
+        s.median * 100.0,
+        s.max * 100.0
+    );
+}
+
+/// All-reduce-level validation sweep.
+pub fn run_ar_grid() -> Vec<ArValidation> {
+    let sys = SystemParams::smartnic_40g();
+    sweep(
+        &sys,
+        &[2, 3, 4, 6, 8, 16, 32],
+        &[1 << 18, 2048 * 2048, 1 << 24],
+    )
+}
+
+pub fn print_ar(rows: &[ArValidation]) {
+    let mut t = Table::new(&["nodes", "elems", "bfp", "analytic (ms)", "sim (ms)", "err"])
+        .with_title("E6 — Sec. IV-C T_AR vs chunk-level NIC DES");
+    for r in rows {
+        t.row(&[
+            r.nodes.to_string(),
+            r.elems.to_string(),
+            r.bfp.to_string(),
+            fnum(r.t_analytic * 1e3, 3),
+            fnum(r.t_sim * 1e3, 3),
+            format!("{:.2}%", r.rel_err * 100.0),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
+pub fn to_json(rows: &[IterValidation]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("system", Json::Str(r.system.clone())),
+                    ("nodes", Json::Num(r.nodes as f64)),
+                    ("batch", Json::Num(r.batch as f64)),
+                    ("t_model", Json::Num(r.t_model)),
+                    ("t_sim", Json::Num(r.t_sim)),
+                    ("rel_err", Json::Num(r.rel_err)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_grid_within_3pct() {
+        let rows = run_iteration_grid();
+        assert!(rows.len() >= 40);
+        for r in &rows {
+            assert!(
+                r.rel_err < 0.03,
+                "{} n={} B={}: {:.2}%",
+                r.system,
+                r.nodes,
+                r.batch,
+                r.rel_err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn ar_grid_mostly_within_5pct() {
+        // small tensors are latency-dominated; the paper-scale and larger
+        // ones must be tight
+        let rows = run_ar_grid();
+        for r in rows.iter().filter(|r| r.elems >= 2048 * 2048) {
+            assert!(
+                r.rel_err < 0.05,
+                "n={} elems={} bfp={}: {:.1}%",
+                r.nodes,
+                r.elems,
+                r.bfp,
+                r.rel_err * 100.0
+            );
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! # ai-smartnic
+//!
+//! A production-quality reproduction of **"FPGA-based AI Smart NICs for
+//! Scalable Distributed AI Training Systems"** (Ma, Georganas, Heinecke,
+//! Boutros, Nurvitadhi — Intel, 2022).
+//!
+//! The paper offloads the all-reduce of data-parallel DNN training from
+//! worker CPUs to FPGA smart NICs that also compress gradients to block
+//! floating point (BFP16) on the wire.  This crate rebuilds the entire
+//! system as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: worker
+//!   orchestration, the Fig. 3b layerwise overlap schedule, the smart-NIC
+//!   datapath (ring all-reduce + BFP codec), a discrete-event simulator of
+//!   the 6→32-node cluster, the Sec. IV-C analytical model, and every
+//!   experiment harness (Figs. 2a/2b/4a/4b, Table I).
+//! * **L2 (python/compile/model.py, build-time)** — the 20-layer MLP
+//!   fwd/bwd as layerwise JAX entry points, AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels: the
+//!   MXU-tiled matmul, the BFP compress/decompress datapath, and the NIC
+//!   FP32 adder.
+//!
+//! Python never runs at training time: the Rust runtime loads the AOT
+//! artifacts through PJRT (`runtime`) and drives them from the training
+//! loop (`coordinator::trainer`).
+
+pub mod analytic;
+pub mod benchkit;
+pub mod bfp;
+pub mod collective;
+pub mod coordinator;
+pub mod netsim;
+pub mod nic;
+pub mod prop;
+pub mod runtime;
+pub mod sysconfig;
+pub mod trace;
+pub mod util;
+pub mod experiments;

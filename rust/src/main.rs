@@ -1,0 +1,387 @@
+//! `smartnic` — the leader binary: regenerate every paper artifact, run
+//! the DES, train the real model through PJRT, validate the model.
+//!
+//! ```text
+//! smartnic <command> [options]
+//!
+//! commands:
+//!   fig2a     naive vs overlapped host all-reduce breakdown (paper Fig. 2a)
+//!   fig2b     host all-reduce scheme scaling (paper Fig. 2b)
+//!   fig4a     baseline vs smart NIC (+BFP) breakdown (paper Fig. 4a)
+//!   fig4b     scaling to 32 nodes (paper Fig. 4b)
+//!   table1    FPGA resource breakdown @ 40/100/400 Gbps (paper Table I)
+//!   validate  analytical model vs DES (paper: "within 3%")
+//!   train     real data-parallel training through PJRT artifacts
+//!   sim       one simulated iteration with full trace output
+//!   bfp       BFP design-space sweep (block size x mantissa bits)
+//!   all       fig2a+fig2b+table1+fig4a+fig4b+validate, write results/
+//! ```
+
+use ai_smartnic::analytic::model::SystemKind;
+use ai_smartnic::bfp::analysis;
+use ai_smartnic::collective::Scheme;
+use ai_smartnic::coordinator::{simulate_iteration, ArBackend, Trainer, TrainerConfig};
+use ai_smartnic::experiments::{ablate, fig2a, fig2b, fig4a, fig4b, table1, validate, write_result};
+use ai_smartnic::log_info;
+use ai_smartnic::sysconfig::{SystemParams, Workload};
+use ai_smartnic::util::cli::Command;
+use ai_smartnic::util::logger::{set_level, Level};
+use ai_smartnic::util::rng::Rng;
+use ai_smartnic::util::table::{fnum, Table};
+
+const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|bfp|ablate|all> [--help]";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let rest = argv[1..].to_vec();
+    let code = match cmd.as_str() {
+        "fig2a" => cmd_fig2a(&rest),
+        "fig2b" => cmd_fig2b(&rest),
+        "fig4a" => cmd_fig4a(&rest),
+        "fig4b" => cmd_fig4b(&rest),
+        "table1" => cmd_table1(&rest),
+        "validate" => cmd_validate(&rest),
+        "train" => cmd_train(&rest),
+        "sim" => cmd_sim(&rest),
+        "bfp" => cmd_bfp(&rest),
+        "ablate" => cmd_ablate(&rest),
+        "all" => cmd_all(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse(c: Command, rest: &[String]) -> Result<ai_smartnic::util::cli::Args, i32> {
+    match c.parse(rest) {
+        Ok(a) => Ok(a),
+        Err(msg) => {
+            eprintln!("{msg}");
+            Err(2)
+        }
+    }
+}
+
+fn cmd_fig2a(rest: &[String]) -> i32 {
+    let c = Command::new("fig2a", "naive vs overlapped host all-reduce breakdown")
+        .opt("nodes", "6", "number of worker nodes")
+        .opt("batch", "1792", "mini-batch per node")
+        .flag("json", "also write results/fig2a.json");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let rows = fig2a::run(a.get_usize("nodes", 6), a.get_usize("batch", 1792));
+    fig2a::print(&rows);
+    if a.flag("json") {
+        let p = write_result("fig2a", &fig2a::to_json(&rows)).unwrap();
+        println!("wrote {}", p.display());
+    }
+    0
+}
+
+fn cmd_fig2b(rest: &[String]) -> i32 {
+    let c = Command::new("fig2b", "host all-reduce scheme scaling")
+        .opt("nodes", "2,4,6,8,12,16,24", "node counts (comma separated)")
+        .opt("batch", "1792", "mini-batch per node")
+        .flag("json", "also write results/fig2b.json");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let nodes: Vec<usize> = a.get_list("nodes").unwrap_or_default();
+    let series = fig2b::run(&nodes, a.get_usize("batch", 1792));
+    fig2b::print(&series);
+    if a.flag("json") {
+        let p = write_result("fig2b", &fig2b::to_json(&series)).unwrap();
+        println!("wrote {}", p.display());
+    }
+    0
+}
+
+fn cmd_fig4a(rest: &[String]) -> i32 {
+    let c = Command::new("fig4a", "baseline vs smart NIC (+BFP) breakdown")
+        .opt("nodes", "6", "number of worker nodes")
+        .opt("batch", "448", "mini-batch per node")
+        .flag("json", "also write results/fig4a.json");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let rows = fig4a::run(a.get_usize("nodes", 6), a.get_usize("batch", 448));
+    fig4a::print(&rows);
+    if a.flag("json") {
+        let p = write_result("fig4a", &fig4a::to_json(&rows)).unwrap();
+        println!("wrote {}", p.display());
+    }
+    0
+}
+
+fn cmd_fig4b(rest: &[String]) -> i32 {
+    let c = Command::new("fig4b", "scaling to 32 nodes")
+        .opt("nodes", "1,2,3,4,5,6,8,12,16,24,32", "node counts")
+        .opt("batch", "448", "mini-batch per node (448 or 1792 in the paper)")
+        .flag("both", "run both paper batch sizes (448 and 1792)")
+        .flag("json", "also write results/fig4b_<batch>.json");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let nodes: Vec<usize> = a.get_list("nodes").unwrap_or_default();
+    let batches: Vec<usize> = if a.flag("both") {
+        vec![448, 1792]
+    } else {
+        vec![a.get_usize("batch", 448)]
+    };
+    for b in batches {
+        let series = fig4b::run(&nodes, b);
+        fig4b::print(&series, b);
+        if a.flag("json") {
+            let p = write_result(&format!("fig4b_b{b}"), &fig4b::to_json(&series)).unwrap();
+            println!("wrote {}", p.display());
+        }
+    }
+    0
+}
+
+fn cmd_table1(rest: &[String]) -> i32 {
+    let c = Command::new("table1", "FPGA resource breakdown")
+        .flag("json", "also write results/table1.json");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    table1::run_all();
+    if a.flag("json") {
+        let p = write_result("table1", &table1::to_json()).unwrap();
+        println!("wrote {}", p.display());
+    }
+    0
+}
+
+fn cmd_validate(rest: &[String]) -> i32 {
+    let c = Command::new("validate", "analytical model vs DES")
+        .flag("ar-only", "only the all-reduce-level sweep")
+        .flag("json", "also write results/validate.json");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let ar = validate::run_ar_grid();
+    validate::print_ar(&ar);
+    if !a.flag("ar-only") {
+        let rows = validate::run_iteration_grid();
+        validate::print_iteration(&rows);
+        if a.flag("json") {
+            let p = write_result("validate", &validate::to_json(&rows)).unwrap();
+            println!("wrote {}", p.display());
+        }
+    }
+    0
+}
+
+fn cmd_train(rest: &[String]) -> i32 {
+    let c = Command::new("train", "real data-parallel training through PJRT")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("layers", "8", "MLP layers")
+        .opt("hidden", "256", "hidden width (needs matching artifacts)")
+        .opt("batch", "32", "mini-batch per worker (needs matching artifacts)")
+        .opt("workers", "4", "data-parallel workers")
+        .opt("steps", "100", "training steps")
+        .opt("lr", "0.02", "learning rate")
+        .opt("seed", "42", "rng seed")
+        .opt("backend", "bfp16", "gradient wire format: fp32 | bfp16")
+        .opt("optimizer", "sgd", "weight update rule: sgd | adam")
+        .opt("log-every", "10", "log cadence")
+        .flag("quiet", "suppress per-step logs");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    if a.flag("quiet") {
+        set_level(Level::Warn);
+    }
+    let backend = match a.get_str("backend", "bfp16").as_str() {
+        "fp32" => ArBackend::Fp32,
+        "bfp16" => ArBackend::Bfp16,
+        other => {
+            eprintln!("unknown backend '{other}' (fp32|bfp16)");
+            return 2;
+        }
+    };
+    let optimizer = match a.get_str("optimizer", "sgd").as_str() {
+        "sgd" => ai_smartnic::coordinator::Optimizer::Sgd,
+        "adam" => ai_smartnic::coordinator::Optimizer::Adam,
+        other => {
+            eprintln!("unknown optimizer '{other}' (sgd|adam)");
+            return 2;
+        }
+    };
+    let cfg = TrainerConfig {
+        layers: a.get_usize("layers", 8),
+        hidden: a.get_usize("hidden", 256),
+        batch_per_worker: a.get_usize("batch", 32),
+        workers: a.get_usize("workers", 4),
+        lr: a.get_f64("lr", 0.02) as f32,
+        seed: a.get_u64("seed", 42),
+        backend,
+        optimizer,
+    };
+    let steps = a.get_usize("steps", 100);
+    log_info!(
+        "training {}x{} MLP, {} workers, B={}/worker, backend {:?}",
+        cfg.layers,
+        cfg.hidden,
+        cfg.workers,
+        cfg.batch_per_worker,
+        cfg.backend
+    );
+    let mut trainer = match Trainer::new(a.get_str("artifacts", "artifacts"), cfg) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trainer init failed: {e:#}");
+            return 1;
+        }
+    };
+    match trainer.train(steps, a.get_usize("log-every", 10)) {
+        Ok(stats) => {
+            let first = stats.first().unwrap();
+            let last = stats.last().unwrap();
+            println!(
+                "loss {:.6} -> {:.6} over {} steps ({}x improvement)",
+                first.loss,
+                last.loss,
+                stats.len(),
+                fnum(first.loss / last.loss.max(1e-12), 1)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("training failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_sim(rest: &[String]) -> i32 {
+    let c = Command::new("sim", "one simulated iteration with trace")
+        .opt("system", "smartnic+bfp", "baseline-naive | baseline | smartnic | smartnic+bfp")
+        .opt("nodes", "6", "worker nodes")
+        .opt("batch", "448", "mini-batch per node")
+        .opt("layers", "20", "MLP layers")
+        .opt("hidden", "2048", "layer width")
+        .opt("trace-out", "", "write chrome trace JSON to this path")
+        .flag("gantt", "render an ASCII Gantt of the schedule (Fig. 3b)");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let (kind, sys) = match a.get_str("system", "smartnic+bfp").as_str() {
+        "baseline-naive" => (
+            SystemKind::BaselineNaive { scheme: Scheme::Ring },
+            SystemParams::baseline_100g(),
+        ),
+        "baseline" => (
+            SystemKind::BaselineOverlapped { scheme: Scheme::Ring, comm_cores: 2 },
+            SystemParams::baseline_100g(),
+        ),
+        "smartnic" => (SystemKind::SmartNic { bfp: false }, SystemParams::smartnic_40g()),
+        "smartnic+bfp" => (SystemKind::SmartNic { bfp: true }, SystemParams::smartnic_40g()),
+        other => {
+            eprintln!("unknown system '{other}'");
+            return 2;
+        }
+    };
+    let w = Workload {
+        layers: a.get_usize("layers", 20),
+        hidden: a.get_usize("hidden", 2048),
+        batch_per_node: a.get_usize("batch", 448),
+    };
+    let out = simulate_iteration(kind, &sys, &w, a.get_usize("nodes", 6));
+    let bd = &out.breakdown;
+    let mut t = Table::new(&["component", "time (ms)", "share"])
+        .with_title(&format!("simulated iteration — {}", kind.name()));
+    for (name, v) in [
+        ("forward", bd.t_fwd),
+        ("backward", bd.t_bwd),
+        ("exposed all-reduce", bd.t_exposed_ar),
+        ("weight update", bd.t_update),
+        ("TOTAL", bd.t_total),
+    ] {
+        t.row(&[
+            name.to_string(),
+            fnum(v * 1e3, 2),
+            format!("{:.1}%", 100.0 * v / bd.t_total),
+        ]);
+    }
+    t.print();
+    println!(
+        "per-layer all-reduce: {} ({} spans in trace)",
+        ai_smartnic::util::units::fmt_time(out.t_ar_layer),
+        out.trace.spans.len()
+    );
+    if a.flag("gantt") {
+        println!("\n{}", out.trace.render_gantt(100));
+    }
+    let path = a.get_str("trace-out", "");
+    if !path.is_empty() {
+        std::fs::write(&path, out.trace.to_chrome_json()).unwrap();
+        println!("trace written to {path} (open in chrome://tracing)");
+    }
+    0
+}
+
+fn cmd_bfp(rest: &[String]) -> i32 {
+    let c = Command::new("bfp", "BFP design-space sweep on synthetic gradients")
+        .opt("n", "65536", "gradient elements")
+        .opt("seed", "7", "rng seed")
+        .opt("blocks", "4,8,16,32,64", "block sizes")
+        .opt("mants", "3,5,7,9", "mantissa bit widths");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let mut rng = Rng::new(a.get_u64("seed", 7));
+    let x: Vec<f32> = (0..a.get_usize("n", 65536))
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let blocks: Vec<usize> = a.get_list("blocks").unwrap_or_default();
+    let mants: Vec<u32> = a.get_list("mants").unwrap_or_default();
+    let pts = analysis::sweep(&x, &blocks, &mants);
+    let mut t = Table::new(&["block", "mant bits", "ratio", "SNR (dB)", "rel L2"])
+        .with_title("BFP design space (paper Sec. IV-B: tunable via FPGA reconfigurability)");
+    for p in pts {
+        t.row(&[
+            p.block_size.to_string(),
+            p.mant_bits.to_string(),
+            fnum(p.ratio, 2),
+            fnum(p.snr_db, 1),
+            format!("{:.4}", p.rel_l2),
+        ]);
+    }
+    t.print();
+    println!("paper's BFP16 = block 16, 7-bit mantissa: 3.76x ratio\n");
+    0
+}
+
+fn cmd_ablate(rest: &[String]) -> i32 {
+    let c = Command::new("ablate", "design-choice ablations (segment size, comm cores, alpha)");
+    let Ok(_a) = parse(c, rest) else { return 2 };
+    ablate::print_all();
+    0
+}
+
+fn cmd_all(rest: &[String]) -> i32 {
+    let c = Command::new("all", "run every paper experiment, write results/");
+    let Ok(_a) = parse(c, rest) else { return 2 };
+    println!("=== E1 Fig. 2a ===");
+    let r = fig2a::run(6, 1792);
+    fig2a::print(&r);
+    write_result("fig2a", &fig2a::to_json(&r)).unwrap();
+    println!("=== E2 Fig. 2b ===");
+    let s = fig2b::run(&[2, 4, 6, 8, 12, 16, 24], 1792);
+    fig2b::print(&s);
+    write_result("fig2b", &fig2b::to_json(&s)).unwrap();
+    println!("=== E3 Table I ===");
+    table1::run_all();
+    write_result("table1", &table1::to_json()).unwrap();
+    println!("=== E4 Fig. 4a ===");
+    let r = fig4a::run(6, 448);
+    fig4a::print(&r);
+    write_result("fig4a", &fig4a::to_json(&r)).unwrap();
+    println!("=== E5 Fig. 4b ===");
+    for b in [448usize, 1792] {
+        let s = fig4b::run(&[1, 2, 3, 4, 5, 6, 8, 12, 16, 24, 32], b);
+        fig4b::print(&s, b);
+        write_result(&format!("fig4b_b{b}"), &fig4b::to_json(&s)).unwrap();
+    }
+    println!("=== E6 validation ===");
+    let rows = validate::run_iteration_grid();
+    validate::print_iteration(&rows);
+    write_result("validate", &validate::to_json(&rows)).unwrap();
+    println!("all results written to results/");
+    0
+}

@@ -1,0 +1,202 @@
+//! Calendar-queue discrete-event engine.
+//!
+//! Events are boxed closures scheduled at absolute virtual times; ties are
+//! broken by insertion sequence so execution order is fully deterministic.
+
+use super::Time;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+type Action<S> = Box<dyn FnOnce(&mut Sim<S>, &mut S)>;
+
+struct Scheduled<S> {
+    time: Time,
+    seq: u64,
+    action: Action<S>,
+}
+
+impl<S> PartialEq for Scheduled<S> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<S> Eq for Scheduled<S> {}
+impl<S> PartialOrd for Scheduled<S> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<S> Ord for Scheduled<S> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The simulation executive.  `S` is the user's world state, threaded by
+/// &mut into every event so closures never capture aliased state.
+pub struct Sim<S> {
+    now: Time,
+    seq: u64,
+    queue: BinaryHeap<Scheduled<S>>,
+    events_run: u64,
+}
+
+impl<S> Default for Sim<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<S> Sim<S> {
+    pub fn new() -> Self {
+        Self {
+            now: 0.0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            events_run: 0,
+        }
+    }
+
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    pub fn events_run(&self) -> u64 {
+        self.events_run
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule `action` to run `delay` seconds from now.
+    pub fn schedule(&mut self, delay: Time, action: impl FnOnce(&mut Sim<S>, &mut S) + 'static) {
+        assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, action);
+    }
+
+    /// Schedule `action` at an absolute time (>= now).
+    pub fn schedule_at(&mut self, time: Time, action: impl FnOnce(&mut Sim<S>, &mut S) + 'static) {
+        assert!(
+            time >= self.now,
+            "cannot schedule into the past: {time} < {}",
+            self.now
+        );
+        self.queue.push(Scheduled {
+            time,
+            seq: self.seq,
+            action: Box::new(action),
+        });
+        self.seq += 1;
+    }
+
+    /// Run until the queue drains; returns final virtual time.
+    pub fn run(&mut self, state: &mut S) -> Time {
+        while self.step(state) {}
+        self.now
+    }
+
+    /// Run at most until virtual time `t_end` (events at exactly t_end run).
+    pub fn run_until(&mut self, state: &mut S, t_end: Time) -> Time {
+        while let Some(head) = self.queue.peek() {
+            if head.time > t_end {
+                break;
+            }
+            self.step(state);
+        }
+        self.now = self.now.max(t_end.min(self.now + 0.0));
+        self.now
+    }
+
+    /// Execute the single earliest event.  Returns false when empty.
+    pub fn step(&mut self, state: &mut S) -> bool {
+        match self.queue.pop() {
+            None => false,
+            Some(ev) => {
+                debug_assert!(ev.time >= self.now);
+                self.now = ev.time;
+                self.events_run += 1;
+                (ev.action)(self, state);
+                true
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_run_in_time_order() {
+        let mut sim: Sim<Vec<u32>> = Sim::new();
+        let mut log = Vec::new();
+        sim.schedule(3.0, |_, s: &mut Vec<u32>| s.push(3));
+        sim.schedule(1.0, |_, s| s.push(1));
+        sim.schedule(2.0, |_, s| s.push(2));
+        sim.run(&mut log);
+        assert_eq!(log, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut sim: Sim<Vec<u32>> = Sim::new();
+        let mut log = Vec::new();
+        for i in 0..10 {
+            sim.schedule(1.0, move |_, s: &mut Vec<u32>| s.push(i));
+        }
+        sim.run(&mut log);
+        assert_eq!(log, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut sim: Sim<Vec<f64>> = Sim::new();
+        let mut log = Vec::new();
+        sim.schedule(1.0, |sim, _s: &mut Vec<f64>| {
+            sim.schedule(0.5, |sim2, s2: &mut Vec<f64>| s2.push(sim2.now()));
+        });
+        let end = sim.run(&mut log);
+        assert_eq!(log, vec![1.5]);
+        assert_eq!(end, 1.5);
+    }
+
+    #[test]
+    fn run_until_stops() {
+        let mut sim: Sim<u32> = Sim::new();
+        let mut count = 0u32;
+        for i in 1..=10 {
+            sim.schedule(i as f64, |_, c: &mut u32| *c += 1);
+        }
+        sim.run_until(&mut count, 5.0);
+        assert_eq!(count, 5);
+        assert_eq!(sim.pending(), 5);
+        sim.run(&mut count);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "past")]
+    fn scheduling_into_past_panics() {
+        let mut sim: Sim<()> = Sim::new();
+        sim.schedule(1.0, |sim, _| {
+            sim.schedule_at(0.5, |_, _| {});
+        });
+        sim.run(&mut ());
+    }
+
+    #[test]
+    fn event_count_tracked() {
+        let mut sim: Sim<()> = Sim::new();
+        for _ in 0..100 {
+            sim.schedule(1.0, |_, _| {});
+        }
+        sim.run(&mut ());
+        assert_eq!(sim.events_run(), 100);
+    }
+}

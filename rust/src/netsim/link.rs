@@ -1,0 +1,184 @@
+//! FIFO servers: the composable timing primitives of the simulator.
+//!
+//! A [`Server`] owns a rate (bytes/s or FLOP/s) and a `busy_until` horizon;
+//! `serve(arrival, amount)` returns the completion time under FIFO order.
+//! A [`Link`] is a server plus propagation latency — the standard
+//! store-and-forward transmission model:
+//!
+//!   depart = max(arrival, busy_until) + amount / rate
+//!   arrive = depart + latency
+//!
+//! Paper constants (Sec. V-A): 40 GbE inter-FPGA links (α≈1), 100 GbE
+//! baseline NICs (α<1 for host MPI), PCIe Gen3 x8 ≈ 7.88 GB/s per
+//! direction, Dell S6100 switch port-to-port latency ≈ 1 µs.
+
+use super::Time;
+
+/// A FIFO rate server with utilization accounting.
+#[derive(Clone, Debug)]
+pub struct Server {
+    /// service rate in units/second (bytes/s, FLOP/s, ...)
+    pub rate: f64,
+    busy_until: Time,
+    busy_time: f64,
+    served: f64,
+}
+
+impl Server {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0);
+        Self {
+            rate,
+            busy_until: 0.0,
+            busy_time: 0.0,
+            served: 0.0,
+        }
+    }
+
+    /// Serve `amount` units arriving at `arrival`; returns completion time.
+    pub fn serve(&mut self, arrival: Time, amount: f64) -> Time {
+        let start = arrival.max(self.busy_until);
+        let dur = amount / self.rate;
+        self.busy_until = start + dur;
+        self.busy_time += dur;
+        self.served += amount;
+        self.busy_until
+    }
+
+    pub fn busy_until(&self) -> Time {
+        self.busy_until
+    }
+
+    /// Total units served.
+    pub fn served(&self) -> f64 {
+        self.served
+    }
+
+    /// Fraction of [0, horizon] this server was busy.
+    pub fn utilization(&self, horizon: Time) -> f64 {
+        if horizon <= 0.0 {
+            0.0
+        } else {
+            (self.busy_time / horizon).min(1.0)
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.busy_until = 0.0;
+        self.busy_time = 0.0;
+        self.served = 0.0;
+    }
+}
+
+/// A network link: serialization server + fixed propagation latency.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub server: Server,
+    pub latency: Time,
+}
+
+impl Link {
+    pub fn new(bandwidth_bytes_per_s: f64, latency: Time) -> Self {
+        Self {
+            server: Server::new(bandwidth_bytes_per_s),
+            latency,
+        }
+    }
+
+    /// Transmit `bytes` arriving at the NIC at `arrival`; returns the time
+    /// the last byte arrives at the far end.
+    pub fn transmit(&mut self, arrival: Time, bytes: f64) -> Time {
+        self.server.serve(arrival, bytes) + self.latency
+    }
+
+    pub fn bytes_sent(&self) -> f64 {
+        self.server.served()
+    }
+
+    pub fn reset(&mut self) {
+        self.server.reset();
+    }
+}
+
+/// Bidirectional PCIe endpoint (independent up/down servers, full duplex —
+/// PCIe Gen3 x8 gives ~7.88 GB/s each direction).
+#[derive(Clone, Debug)]
+pub struct Pcie {
+    pub to_device: Link,
+    pub to_host: Link,
+}
+
+impl Pcie {
+    pub fn new(bandwidth_bytes_per_s: f64, latency: Time) -> Self {
+        Self {
+            to_device: Link::new(bandwidth_bytes_per_s, latency),
+            to_host: Link::new(bandwidth_bytes_per_s, latency),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.to_device.reset();
+        self.to_host.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::gbps;
+
+    #[test]
+    fn serve_accumulates_backlog() {
+        let mut s = Server::new(100.0); // 100 units/s
+        assert_eq!(s.serve(0.0, 100.0), 1.0);
+        // arrives while busy: queues behind
+        assert_eq!(s.serve(0.5, 100.0), 2.0);
+        // arrives after idle gap
+        assert_eq!(s.serve(10.0, 50.0), 10.5);
+        assert_eq!(s.served(), 250.0);
+    }
+
+    #[test]
+    fn utilization_accounts_busy_time_only() {
+        let mut s = Server::new(100.0);
+        s.serve(0.0, 100.0); // busy [0,1]
+        s.serve(3.0, 100.0); // busy [3,4]
+        assert!((s.utilization(4.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_adds_latency() {
+        let mut l = Link::new(gbps(40.0), 1e-6);
+        // 5 GB/s: 5 MB takes 1 ms + 1 us latency
+        let t = l.transmit(0.0, 5e6);
+        assert!((t - (1e-3 + 1e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_pipelines_chunks() {
+        // two chunks back-to-back: serialization serializes, latency overlaps
+        let mut l = Link::new(1e6, 10e-3);
+        let t1 = l.transmit(0.0, 1000.0); // ser 1ms -> arrives 11ms
+        let t2 = l.transmit(0.0, 1000.0); // queued: ser ends 2ms -> 12ms
+        assert!((t1 - 0.011).abs() < 1e-12);
+        assert!((t2 - 0.012).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pcie_directions_independent() {
+        let mut p = Pcie::new(1e9, 0.0);
+        let up = p.to_device.transmit(0.0, 1e9);
+        let down = p.to_host.transmit(0.0, 1e9);
+        assert_eq!(up, 1.0);
+        assert_eq!(down, 1.0); // not queued behind the other direction
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut s = Server::new(10.0);
+        s.serve(0.0, 100.0);
+        s.reset();
+        assert_eq!(s.busy_until(), 0.0);
+        assert_eq!(s.served(), 0.0);
+    }
+}

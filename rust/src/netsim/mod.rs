@@ -1,0 +1,21 @@
+//! Discrete-event network/compute simulation substrate.
+//!
+//! Replaces the paper's physical testbed (6 Xeon nodes + Arria-10 NICs +
+//! a Dell S6100 switch) with a deterministic simulator.  Two layers:
+//!
+//! * [`engine`] — a classic calendar-queue DES (schedule closures at
+//!   virtual times) for control-flow-heavy simulations;
+//! * [`link`] — FIFO *servers* (links, PCIe, adders) with busy-until
+//!   semantics, composed max-plus style for pipelined dataflows (this is
+//!   how the chunked ring all-reduce is simulated; the paper's Sec. IV-C
+//!   closed form is the steady-state limit of the same composition).
+//!
+//! All time is `f64` seconds of *virtual* time; everything is pure
+//! arithmetic, so simulations are exactly reproducible.
+
+pub mod engine;
+pub mod link;
+pub mod switch;
+pub mod topology;
+
+pub type Time = f64;

@@ -1,0 +1,113 @@
+//! Ring topology over a switched Ethernet fabric (paper Fig. 3a: FPGAs
+//! connect to a Dell S6100 switch; a logical ring is overlaid on top).
+
+/// A unidirectional ring of `n` nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ring {
+    pub n: usize,
+}
+
+impl Ring {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "ring needs at least one node");
+        Self { n }
+    }
+
+    /// Downstream neighbor (the node we send to).
+    pub fn next(&self, node: usize) -> usize {
+        debug_assert!(node < self.n);
+        (node + 1) % self.n
+    }
+
+    /// Upstream neighbor (the node we receive from).
+    pub fn prev(&self, node: usize) -> usize {
+        debug_assert!(node < self.n);
+        (node + self.n - 1) % self.n
+    }
+
+    /// The chunk index node `node` *sends* during reduce-scatter step `s`
+    /// (0-based), for the standard pipelined ring all-reduce: node i sends
+    /// chunk (i - s) mod n at step s.
+    pub fn send_chunk(&self, node: usize, step: usize) -> usize {
+        (node + self.n - (step % self.n)) % self.n
+    }
+
+    /// The chunk index node `node` *receives* (and reduces or stores)
+    /// during step `s`: what its upstream neighbor sends.
+    pub fn recv_chunk(&self, node: usize, step: usize) -> usize {
+        self.send_chunk(self.prev(node), step)
+    }
+
+    /// Number of steps in a full ring all-reduce: 2(n-1).
+    pub fn allreduce_steps(&self) -> usize {
+        2 * (self.n - 1)
+    }
+
+    /// Steps in the reduce-scatter phase: n-1.
+    pub fn reduce_scatter_steps(&self) -> usize {
+        self.n - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbors_wrap() {
+        let r = Ring::new(4);
+        assert_eq!(r.next(3), 0);
+        assert_eq!(r.prev(0), 3);
+        assert_eq!(r.next(1), 2);
+    }
+
+    #[test]
+    fn chunk_schedule_is_contention_free() {
+        // at every step, the n sent chunks are distinct (each node sends a
+        // different chunk) — the property that makes ring bandwidth-optimal
+        for n in [2usize, 3, 4, 6, 8] {
+            let r = Ring::new(n);
+            for s in 0..r.allreduce_steps() {
+                let mut seen = vec![false; n];
+                for node in 0..n {
+                    let c = r.send_chunk(node, s);
+                    assert!(!seen[c], "n={n} step={s}");
+                    seen[c] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recv_is_upstream_send() {
+        let r = Ring::new(6);
+        for s in 0..r.allreduce_steps() {
+            for node in 0..6 {
+                assert_eq!(r.recv_chunk(node, s), r.send_chunk(r.prev(node), s));
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_covers_all_chunks() {
+        // after n-1 reduce steps, node i has fully reduced chunk (i+1) mod n
+        // (it received every other node's contribution exactly once)
+        let n = 5;
+        let r = Ring::new(n);
+        for node in 0..n {
+            let mut received: Vec<usize> = (0..r.reduce_scatter_steps())
+                .map(|s| r.recv_chunk(node, s))
+                .collect();
+            received.sort_unstable();
+            received.dedup();
+            assert_eq!(received.len(), n - 1, "node {node} got {received:?}");
+        }
+    }
+
+    #[test]
+    fn step_count() {
+        assert_eq!(Ring::new(6).allreduce_steps(), 10);
+        assert_eq!(Ring::new(2).allreduce_steps(), 2);
+        assert_eq!(Ring::new(1).allreduce_steps(), 0);
+    }
+}

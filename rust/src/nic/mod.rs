@@ -1,0 +1,9 @@
+//! The FPGA-based AI smart NIC (paper Sec. IV): a cycle-approximate timing
+//! model of the Rx/Tx/input/output FIFO + FP32 adder + control FSM
+//! datapath (Fig. 3a), its in-network pipelined ring all-reduce, and the
+//! Table-I resource estimator.
+
+pub mod resources;
+pub mod smartnic;
+
+pub use smartnic::{simulate_ring_allreduce, AllReduceTiming, NicConfig};

@@ -1,0 +1,176 @@
+//! FPGA resource model — regenerates Table I and the Sec. V-A scaling
+//! claims without a synthesis run.
+//!
+//! Anchors: the paper's Quartus 17.1 results on Arria 10 GX 1150 at
+//! 40 Gbps (Table I).  Scaling to 100/400 Gbps follows the paper's
+//! description (16 SIMD lanes at 100G, 4×100G at 400G) with sub-linear
+//! logic/RAM growth — control logic amortizes across wider datapaths and
+//! aggregate FIFO capacity is set by the bandwidth-delay product, while
+//! adder DSPs scale linearly with lane count.  Exponents are fitted so the
+//! model reproduces Table I exactly at 40G and satisfies the paper's
+//! "<2% / <9% / <5%" claim at 400G (checked in tests).
+
+/// Arria 10 GX 1150 totals (paper's percentages in Table I confirm these).
+pub const A10_ALMS: u32 = 427_200;
+pub const A10_M20KS: u32 = 2_713;
+pub const A10_DSPS: u32 = 1_518;
+
+/// Resource triple.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Resources {
+    pub alms: u32,
+    pub m20ks: u32,
+    pub dsps: u32,
+}
+
+impl Resources {
+    pub const fn new(alms: u32, m20ks: u32, dsps: u32) -> Self {
+        Self { alms, m20ks, dsps }
+    }
+
+    pub fn plus(&self, o: &Resources) -> Resources {
+        Resources::new(self.alms + o.alms, self.m20ks + o.m20ks, self.dsps + o.dsps)
+    }
+
+    pub fn pct_alms(&self) -> f64 {
+        100.0 * self.alms as f64 / A10_ALMS as f64
+    }
+    pub fn pct_m20ks(&self) -> f64 {
+        100.0 * self.m20ks as f64 / A10_M20KS as f64
+    }
+    pub fn pct_dsps(&self) -> f64 {
+        100.0 * self.dsps as f64 / A10_DSPS as f64
+    }
+}
+
+/// 40G anchor values (Table I).
+pub const SHIM_40G: Resources = Resources::new(64_480, 368, 0);
+pub const ALLREDUCE_40G: Resources = Resources::new(2_233, 46, 8);
+pub const BFP_40G: Resources = Resources::new(2_857, 120, 0);
+
+/// Scaling exponents: cost(bw) = cost40 × (bw/40)^γ per resource class.
+const GAMMA_ALM: f64 = 0.22;
+const GAMMA_M20K: f64 = 0.16;
+
+/// SIMD lanes at a given line rate, following Sec. V-A: 8 lanes (256-bit)
+/// at 40G, 16 lanes (512-bit) at 100G, and 400G as 4×100G → 64 lanes.
+pub fn lanes_at(eth_gbps: f64) -> u32 {
+    if eth_gbps <= 40.0 {
+        8
+    } else if eth_gbps <= 100.0 {
+        16
+    } else {
+        16 * (eth_gbps / 100.0).ceil() as u32
+    }
+}
+
+fn scale(base: u32, ratio: f64, gamma: f64) -> u32 {
+    (base as f64 * ratio.powf(gamma)).round() as u32
+}
+
+fn scale_res(base: &Resources, eth_gbps: f64) -> Resources {
+    let r = eth_gbps / 40.0;
+    // DSPs are one FP32 adder per SIMD lane — they scale with lane count,
+    // not with the bandwidth exponent.
+    let lane_ratio = lanes_at(eth_gbps) as f64 / 8.0;
+    Resources::new(
+        scale(base.alms, r, GAMMA_ALM),
+        scale(base.m20ks, r, GAMMA_M20K),
+        (base.dsps as f64 * lane_ratio).round() as u32,
+    )
+}
+
+/// One row set of the resource breakdown at a given line rate.
+#[derive(Clone, Debug)]
+pub struct Breakdown {
+    pub eth_gbps: f64,
+    pub shim: Resources,
+    pub allreduce: Resources,
+    pub bfp: Resources,
+}
+
+impl Breakdown {
+    pub fn at(eth_gbps: f64) -> Self {
+        Self {
+            eth_gbps,
+            // the OPAE+IKL shim is infrastructure; the paper scales only
+            // the AI-specific engines
+            shim: SHIM_40G,
+            allreduce: scale_res(&ALLREDUCE_40G, eth_gbps),
+            bfp: scale_res(&BFP_40G, eth_gbps),
+        }
+    }
+
+    /// AI-specific additions only (the paper's 1.2%/6.1%/0.5% numbers).
+    pub fn ai_only(&self) -> Resources {
+        self.allreduce.plus(&self.bfp)
+    }
+
+    pub fn total(&self) -> Resources {
+        self.shim.plus(&self.ai_only())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_exact_at_40g() {
+        let b = Breakdown::at(40.0);
+        assert_eq!(b.shim, SHIM_40G);
+        assert_eq!(b.allreduce, ALLREDUCE_40G);
+        assert_eq!(b.bfp, BFP_40G);
+        let t = b.total();
+        assert_eq!(t, Resources::new(69_570, 534, 8));
+    }
+
+    #[test]
+    fn table1_percentages_match_paper() {
+        let b = Breakdown::at(40.0);
+        // Table I column percentages
+        assert_eq!(format!("{:.1}", b.shim.pct_alms()), "15.1");
+        assert_eq!(format!("{:.1}", b.shim.pct_m20ks()), "13.6");
+        assert_eq!(format!("{:.1}", b.allreduce.pct_alms()), "0.5");
+        assert_eq!(format!("{:.1}", b.allreduce.pct_m20ks()), "1.7");
+        assert_eq!(format!("{:.1}", b.allreduce.pct_dsps()), "0.5");
+        assert_eq!(format!("{:.1}", b.bfp.pct_alms()), "0.7");
+        assert_eq!(format!("{:.1}", b.bfp.pct_m20ks()), "4.4");
+        assert_eq!(format!("{:.1}", b.total().pct_alms()), "16.3");
+        assert_eq!(format!("{:.1}", b.total().pct_m20ks()), "19.7");
+        // Sec. V-A: AI-only = 1.2% / 6.1% / 0.5%
+        let ai = b.ai_only();
+        assert_eq!(format!("{:.1}", ai.pct_alms()), "1.2");
+        assert_eq!(format!("{:.1}", ai.pct_m20ks()), "6.1");
+        assert_eq!(format!("{:.1}", ai.pct_dsps()), "0.5");
+    }
+
+    #[test]
+    fn sec5a_claim_holds_at_400g() {
+        // "even at 400 Gbps ... less than 2%, 9%, and 5% of the FPGA
+        // logic, RAM, and DSP resources"
+        let ai = Breakdown::at(400.0).ai_only();
+        assert!(ai.pct_alms() < 2.0, "alm {:.2}%", ai.pct_alms());
+        assert!(ai.pct_m20ks() < 9.0, "m20k {:.2}%", ai.pct_m20ks());
+        assert!(ai.pct_dsps() < 5.0, "dsp {:.2}%", ai.pct_dsps());
+    }
+
+    #[test]
+    fn monotone_in_bandwidth() {
+        let b40 = Breakdown::at(40.0).ai_only();
+        let b100 = Breakdown::at(100.0).ai_only();
+        let b400 = Breakdown::at(400.0).ai_only();
+        assert!(b40.alms < b100.alms && b100.alms < b400.alms);
+        assert!(b40.m20ks < b100.m20ks && b100.m20ks < b400.m20ks);
+        assert!(b40.dsps < b100.dsps && b100.dsps < b400.dsps);
+    }
+
+    #[test]
+    fn dsps_scale_with_lanes() {
+        assert_eq!(lanes_at(40.0), 8);
+        assert_eq!(lanes_at(100.0), 16);
+        assert_eq!(lanes_at(400.0), 64);
+        assert_eq!(Breakdown::at(100.0).allreduce.dsps, 16);
+        assert_eq!(Breakdown::at(400.0).allreduce.dsps, 64);
+    }
+}

@@ -1,0 +1,372 @@
+//! Chunk-level DES of the smart NIC's pipelined ring all-reduce.
+//!
+//! Models the Fig. 3a datapath per node:
+//!
+//!   host --PCIe--> input FIFO --+
+//!                               +--> FP32 adders --> Tx FIFO --eth--> next
+//!   prev --eth--> Rx FIFO ------+              \--> output FIFO --PCIe--> host
+//!
+//! The gradient (R bytes) is padded and split into N ring chunks; each
+//! chunk is further segmented (`segment_bytes`) so PCIe fetch, reduction,
+//! and link serialization pipeline against each other exactly like the
+//! FIFOs in the RTL.  Over 2(N−1) ring steps the simulation produces the
+//! all-reduce completion time *emergently*; Sec. IV-C's closed form
+//! T_AR = max(T_ring, T_add, T_mem) is its steady-state limit and the two
+//! must agree within 3% (checked in `analytic::validate`).
+//!
+//! With BFP compression enabled only mantissa+sign+shared-exponent bits
+//! cross the wire (β = 3.76 for BFP16); decompress→add→compress is
+//! line-rate in the RTL and therefore adds latency but not bandwidth cost.
+
+use crate::bfp::BfpCodec;
+use crate::netsim::link::{Link, Pcie, Server};
+use crate::netsim::topology::Ring;
+use crate::netsim::Time;
+use crate::sysconfig::SystemParams;
+
+/// Per-all-reduce NIC configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct NicConfig {
+    pub sys: SystemParams,
+    /// BFP wire compression (None = raw FP32 on the wire)
+    pub bfp: Option<BfpCodec>,
+    /// failure injection: (node, bandwidth multiplier) degrades one Tx
+    /// link (e.g. a flapping 40G port running at 10G → 0.25)
+    pub degraded_link: Option<(usize, f64)>,
+    /// failure injection: (node, speed multiplier) slows one node's PCIe
+    /// + adder (a straggling host or thermally-throttled FPGA)
+    pub straggler: Option<(usize, f64)>,
+}
+
+impl NicConfig {
+    pub fn new(sys: SystemParams, bfp: Option<BfpCodec>) -> Self {
+        Self {
+            sys,
+            bfp,
+            degraded_link: None,
+            straggler: None,
+        }
+    }
+
+    pub fn with_degraded_link(mut self, node: usize, scale: f64) -> Self {
+        assert!(scale > 0.0 && scale <= 1.0);
+        self.degraded_link = Some((node, scale));
+        self
+    }
+
+    pub fn with_straggler(mut self, node: usize, scale: f64) -> Self {
+        assert!(scale > 0.0 && scale <= 1.0);
+        self.straggler = Some((node, scale));
+        self
+    }
+
+    /// Wire bytes for `bytes` of FP32 payload.
+    pub fn wire_bytes(&self, bytes: f64) -> f64 {
+        match &self.bfp {
+            Some(c) => bytes / c.compression_ratio(),
+            None => bytes,
+        }
+    }
+}
+
+/// Timing result of one simulated all-reduce.
+#[derive(Clone, Debug)]
+pub struct AllReduceTiming {
+    /// completion time (all nodes have the reduced gradient in host memory)
+    pub t_total: Time,
+    /// per-node completion times
+    pub t_node: Vec<Time>,
+    /// utilization of the bottleneck resources over [0, t_total]
+    pub eth_util: f64,
+    pub pcie_util: f64,
+    pub adder_util: f64,
+    /// bytes actually sent on each node's Tx link
+    pub wire_bytes_per_node: f64,
+    /// ring steps executed
+    pub steps: usize,
+}
+
+struct NodeState {
+    tx: Link,
+    pcie: Pcie,
+    adder: Server,
+}
+
+/// Simulate one pipelined ring all-reduce of `elems` f32 gradients across
+/// `n` nodes starting at t=0.  Returns the emergent timing.
+pub fn simulate_ring_allreduce(cfg: &NicConfig, n: usize, elems: usize) -> AllReduceTiming {
+    assert!(n >= 1);
+    let sys = &cfg.sys;
+    let ring = Ring::new(n);
+
+    // Padded chunking (Sec. IV-C: R_l = b * N * ceil(M^2 / N))
+    let chunk_elems = elems.div_ceil(n);
+    let chunk_bytes = chunk_elems as f64 * 4.0;
+    let seg_bytes = sys.nic.segment_bytes.min(chunk_bytes).max(1.0);
+    let segs_per_chunk = (chunk_bytes / seg_bytes).ceil() as usize;
+    let seg_bytes = chunk_bytes / segs_per_chunk as f64; // equalize
+    let seg_elems = chunk_elems as f64 / segs_per_chunk as f64;
+
+    let mut nodes: Vec<NodeState> = (0..n)
+        .map(|i| {
+            let link_scale = match cfg.degraded_link {
+                Some((node, s)) if node == i => s,
+                _ => 1.0,
+            };
+            let node_scale = match cfg.straggler {
+                Some((node, s)) if node == i => s,
+                _ => 1.0,
+            };
+            NodeState {
+                tx: Link::new(
+                    sys.net.eth_bw * sys.net.alpha * link_scale,
+                    sys.net.hop_latency,
+                ),
+                pcie: Pcie::new(sys.nic.pcie_bw * node_scale, sys.nic.pcie_latency),
+                adder: Server::new(sys.nic.add_flops * node_scale),
+            }
+        })
+        .collect();
+
+    if n == 1 {
+        // single node: no communication, gradient is already reduced
+        return AllReduceTiming {
+            t_total: 0.0,
+            t_node: vec![0.0],
+            eth_util: 0.0,
+            pcie_util: 0.0,
+            adder_util: 0.0,
+            wire_bytes_per_node: 0.0,
+            steps: 0,
+        };
+    }
+
+    // fetch[i][c][s]: time segment s of chunk c is available in node i's
+    // input FIFO (PCIe fetch, issued in the order the schedule consumes
+    // chunks: the chunk sent at step 0 first, then received chunks' local
+    // counterparts).
+    let t0 = sys.nic_request_overhead;
+    let mut fetch = vec![vec![vec![0.0f64; segs_per_chunk]; n]; n];
+    for node in 0..n {
+        // fetch order: chunk sent at step 0, then chunks reduced at steps
+        // 0..n-2 (i.e. recv_chunk(node, s))
+        let mut order = vec![ring.send_chunk(node, 0)];
+        for s in 0..ring.reduce_scatter_steps() {
+            order.push(ring.recv_chunk(node, s));
+        }
+        order.dedup();
+        for c in order {
+            for s in 0..segs_per_chunk {
+                fetch[node][c][s] = nodes[node].pcie.to_device.transmit(t0, seg_bytes);
+            }
+        }
+    }
+
+    // ready[i][s_seg]: the time each segment of the chunk node i sends at
+    // the current ring step is ready in its Tx path.
+    // Initialize for step 0 from the fetch times.
+    let mut ready: Vec<Vec<Time>> = (0..n)
+        .map(|i| fetch[i][ring.send_chunk(i, 0)].clone())
+        .collect();
+
+    let wire_seg = cfg.wire_bytes(seg_bytes);
+    let mut writeback_done = vec![0.0f64; n];
+    let total_steps = ring.allreduce_steps();
+
+    for step in 0..total_steps {
+        let reduce_phase = step < ring.reduce_scatter_steps();
+        let mut next_ready: Vec<Vec<Time>> = vec![Vec::new(); n];
+        // iterate senders; receiver j = next(i)
+        for i in 0..n {
+            let j = ring.next(i);
+            let mut out = Vec::with_capacity(segs_per_chunk);
+            for s in 0..segs_per_chunk {
+                // Tx serialization on i's link, then hop latency
+                let arrive = nodes[i].tx.transmit(ready[i][s], wire_seg);
+                let t = if reduce_phase {
+                    // receiver reduces with its local (fetched) segment
+                    let local = fetch[j][ring.recv_chunk(j, step)][s];
+                    nodes[j].adder.serve(arrive.max(local), seg_elems)
+                } else {
+                    // allgather: store & forward (forward doesn't wait for
+                    // the host writeback)
+                    arrive
+                };
+                // store-to-host when this node's copy becomes final:
+                // after the reduce at step n-2 (it then owns the fully
+                // reduced chunk) and on every allgather receive.
+                if step >= ring.reduce_scatter_steps() - 1 {
+                    let wb = nodes[j].pcie.to_host.transmit(t, seg_bytes);
+                    writeback_done[j] = writeback_done[j].max(wb);
+                }
+                out.push(t);
+            }
+            next_ready[j] = out;
+        }
+        ready = next_ready;
+    }
+
+    let t_node: Vec<Time> = writeback_done;
+    let t_total = t_node.iter().cloned().fold(0.0, f64::max);
+    let eth_util = nodes
+        .iter()
+        .map(|nd| nd.tx.server.utilization(t_total))
+        .sum::<f64>()
+        / n as f64;
+    let pcie_util = nodes
+        .iter()
+        .map(|nd| {
+            (nd.pcie.to_device.server.utilization(t_total)
+                + nd.pcie.to_host.server.utilization(t_total))
+                / 2.0
+        })
+        .sum::<f64>()
+        / n as f64;
+    let adder_util = nodes
+        .iter()
+        .map(|nd| nd.adder.utilization(t_total))
+        .sum::<f64>()
+        / n as f64;
+    let wire = nodes[0].tx.bytes_sent();
+    AllReduceTiming {
+        t_total,
+        t_node,
+        eth_util,
+        pcie_util,
+        adder_util,
+        wire_bytes_per_node: wire,
+        steps: total_steps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sysconfig::SystemParams;
+    use crate::util::units::gbps;
+
+    fn cfg(bfp: bool) -> NicConfig {
+        NicConfig::new(
+            SystemParams::smartnic_40g(),
+            if bfp { Some(BfpCodec::bfp16()) } else { None },
+        )
+    }
+
+    #[test]
+    fn single_node_is_free() {
+        let t = simulate_ring_allreduce(&cfg(false), 1, 1 << 20);
+        assert_eq!(t.t_total, 0.0);
+    }
+
+    #[test]
+    fn time_approaches_bandwidth_optimal() {
+        // T_ring = R * 2(N-1) / (N * αBW) for large tensors
+        let c = cfg(false);
+        let elems = 4 * 1024 * 1024; // 16 MiB
+        let n = 6;
+        let t = simulate_ring_allreduce(&c, n, elems);
+        let r = elems as f64 * 4.0;
+        let t_ring = r * 2.0 * (n as f64 - 1.0) / (n as f64 * gbps(40.0));
+        assert!(t.t_total > t_ring, "{} !> {}", t.t_total, t_ring);
+        assert!(
+            t.t_total < t_ring * 1.15,
+            "sim {} vs ideal {t_ring}",
+            t.t_total
+        );
+    }
+
+    #[test]
+    fn bfp_speeds_up_until_pcie_bound() {
+        let elems = 4 * 1024 * 1024;
+        let raw = simulate_ring_allreduce(&cfg(false), 6, elems);
+        let comp = simulate_ring_allreduce(&cfg(true), 6, elems);
+        let speedup = raw.t_total / comp.t_total;
+        // β = 3.76 on the wire, but the uncompressed PCIe fetch+writeback
+        // (T_mem) becomes the bottleneck once the ring is compressed
+        assert!(speedup > 1.3, "speedup {speedup}");
+        assert!(speedup <= 3.8, "speedup {speedup}");
+        // and the compressed run must indeed be PCIe-bound, not eth-bound
+        assert!(comp.pcie_util > comp.eth_util, "{comp:?}");
+    }
+
+    #[test]
+    fn wire_bytes_match_compression() {
+        let elems = 1 << 20;
+        let raw = simulate_ring_allreduce(&cfg(false), 4, elems);
+        let comp = simulate_ring_allreduce(&cfg(true), 4, elems);
+        let ratio = raw.wire_bytes_per_node / comp.wire_bytes_per_node;
+        assert!((ratio - 512.0 / 136.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn scaling_with_nodes_follows_2n1_over_n() {
+        let c = cfg(false);
+        let elems = 1 << 22;
+        let t4 = simulate_ring_allreduce(&c, 4, elems).t_total;
+        let t8 = simulate_ring_allreduce(&c, 8, elems).t_total;
+        // ratio of 2(N-1)/N factors: (2*7/8)/(2*3/4) = 1.1667
+        let expect = (2.0 * 7.0 / 8.0) / (2.0 * 3.0 / 4.0);
+        let got = t8 / t4;
+        assert!((got - expect).abs() / expect < 0.1, "got {got} want {expect}");
+    }
+
+    #[test]
+    fn eth_is_bottleneck_at_40g() {
+        let t = simulate_ring_allreduce(&cfg(false), 6, 4 * 1024 * 1024);
+        assert!(t.eth_util > 0.75, "eth util {}", t.eth_util);
+        assert!(t.adder_util < t.eth_util);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = simulate_ring_allreduce(&cfg(true), 6, 123_457);
+        let b = simulate_ring_allreduce(&cfg(true), 6, 123_457);
+        assert_eq!(a.t_total, b.t_total);
+    }
+
+    #[test]
+    fn two_nodes_work() {
+        let t = simulate_ring_allreduce(&cfg(false), 2, 1 << 16);
+        assert!(t.t_total > 0.0);
+        assert_eq!(t.steps, 2);
+    }
+
+    #[test]
+    fn degraded_link_gates_the_whole_ring() {
+        // the ring is only as fast as its slowest link: a 4x-degraded
+        // port slows the (bandwidth-bound) all-reduce by ~4x
+        let elems = 4 * 1024 * 1024;
+        let healthy = simulate_ring_allreduce(&cfg(false), 6, elems).t_total;
+        let degraded_cfg = cfg(false).with_degraded_link(2, 0.25);
+        let degraded = simulate_ring_allreduce(&degraded_cfg, 6, elems).t_total;
+        let slowdown = degraded / healthy;
+        assert!(
+            (2.0..=4.5).contains(&slowdown),
+            "slowdown {slowdown} (expected ~4x, pipeline effects allowed)"
+        );
+    }
+
+    #[test]
+    fn straggler_node_hurts_less_than_slow_link_when_pcie_has_headroom() {
+        let elems = 4 * 1024 * 1024;
+        let healthy = simulate_ring_allreduce(&cfg(false), 6, elems).t_total;
+        // raw FP32 at 40G is ethernet-bound; a mildly slow PCIe (0.8x)
+        // stays hidden
+        let mild = cfg(false).with_straggler(3, 0.8);
+        let t_mild = simulate_ring_allreduce(&mild, 6, elems).t_total;
+        assert!(t_mild < healthy * 1.15, "{t_mild} vs {healthy}");
+        // but a severely slow node (0.2x) becomes the bottleneck
+        let severe = cfg(false).with_straggler(3, 0.2);
+        let t_severe = simulate_ring_allreduce(&severe, 6, elems).t_total;
+        assert!(t_severe > healthy * 1.5, "{t_severe} vs {healthy}");
+    }
+
+    #[test]
+    fn tiny_tensor_dominated_by_latency() {
+        let c = cfg(false);
+        let t = simulate_ring_allreduce(&c, 6, 64);
+        // 10 steps of ~2us hops plus overheads: order 20-100 us
+        assert!(t.t_total > 10.0 * c.sys.net.hop_latency);
+        assert!(t.t_total < 1e-3);
+    }
+}

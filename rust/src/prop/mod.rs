@@ -1,0 +1,186 @@
+//! Miniature property-testing framework (proptest is unavailable offline).
+//!
+//! `forall` runs a property over N generated cases; on failure it performs
+//! greedy shrinking through the generator's `shrink` method and reports the
+//! minimal failing input together with the seed that reproduces it.
+//!
+//! ```ignore
+//! use ai_smartnic::prop::{forall, gens};
+//! forall(&gens::vec_f32(1..=1000, 8.0), 100, |xs| xs.len() <= 1000);
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A random-value generator with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate "smaller" values, most aggressive first.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the minimal
+/// counterexample on failure.  Seed comes from `SMARTNIC_PROP_SEED` env var
+/// (default 0xC0FFEE) so failures replay exactly.
+pub fn forall<G: Gen>(gen: &G, cases: usize, prop: impl Fn(&G::Value) -> bool) {
+    let seed = std::env::var("SMARTNIC_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let minimal = shrink_loop(gen, v, &prop);
+            panic!(
+                "property failed (seed {seed}, case {case}); minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut v: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    // up to 1000 shrink steps of greedy descent
+    'outer: for _ in 0..1000 {
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    v
+}
+
+/// Ready-made generators.
+pub mod gens {
+    use super::Gen;
+    use crate::util::rng::Rng;
+    use std::ops::RangeInclusive;
+
+    pub struct USize(pub RangeInclusive<usize>);
+
+    impl Gen for USize {
+        type Value = usize;
+        fn generate(&self, rng: &mut Rng) -> usize {
+            let (lo, hi) = (*self.0.start(), *self.0.end());
+            lo + rng.below((hi - lo + 1) as u64) as usize
+        }
+        fn shrink(&self, v: &usize) -> Vec<usize> {
+            let lo = *self.0.start();
+            let mut out = Vec::new();
+            if *v > lo {
+                out.push(lo);
+                out.push(lo + (*v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.dedup();
+            out
+        }
+    }
+
+    pub fn usize_in(r: RangeInclusive<usize>) -> USize {
+        USize(r)
+    }
+
+    /// Vec<f32> of random length with magnitudes spread over ±2^mag_exp.
+    pub struct VecF32 {
+        pub len: RangeInclusive<usize>,
+        pub mag_exp: f32,
+    }
+
+    impl Gen for VecF32 {
+        type Value = Vec<f32>;
+        fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+            let n = USize(self.len.clone()).generate(rng);
+            (0..n)
+                .map(|_| {
+                    let e = rng.range_f64(-self.mag_exp as f64, self.mag_exp as f64);
+                    (rng.normal() as f32) * (e as f32).exp2()
+                })
+                .collect()
+        }
+        fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+            let lo = *self.len.start();
+            let mut out = Vec::new();
+            if v.len() > lo {
+                out.push(v[..lo.max(v.len() / 2)].to_vec());
+                out.push(v[..v.len() - 1].to_vec());
+            }
+            // also try zeroing elements (simplest values)
+            if v.iter().any(|&x| x != 0.0) {
+                out.push(v.iter().map(|_| 0.0).collect());
+            }
+            out
+        }
+    }
+
+    pub fn vec_f32(len: RangeInclusive<usize>, mag_exp: f32) -> VecF32 {
+        VecF32 { len, mag_exp }
+    }
+
+    /// Pair of independent generators.
+    pub struct Pair<A, B>(pub A, pub B);
+
+    impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+        type Value = (A::Value, B::Value);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (self.0.generate(rng), self.1.generate(rng))
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            let mut out: Vec<Self::Value> = self
+                .0
+                .shrink(&v.0)
+                .into_iter()
+                .map(|a| (a, v.1.clone()))
+                .collect();
+            out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+            out
+        }
+    }
+
+    pub fn pair<A: Gen, B: Gen>(a: A, b: B) -> Pair<A, B> {
+        Pair(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::gens::*;
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(&usize_in(0..=100), 200, |&n| n <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        forall(&usize_in(0..=1000), 200, |&n| n < 500);
+    }
+
+    #[test]
+    fn vec_gen_respects_len() {
+        forall(&vec_f32(2..=64, 4.0), 100, |v| (2..=64).contains(&v.len()));
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        forall(&pair(usize_in(1..=8), usize_in(1..=8)), 50, |&(a, b)| {
+            a >= 1 && b >= 1
+        });
+    }
+
+    #[test]
+    fn shrink_finds_boundary() {
+        // the minimal failing case for n >= 500 in 0..=1000 is 500
+        let g = usize_in(0..=1000);
+        let minimal = super::shrink_loop(&g, 987, &|&n: &usize| n < 500);
+        assert_eq!(minimal, 500);
+    }
+}

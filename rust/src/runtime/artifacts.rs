@@ -1,0 +1,164 @@
+//! Artifact manifest: the contract written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata for one AOT-lowered entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub entry: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub hidden: Option<usize>,
+    pub batch: Option<usize>,
+}
+
+/// The parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub bfp_block_size: usize,
+    pub bfp_mant_bits: u32,
+}
+
+fn shapes(j: &Json) -> Result<Vec<Vec<usize>>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected shape array"))?
+        .iter()
+        .map(|s| {
+            s.num_vec(|x| x as usize)
+                .ok_or_else(|| anyhow!("expected dim array"))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let bfp = j.get("bfp").ok_or_else(|| anyhow!("manifest missing 'bfp'"))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let artifacts = arts
+            .iter()
+            .map(|a| -> Result<ArtifactMeta> {
+                Ok(ArtifactMeta {
+                    name: a
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("artifact missing name"))?
+                        .to_string(),
+                    file: a
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("artifact missing file"))?
+                        .to_string(),
+                    entry: a
+                        .get("entry")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    inputs: shapes(a.get("inputs").ok_or_else(|| anyhow!("missing inputs"))?)?,
+                    outputs: shapes(a.get("outputs").ok_or_else(|| anyhow!("missing outputs"))?)?,
+                    hidden: a.get("hidden").and_then(|v| v.as_usize()),
+                    batch: a.get("batch").and_then(|v| v.as_usize()),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir,
+            artifacts,
+            bfp_block_size: bfp
+                .get("block_size")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(16),
+            bfp_mant_bits: bfp
+                .get("mant_bits")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(7) as u32,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// (hidden, batch) pairs available for the layer entry points.
+    pub fn shape_pairs(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.entry == "layer_fwd")
+            .filter_map(|a| Some((a.hidden?, a.batch?)))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "bfp": {"block_size": 16, "mant_bits": 7, "exp_bits": 8},
+      "artifacts": [
+        {"name": "layer_fwd_m64_b16", "file": "layer_fwd_m64_b16.hlo.txt",
+         "entry": "layer_fwd", "hidden": 64, "batch": 16,
+         "inputs": [[16,64],[64,64],[64]], "outputs": [[16,64],[16,64]],
+         "sha256": "abc"},
+        {"name": "sgd_update_m64", "file": "sgd_update_m64.hlo.txt",
+         "entry": "sgd_update", "hidden": 64,
+         "inputs": [[64,64],[64,64],[1,1]], "outputs": [[64,64]],
+         "sha256": "def"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.bfp_block_size, 16);
+        assert_eq!(m.bfp_mant_bits, 7);
+        let a = m.get("layer_fwd_m64_b16").unwrap();
+        assert_eq!(a.inputs, vec![vec![16, 64], vec![64, 64], vec![64]]);
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(a.hidden, Some(64));
+        assert_eq!(m.shape_pairs(), vec![(64, 16)]);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::from("/tmp")).is_err());
+        assert!(Manifest::parse("not json", PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! The PJRT execution engine: compiles HLO-text artifacts once (lazily,
+//! cached) and executes them with host tensors.  Follows the pattern of
+//! /opt/xla-example/load_hlo.rs.
+
+use super::artifacts::Manifest;
+use super::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Cumulative execution statistics (per entry point).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// PJRT engine: one CPU client + compiled-executable cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    execs: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Engine {
+    /// Open the artifact directory (reads manifest.json, creates the PJRT
+    /// CPU client; compilation happens lazily per entry point).
+    pub fn open(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine {
+            manifest,
+            client,
+            execs: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure `name` is compiled; returns compile time if it compiled now.
+    pub fn warmup(&self, name: &str) -> Result<Option<f64>> {
+        if self.execs.borrow().contains_key(name) {
+            return Ok(None);
+        }
+        let meta = self.manifest.get(name)?;
+        let path = self.manifest.path_of(meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.execs.borrow_mut().insert(name.to_string(), exe);
+        Ok(Some(t0.elapsed().as_secs_f64()))
+    }
+
+    /// Execute entry point `name` with `inputs`; returns the output tuple
+    /// as host tensors.
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.warmup(name)?;
+        let meta = self.manifest.get(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if &t.shape != want {
+                return Err(anyhow!(
+                    "{name}: input {i} shape {:?} != expected {:?}",
+                    t.shape,
+                    want
+                ));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| -> Result<xla::Literal> {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("literal reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let execs = self.execs.borrow();
+        let exe = execs.get(name).expect("warmed up above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let elapsed = t0.elapsed().as_secs_f64();
+        drop(execs);
+        {
+            let mut stats = self.stats.borrow_mut();
+            let s = stats.entry(name.to_string()).or_default();
+            s.calls += 1;
+            s.total_secs += elapsed;
+        }
+
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        if parts.len() != meta.outputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} outputs, got {}",
+                meta.outputs.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, shape)| -> Result<Tensor> {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading output of {name}: {e:?}"))?;
+                Ok(Tensor::new(shape.clone(), data))
+            })
+            .collect()
+    }
+
+    /// Per-entry-point cumulative execution stats (for profiling).
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<(String, ExecStats)> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect();
+        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v
+    }
+
+    /// Average seconds per call of an entry point (None if never run).
+    pub fn mean_time(&self, name: &str) -> Option<f64> {
+        let stats = self.stats.borrow();
+        let s = stats.get(name)?;
+        if s.calls == 0 {
+            None
+        } else {
+            Some(s.total_secs / s.calls as f64)
+        }
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Engine({} artifacts, {} compiled)",
+            self.manifest.artifacts.len(),
+            self.execs.borrow().len()
+        )
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `make artifacts`) and executes them on the
+//! CPU PJRT client from the Rust hot path.  Python is never involved at
+//! runtime.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod engine;
+pub mod tensor;
+
+pub use artifacts::{ArtifactMeta, Manifest};
+pub use engine::Engine;
+pub use tensor::Tensor;

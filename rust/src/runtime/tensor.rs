@@ -1,0 +1,137 @@
+//! Host-side f32 tensors: the currency between the coordinator, the NIC
+//! data path and the PJRT executables.
+
+use crate::util::rng::Rng;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} incompatible with {} elements",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![1, 1],
+            data: vec![v],
+        }
+    }
+
+    /// He-style normal init (matches model.init_params scale).
+    pub fn randn(shape: &[usize], scale: f32, rng: &mut Rng) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: rng.normal_vec_f32(shape.iter().product(), scale),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    /// Frobenius / L2 norm.
+    pub fn norm(&self) -> f64 {
+        self.data
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Max |a - b| against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// a += b
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// a -= lr * b   (host-side SGD reference)
+    pub fn axpy_neg(&mut self, lr: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= lr * b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape_check() {
+        let t = Tensor::new(vec![2, 3], vec![1.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 3], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn norm_and_diff() {
+        let a = Tensor::new(vec![2], vec![3.0, 4.0]);
+        assert!((a.norm() - 5.0).abs() < 1e-12);
+        let b = Tensor::new(vec![2], vec![3.0, 5.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn axpy() {
+        let mut w = Tensor::new(vec![2], vec![1.0, 1.0]);
+        let g = Tensor::new(vec![2], vec![0.5, 1.0]);
+        w.axpy_neg(0.1, &g);
+        assert!((w.data[0] - 0.95).abs() < 1e-7);
+        assert!((w.data[1] - 0.9).abs() < 1e-7);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        assert_eq!(
+            Tensor::randn(&[4, 4], 0.1, &mut r1),
+            Tensor::randn(&[4, 4], 0.1, &mut r2)
+        );
+    }
+}

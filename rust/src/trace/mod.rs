@@ -1,0 +1,199 @@
+//! Execution-trace recording (Fig. 3b style): named spans on named lanes
+//! with virtual or wall-clock timestamps, exportable as chrome://tracing
+//! JSON for inspection.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One span on a lane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub lane: String,
+    pub name: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A trace: an ordered list of spans.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, lane: &str, name: &str, start: f64, end: f64) {
+        debug_assert!(end >= start, "span '{name}' ends before it starts");
+        self.spans.push(Span {
+            lane: lane.to_string(),
+            name: name.to_string(),
+            start,
+            end,
+        });
+    }
+
+    /// Latest end time in the trace.
+    pub fn makespan(&self) -> f64 {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Total busy time on one lane.
+    pub fn lane_busy(&self, lane: &str) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.lane == lane)
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Sum of durations of spans whose name starts with `prefix`.
+    pub fn time_in(&self, prefix: &str) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.name.starts_with(prefix))
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Verify no two spans on the same lane overlap (schedule invariant).
+    pub fn check_no_lane_overlap(&self) -> Result<(), String> {
+        let mut by_lane: BTreeMap<&str, Vec<(f64, f64, &str)>> = BTreeMap::new();
+        for s in &self.spans {
+            by_lane
+                .entry(&s.lane)
+                .or_default()
+                .push((s.start, s.end, &s.name));
+        }
+        for (lane, mut spans) in by_lane {
+            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in spans.windows(2) {
+                // allow exact touching (end == start)
+                if w[1].0 < w[0].1 - 1e-12 {
+                    return Err(format!(
+                        "lane '{lane}': '{}' [{:.6},{:.6}] overlaps '{}' [{:.6},{:.6}]",
+                        w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Render an ASCII Gantt chart (the Fig. 3b visualization): one row
+    /// per lane, `width` characters spanning [0, makespan].
+    pub fn render_gantt(&self, width: usize) -> String {
+        let span = self.makespan();
+        if span <= 0.0 || self.spans.is_empty() {
+            return String::from("(empty trace)\n");
+        }
+        let mut lanes: Vec<&str> = Vec::new();
+        for s in &self.spans {
+            if !lanes.contains(&s.lane.as_str()) {
+                lanes.push(&s.lane);
+            }
+        }
+        let lane_w = lanes.iter().map(|l| l.len()).max().unwrap_or(4).max(4);
+        let mut out = String::new();
+        for lane in &lanes {
+            let mut row = vec![' '; width];
+            for s in self.spans.iter().filter(|s| &s.lane == lane) {
+                let a = ((s.start / span) * width as f64).floor() as usize;
+                let b = (((s.end / span) * width as f64).ceil() as usize).min(width);
+                let ch = match s.name.chars().next().unwrap_or('#') {
+                    'f' => 'F', // fwd
+                    'b' => 'B', // bwd
+                    'u' => 'U', // upd
+                    'a' => 'A', // ar
+                    'w' => '.', // wait
+                    c => c,
+                };
+                for cell in row.iter_mut().take(b).skip(a.min(width)) {
+                    *cell = ch;
+                }
+            }
+            out.push_str(&format!(
+                "{:<lw$} |{}|\n",
+                lane,
+                row.iter().collect::<String>(),
+                lw = lane_w
+            ));
+        }
+        out.push_str(&format!(
+            "{:<lw$}  0{:>w$}\n",
+            "",
+            format!("{:.2} ms", span * 1e3),
+            lw = lane_w,
+            w = width
+        ));
+        out
+    }
+
+    /// Export in chrome://tracing "trace event" format (µs timestamps).
+    pub fn to_chrome_json(&self) -> String {
+        let events: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("cat", Json::Str("span".into())),
+                    ("ph", Json::Str("X".into())),
+                    ("ts", Json::Num(s.start * 1e6)),
+                    ("dur", Json::Num((s.end - s.start) * 1e6)),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Str(s.lane.clone())),
+                ])
+            })
+            .collect();
+        Json::Arr(events).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn makespan_and_busy() {
+        let mut t = Trace::new();
+        t.add("w0", "fwd", 0.0, 1.0);
+        t.add("w0", "bwd", 1.0, 3.0);
+        t.add("nic0", "ar", 2.0, 5.0);
+        assert_eq!(t.makespan(), 5.0);
+        assert_eq!(t.lane_busy("w0"), 3.0);
+        assert_eq!(t.time_in("ar"), 3.0);
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let mut ok = Trace::new();
+        ok.add("w0", "a", 0.0, 1.0);
+        ok.add("w0", "b", 1.0, 2.0); // touching is fine
+        assert!(ok.check_no_lane_overlap().is_ok());
+
+        let mut bad = Trace::new();
+        bad.add("w0", "a", 0.0, 1.5);
+        bad.add("w0", "b", 1.0, 2.0);
+        assert!(bad.check_no_lane_overlap().is_err());
+    }
+
+    #[test]
+    fn different_lanes_may_overlap() {
+        let mut t = Trace::new();
+        t.add("w0", "bwd", 0.0, 2.0);
+        t.add("nic0", "ar", 0.5, 1.5); // the whole point of the paper
+        assert!(t.check_no_lane_overlap().is_ok());
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json() {
+        let mut t = Trace::new();
+        t.add("w0", "fwd", 0.0, 1e-3);
+        let j = crate::util::json::Json::parse(&t.to_chrome_json()).unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 1);
+        assert_eq!(j.idx(0).unwrap().get("ph").unwrap().as_str(), Some("X"));
+    }
+}

@@ -1,0 +1,226 @@
+//! Tiny declarative CLI parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list -> Vec<T>.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str) -> Option<Vec<T>> {
+        self.get(key).map(|v| {
+            v.split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect()
+        })
+    }
+}
+
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            args: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for a in &self.args {
+            let lhs = if a.is_flag {
+                format!("  --{}", a.name)
+            } else {
+                format!("  --{} <v>", a.name)
+            };
+            let def = a
+                .default
+                .filter(|d| !d.is_empty())
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{lhs:26} {}{def}\n", a.help));
+        }
+        s
+    }
+
+    /// Parse raw argv (already stripped of binary + subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        // seed defaults
+        for a in &self.args {
+            if let Some(d) = a.default {
+                if !d.is_empty() {
+                    out.values.insert(a.name.to_string(), d.to_string());
+                }
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    out.flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    out.values.insert(key.to_string(), val);
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .opt("nodes", "6", "number of nodes")
+            .opt("batch", "448", "mini-batch size")
+            .flag("verbose", "chatty output")
+    }
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("nodes", 0), 6);
+        assert_eq!(a.get_usize("batch", 0), 448);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let a = cmd()
+            .parse(&argv(&["--nodes", "32", "--verbose", "--batch=1792"]))
+            .unwrap();
+        assert_eq!(a.get_usize("nodes", 0), 32);
+        assert_eq!(a.get_usize("batch", 0), 1792);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&argv(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(&argv(&["--nodes"])).is_err());
+    }
+
+    #[test]
+    fn positional_passthrough() {
+        let a = cmd().parse(&argv(&["foo", "--nodes", "2", "bar"])).unwrap();
+        assert_eq!(a.positional, vec!["foo", "bar"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Command::new("t", "t").opt("sizes", "", "sizes");
+        let a = c.parse(&argv(&["--sizes", "1,2,3"])).unwrap();
+        assert_eq!(a.get_list::<usize>("sizes").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--nodes"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Foundation substrates built in-tree because the offline environment
+//! provides no clap/serde/rand/criterion/proptest: a CLI parser, a JSON
+//! codec, deterministic RNGs, statistics, ASCII tables, a logger and
+//! unit-formatting helpers.
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

@@ -1,0 +1,77 @@
+//! Unit helpers: bandwidth (Gbps <-> bytes/s), byte and time formatting.
+//! The paper speaks in Gbps (network), GB/s (PCIe) and GFLOPS (compute);
+//! all simulator-internal quantities are SI (bytes, seconds, FLOP/s).
+
+/// Gigabits-per-second to bytes-per-second.
+pub const fn gbps(g: f64) -> f64 {
+    g * 1e9 / 8.0
+}
+
+/// Gigabytes-per-second to bytes-per-second.
+pub const fn gbytes_per_s(g: f64) -> f64 {
+    g * 1e9
+}
+
+/// GFLOPS to FLOP/s.
+pub const fn gflops(g: f64) -> f64 {
+    g * 1e9
+}
+
+/// Microseconds to seconds.
+pub const fn us(x: f64) -> f64 {
+    x * 1e-6
+}
+
+/// Human-readable seconds (ns/us/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    let a = secs.abs();
+    if a >= 1.0 {
+        format!("{secs:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Human-readable rate.
+pub fn fmt_rate(bytes_per_s: f64) -> String {
+    format!("{}/s", fmt_bytes(bytes_per_s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(gbps(40.0), 5e9);
+        assert_eq!(gbps(100.0), 12.5e9);
+        assert_eq!(gbytes_per_s(7.88), 7.88e9);
+        assert_eq!(gflops(2.0), 2e9);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_time(1.5), "1.500 s");
+        assert_eq!(fmt_time(0.0023), "2.300 ms");
+        assert_eq!(fmt_time(4.5e-6), "4.500 us");
+        assert_eq!(fmt_bytes(2.5e6), "2.50 MB");
+        assert_eq!(fmt_bytes(12.0), "12 B");
+    }
+}

@@ -1,0 +1,64 @@
+// Golden-file cross-validation: the Rust BFP codec must reproduce the
+// python reference (kernels/ref.py) bit for bit on the vectors emitted by
+// the AOT pipeline (artifacts/golden/bfp_cases.json).
+
+use ai_smartnic::bfp::BfpCodec;
+use ai_smartnic::util::json::Json;
+
+fn golden() -> Option<Json> {
+    let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/golden/bfp_cases.json");
+    let text = std::fs::read_to_string(p).ok()?;
+    Some(Json::parse(&text).expect("golden json parses"))
+}
+
+#[test]
+fn rust_codec_matches_python_golden_vectors() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: no golden vectors (run `make artifacts`)");
+        return;
+    };
+    let cases = g.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 8, "expected a rich golden set");
+    for case in cases {
+        let name = case.get("name").unwrap().as_str().unwrap();
+        let bs = case.get("block_size").unwrap().as_usize().unwrap();
+        let mb = case.get("mant_bits").unwrap().as_usize().unwrap() as u32;
+        let codec = BfpCodec::new(bs, mb);
+        let x: Vec<f32> = case
+            .get("x_bits")
+            .unwrap()
+            .num_vec(|v| f32::from_bits(v as u32))
+            .unwrap();
+        let want_e: Vec<i64> = case.get("e_shared").unwrap().num_vec(|v| v as i64).unwrap();
+        let want_sign: Vec<i64> = case.get("sign").unwrap().num_vec(|v| v as i64).unwrap();
+        let want_mag: Vec<i64> = case.get("mag").unwrap().num_vec(|v| v as i64).unwrap();
+        let want_dec: Vec<u32> = case
+            .get("decoded_bits")
+            .unwrap()
+            .num_vec(|v| v as u32)
+            .unwrap();
+
+        let blocks = codec.encode(&x);
+        assert_eq!(blocks.len(), want_e.len(), "{name}: block count");
+        for (bi, blk) in blocks.iter().enumerate() {
+            assert_eq!(blk.e_shared as i64, want_e[bi], "{name}: E of block {bi}");
+            for i in 0..bs {
+                let gi = bi * bs + i;
+                assert_eq!(blk.sign[i] as i64, want_sign[gi], "{name}: sign[{gi}]");
+                assert_eq!(blk.mag[i] as i64, want_mag[gi], "{name}: mag[{gi}]");
+            }
+        }
+        let dec = codec.decode(&blocks, x.len());
+        for (i, (d, wbits)) in dec.iter().zip(&want_dec).enumerate() {
+            assert_eq!(
+                d.to_bits(),
+                *wbits,
+                "{name}: decoded[{i}] {d} vs {}",
+                f32::from_bits(*wbits)
+            );
+        }
+        // and the one-shot quantize path agrees with encode+decode
+        assert_eq!(codec.quantize(&x), dec, "{name}: quantize path");
+    }
+}

@@ -1,0 +1,117 @@
+// Integration: PJRT runtime over the AOT artifacts (requires
+// `make artifacts` to have run — skipped otherwise).
+
+use ai_smartnic::runtime::{Engine, Tensor};
+use ai_smartnic::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn host_matmul(x: &[f32], w: &[f32], b: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0f32; b * m];
+    for r in 0..b {
+        for c in 0..m {
+            let mut acc = 0f32;
+            for k in 0..m {
+                acc += x[r * m + k] * w[k * m + c];
+            }
+            out[r * m + c] = acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn engine_loads_every_artifact() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::open(&dir).unwrap();
+    assert!(engine.manifest.artifacts.len() >= 9);
+    // compile them all — any HLO-text incompatibility shows up here
+    for a in engine.manifest.artifacts.clone() {
+        engine.warmup(&a.name).unwrap();
+    }
+}
+
+#[test]
+fn layer_fwd_matches_host_reference() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::open(&dir).unwrap();
+    let (m, b) = (64usize, 16usize);
+    let mut rng = Rng::new(7);
+    let x = Tensor::randn(&[b, m], 1.0, &mut rng);
+    let w = Tensor::randn(&[m, m], 0.2, &mut rng);
+    let bias = Tensor::randn(&[m], 0.1, &mut rng);
+    let out = engine
+        .run(&format!("layer_fwd_m{m}_b{b}"), &[&x, &w, &bias])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let z_ref: Vec<f32> = host_matmul(&x.data, &w.data, b, m)
+        .iter()
+        .enumerate()
+        .map(|(i, v)| v + bias.data[i % m])
+        .collect();
+    let y_ref: Vec<f32> = z_ref.iter().map(|&v| v.max(0.0)).collect();
+    for (got, want) in out[1].data.iter().zip(&z_ref) {
+        assert!((got - want).abs() < 1e-3, "z: {got} vs {want}");
+    }
+    for (got, want) in out[0].data.iter().zip(&y_ref) {
+        assert!((got - want).abs() < 1e-3, "y: {got} vs {want}");
+    }
+}
+
+#[test]
+fn sgd_update_works() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::open(&dir).unwrap();
+    let m = 64usize;
+    let w = Tensor::new(vec![m, m], vec![1.0; m * m]);
+    let dw = Tensor::new(vec![m, m], vec![2.0; m * m]);
+    let lr = Tensor::scalar(0.25);
+    let out = engine
+        .run(&format!("sgd_update_m{m}"), &[&w, &dw, &lr])
+        .unwrap();
+    assert!(out[0].data.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::open(&dir).unwrap();
+    let bad = Tensor::zeros(&[3, 3]);
+    let err = engine
+        .run("layer_fwd_m64_b16", &[&bad, &bad, &bad])
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+}
+
+#[test]
+fn bfp_roundtrip_artifact_matches_rust_codec() {
+    // the Pallas BFP kernel (inside the artifact) and the Rust codec must
+    // quantize identically — the cross-layer contract, checked through the
+    // full PJRT path
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::open(&dir).unwrap();
+    let m = 64usize;
+    let mut rng = Rng::new(11);
+    let g = Tensor::randn(&[m, m], 1.0, &mut rng);
+    let out = engine.run(&format!("bfp_roundtrip_m{m}"), &[&g]).unwrap();
+    let rust_q = ai_smartnic::bfp::BfpCodec::bfp16().quantize(&g.data);
+    assert_eq!(out[0].data, rust_q, "pallas-vs-rust BFP mismatch");
+}
