@@ -1,0 +1,793 @@
+//! Event-driven collectives on the shared fabric.
+//!
+//! Three executors, all posting events on the one cluster clock:
+//!
+//! * **Ring** — the NIC's native segment-pipelined ring all-reduce.  Per
+//!   segment: PCIe fetch → (Tx serialize → switch → receive) per hop →
+//!   FP32 reduce (reduce-scatter phase) or store-and-forward (allgather
+//!   phase) → PCIe writeback of final copies.  The arithmetic per segment
+//!   is identical to `nic::simulate_ring_allreduce`; the difference is
+//!   that resources are the *shared* fabric servers, so concurrent rings
+//!   queue-delay each other instead of executing in a vacuum.
+//! * **NIC rounds** — binomial and Rabenseifner as barrier-synchronized
+//!   rounds of point-to-point transfers through the same Tx/switch/adder
+//!   path (whole-payload granularity: these are control-plane-scheduled
+//!   offloads, not the FIFO-pipelined ring).
+//! * **Host rounds** — software/MPI schemes decomposed by
+//!   [`scheme_rounds`] into per-step rounds served on each node's
+//!   normalized comm-core server; an uncontended run reproduces the
+//!   closed-form `allreduce_time` exactly.
+
+use super::{job, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, JobId, NodeId};
+use crate::collective::timing::{scheme_rounds, HostRoundPlan};
+use crate::netsim::topology::Ring;
+use crate::netsim::Time;
+use crate::nic::SegmentPlan;
+
+/// One point-to-point transfer inside a NIC round (local rank indices).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundOp {
+    pub src: usize,
+    pub dst: usize,
+    /// host-side payload bytes (compressed on the wire by the job's codec)
+    pub bytes: f64,
+    /// f32 adds at the destination (0.0 = pure copy)
+    pub reduce_elems: f64,
+}
+
+/// Per-algorithm execution state.
+enum AlgoState {
+    /// single-rank no-op: completes instantly
+    Noop,
+    Ring(RingState),
+    NicRounds(NicRoundsState),
+    Host(HostState),
+}
+
+struct RingState {
+    plan: SegmentPlan,
+    /// wire bytes per segment (after compression)
+    wire_seg: f64,
+    /// [local rank][chunk][segment] -> time available in the input FIFO
+    fetch_done: Vec<Vec<Vec<Time>>>,
+    pending_writebacks: usize,
+}
+
+struct NicRoundsState {
+    rounds: Vec<Vec<RoundOp>>,
+    /// full gradient bytes (per-rank fetch/writeback payload)
+    bytes: f64,
+    fetch_pending: usize,
+    op_pending: usize,
+    current_round: usize,
+    wb_pending: usize,
+}
+
+struct HostState {
+    plan: HostRoundPlan,
+    eff_bw: f64,
+    step_cost: f64,
+    current_round: usize,
+    round_pending: usize,
+}
+
+/// One posted collective: public bookkeeping + private executor state.
+pub struct Collective {
+    pub id: CollectiveId,
+    pub job: JobId,
+    pub layer: usize,
+    pub algo: CollectiveAlgo,
+    pub ranks: Vec<NodeId>,
+    pub elems: usize,
+    /// when the worker posted the (non-blocking) request
+    pub t_post: Time,
+    /// completion: all ranks hold the reduced gradient in host memory
+    pub t_done: Option<Time>,
+    /// analytic wire-byte accounting per rank
+    pub wire_bytes_per_rank: f64,
+    state: AlgoState,
+}
+
+impl Collective {
+    pub fn duration(&self) -> Option<f64> {
+        self.t_done.map(|d| d - self.t_post)
+    }
+
+    fn ring_mut(&mut self) -> &mut RingState {
+        match &mut self.state {
+            AlgoState::Ring(r) => r,
+            _ => unreachable!("collective {} is not a ring", self.id),
+        }
+    }
+
+    fn nic_rounds_mut(&mut self) -> &mut NicRoundsState {
+        match &mut self.state {
+            AlgoState::NicRounds(r) => r,
+            _ => unreachable!("collective {} is not round-based", self.id),
+        }
+    }
+
+    fn host_mut(&mut self) -> &mut HostState {
+        match &mut self.state {
+            AlgoState::Host(h) => h,
+            _ => unreachable!("collective {} is not host-based", self.id),
+        }
+    }
+}
+
+/// Post layer `layer`'s all-reduce for `job` at the current virtual time.
+/// Non-blocking: the executor's events interleave with everything else on
+/// the clock.  Returns the collective id the worker can wait on.
+pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usize) -> CollectiveId {
+    let now = sim.now();
+    let spec = &st.jobs[job].spec;
+    let ranks = spec.ranks.clone();
+    let elems = spec.workload.grad_elems_per_layer();
+    let algo = spec.layer_algos[layer];
+    let wire_ratio = st.jobs[job].wire_ratio;
+    let n = ranks.len();
+    // the NIC datapath pads to whole ring chunks (Sec. IV-C); the host
+    // software path moves the raw gradient
+    let padded_bytes = elems.div_ceil(n.max(1)).max(1) as f64 * 4.0 * n as f64;
+    let raw_bytes = elems as f64 * 4.0;
+
+    let cid = st.collectives.len();
+    let (state, wire_bytes_per_rank) = if n <= 1 {
+        (AlgoState::Noop, 0.0)
+    } else {
+        match algo {
+            CollectiveAlgo::NicRing => {
+                let plan = SegmentPlan::new(st.sys.nic.segment_bytes, n, elems);
+                let wire_seg = plan.seg_bytes / wire_ratio;
+                let segs = plan.segs_per_chunk;
+                let ring = Ring::new(n);
+                (
+                    AlgoState::Ring(RingState {
+                        plan,
+                        wire_seg,
+                        fetch_done: vec![vec![vec![0.0; segs]; n]; n],
+                        pending_writebacks: n * n * segs,
+                    }),
+                    ring.allreduce_steps() as f64 * segs as f64 * wire_seg,
+                )
+            }
+            CollectiveAlgo::NicBinomial | CollectiveAlgo::NicRabenseifner => {
+                let rounds = if algo == CollectiveAlgo::NicBinomial {
+                    binomial_rounds(n, padded_bytes, elems as f64)
+                } else {
+                    rabenseifner_rounds(n, padded_bytes, elems as f64)
+                };
+                let wire_total: f64 =
+                    rounds.iter().flatten().map(|op| op.bytes / wire_ratio).sum();
+                (
+                    AlgoState::NicRounds(NicRoundsState {
+                        rounds,
+                        bytes: padded_bytes,
+                        fetch_pending: n,
+                        op_pending: 0,
+                        current_round: 0,
+                        wb_pending: 0,
+                    }),
+                    wire_total / n as f64,
+                )
+            }
+            CollectiveAlgo::Host(scheme) => {
+                let env = st.jobs[job].host_env;
+                let plan = scheme_rounds(scheme, n, raw_bytes, &env);
+                (
+                    AlgoState::Host(HostState {
+                        plan,
+                        eff_bw: env.effective_bw(),
+                        step_cost: env.step_cost(),
+                        current_round: 0,
+                        round_pending: 0,
+                    }),
+                    plan.rounds as f64 * plan.bytes_per_round,
+                )
+            }
+        }
+    };
+
+    st.collectives.push(Collective {
+        id: cid,
+        job,
+        layer,
+        algo,
+        ranks,
+        elems,
+        t_post: now,
+        t_done: None,
+        wire_bytes_per_rank,
+        state,
+    });
+
+    // classify before dispatching so no borrow of the collective is held
+    // across the &mut state calls below
+    let kind: u8 = match &st.collectives[cid].state {
+        AlgoState::Noop => 0,
+        AlgoState::Ring(_) => 1,
+        AlgoState::NicRounds(_) => 2,
+        AlgoState::Host(_) => 3,
+    };
+    match kind {
+        0 => complete(sim, st, cid),
+        1 | 2 => {
+            // driver hands the descriptor to the NIC after a fixed overhead
+            let overhead = st.sys.nic_request_overhead;
+            let is_ring = kind == 1;
+            sim.schedule(overhead, move |sim, st| {
+                if is_ring {
+                    start_ring(sim, st, cid);
+                } else {
+                    start_nic_rounds(sim, st, cid);
+                }
+            });
+        }
+        _ => begin_host_round(sim, st, cid, 0),
+    }
+    cid
+}
+
+/// Mark `cid` complete at the current time, record its trace span, and
+/// wake its job's worker if it is blocked on this collective.
+fn complete(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let now = sim.now();
+    st.collectives[cid].t_done = Some(now);
+    let (jid, layer, t_post) = {
+        let c = &st.collectives[cid];
+        (c.job, c.layer, c.t_post)
+    };
+    if now > t_post {
+        let lane = st.jobs[jid].comm_lane.clone();
+        st.trace.add(&lane, &format!("ar[{layer}]"), t_post, now);
+    }
+    job::on_collective_done(sim, st, cid);
+}
+
+// ---------------------------------------------------------------------
+// Ring executor (segment-pipelined, identical arithmetic to the
+// serialized `nic::simulate_ring_allreduce`)
+// ---------------------------------------------------------------------
+
+fn start_ring(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let now = sim.now();
+    let (ranks, plan) = {
+        let c = &st.collectives[cid];
+        let r = match &c.state {
+            AlgoState::Ring(r) => r,
+            _ => unreachable!(),
+        };
+        (c.ranks.clone(), r.plan)
+    };
+    let n = ranks.len();
+    let ring = Ring::new(n);
+    let segs = plan.segs_per_chunk;
+
+    // Issue every PCIe fetch now, in the order the schedule consumes
+    // chunks (chunk sent at step 0 first, then received chunks' local
+    // counterparts) — the same DMA queue order as the serialized path.
+    let mut fetch = vec![vec![vec![0.0f64; segs]; n]; n];
+    for (local, &node) in ranks.iter().enumerate() {
+        let mut order = vec![ring.send_chunk(local, 0)];
+        for s in 0..ring.reduce_scatter_steps() {
+            order.push(ring.recv_chunk(local, s));
+        }
+        order.dedup();
+        for chunk in order {
+            for seg in 0..segs {
+                fetch[local][chunk][seg] =
+                    st.fabric.nodes[node].pcie.to_device.transmit(now, plan.seg_bytes);
+            }
+        }
+    }
+
+    // Step-0 sends fire as each segment of the first chunk lands in the
+    // input FIFO.
+    for local in 0..n {
+        let chunk0 = ring.send_chunk(local, 0);
+        for seg in 0..segs {
+            let t = fetch[local][chunk0][seg];
+            sim.schedule_at(t, move |sim, st| ring_send(sim, st, cid, 0, local, seg));
+        }
+    }
+    st.collectives[cid].ring_mut().fetch_done = fetch;
+}
+
+/// Local rank `i`'s copy of segment `seg` for ring step `step` is ready in
+/// its Tx path: serialize onto the uplink and switch it to the successor.
+fn ring_send(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    step: usize,
+    i: usize,
+    seg: usize,
+) {
+    let now = sim.now();
+    let (src, dst, j, wire_seg) = {
+        let c = &st.collectives[cid];
+        let ring = Ring::new(c.ranks.len());
+        let j = ring.next(i);
+        let r = match &c.state {
+            AlgoState::Ring(r) => r,
+            _ => unreachable!(),
+        };
+        (c.ranks[i], c.ranks[j], j, r.wire_seg)
+    };
+    let arrive = st.fabric.hop(src, dst, now, wire_seg);
+    sim.schedule_at(arrive, move |sim, st| ring_recv(sim, st, cid, step, j, seg));
+}
+
+/// Segment `seg` of ring step `step` arrived at local rank `j`.
+fn ring_recv(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    step: usize,
+    j: usize,
+    seg: usize,
+) {
+    let now = sim.now();
+    let (reduce_phase, local_ready) = {
+        let c = &st.collectives[cid];
+        let ring = Ring::new(c.ranks.len());
+        let reduce_phase = step < ring.reduce_scatter_steps();
+        let local_ready = if reduce_phase {
+            let r = match &c.state {
+                AlgoState::Ring(r) => r,
+                _ => unreachable!(),
+            };
+            r.fetch_done[j][ring.recv_chunk(j, step)][seg]
+        } else {
+            0.0
+        };
+        (reduce_phase, local_ready)
+    };
+    if reduce_phase {
+        // join with the local fetched copy, then reduce on the adder
+        if local_ready > now {
+            sim.schedule_at(local_ready, move |sim, st| {
+                ring_reduce(sim, st, cid, step, j, seg)
+            });
+        } else {
+            ring_reduce(sim, st, cid, step, j, seg);
+        }
+    } else {
+        // allgather: store & forward without waiting for the writeback
+        ring_segment_final(sim, st, cid, step, j, seg);
+    }
+}
+
+/// Both inputs of the reduce are present at local rank `j`: occupy the
+/// FP32 adder.
+fn ring_reduce(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    step: usize,
+    j: usize,
+    seg: usize,
+) {
+    let now = sim.now();
+    let (node, seg_elems) = {
+        let c = &st.collectives[cid];
+        let r = match &c.state {
+            AlgoState::Ring(r) => r,
+            _ => unreachable!(),
+        };
+        (c.ranks[j], r.plan.seg_elems)
+    };
+    let done = st.fabric.nodes[node].adder.serve(now, seg_elems);
+    sim.schedule_at(done, move |sim, st| ring_segment_final(sim, st, cid, step, j, seg));
+}
+
+/// Local rank `j`'s copy of this segment is final for `step`: write it
+/// back to the host if it is a final copy, and forward it on the next
+/// step if the ring continues.
+fn ring_segment_final(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    step: usize,
+    j: usize,
+    seg: usize,
+) {
+    let now = sim.now();
+    let (node, seg_bytes, rs_steps, total_steps) = {
+        let c = &st.collectives[cid];
+        let ring = Ring::new(c.ranks.len());
+        let r = match &c.state {
+            AlgoState::Ring(r) => r,
+            _ => unreachable!(),
+        };
+        (
+            c.ranks[j],
+            r.plan.seg_bytes,
+            ring.reduce_scatter_steps(),
+            ring.allreduce_steps(),
+        )
+    };
+    if step >= rs_steps - 1 {
+        let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, seg_bytes);
+        sim.schedule_at(wb, move |sim, st| ring_writeback_done(sim, st, cid));
+    }
+    if step + 1 < total_steps {
+        ring_send(sim, st, cid, step + 1, j, seg);
+    }
+}
+
+fn ring_writeback_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let r = st.collectives[cid].ring_mut();
+    r.pending_writebacks -= 1;
+    if r.pending_writebacks == 0 {
+        complete(sim, st, cid);
+    }
+}
+
+// ---------------------------------------------------------------------
+// NIC round executor (binomial / Rabenseifner)
+// ---------------------------------------------------------------------
+
+fn start_nic_rounds(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let now = sim.now();
+    let (ranks, bytes) = {
+        let c = &st.collectives[cid];
+        let r = match &c.state {
+            AlgoState::NicRounds(r) => r,
+            _ => unreachable!(),
+        };
+        (c.ranks.clone(), r.bytes)
+    };
+    for &node in &ranks {
+        let done = st.fabric.nodes[node].pcie.to_device.transmit(now, bytes);
+        sim.schedule_at(done, move |sim, st| nic_fetch_done(sim, st, cid));
+    }
+}
+
+fn nic_fetch_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let r = st.collectives[cid].nic_rounds_mut();
+    r.fetch_pending -= 1;
+    if r.fetch_pending == 0 {
+        begin_nic_round(sim, st, cid, 0);
+    }
+}
+
+fn begin_nic_round(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId, round: usize) {
+    let now = sim.now();
+    let (ops, ranks, wire_ratio) = {
+        let c = &st.collectives[cid];
+        let r = match &c.state {
+            AlgoState::NicRounds(r) => r,
+            _ => unreachable!(),
+        };
+        (r.rounds[round].clone(), c.ranks.clone(), st.jobs[c.job].wire_ratio)
+    };
+    {
+        let r = st.collectives[cid].nic_rounds_mut();
+        r.current_round = round;
+        r.op_pending = ops.len();
+    }
+    if ops.is_empty() {
+        nic_round_barrier(sim, st, cid);
+        return;
+    }
+    for op in ops {
+        let wire = op.bytes / wire_ratio;
+        let arrive = st.fabric.hop(ranks[op.src], ranks[op.dst], now, wire);
+        let dst_node = ranks[op.dst];
+        let reduce_elems = op.reduce_elems;
+        sim.schedule_at(arrive, move |sim, st| {
+            if reduce_elems > 0.0 {
+                let done = st.fabric.nodes[dst_node].adder.serve(sim.now(), reduce_elems);
+                sim.schedule_at(done, move |sim, st| nic_op_done(sim, st, cid));
+            } else {
+                nic_op_done(sim, st, cid);
+            }
+        });
+    }
+}
+
+fn nic_op_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let r = st.collectives[cid].nic_rounds_mut();
+    r.op_pending -= 1;
+    if r.op_pending == 0 {
+        nic_round_barrier(sim, st, cid);
+    }
+}
+
+fn nic_round_barrier(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let now = sim.now();
+    let (next, n_rounds, bytes, ranks) = {
+        let c = &st.collectives[cid];
+        let r = match &c.state {
+            AlgoState::NicRounds(r) => r,
+            _ => unreachable!(),
+        };
+        (r.current_round + 1, r.rounds.len(), r.bytes, c.ranks.clone())
+    };
+    if next < n_rounds {
+        begin_nic_round(sim, st, cid, next);
+        return;
+    }
+    // final round done: every rank writes the reduced gradient back
+    st.collectives[cid].nic_rounds_mut().wb_pending = ranks.len();
+    for &node in &ranks {
+        let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, bytes);
+        sim.schedule_at(wb, move |sim, st| nic_wb_done(sim, st, cid));
+    }
+}
+
+fn nic_wb_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let r = st.collectives[cid].nic_rounds_mut();
+    r.wb_pending -= 1;
+    if r.wb_pending == 0 {
+        complete(sim, st, cid);
+    }
+}
+
+/// Binomial reduce-to-root + broadcast as rounds of local-rank transfers.
+pub fn binomial_rounds(n: usize, bytes: f64, elems: f64) -> Vec<Vec<RoundOp>> {
+    let mut reduce_rounds: Vec<Vec<RoundOp>> = Vec::new();
+    let mut k = 1usize;
+    while k < n {
+        let mut ops = Vec::new();
+        let mut dst = 0usize;
+        while dst + k < n {
+            ops.push(RoundOp {
+                src: dst + k,
+                dst,
+                bytes,
+                reduce_elems: elems,
+            });
+            dst += 2 * k;
+        }
+        reduce_rounds.push(ops);
+        k *= 2;
+    }
+    let mut rounds = reduce_rounds.clone();
+    for r in reduce_rounds.iter().rev() {
+        rounds.push(
+            r.iter()
+                .map(|op| RoundOp {
+                    src: op.dst,
+                    dst: op.src,
+                    bytes,
+                    reduce_elems: 0.0,
+                })
+                .collect(),
+        );
+    }
+    rounds
+}
+
+/// Rabenseifner recursive halving/doubling as rounds, with surplus ranks
+/// folded in/out for non-powers-of-two (mirrors
+/// `collective::algorithms::rabenseifner_allreduce`).
+pub fn rabenseifner_rounds(n: usize, bytes: f64, elems: f64) -> Vec<Vec<RoundOp>> {
+    let p = if n.is_power_of_two() {
+        n
+    } else {
+        1usize << (usize::BITS - 1 - n.leading_zeros())
+    };
+    let r = n - p;
+    let active: Vec<usize> = (0..r).map(|i| 2 * i).chain(2 * r..n).collect();
+    let mut rounds: Vec<Vec<RoundOp>> = Vec::new();
+    if r > 0 {
+        rounds.push(
+            (0..r)
+                .map(|i| RoundOp {
+                    src: 2 * i + 1,
+                    dst: 2 * i,
+                    bytes,
+                    reduce_elems: elems,
+                })
+                .collect(),
+        );
+    }
+    // recursive halving reduce-scatter
+    let mut dist = p / 2;
+    let mut vol = bytes / 2.0;
+    let mut vol_elems = elems / 2.0;
+    while dist >= 1 {
+        let mut ops = Vec::new();
+        for v in 0..p {
+            let peer = v ^ dist;
+            if peer < v {
+                continue;
+            }
+            ops.push(RoundOp {
+                src: active[v],
+                dst: active[peer],
+                bytes: vol,
+                reduce_elems: vol_elems,
+            });
+            ops.push(RoundOp {
+                src: active[peer],
+                dst: active[v],
+                bytes: vol,
+                reduce_elems: vol_elems,
+            });
+        }
+        rounds.push(ops);
+        dist /= 2;
+        vol /= 2.0;
+        vol_elems /= 2.0;
+    }
+    // recursive doubling allgather
+    let mut dist = 1usize;
+    let mut vol = bytes / p as f64;
+    while dist < p {
+        let mut ops = Vec::new();
+        for v in 0..p {
+            let peer = v ^ dist;
+            if peer < v {
+                continue;
+            }
+            ops.push(RoundOp {
+                src: active[v],
+                dst: active[peer],
+                bytes: vol,
+                reduce_elems: 0.0,
+            });
+            ops.push(RoundOp {
+                src: active[peer],
+                dst: active[v],
+                bytes: vol,
+                reduce_elems: 0.0,
+            });
+        }
+        rounds.push(ops);
+        dist *= 2;
+        vol *= 2.0;
+    }
+    if r > 0 {
+        rounds.push(
+            (0..r)
+                .map(|i| RoundOp {
+                    src: 2 * i,
+                    dst: 2 * i + 1,
+                    bytes,
+                    reduce_elems: 0.0,
+                })
+                .collect(),
+        );
+    }
+    rounds
+}
+
+// ---------------------------------------------------------------------
+// Host (software/MPI) round executor
+// ---------------------------------------------------------------------
+
+fn begin_host_round(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId, round: usize) {
+    let now = sim.now();
+    let (ranks, work_secs, step_cost, n_rounds, extra) = {
+        let c = &st.collectives[cid];
+        let h = match &c.state {
+            AlgoState::Host(h) => h,
+            _ => unreachable!(),
+        };
+        (
+            c.ranks.clone(),
+            h.plan.bytes_per_round / h.eff_bw,
+            h.step_cost,
+            h.plan.rounds,
+            h.plan.extra_step_costs,
+        )
+    };
+    if round >= n_rounds {
+        // latency-only tail (e.g. the pipelined tree's fill steps)
+        let tail = extra as f64 * step_cost;
+        if tail > 0.0 {
+            sim.schedule(tail, move |sim, st| complete(sim, st, cid));
+        } else {
+            complete(sim, st, cid);
+        }
+        return;
+    }
+    {
+        let h = st.collectives[cid].host_mut();
+        h.current_round = round;
+        h.round_pending = ranks.len();
+    }
+    for &node in &ranks {
+        let served = st.fabric.nodes[node].comm.serve(now, work_secs);
+        sim.schedule_at(served + step_cost, move |sim, st| host_round_done(sim, st, cid));
+    }
+}
+
+fn host_round_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let (pending, round) = {
+        let h = st.collectives[cid].host_mut();
+        h.round_pending -= 1;
+        (h.round_pending, h.current_round)
+    };
+    if pending == 0 {
+        begin_host_round(sim, st, cid, round + 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total_bytes(rounds: &[Vec<RoundOp>]) -> f64 {
+        rounds.iter().flatten().map(|op| op.bytes).sum()
+    }
+
+    #[test]
+    fn binomial_round_structure() {
+        for n in [2usize, 3, 4, 5, 6, 7, 8, 12] {
+            let rounds = binomial_rounds(n, 1024.0, 256.0);
+            let lg = (n as f64).log2().ceil() as usize;
+            assert_eq!(rounds.len(), 2 * lg, "n={n}");
+            // reduce half carries (n-1) transfers total, broadcast mirrors
+            let transfers: usize = rounds.iter().map(|r| r.len()).sum();
+            assert_eq!(transfers, 2 * (n - 1), "n={n}");
+            // every reduce op reduces; every broadcast op copies
+            for (i, r) in rounds.iter().enumerate() {
+                for op in r {
+                    assert!(op.src < n && op.dst < n);
+                    if i < lg {
+                        assert!(op.reduce_elems > 0.0);
+                    } else {
+                        assert_eq!(op.reduce_elems, 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rabenseifner_volume_is_bandwidth_optimal() {
+        // per-phase wire volume per active rank: (1 - 1/p) * bytes, the
+        // recursive-halving optimum
+        let bytes = 4096.0;
+        for n in [2usize, 4, 8, 16] {
+            let rounds = rabenseifner_rounds(n, bytes, 1024.0);
+            let lg = (n as f64).log2().ceil() as usize;
+            assert_eq!(rounds.len(), 2 * lg, "n={n}");
+            let total = total_bytes(&rounds);
+            let want = 2.0 * n as f64 * (1.0 - 1.0 / n as f64) * bytes;
+            assert!((total - want).abs() < 1e-9, "n={n}: {total} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rabenseifner_nonpow2_folds() {
+        let bytes = 1024.0;
+        for n in [3usize, 5, 6, 7, 12] {
+            let rounds = rabenseifner_rounds(n, bytes, 256.0);
+            let p = 1usize << (usize::BITS - 1 - n.leading_zeros());
+            let lg = (p as f64).log2() as usize;
+            // fold + 2 lg(p) + unfold
+            assert_eq!(rounds.len(), 2 * lg + 2, "n={n}");
+            // fold round moves full payloads from the surplus ranks
+            assert_eq!(rounds[0].len(), n - p);
+            for op in &rounds[0] {
+                assert_eq!(op.bytes, bytes);
+                assert!(op.reduce_elems > 0.0);
+            }
+            // unfold round mirrors it without reducing
+            let last = rounds.last().unwrap();
+            assert_eq!(last.len(), n - p);
+            for op in last {
+                assert_eq!(op.reduce_elems, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rabenseifner_ops_stay_in_range() {
+        for n in 2..=17usize {
+            for rounds in [
+                rabenseifner_rounds(n, 512.0, 128.0),
+                binomial_rounds(n, 512.0, 128.0),
+            ] {
+                for op in rounds.iter().flatten() {
+                    assert!(op.src < n && op.dst < n && op.src != op.dst, "n={n} {op:?}");
+                }
+            }
+        }
+    }
+}

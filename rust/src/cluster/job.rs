@@ -1,0 +1,341 @@
+//! The event-driven trainer: one training job's compute lane as events.
+//!
+//! A job's worker executes the paper's Fig. 3b schedule as a task list —
+//! forward layers, then backward from the top with a *non-blocking*
+//! all-reduce posted after each layer's backward, interleaved weight
+//! updates, and a block point before each update that needs its reduced
+//! gradient.  Because the all-reduces are real event-driven collectives on
+//! the shared fabric (not glued-in closed-form durations), a posted AR
+//! executes concurrently with later compute, with the job's other
+//! in-flight ARs, and with every other job on the cluster.
+//!
+//! Compute durations come from the same calibrated model as the
+//! serialized path (`analytic::model::layer_times`), so any timing
+//! difference between the two engines is attributable purely to how
+//! communication is executed.
+
+use super::{collective, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, JobId, NodeId};
+use crate::analytic::model::{layer_times, LayerTimes, SystemKind};
+use crate::bfp::BfpCodec;
+use crate::collective::timing::HostNet;
+use crate::netsim::Time;
+use crate::sysconfig::{SystemParams, Workload};
+
+/// Description of one training job to run on the cluster.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    pub kind: SystemKind,
+    pub workload: Workload,
+    /// physical nodes this job's workers run on (one rank per node);
+    /// different jobs may share nodes — that is what multi-tenancy means
+    pub ranks: Vec<NodeId>,
+    /// virtual time the job's iteration starts
+    pub start_at: Time,
+    /// all-reduce algorithm per layer (index = layer)
+    pub layer_algos: Vec<CollectiveAlgo>,
+}
+
+impl JobSpec {
+    /// A job with the kind's natural algorithm on every layer: the NIC
+    /// ring for smart-NIC systems, the host scheme for the baselines.
+    pub fn new(name: &str, kind: SystemKind, workload: Workload, ranks: Vec<NodeId>) -> Self {
+        assert!(workload.layers >= 1, "job needs at least one layer");
+        assert!(!ranks.is_empty(), "job needs at least one rank");
+        let default_algo = match kind {
+            SystemKind::SmartNic { .. } => CollectiveAlgo::NicRing,
+            SystemKind::BaselineNaive { scheme }
+            | SystemKind::BaselineOverlapped { scheme, .. } => CollectiveAlgo::Host(scheme),
+        };
+        Self {
+            name: name.to_string(),
+            kind,
+            workload,
+            ranks,
+            start_at: 0.0,
+            layer_algos: vec![default_algo; workload.layers],
+        }
+    }
+
+    pub fn starting_at(mut self, t: Time) -> Self {
+        assert!(t >= 0.0 && t.is_finite());
+        self.start_at = t;
+        self
+    }
+
+    /// Override the all-reduce algorithm layer by layer.
+    pub fn with_layer_algos(mut self, algos: Vec<CollectiveAlgo>) -> Self {
+        assert_eq!(
+            algos.len(),
+            self.workload.layers,
+            "need one algorithm per layer"
+        );
+        self.layer_algos = algos;
+        self
+    }
+}
+
+/// One step of the worker lane.
+#[derive(Clone, Debug)]
+pub enum WorkerTask {
+    /// occupy the worker for `dur` seconds (fwd/bwd/upd)
+    Compute { dur: f64, label: String },
+    /// fire layer `layer`'s non-blocking all-reduce (zero virtual time)
+    PostAr { layer: usize },
+    /// block until layer `layer`'s all-reduce has completed
+    WaitAr { layer: usize },
+}
+
+/// Live state of one job inside the cluster simulation.
+pub struct JobRuntime {
+    pub spec: JobSpec,
+    pub lt: LayerTimes,
+    /// wire compression ratio of this job's gradients (1.0 = raw FP32)
+    pub wire_ratio: f64,
+    /// software all-reduce environment for Host(...) collectives
+    pub host_env: HostNet,
+    pub tasks: Vec<WorkerTask>,
+    pub next_task: usize,
+    pub blocked_on: Option<CollectiveId>,
+    pub block_started: Time,
+    pub ar_of_layer: Vec<Option<CollectiveId>>,
+    pub t_done: Option<Time>,
+    pub worker_lane: String,
+    pub comm_lane: String,
+}
+
+impl JobRuntime {
+    pub fn new(spec: JobSpec, sys: &SystemParams) -> Self {
+        let n = spec.ranks.len();
+        let lt = layer_times(spec.kind, sys, &spec.workload, n);
+        let wire_ratio = match spec.kind {
+            SystemKind::SmartNic { bfp: true } => BfpCodec::bfp16().compression_ratio(),
+            _ => 1.0,
+        };
+        let host_bw_cap = match spec.kind {
+            SystemKind::BaselineOverlapped { comm_cores, .. } => {
+                sys.worker.host_comm_bw(Some(comm_cores), n)
+            }
+            _ => sys.worker.host_comm_bw(None, n),
+        };
+        let host_env = HostNet {
+            net: sys.net,
+            step_overhead: sys.host_step_overhead,
+            comm_bw_cap: host_bw_cap,
+        };
+        let overlap = !matches!(spec.kind, SystemKind::BaselineNaive { .. });
+        let tasks = compile_tasks(&lt, spec.workload.layers, overlap);
+        let comm_suffix = match spec.kind {
+            SystemKind::SmartNic { .. } => "nic",
+            _ => "comm",
+        };
+        let layers = spec.workload.layers;
+        let worker_lane = format!("{}/worker", spec.name);
+        let comm_lane = format!("{}/{comm_suffix}", spec.name);
+        Self {
+            spec,
+            lt,
+            wire_ratio,
+            host_env,
+            tasks,
+            next_task: 0,
+            blocked_on: None,
+            block_started: 0.0,
+            ar_of_layer: vec![None; layers],
+            t_done: None,
+            worker_lane,
+            comm_lane,
+        }
+    }
+}
+
+/// Compile the Fig. 3b schedule into worker tasks.  `overlap = false`
+/// serializes bwd → blocking AR → upd per layer (the naive baseline);
+/// otherwise the worker posts each AR right after the layer's backward
+/// and only blocks where the serialized path blocks, so the two engines
+/// agree whenever all-reduces do not actually queue.
+fn compile_tasks(lt: &LayerTimes, layers: usize, overlap: bool) -> Vec<WorkerTask> {
+    let l = layers;
+    let mut tasks = Vec::new();
+    let compute = |dur: f64, label: String| WorkerTask::Compute { dur, label };
+    for i in 0..l {
+        tasks.push(compute(lt.t_f, format!("fwd[{i}]")));
+    }
+    if !overlap || l == 1 {
+        for i in (0..l).rev() {
+            tasks.push(compute(lt.t_b, format!("bwd[{i}]")));
+            tasks.push(WorkerTask::PostAr { layer: i });
+            tasks.push(WorkerTask::WaitAr { layer: i });
+            tasks.push(compute(lt.t_u, format!("upd[{i}]")));
+        }
+        return tasks;
+    }
+    // overlapped: bwd[l-1], bwd[l-2] posted back to back, then per
+    // segment i: (upd[i+1], bwd[i-1]) while AR[i] is in flight
+    tasks.push(compute(lt.t_b, format!("bwd[{}]", l - 1)));
+    tasks.push(WorkerTask::PostAr { layer: l - 1 });
+    tasks.push(compute(lt.t_b, format!("bwd[{}]", l - 2)));
+    tasks.push(WorkerTask::PostAr { layer: l - 2 });
+    tasks.push(WorkerTask::WaitAr { layer: l - 1 });
+    for i in (1..=l.saturating_sub(2)).rev() {
+        tasks.push(compute(lt.t_u, format!("upd[{}]", i + 1)));
+        tasks.push(compute(lt.t_b, format!("bwd[{}]", i - 1)));
+        tasks.push(WorkerTask::PostAr { layer: i - 1 });
+        tasks.push(WorkerTask::WaitAr { layer: i });
+    }
+    tasks.push(compute(lt.t_u, "upd[1]".to_string()));
+    tasks.push(WorkerTask::WaitAr { layer: 0 });
+    tasks.push(compute(lt.t_u, "upd[0]".to_string()));
+    tasks
+}
+
+/// Advance `jid`'s worker from its current task until it blocks, starts a
+/// compute span, or finishes the iteration.  Invoked at the job's start
+/// time and again at every event that frees the worker.
+pub fn run_worker(sim: &mut ClusterSim, st: &mut ClusterState, jid: JobId) {
+    let now = sim.now();
+    loop {
+        let idx = st.jobs[jid].next_task;
+        if idx >= st.jobs[jid].tasks.len() {
+            if st.jobs[jid].t_done.is_none() {
+                st.jobs[jid].t_done = Some(now);
+            }
+            return;
+        }
+        let task = st.jobs[jid].tasks[idx].clone();
+        match task {
+            WorkerTask::Compute { dur, label } => {
+                st.jobs[jid].next_task = idx + 1;
+                let lane = st.jobs[jid].worker_lane.clone();
+                st.trace.add(&lane, &label, now, now + dur);
+                sim.schedule_at(now + dur, move |sim, st| run_worker(sim, st, jid));
+                return;
+            }
+            WorkerTask::PostAr { layer } => {
+                st.jobs[jid].next_task = idx + 1;
+                let cid = collective::post(sim, st, jid, layer);
+                st.jobs[jid].ar_of_layer[layer] = Some(cid);
+            }
+            WorkerTask::WaitAr { layer } => {
+                let cid = st.jobs[jid].ar_of_layer[layer]
+                    .expect("schedule bug: WaitAr before PostAr");
+                if st.collectives[cid].t_done.is_some() {
+                    st.jobs[jid].next_task = idx + 1;
+                } else {
+                    st.jobs[jid].blocked_on = Some(cid);
+                    st.jobs[jid].block_started = now;
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Called by the collective layer when `cid` completes: if the owning
+/// job's worker is parked on it, record the wait and resume.
+pub fn on_collective_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let now = sim.now();
+    let jid = st.collectives[cid].job;
+    if st.jobs[jid].blocked_on != Some(cid) {
+        return;
+    }
+    st.jobs[jid].blocked_on = None;
+    let layer = st.collectives[cid].layer;
+    let started = st.jobs[jid].block_started;
+    if now > started {
+        let lane = st.jobs[jid].worker_lane.clone();
+        st.trace.add(&lane, &format!("wait-ar[{layer}]"), started, now);
+    }
+    st.jobs[jid].next_task += 1; // consume the WaitAr
+    run_worker(sim, st, jid);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::Scheme;
+
+    fn lt() -> LayerTimes {
+        LayerTimes {
+            t_f: 1.0,
+            t_b: 2.0,
+            t_ar: 0.0,
+            t_u: 0.5,
+            layers: 4,
+        }
+    }
+
+    fn labels(tasks: &[WorkerTask]) -> Vec<String> {
+        tasks
+            .iter()
+            .map(|t| match t {
+                WorkerTask::Compute { label, .. } => label.clone(),
+                WorkerTask::PostAr { layer } => format!("post[{layer}]"),
+                WorkerTask::WaitAr { layer } => format!("wait[{layer}]"),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn overlapped_schedule_matches_fig3b() {
+        let tasks = compile_tasks(&lt(), 4, true);
+        assert_eq!(
+            labels(&tasks),
+            vec![
+                "fwd[0]", "fwd[1]", "fwd[2]", "fwd[3]", // forward pass
+                "bwd[3]", "post[3]", "bwd[2]", "post[2]", "wait[3]", // top segment
+                "upd[3]", "bwd[1]", "post[1]", "wait[2]", // segment 2
+                "upd[2]", "bwd[0]", "post[0]", "wait[1]", // segment 1
+                "upd[1]", "wait[0]", "upd[0]", // tail
+            ]
+        );
+    }
+
+    #[test]
+    fn naive_schedule_serializes() {
+        let tasks = compile_tasks(&lt(), 2, false);
+        assert_eq!(
+            labels(&tasks),
+            vec![
+                "fwd[0]", "fwd[1]", "bwd[1]", "post[1]", "wait[1]", "upd[1]", "bwd[0]",
+                "post[0]", "wait[0]", "upd[0]",
+            ]
+        );
+    }
+
+    #[test]
+    fn single_layer_schedule() {
+        let mut l1 = lt();
+        l1.layers = 1;
+        let tasks = compile_tasks(&l1, 1, true);
+        assert_eq!(
+            labels(&tasks),
+            vec!["fwd[0]", "bwd[0]", "post[0]", "wait[0]", "upd[0]"]
+        );
+    }
+
+    #[test]
+    fn default_algos_follow_kind() {
+        let w = Workload::paper_mlp(448);
+        let nic = JobSpec::new("a", SystemKind::SmartNic { bfp: true }, w, vec![0, 1]);
+        assert!(nic.layer_algos.iter().all(|a| *a == CollectiveAlgo::NicRing));
+        let base = JobSpec::new(
+            "b",
+            SystemKind::BaselineNaive { scheme: Scheme::Ring },
+            w,
+            vec![0, 1],
+        );
+        assert!(base
+            .layer_algos
+            .iter()
+            .all(|a| *a == CollectiveAlgo::Host(Scheme::Ring)));
+    }
+
+    #[test]
+    #[should_panic(expected = "one algorithm per layer")]
+    fn wrong_algo_count_panics() {
+        let w = Workload::paper_mlp(448);
+        let _ = JobSpec::new("a", SystemKind::SmartNic { bfp: false }, w, vec![0, 1])
+            .with_layer_algos(vec![CollectiveAlgo::NicRing]);
+    }
+}

@@ -1,0 +1,120 @@
+//! The unified cluster engine: everything on one calendar queue.
+//!
+//! This is the crate's execution layer for *dynamic* simulation.  Where
+//! `nic::simulate_ring_allreduce` and `coordinator::simulate_iteration`
+//! run one collective / one job at a time on private servers (the
+//! serialized compatibility path kept for the E6 closed-form validation),
+//! here every activity in the cluster is an event on a single
+//! [`netsim::engine::Sim`] clock sharing one [`netsim::fabric::Fabric`]:
+//!
+//! * the smart-NIC ring datapath (PCIe fetch → adder → Tx → switch →
+//!   writeback), segment-pipelined exactly like the serialized path but
+//!   scheduled as events — so a layer's all-reduce executes *while* later
+//!   layers compute and while other all-reduces are in flight, all
+//!   contending FIFO for links, PCIe, adders and switch egress ports;
+//! * NIC-offloaded binomial and Rabenseifner collectives (round-based),
+//!   selectable per layer;
+//! * host/MPI software all-reduces, decomposed by
+//!   [`collective::timing::scheme_rounds`] into rounds on the nodes'
+//!   comm-core servers;
+//! * the event-driven trainer ([`job`]): forward/backward/update compute
+//!   posting non-blocking all-reduces in the paper's Fig. 3b order;
+//! * multi-job scenarios ([`scenario`]): several training jobs on one
+//!   switch fabric, with straggler / degraded-link injection that affects
+//!   every in-flight collective.
+//!
+//! [`netsim::engine::Sim`]: crate::netsim::engine::Sim
+//! [`netsim::fabric::Fabric`]: crate::netsim::fabric::Fabric
+//! [`collective::timing::scheme_rounds`]: crate::collective::timing::scheme_rounds
+
+pub mod collective;
+pub mod job;
+pub mod scenario;
+
+use crate::collective::Scheme;
+use crate::netsim::engine::Sim;
+use crate::netsim::fabric::Fabric;
+use crate::sysconfig::SystemParams;
+use crate::trace::Trace;
+
+pub use job::{JobSpec, WorkerTask};
+pub use scenario::{run_scenario, ClusterSpec, JobResult, ScenarioOutput};
+
+/// Physical node index into the fabric.
+pub type NodeId = usize;
+/// Index into [`ClusterState::jobs`].
+pub type JobId = usize;
+/// Index into [`ClusterState::collectives`].
+pub type CollectiveId = usize;
+
+/// Which algorithm a collective runs — NIC-offloaded (on the FPGA
+/// datapath) or host software (on the comm cores).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveAlgo {
+    /// segment-pipelined in-network ring (the NIC's native algorithm)
+    NicRing,
+    /// NIC-offloaded binomial reduce + broadcast (round-based)
+    NicBinomial,
+    /// NIC-offloaded Rabenseifner halving/doubling (round-based)
+    NicRabenseifner,
+    /// host/MPI software scheme on the comm cores
+    Host(Scheme),
+}
+
+impl CollectiveAlgo {
+    pub fn name(&self) -> String {
+        match self {
+            CollectiveAlgo::NicRing => "nic-ring".to_string(),
+            CollectiveAlgo::NicBinomial => "nic-binomial".to_string(),
+            CollectiveAlgo::NicRabenseifner => "nic-rabenseifner".to_string(),
+            CollectiveAlgo::Host(s) => format!("host-{}", s.name()),
+        }
+    }
+}
+
+/// The world state threaded through every event: shared resources, job
+/// runtimes, collective bookkeeping, and the execution trace.
+pub struct ClusterState {
+    pub sys: SystemParams,
+    pub fabric: Fabric,
+    pub trace: Trace,
+    pub jobs: Vec<job::JobRuntime>,
+    pub collectives: Vec<collective::Collective>,
+}
+
+/// The event type of the unified engine.
+pub type ClusterSim = Sim<ClusterState>;
+
+impl ClusterState {
+    /// One job's collective records, in the order they were posted (ARs
+    /// may *complete* out of post order — sort by `t_done` if completion
+    /// order matters).
+    pub fn job_collectives(&self, job: JobId) -> Vec<&collective::Collective> {
+        self.collectives.iter().filter(|c| c.job == job).collect()
+    }
+
+    /// Mean duration (post → done) of a job's completed collectives.
+    pub fn mean_ar_duration(&self, job: JobId) -> f64 {
+        let durs: Vec<f64> = self
+            .collectives
+            .iter()
+            .filter(|c| c.job == job)
+            .filter_map(|c| c.t_done.map(|d| d - c.t_post))
+            .collect();
+        if durs.is_empty() {
+            0.0
+        } else {
+            durs.iter().sum::<f64>() / durs.len() as f64
+        }
+    }
+
+    /// Maximum number of this job's collectives simultaneously in flight.
+    pub fn max_inflight(&self, job: JobId) -> usize {
+        crate::trace::max_overlap(
+            self.collectives
+                .iter()
+                .filter(|c| c.job == job)
+                .filter_map(|c| c.t_done.map(|done| (c.t_post, done))),
+        )
+    }
+}

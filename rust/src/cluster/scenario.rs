@@ -1,0 +1,248 @@
+//! Multi-job cluster scenarios: N training jobs on one switch fabric.
+//!
+//! `run_scenario` builds the shared [`Fabric`], compiles every job's
+//! worker schedule, seeds the calendar queue with the jobs' start events
+//! and runs the clock dry.  Jobs that share nodes contend for those
+//! nodes' Tx links, PCIe, adders and comm cores; all jobs contend for
+//! switch egress ports.  Straggler / degraded-link injection lives in the
+//! fabric, so a fault degrades every in-flight collective of every job
+//! that touches the faulty node — not just a single ring.
+
+use super::job::{JobRuntime, JobSpec};
+use super::{job, ClusterSim, ClusterState};
+use crate::netsim::engine::Sim;
+use crate::netsim::fabric::Fabric;
+use crate::netsim::Time;
+use crate::sysconfig::{ClusterFaults, SystemParams};
+use crate::trace::Trace;
+
+/// A cluster plus the jobs to run on it.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub sys: SystemParams,
+    pub nodes: usize,
+    pub faults: ClusterFaults,
+    pub jobs: Vec<JobSpec>,
+}
+
+impl ClusterSpec {
+    pub fn new(sys: SystemParams, nodes: usize) -> Self {
+        Self {
+            sys,
+            nodes,
+            faults: ClusterFaults::none(),
+            jobs: Vec::new(),
+        }
+    }
+
+    pub fn with_job(mut self, job: JobSpec) -> Self {
+        self.jobs.push(job);
+        self
+    }
+
+    pub fn with_faults(mut self, faults: ClusterFaults) -> Self {
+        self.faults = faults;
+        self
+    }
+}
+
+/// Per-job outcome of a scenario run.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub name: String,
+    pub kind: String,
+    pub t_start: Time,
+    pub t_end: Time,
+    pub duration: f64,
+    /// completed all-reduces
+    pub ar_count: usize,
+    /// mean all-reduce latency, post → completion
+    pub mean_ar: f64,
+    /// maximum number of this job's all-reduces in flight at once
+    pub max_inflight: usize,
+    /// worker time spent blocked on unfinished all-reduces
+    pub exposed_wait: f64,
+}
+
+/// Everything a scenario run produces.
+pub struct ScenarioOutput {
+    pub trace: Trace,
+    pub jobs: Vec<JobResult>,
+    pub makespan: Time,
+    pub events: u64,
+    pub eth_util: f64,
+    pub pcie_util: f64,
+    pub adder_util: f64,
+    /// switch egress-port utilization, one entry per node
+    pub port_util: Vec<f64>,
+}
+
+/// Run `spec` to completion on the unified engine.  Fully deterministic:
+/// identical specs produce identical traces.
+pub fn run_scenario(spec: &ClusterSpec) -> ScenarioOutput {
+    assert!(spec.nodes >= 1, "cluster needs at least one node");
+    assert!(!spec.jobs.is_empty(), "scenario needs at least one job");
+    for &(node, _) in spec.faults.degraded_links.iter().chain(&spec.faults.stragglers) {
+        assert!(
+            node < spec.nodes,
+            "fault on node {node} but the fabric has only {} nodes",
+            spec.nodes
+        );
+    }
+    for j in &spec.jobs {
+        let mut seen = vec![false; spec.nodes];
+        for &r in &j.ranks {
+            assert!(r < spec.nodes, "job '{}': rank {r} outside the fabric", j.name);
+            assert!(!seen[r], "job '{}': duplicate rank {r}", j.name);
+            seen[r] = true;
+        }
+    }
+
+    let mut state = ClusterState {
+        sys: spec.sys,
+        fabric: Fabric::new(&spec.sys, spec.nodes, &spec.faults),
+        trace: Trace::new(),
+        jobs: spec
+            .jobs
+            .iter()
+            .map(|j| JobRuntime::new(j.clone(), &spec.sys))
+            .collect(),
+        collectives: Vec::new(),
+    };
+    let mut sim: ClusterSim = Sim::new();
+    for (jid, j) in spec.jobs.iter().enumerate() {
+        sim.schedule_at(j.start_at, move |sim, st| job::run_worker(sim, st, jid));
+    }
+    sim.run(&mut state);
+
+    let makespan = state.trace.makespan();
+    let jobs: Vec<JobResult> = state
+        .jobs
+        .iter()
+        .enumerate()
+        .map(|(jid, j)| {
+            let t_end = j
+                .t_done
+                .unwrap_or_else(|| panic!("job '{}' never finished (deadlock?)", j.spec.name));
+            JobResult {
+                name: j.spec.name.clone(),
+                kind: j.spec.kind.name(),
+                t_start: j.spec.start_at,
+                t_end,
+                duration: t_end - j.spec.start_at,
+                ar_count: state
+                    .collectives
+                    .iter()
+                    .filter(|c| c.job == jid && c.t_done.is_some())
+                    .count(),
+                mean_ar: state.mean_ar_duration(jid),
+                max_inflight: state.max_inflight(jid),
+                exposed_wait: state.trace.lane_time_in(&j.worker_lane, "wait-ar"),
+            }
+        })
+        .collect();
+    let port_util = (0..spec.nodes)
+        .map(|p| state.fabric.switch.port_utilization(p, makespan))
+        .collect();
+    ScenarioOutput {
+        jobs,
+        makespan,
+        events: sim.events_run(),
+        eth_util: state.fabric.mean_eth_util(makespan),
+        pcie_util: state.fabric.mean_pcie_util(makespan),
+        adder_util: state.fabric.mean_adder_util(makespan),
+        port_util,
+        trace: state.trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::model::{iteration, SystemKind};
+    use crate::collective::Scheme;
+    use crate::sysconfig::Workload;
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn single_smartnic_job_completes() {
+        let sys = SystemParams::smartnic_40g();
+        let w = Workload {
+            layers: 4,
+            hidden: 512,
+            batch_per_node: 64,
+        };
+        let spec = ClusterSpec::new(sys, 3).with_job(JobSpec::new(
+            "j0",
+            SystemKind::SmartNic { bfp: true },
+            w,
+            vec![0, 1, 2],
+        ));
+        let out = run_scenario(&spec);
+        assert_eq!(out.jobs.len(), 1);
+        let j = &out.jobs[0];
+        assert!(j.duration > 0.0 && j.duration.is_finite());
+        assert_eq!(j.ar_count, 4);
+        assert!(j.mean_ar > 0.0);
+        assert!(out.events > 0);
+        out.trace.check_lane_serial("j0/worker").unwrap();
+    }
+
+    #[test]
+    fn naive_baseline_reproduces_closed_form_exactly() {
+        // the naive schedule serializes everything and the event-driven
+        // host rounds sum to the closed form, so the unified engine must
+        // land on the analytic total to float precision
+        let sys = SystemParams::baseline_100g();
+        let w = Workload::paper_mlp(1792);
+        let kind = SystemKind::BaselineNaive { scheme: Scheme::Ring };
+        let spec = ClusterSpec::new(sys, 6)
+            .with_job(JobSpec::new("base", kind, w, (0..6).collect()));
+        let out = run_scenario(&spec);
+        let ana = iteration(kind, &sys, &w, 6);
+        let err = rel_err(ana.t_total, out.jobs[0].duration);
+        assert!(
+            err < 1e-9,
+            "unified {} vs closed form {} ({:.2e})",
+            out.jobs[0].duration,
+            ana.t_total,
+            err
+        );
+    }
+
+    #[test]
+    fn delayed_job_starts_late() {
+        let sys = SystemParams::smartnic_40g();
+        let w = Workload {
+            layers: 2,
+            hidden: 256,
+            batch_per_node: 32,
+        };
+        let spec = ClusterSpec::new(sys, 2)
+            .with_job(
+                JobSpec::new("late", SystemKind::SmartNic { bfp: false }, w, vec![0, 1])
+                    .starting_at(1.0),
+            );
+        let out = run_scenario(&spec);
+        assert!(out.jobs[0].t_start == 1.0);
+        assert!(out.jobs[0].t_end > 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate rank")]
+    fn duplicate_ranks_rejected() {
+        let sys = SystemParams::smartnic_40g();
+        let w = Workload {
+            layers: 1,
+            hidden: 64,
+            batch_per_node: 8,
+        };
+        let spec = ClusterSpec::new(sys, 2).with_job(JobSpec::new(
+            "bad",
+            SystemKind::SmartNic { bfp: false },
+            w,
+            vec![0, 0],
+        ));
+        let _ = run_scenario(&spec);
+    }
+}

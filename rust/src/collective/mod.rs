@@ -1,12 +1,17 @@
 //! Collective communication: the all-reduce algorithms of Sec. II-B / III.
 //!
-//! Two faces, deliberately separated:
+//! Three faces, deliberately separated:
 //! * [`timing`] — closed-form software (MPI-style) all-reduce cost models
 //!   for ring, Rabenseifner, binomial gather/scatter, pipelined tree and
-//!   the MPICH-style size heuristic (regenerates Fig. 2b);
-//! * [`data`] — the *real* data path: exact ring all-reduce over worker
-//!   gradient buffers with optional per-hop BFP quantization, used by the
-//!   real training runtime (numerics included).
+//!   the MPICH-style size heuristic (regenerates Fig. 2b), plus the
+//!   [`timing::scheme_rounds`] decomposition that lets the unified event
+//!   engine execute each scheme round-by-round on the shared clock;
+//! * [`algorithms`] / [`data`] — the *real* data paths: exact ring,
+//!   binomial and Rabenseifner all-reduces over worker gradient buffers
+//!   (the ring with optional per-hop BFP quantization), used by the real
+//!   training runtime (numerics included);
+//! * timing *execution* lives in `cluster::collective`, where rings,
+//!   trees and host schemes all run as events contending on one fabric.
 
 pub mod algorithms;
 pub mod data;

@@ -22,7 +22,8 @@ impl HostNet {
         (self.net.eth_bw * self.net.alpha).min(self.comm_bw_cap)
     }
 
-    fn step_cost(&self) -> f64 {
+    /// Per-step fixed cost: software overhead + one network hop.
+    pub fn step_cost(&self) -> f64 {
         self.step_overhead + self.net.hop_latency
     }
 }
@@ -65,16 +66,103 @@ pub fn allreduce_time(scheme: Scheme, n: usize, bytes: f64, env: &HostNet) -> f6
             // log2(N) of latency once the pipe fills
             2.0 * bytes / bw + 2.0 * lg * env.step_cost()
         }
-        Scheme::Default => {
-            // MPICH-style: short messages use binomial, large messages use
-            // the best of ring/Rabenseifner
-            if bytes < 64.0 * 1024.0 {
-                allreduce_time(Scheme::Binomial, n, bytes, env)
-            } else {
-                allreduce_time(Scheme::Ring, n, bytes, env)
-                    .min(allreduce_time(Scheme::Rabenseifner, n, bytes, env))
+        Scheme::Default => pick_default(n, bytes, env).1,
+    }
+}
+
+/// The MPICH-style `Scheme::Default` selection: short messages use
+/// binomial, large messages the best of ring/Rabenseifner.  Returns the
+/// chosen scheme with its closed-form cost; shared by `allreduce_time`
+/// and [`scheme_rounds`] so the event engine always executes exactly the
+/// scheme the closed form prices, without evaluating any form twice.
+fn pick_default(n: usize, bytes: f64, env: &HostNet) -> (Scheme, f64) {
+    if bytes < 64.0 * 1024.0 {
+        (
+            Scheme::Binomial,
+            allreduce_time(Scheme::Binomial, n, bytes, env),
+        )
+    } else {
+        let ring = allreduce_time(Scheme::Ring, n, bytes, env);
+        let rab = allreduce_time(Scheme::Rabenseifner, n, bytes, env);
+        if ring <= rab {
+            (Scheme::Ring, ring)
+        } else {
+            (Scheme::Rabenseifner, rab)
+        }
+    }
+}
+
+/// Per-round decomposition of a scheme's closed-form cost, consumed by the
+/// unified event engine's host-collective executor: `rounds` barrier-
+/// synchronized rounds, each moving `bytes_per_round` per node and paying
+/// one [`HostNet::step_cost`], plus `extra_step_costs` latency-only steps.
+/// By construction
+///
+///   rounds·(bytes_per_round/bw + step_cost) + extra_step_costs·step_cost
+///     == allreduce_time(scheme, n, bytes, env)
+///
+/// exactly, so an uncontended event-driven host all-reduce reproduces the
+/// closed form to float precision while contended ones (two jobs sharing a
+/// node's comm cores) queue per round on the shared server.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HostRoundPlan {
+    pub rounds: usize,
+    pub bytes_per_round: f64,
+    pub extra_step_costs: usize,
+}
+
+impl HostRoundPlan {
+    const EMPTY: HostRoundPlan = HostRoundPlan {
+        rounds: 0,
+        bytes_per_round: 0.0,
+        extra_step_costs: 0,
+    };
+
+    /// Closed-form total of this plan (equals `allreduce_time`).
+    pub fn total_time(&self, env: &HostNet) -> f64 {
+        self.rounds as f64 * (self.bytes_per_round / env.effective_bw() + env.step_cost())
+            + self.extra_step_costs as f64 * env.step_cost()
+    }
+}
+
+/// Decompose `scheme` into the round plan executed by the event engine.
+pub fn scheme_rounds(scheme: Scheme, n: usize, bytes: f64, env: &HostNet) -> HostRoundPlan {
+    if n <= 1 {
+        return HostRoundPlan::EMPTY;
+    }
+    let nf = n as f64;
+    let lg = (n as f64).log2().ceil() as usize;
+    match scheme {
+        Scheme::Ring => HostRoundPlan {
+            rounds: 2 * (n - 1),
+            bytes_per_round: bytes / nf,
+            extra_step_costs: 0,
+        },
+        Scheme::Rabenseifner => {
+            let mut total = 2.0 * (nf - 1.0) / nf * bytes;
+            let mut rounds = 2 * lg;
+            if !n.is_power_of_two() {
+                let pow = 1usize << (usize::BITS - 1 - n.leading_zeros());
+                total += (n - pow) as f64 / nf * bytes;
+                rounds += 1;
+            }
+            HostRoundPlan {
+                rounds,
+                bytes_per_round: total / rounds as f64,
+                extra_step_costs: 0,
             }
         }
+        Scheme::Binomial => HostRoundPlan {
+            rounds: 2 * lg,
+            bytes_per_round: bytes,
+            extra_step_costs: 0,
+        },
+        Scheme::Tree => HostRoundPlan {
+            rounds: 2,
+            bytes_per_round: bytes,
+            extra_step_costs: 2 * lg - 2,
+        },
+        Scheme::Default => scheme_rounds(pick_default(n, bytes, env).0, n, bytes, env),
     }
 }
 
@@ -169,6 +257,25 @@ mod tests {
         let capped = allreduce_time(Scheme::Ring, 8, MB16, &e);
         let uncapped = allreduce_time(Scheme::Ring, 8, MB16, &env());
         assert!(capped > uncapped * 4.0, "capped {capped} uncapped {uncapped}");
+    }
+
+    #[test]
+    fn round_plans_reproduce_closed_form_exactly() {
+        let e = env();
+        for scheme in Scheme::ALL {
+            for n in [1usize, 2, 3, 4, 5, 6, 8, 12, 16, 24, 32] {
+                for bytes in [4.0 * 1024.0, MB16, 64.0 * 1024.0 * 1024.0] {
+                    let plan = scheme_rounds(scheme, n, bytes, &e);
+                    let want = allreduce_time(scheme, n, bytes, &e);
+                    let got = plan.total_time(&e);
+                    assert!(
+                        (got - want).abs() <= want.abs() * 1e-12 + 1e-15,
+                        "{} n={n} bytes={bytes}: plan {got} closed {want}",
+                        scheme.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

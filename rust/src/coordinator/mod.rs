@@ -1,17 +1,23 @@
 //! L3 coordinator — the paper's system contribution.
 //!
-//! * [`simulate`] — dynamic (event-driven) execution of the Fig. 3b
-//!   layerwise schedule over the modeled cluster: backward compute on the
-//!   workers overlapped with per-layer non-blocking all-reduces on the
-//!   smart NICs (or host comm cores for the baselines).  Produces
-//!   iteration breakdowns and execution traces; the Sec. IV-C closed form
-//!   is validated against it.
+//! * [`unified`] — one training iteration on the unified cluster engine:
+//!   compute events and non-blocking all-reduce collectives share a
+//!   single calendar queue, so a layer's all-reduce runs concurrently
+//!   with later layers' compute and with other in-flight all-reduces.
+//!   This is the engine behind `cluster` multi-job scenarios.
+//! * [`simulate`] — the serialized compatibility path: the Fig. 3b
+//!   schedule composed from one-ring-at-a-time NIC timings (and
+//!   closed-form host all-reduce costs).  The Sec. IV-C closed form is
+//!   validated against this path (E6), and the unified engine is held to
+//!   it within the paper's 3% at the paper's operating points.
 //! * [`trainer`] — the *real* training runtime: workers execute the AOT
 //!   compiled fwd/bwd/update artifacts through PJRT, gradients flow
 //!   through the real ring all-reduce with real BFP wire quantization.
 
 pub mod simulate;
 pub mod trainer;
+pub mod unified;
 
 pub use simulate::{simulate_iteration, SimOutput};
 pub use trainer::{ArBackend, Optimizer, StepStats, Trainer, TrainerConfig};
+pub use unified::{simulate_iteration_unified, simulate_iteration_unified_faulty};

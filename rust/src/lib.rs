@@ -9,16 +9,42 @@
 //! floating point (BFP16) on the wire.  This crate rebuilds the entire
 //! system as a three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the distributed-training coordinator: worker
-//!   orchestration, the Fig. 3b layerwise overlap schedule, the smart-NIC
-//!   datapath (ring all-reduce + BFP codec), a discrete-event simulator of
-//!   the 6→32-node cluster, the Sec. IV-C analytical model, and every
+//! * **L3 (this crate)** — the distributed-training coordinator, the
+//!   smart-NIC datapath (ring all-reduce + BFP codec), the unified
+//!   cluster simulator, the Sec. IV-C analytical model, and every
 //!   experiment harness (Figs. 2a/2b/4a/4b, Table I).
 //! * **L2 (python/compile/model.py, build-time)** — the 20-layer MLP
 //!   fwd/bwd as layerwise JAX entry points, AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels: the
 //!   MXU-tiled matmul, the BFP compress/decompress datapath, and the NIC
 //!   FP32 adder.
+//!
+//! ## Simulation architecture: one event engine
+//!
+//! Everything dynamic runs as events on a single calendar-queue executive
+//! ([`netsim::engine::Sim`]) over one shared resource world
+//! ([`netsim::fabric::Fabric`]: per-node Tx links, PCIe lanes, FPGA
+//! adders, host comm cores, plus a cut-through switch):
+//!
+//! * [`cluster::collective`] — the NIC ring datapath (PCIe fetch → FP32
+//!   adder → Tx → switch → writeback, segment-pipelined), NIC-offloaded
+//!   binomial/Rabenseifner rounds, and host/MPI software schemes, all as
+//!   events contending FIFO for the fabric;
+//! * [`cluster::job`] — the event-driven trainer: the Fig. 3b layerwise
+//!   schedule posting *non-blocking* all-reduces that execute concurrently
+//!   with backward compute and with each other;
+//! * [`cluster::scenario`] — multi-tenant runs: several training jobs on
+//!   one switch fabric, per-layer algorithm selection, and straggler /
+//!   degraded-link injection that hits every in-flight collective;
+//! * [`coordinator::unified`] — the single-job iteration entry point on
+//!   that engine.
+//!
+//! The original serialized pipeline (one ring at a time, max-plus
+//! composed) is retained as the compatibility path —
+//! [`nic::simulate_ring_allreduce`] and [`coordinator::simulate`] — since
+//! the Sec. IV-C closed form assumes exactly those semantics; experiment
+//! E6 ([`analytic::validate`]) holds model, serialized path and unified
+//! engine together within the paper's 3% at the paper's operating points.
 //!
 //! Python never runs at training time: the Rust runtime loads the AOT
 //! artifacts through PJRT (`runtime`) and drives them from the training
@@ -27,8 +53,10 @@
 pub mod analytic;
 pub mod benchkit;
 pub mod bfp;
+pub mod cluster;
 pub mod collective;
 pub mod coordinator;
+pub mod experiments;
 pub mod netsim;
 pub mod nic;
 pub mod prop;
@@ -36,4 +64,3 @@ pub mod runtime;
 pub mod sysconfig;
 pub mod trace;
 pub mod util;
-pub mod experiments;

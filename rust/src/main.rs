@@ -13,14 +13,19 @@
 //!   validate  analytical model vs DES (paper: "within 3%")
 //!   train     real data-parallel training through PJRT artifacts
 //!   sim       one simulated iteration with full trace output
+//!   cluster   multi-job scenarios on the unified event engine
 //!   bfp       BFP design-space sweep (block size x mantissa bits)
 //!   all       fig2a+fig2b+table1+fig4a+fig4b+validate, write results/
 //! ```
 
 use ai_smartnic::analytic::model::SystemKind;
 use ai_smartnic::bfp::analysis;
+use ai_smartnic::cluster::{run_scenario, ClusterSpec, JobSpec};
 use ai_smartnic::collective::Scheme;
-use ai_smartnic::coordinator::{simulate_iteration, ArBackend, Trainer, TrainerConfig};
+use ai_smartnic::coordinator::{
+    simulate_iteration, simulate_iteration_unified, ArBackend, Trainer, TrainerConfig,
+};
+use ai_smartnic::sysconfig::ClusterFaults;
 use ai_smartnic::experiments::{ablate, fig2a, fig2b, fig4a, fig4b, table1, validate, write_result};
 use ai_smartnic::log_info;
 use ai_smartnic::sysconfig::{SystemParams, Workload};
@@ -29,7 +34,7 @@ use ai_smartnic::util::logger::{set_level, Level};
 use ai_smartnic::util::rng::Rng;
 use ai_smartnic::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|bfp|ablate|all> [--help]";
+const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|bfp|ablate|all> [--help]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -47,6 +52,7 @@ fn main() {
         "validate" => cmd_validate(&rest),
         "train" => cmd_train(&rest),
         "sim" => cmd_sim(&rest),
+        "cluster" => cmd_cluster(&rest),
         "bfp" => cmd_bfp(&rest),
         "ablate" => cmd_ablate(&rest),
         "all" => cmd_all(&rest),
@@ -69,6 +75,23 @@ fn parse(c: Command, rest: &[String]) -> Result<ai_smartnic::util::cli::Args, i3
             eprintln!("{msg}");
             Err(2)
         }
+    }
+}
+
+/// Shared `--system` parsing for the simulation subcommands.
+fn parse_system(name: &str) -> Option<(SystemKind, SystemParams)> {
+    match name {
+        "baseline-naive" => Some((
+            SystemKind::BaselineNaive { scheme: Scheme::Ring },
+            SystemParams::baseline_100g(),
+        )),
+        "baseline" => Some((
+            SystemKind::BaselineOverlapped { scheme: Scheme::Ring, comm_cores: 2 },
+            SystemParams::baseline_100g(),
+        )),
+        "smartnic" => Some((SystemKind::SmartNic { bfp: false }, SystemParams::smartnic_40g())),
+        "smartnic+bfp" => Some((SystemKind::SmartNic { bfp: true }, SystemParams::smartnic_40g())),
+        _ => None,
     }
 }
 
@@ -260,33 +283,29 @@ fn cmd_sim(rest: &[String]) -> i32 {
         .opt("layers", "20", "MLP layers")
         .opt("hidden", "2048", "layer width")
         .opt("trace-out", "", "write chrome trace JSON to this path")
+        .flag("unified", "run on the unified event engine (concurrent all-reduces)")
         .flag("gantt", "render an ASCII Gantt of the schedule (Fig. 3b)");
     let Ok(a) = parse(c, rest) else { return 2 };
-    let (kind, sys) = match a.get_str("system", "smartnic+bfp").as_str() {
-        "baseline-naive" => (
-            SystemKind::BaselineNaive { scheme: Scheme::Ring },
-            SystemParams::baseline_100g(),
-        ),
-        "baseline" => (
-            SystemKind::BaselineOverlapped { scheme: Scheme::Ring, comm_cores: 2 },
-            SystemParams::baseline_100g(),
-        ),
-        "smartnic" => (SystemKind::SmartNic { bfp: false }, SystemParams::smartnic_40g()),
-        "smartnic+bfp" => (SystemKind::SmartNic { bfp: true }, SystemParams::smartnic_40g()),
-        other => {
-            eprintln!("unknown system '{other}'");
-            return 2;
-        }
+    let sys_name = a.get_str("system", "smartnic+bfp");
+    let Some((kind, sys)) = parse_system(&sys_name) else {
+        eprintln!("unknown system '{sys_name}'");
+        return 2;
     };
     let w = Workload {
         layers: a.get_usize("layers", 20),
         hidden: a.get_usize("hidden", 2048),
         batch_per_node: a.get_usize("batch", 448),
     };
-    let out = simulate_iteration(kind, &sys, &w, a.get_usize("nodes", 6));
+    let nodes = a.get_usize("nodes", 6);
+    let out = if a.flag("unified") {
+        simulate_iteration_unified(kind, &sys, &w, nodes)
+    } else {
+        simulate_iteration(kind, &sys, &w, nodes)
+    };
     let bd = &out.breakdown;
+    let engine = if a.flag("unified") { "unified" } else { "serialized" };
     let mut t = Table::new(&["component", "time (ms)", "share"])
-        .with_title(&format!("simulated iteration — {}", kind.name()));
+        .with_title(&format!("simulated iteration — {} ({engine} engine)", kind.name()));
     for (name, v) in [
         ("forward", bd.t_fwd),
         ("backward", bd.t_bwd),
@@ -306,6 +325,123 @@ fn cmd_sim(rest: &[String]) -> i32 {
         ai_smartnic::util::units::fmt_time(out.t_ar_layer),
         out.trace.spans.len()
     );
+    if a.flag("gantt") {
+        println!("\n{}", out.trace.render_gantt(100));
+    }
+    let path = a.get_str("trace-out", "");
+    if !path.is_empty() {
+        std::fs::write(&path, out.trace.to_chrome_json()).unwrap();
+        println!("trace written to {path} (open in chrome://tracing)");
+    }
+    0
+}
+
+fn parse_fault(spec: &str) -> Option<(usize, f64)> {
+    let (node, scale) = spec.split_once(':')?;
+    Some((node.trim().parse().ok()?, scale.trim().parse().ok()?))
+}
+
+fn cmd_cluster(rest: &[String]) -> i32 {
+    let c = Command::new("cluster", "multi-job scenarios on the unified event engine")
+        .opt("nodes", "6", "physical nodes on the switch fabric")
+        .opt("jobs", "2", "concurrent training jobs (all sharing every node)")
+        .opt("batch", "448", "mini-batch per node")
+        .opt("layers", "20", "MLP layers")
+        .opt("hidden", "2048", "layer width")
+        .opt("system", "smartnic+bfp", "baseline-naive | baseline | smartnic | smartnic+bfp")
+        .opt("stagger", "0", "start-time offset between jobs (seconds)")
+        .opt("degrade-link", "", "node:scale — degrade one Tx uplink (e.g. 2:0.25)")
+        .opt("straggler", "", "node:scale — slow one node's PCIe + adder")
+        .opt("trace-out", "", "write chrome trace JSON to this path")
+        .flag("gantt", "render an ASCII Gantt of every lane");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let sys_name = a.get_str("system", "smartnic+bfp");
+    let Some((kind, sys)) = parse_system(&sys_name) else {
+        eprintln!("unknown system '{sys_name}'");
+        return 2;
+    };
+    let nodes = a.get_usize("nodes", 6);
+    let n_jobs = a.get_usize("jobs", 2).max(1);
+    let stagger = a.get_f64("stagger", 0.0);
+    if !(stagger >= 0.0 && stagger.is_finite()) {
+        eprintln!("--stagger must be a finite non-negative number of seconds");
+        return 2;
+    }
+    let w = Workload {
+        layers: a.get_usize("layers", 20),
+        hidden: a.get_usize("hidden", 2048),
+        batch_per_node: a.get_usize("batch", 448),
+    };
+    let mut faults = ClusterFaults::none();
+    for (opt, is_link) in [("degrade-link", true), ("straggler", false)] {
+        let raw = a.get_str(opt, "");
+        if raw.is_empty() {
+            continue;
+        }
+        let Some((node, scale)) = parse_fault(&raw) else {
+            eprintln!("--{opt} expects node:scale (e.g. 2:0.25), got '{raw}'");
+            return 2;
+        };
+        if node >= nodes {
+            eprintln!("--{opt}: node {node} is outside the {nodes}-node fabric");
+            return 2;
+        }
+        if !(scale > 0.0 && scale <= 1.0) {
+            eprintln!("--{opt}: scale must be in (0, 1], got {scale}");
+            return 2;
+        }
+        faults = if is_link {
+            faults.with_degraded_link(node, scale)
+        } else {
+            faults.with_straggler(node, scale)
+        };
+    }
+
+    let mut spec = ClusterSpec::new(sys, nodes).with_faults(faults.clone());
+    for j in 0..n_jobs {
+        spec = spec.with_job(
+            JobSpec::new(&format!("j{j}"), kind, w, (0..nodes).collect())
+                .starting_at(stagger * j as f64),
+        );
+    }
+    let out = run_scenario(&spec);
+
+    let mut t = Table::new(&[
+        "job", "duration (ms)", "mean AR (ms)", "max ARs in flight", "exposed wait (ms)",
+    ])
+    .with_title(&format!(
+        "{n_jobs} x {} on {nodes} shared nodes — unified engine",
+        kind.name()
+    ));
+    for j in &out.jobs {
+        t.row(&[
+            j.name.clone(),
+            fnum(j.duration * 1e3, 2),
+            fnum(j.mean_ar * 1e3, 2),
+            j.max_inflight.to_string(),
+            fnum(j.exposed_wait * 1e3, 2),
+        ]);
+    }
+    t.print();
+    println!(
+        "fabric: eth util {:.2}, pcie util {:.2}, adder util {:.2}, {} events",
+        out.eth_util, out.pcie_util, out.adder_util, out.events
+    );
+
+    // isolated reference: the same job alone on the same (faulty) fabric
+    let solo = run_scenario(
+        &ClusterSpec::new(sys, nodes)
+            .with_faults(faults)
+            .with_job(JobSpec::new("solo", kind, w, (0..nodes).collect())),
+    );
+    let slow = out.jobs.iter().map(|j| j.duration).fold(0.0, f64::max)
+        / solo.jobs[0].duration.max(1e-12);
+    println!(
+        "isolated job: {} ms -> multi-tenant slowdown x{}",
+        fnum(solo.jobs[0].duration * 1e3, 2),
+        fnum(slow, 2)
+    );
+
     if a.flag("gantt") {
         println!("\n{}", out.trace.render_gantt(100));
     }

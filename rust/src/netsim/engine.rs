@@ -28,11 +28,12 @@ impl<S> PartialOrd for Scheduled<S> {
 }
 impl<S> Ord for Scheduled<S> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert for earliest-first
+        // BinaryHeap is a max-heap: invert for earliest-first.  `total_cmp`
+        // is a total order over f64 (schedule_at rejects non-finite times,
+        // so NaN can never corrupt the heap invariant).
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -76,12 +77,17 @@ impl<S> Sim<S> {
 
     /// Schedule `action` to run `delay` seconds from now.
     pub fn schedule(&mut self, delay: Time, action: impl FnOnce(&mut Sim<S>, &mut S) + 'static) {
-        assert!(delay >= 0.0, "negative delay {delay}");
+        assert!(
+            delay.is_finite() && delay >= 0.0,
+            "delay must be finite and non-negative, got {delay}"
+        );
         self.schedule_at(self.now + delay, action);
     }
 
-    /// Schedule `action` at an absolute time (>= now).
+    /// Schedule `action` at an absolute time (>= now, finite — a NaN or
+    /// infinite time would silently corrupt the heap order).
     pub fn schedule_at(&mut self, time: Time, action: impl FnOnce(&mut Sim<S>, &mut S) + 'static) {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
         assert!(
             time >= self.now,
             "cannot schedule into the past: {time} < {}",
@@ -178,6 +184,20 @@ mod tests {
         assert_eq!(sim.pending(), 5);
         sim.run(&mut count);
         assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn scheduling_nan_time_panics() {
+        let mut sim: Sim<()> = Sim::new();
+        sim.schedule_at(f64::NAN, |_, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn scheduling_infinite_delay_panics() {
+        let mut sim: Sim<()> = Sim::new();
+        sim.schedule(f64::INFINITY, |_, _| {});
     }
 
     #[test]

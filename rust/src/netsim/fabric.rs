@@ -1,0 +1,149 @@
+//! The shared cluster fabric: every timing resource of every node plus the
+//! one switch, owned by a single struct so that *all* in-flight activity —
+//! concurrent all-reduces of one job, collectives of different jobs, host
+//! MPI traffic — contends on the same FIFO servers.
+//!
+//! Per node (paper Fig. 3a datapath):
+//! * `tx` — the NIC's Ethernet uplink serialization stage (latency lives
+//!   on the switch, so the link's own latency is zero);
+//! * `pcie` — full-duplex host<->NIC DMA;
+//! * `adder` — the FPGA FP32 reduction engine;
+//! * `comm` — the host's communication cores as a *normalized* rate-1.0
+//!   server: callers enqueue seconds of software all-reduce work, which
+//!   makes jobs with different effective bandwidths shareable on one FIFO.
+//!
+//! The switch uses cut-through forwarding ([`Switch::forward_cut_through`])
+//! so an uncontended hop costs exactly `hop_latency` — matching the
+//! serialized NIC DES, which models a hop as Tx serialization + latency —
+//! while flows that converge on one egress port queue-delay each other.
+
+use super::link::{Link, Pcie, Server};
+use super::switch::Switch;
+use super::Time;
+use crate::sysconfig::{ClusterFaults, SystemParams};
+
+/// All timing resources of one physical node.
+#[derive(Clone, Debug)]
+pub struct NodeDevices {
+    pub tx: Link,
+    pub pcie: Pcie,
+    pub adder: Server,
+    /// normalized (rate 1.0) host comm-core server; serves seconds of work
+    pub comm: Server,
+}
+
+/// The whole cluster's shared resources: one entry per node, one switch.
+#[derive(Clone, Debug)]
+pub struct Fabric {
+    pub nodes: Vec<NodeDevices>,
+    pub switch: Switch,
+}
+
+impl Fabric {
+    /// Build an `n`-node fabric from one hardware description, applying
+    /// cluster-level fault injection to the affected nodes' resources.
+    pub fn new(sys: &SystemParams, n: usize, faults: &ClusterFaults) -> Self {
+        assert!(n >= 1, "fabric needs at least one node");
+        let nodes = (0..n)
+            .map(|i| {
+                let link_scale = faults.link_scale(i);
+                let node_scale = faults.node_scale(i);
+                NodeDevices {
+                    tx: Link::new(sys.net.eth_bw * sys.net.alpha * link_scale, 0.0),
+                    pcie: Pcie::new(sys.nic.pcie_bw * node_scale, sys.nic.pcie_latency),
+                    adder: Server::new(sys.nic.add_flops * node_scale),
+                    comm: Server::new(1.0),
+                }
+            })
+            .collect();
+        Self {
+            nodes,
+            switch: Switch::new(n, sys.net.eth_bw * sys.net.alpha, sys.net.hop_latency),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// One wire hop from `src` to `dst`: Tx serialization on the sender's
+    /// uplink, then cut-through switching to the destination port.
+    /// Returns the delivery time at the destination NIC.
+    #[must_use]
+    pub fn hop(&mut self, src: usize, dst: usize, ready: Time, bytes: f64) -> Time {
+        let serialized = self.nodes[src].tx.transmit(ready, bytes);
+        self.switch.forward_cut_through(dst, serialized, bytes)
+    }
+
+    /// Mean Tx-link utilization across nodes over [0, horizon].
+    pub fn mean_eth_util(&self, horizon: Time) -> f64 {
+        let n = self.nodes.len() as f64;
+        self.nodes.iter().map(|nd| nd.tx.utilization(horizon)).sum::<f64>() / n
+    }
+
+    /// Mean PCIe utilization (both directions averaged) over [0, horizon].
+    pub fn mean_pcie_util(&self, horizon: Time) -> f64 {
+        let n = self.nodes.len() as f64;
+        self.nodes
+            .iter()
+            .map(|nd| {
+                (nd.pcie.to_device.utilization(horizon) + nd.pcie.to_host.utilization(horizon))
+                    / 2.0
+            })
+            .sum::<f64>()
+            / n
+    }
+
+    /// Mean adder utilization over [0, horizon].
+    pub fn mean_adder_util(&self, horizon: Time) -> f64 {
+        let n = self.nodes.len() as f64;
+        self.nodes.iter().map(|nd| nd.adder.utilization(horizon)).sum::<f64>() / n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::gbps;
+
+    #[test]
+    fn uncontended_hop_costs_serialization_plus_latency() {
+        let sys = SystemParams::smartnic_40g();
+        let mut f = Fabric::new(&sys, 4, &ClusterFaults::none());
+        let bytes = 1e6;
+        let t = f.hop(0, 1, 0.0, bytes);
+        let expect = bytes / gbps(40.0) + sys.net.hop_latency;
+        assert!((t - expect).abs() < 1e-12, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn faults_scale_the_right_node() {
+        let sys = SystemParams::smartnic_40g();
+        let faults = ClusterFaults::none()
+            .with_degraded_link(1, 0.5)
+            .with_straggler(2, 0.25);
+        let f = Fabric::new(&sys, 3, &faults);
+        assert_eq!(f.nodes[1].tx.server.rate, gbps(40.0) * 0.5);
+        assert_eq!(f.nodes[0].tx.server.rate, gbps(40.0));
+        assert_eq!(f.nodes[2].adder.rate, sys.nic.add_flops * 0.25);
+        assert_eq!(f.nodes[2].pcie.to_device.server.rate, sys.nic.pcie_bw * 0.25);
+    }
+
+    #[test]
+    fn converging_hops_contend_on_egress() {
+        let sys = SystemParams::smartnic_40g();
+        let mut f = Fabric::new(&sys, 4, &ClusterFaults::none());
+        let bytes = 1e6;
+        let ser = bytes / gbps(40.0);
+        // two different senders, same destination, same instant
+        let t1 = f.hop(0, 2, 0.0, bytes);
+        let t2 = f.hop(1, 2, 0.0, bytes);
+        assert!((t1 - (ser + sys.net.hop_latency)).abs() < 1e-12);
+        // the second flow's egress reservation queues behind the first
+        assert!((t2 - (2.0 * ser + sys.net.hop_latency)).abs() < 1e-12);
+    }
+}

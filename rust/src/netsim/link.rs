@@ -36,6 +36,7 @@ impl Server {
     }
 
     /// Serve `amount` units arriving at `arrival`; returns completion time.
+    #[must_use]
     pub fn serve(&mut self, arrival: Time, amount: f64) -> Time {
         let start = arrival.max(self.busy_until);
         let dur = amount / self.rate;
@@ -45,16 +46,38 @@ impl Server {
         self.busy_until
     }
 
+    /// Cut-through reservation: queue `amount` of capacity FIFO and return
+    /// the time service *begins* (= queue exit).  An uncontended item
+    /// passes through with zero added delay — its serialization overlapped
+    /// the upstream stage — while a contended one waits for the earlier
+    /// reservations to drain.  Used for switch egress ports, where
+    /// store-and-forward accounting would double-count the serialization
+    /// already paid on the sender's Tx link.
+    #[must_use]
+    pub fn reserve(&mut self, arrival: Time, amount: f64) -> Time {
+        let start = arrival.max(self.busy_until);
+        let dur = amount / self.rate;
+        self.busy_until = start + dur;
+        self.busy_time += dur;
+        self.served += amount;
+        start
+    }
+
+    #[must_use]
     pub fn busy_until(&self) -> Time {
         self.busy_until
     }
 
     /// Total units served.
+    #[must_use]
     pub fn served(&self) -> f64 {
         self.served
     }
 
-    /// Fraction of [0, horizon] this server was busy.
+    /// Fraction of [0, horizon] this server was busy.  A non-positive
+    /// horizon (nothing has run yet) reports zero utilization rather than
+    /// dividing by it.
+    #[must_use]
     pub fn utilization(&self, horizon: Time) -> f64 {
         if horizon <= 0.0 {
             0.0
@@ -87,12 +110,21 @@ impl Link {
 
     /// Transmit `bytes` arriving at the NIC at `arrival`; returns the time
     /// the last byte arrives at the far end.
+    #[must_use]
     pub fn transmit(&mut self, arrival: Time, bytes: f64) -> Time {
         self.server.serve(arrival, bytes) + self.latency
     }
 
+    #[must_use]
     pub fn bytes_sent(&self) -> f64 {
         self.server.served()
+    }
+
+    /// Fraction of [0, horizon] the serialization stage was busy (guarded
+    /// against a zero horizon).
+    #[must_use]
+    pub fn utilization(&self, horizon: Time) -> f64 {
+        self.server.utilization(horizon)
     }
 
     pub fn reset(&mut self) {
@@ -141,8 +173,8 @@ mod tests {
     #[test]
     fn utilization_accounts_busy_time_only() {
         let mut s = Server::new(100.0);
-        s.serve(0.0, 100.0); // busy [0,1]
-        s.serve(3.0, 100.0); // busy [3,4]
+        let _ = s.serve(0.0, 100.0); // busy [0,1]
+        let _ = s.serve(3.0, 100.0); // busy [3,4]
         assert!((s.utilization(4.0) - 0.5).abs() < 1e-12);
     }
 
@@ -174,9 +206,33 @@ mod tests {
     }
 
     #[test]
+    fn reserve_is_cut_through() {
+        let mut s = Server::new(100.0); // 100 units/s
+        // uncontended: passes through at its arrival time
+        assert_eq!(s.reserve(0.0, 100.0), 0.0);
+        // contended: waits for the first reservation to drain (t=1.0)
+        assert_eq!(s.reserve(0.5, 100.0), 1.0);
+        // capacity accounting still accrues
+        assert_eq!(s.served(), 200.0);
+        assert!((s.utilization(2.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_guards_zero_horizon() {
+        let mut s = Server::new(10.0);
+        let _ = s.serve(0.0, 100.0);
+        assert_eq!(s.utilization(0.0), 0.0);
+        assert_eq!(s.utilization(-1.0), 0.0);
+        let mut l = Link::new(10.0, 0.0);
+        let _ = l.transmit(0.0, 100.0);
+        assert_eq!(l.utilization(0.0), 0.0);
+        assert!(l.utilization(20.0) > 0.0);
+    }
+
+    #[test]
     fn reset_clears_state() {
         let mut s = Server::new(10.0);
-        s.serve(0.0, 100.0);
+        let _ = s.serve(0.0, 100.0);
         s.reset();
         assert_eq!(s.busy_until(), 0.0);
         assert_eq!(s.served(), 0.0);

@@ -1,19 +1,24 @@
 //! Discrete-event network/compute simulation substrate.
 //!
 //! Replaces the paper's physical testbed (6 Xeon nodes + Arria-10 NICs +
-//! a Dell S6100 switch) with a deterministic simulator.  Two layers:
+//! a Dell S6100 switch) with a deterministic simulator.  Three layers:
 //!
-//! * [`engine`] — a classic calendar-queue DES (schedule closures at
-//!   virtual times) for control-flow-heavy simulations;
+//! * [`engine`] — the calendar-queue DES every simulation in the crate now
+//!   runs on: closures scheduled at virtual times with a total event
+//!   order (finite times enforced, ties broken by insertion sequence);
 //! * [`link`] — FIFO *servers* (links, PCIe, adders) with busy-until
-//!   semantics, composed max-plus style for pipelined dataflows (this is
-//!   how the chunked ring all-reduce is simulated; the paper's Sec. IV-C
-//!   closed form is the steady-state limit of the same composition).
+//!   semantics.  Events call `serve`/`transmit`/`reserve` at their fire
+//!   times, so anything sharing a server — concurrent all-reduces, other
+//!   jobs' traffic — contends through the same FIFO queue.  The paper's
+//!   Sec. IV-C closed form is the steady-state limit of this composition;
+//! * [`fabric`] — one struct owning every node's resources plus the
+//!   [`switch`], the shared world state of the unified cluster engine.
 //!
 //! All time is `f64` seconds of *virtual* time; everything is pure
 //! arithmetic, so simulations are exactly reproducible.
 
 pub mod engine;
+pub mod fabric;
 pub mod link;
 pub mod switch;
 pub mod topology;

@@ -29,12 +29,28 @@ impl Switch {
     }
 
     /// Forward `bytes` arriving at the switch at `arrival` toward
-    /// `dst_port`; returns delivery time at the destination NIC.
+    /// `dst_port`; returns delivery time at the destination NIC
+    /// (store-and-forward: full egress serialization + latency).
+    #[must_use]
     pub fn forward(&mut self, dst_port: usize, arrival: Time, bytes: f64) -> Time {
         self.egress[dst_port].serve(arrival, bytes) + self.latency
     }
 
-    /// Utilization of one egress port over [0, horizon].
+    /// Cut-through forwarding: the egress port's capacity is reserved FIFO
+    /// (so concurrent flows to the same destination queue-delay each
+    /// other), but an uncontended transfer — whose egress streaming
+    /// overlapped its ingress arrival — is delivered after just the
+    /// port-to-port latency.  This is the fabric model of the unified
+    /// cluster engine: the sender's Tx link pays serialization once, and
+    /// the switch adds only latency plus contention.
+    #[must_use]
+    pub fn forward_cut_through(&mut self, dst_port: usize, arrival: Time, bytes: f64) -> Time {
+        self.egress[dst_port].reserve(arrival, bytes) + self.latency
+    }
+
+    /// Utilization of one egress port over [0, horizon] (guarded against a
+    /// zero horizon by [`Server::utilization`]).
+    #[must_use]
     pub fn port_utilization(&self, port: usize, horizon: Time) -> f64 {
         self.egress[port].utilization(horizon)
     }
@@ -101,6 +117,29 @@ mod tests {
             let ideal_total = ring.allreduce_steps() as f64 * (chunk / BW + 1e-6);
             assert!((t_step - ideal_total).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn cut_through_is_latency_only_when_uncontended() {
+        let mut sw = Switch::new(4, BW, 1e-6);
+        // single flow: delivered after just the port latency
+        let d = sw.forward_cut_through(1, 5.0, MB);
+        assert!((d - (5.0 + 1e-6)).abs() < 1e-12);
+        // a second flow to the same port queues behind the first's
+        // reservation (MB/BW seconds of egress capacity)
+        let d2 = sw.forward_cut_through(1, 5.0, MB);
+        assert!((d2 - (5.0 + MB / BW + 1e-6)).abs() < 1e-12);
+        // a flow to a different port is unaffected
+        let d3 = sw.forward_cut_through(2, 5.0, MB);
+        assert!((d3 - (5.0 + 1e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn port_utilization_zero_horizon_is_zero() {
+        let mut sw = Switch::new(2, BW, 0.0);
+        let _ = sw.forward(0, 0.0, MB);
+        assert_eq!(sw.port_utilization(0, 0.0), 0.0);
+        assert!(sw.port_utilization(0, 1.0) > 0.0);
     }
 
     #[test]

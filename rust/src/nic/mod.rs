@@ -2,8 +2,13 @@
 //! model of the Rx/Tx/input/output FIFO + FP32 adder + control FSM
 //! datapath (Fig. 3a), its in-network pipelined ring all-reduce, and the
 //! Table-I resource estimator.
+//!
+//! [`simulate_ring_allreduce`] is the serialized one-ring-at-a-time
+//! compatibility path used by the E6 closed-form validation; the unified
+//! event engine in `cluster` runs the same datapath (sharing
+//! [`SegmentPlan`]) as events on the cluster-wide calendar queue.
 
 pub mod resources;
 pub mod smartnic;
 
-pub use smartnic::{simulate_ring_allreduce, AllReduceTiming, NicConfig};
+pub use smartnic::{simulate_ring_allreduce, AllReduceTiming, NicConfig, SegmentPlan};

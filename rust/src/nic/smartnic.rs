@@ -1,4 +1,13 @@
-//! Chunk-level DES of the smart NIC's pipelined ring all-reduce.
+//! Chunk-level timing model of the smart NIC's pipelined ring all-reduce.
+//!
+//! This is the *serialized compatibility path*: one ring at a time on a
+//! private set of servers, composed max-plus style in a step loop.  It is
+//! the reference the Sec. IV-C closed form is validated against (E6,
+//! `analytic::validate`).  The unified event engine
+//! (`cluster::collective`) runs the identical per-segment arithmetic as
+//! events on the shared calendar queue, which is what allows several
+//! all-reduces (and several jobs) to be in flight at once; for a single
+//! uncontended ring the two produce the same times.
 //!
 //! Models the Fig. 3a datapath per node:
 //!
@@ -69,6 +78,48 @@ impl NicConfig {
     }
 }
 
+/// How a gradient is padded, chunked and segmented through the NIC
+/// (Sec. IV-C: R_l = b · N · ⌈M²/N⌉, further cut into FIFO-sized segments
+/// so PCIe fetch, reduction and link serialization pipeline).  Shared by
+/// the serialized path and the unified event engine so both simulate the
+/// exact same dataflow.
+#[derive(Clone, Copy, Debug)]
+pub struct SegmentPlan {
+    /// elements per ring chunk (= ⌈elems/N⌉, padded)
+    pub chunk_elems: usize,
+    /// bytes per ring chunk (FP32)
+    pub chunk_bytes: f64,
+    /// segments per chunk after equalization
+    pub segs_per_chunk: usize,
+    /// bytes per segment (uncompressed, host-side)
+    pub seg_bytes: f64,
+    /// elements per segment (for adder costing)
+    pub seg_elems: f64,
+}
+
+impl SegmentPlan {
+    /// Plan `elems` f32 gradients across an `n`-node ring with the NIC's
+    /// configured segment size.
+    pub fn new(segment_bytes: f64, n: usize, elems: usize) -> Self {
+        assert!(n >= 1);
+        let chunk_elems = elems.div_ceil(n);
+        let chunk_bytes = chunk_elems as f64 * 4.0;
+        let seg_bytes = segment_bytes.min(chunk_bytes).max(1.0);
+        // at least one (possibly empty) segment, so a zero-element
+        // gradient still flows through the event pipeline and completes
+        let segs_per_chunk = ((chunk_bytes / seg_bytes).ceil() as usize).max(1);
+        let seg_bytes = chunk_bytes / segs_per_chunk as f64; // equalize
+        let seg_elems = chunk_elems as f64 / segs_per_chunk as f64;
+        Self {
+            chunk_elems,
+            chunk_bytes,
+            segs_per_chunk,
+            seg_bytes,
+            seg_elems,
+        }
+    }
+}
+
 /// Timing result of one simulated all-reduce.
 #[derive(Clone, Debug)]
 pub struct AllReduceTiming {
@@ -100,12 +151,10 @@ pub fn simulate_ring_allreduce(cfg: &NicConfig, n: usize, elems: usize) -> AllRe
     let ring = Ring::new(n);
 
     // Padded chunking (Sec. IV-C: R_l = b * N * ceil(M^2 / N))
-    let chunk_elems = elems.div_ceil(n);
-    let chunk_bytes = chunk_elems as f64 * 4.0;
-    let seg_bytes = sys.nic.segment_bytes.min(chunk_bytes).max(1.0);
-    let segs_per_chunk = (chunk_bytes / seg_bytes).ceil() as usize;
-    let seg_bytes = chunk_bytes / segs_per_chunk as f64; // equalize
-    let seg_elems = chunk_elems as f64 / segs_per_chunk as f64;
+    let plan = SegmentPlan::new(sys.nic.segment_bytes, n, elems);
+    let segs_per_chunk = plan.segs_per_chunk;
+    let seg_bytes = plan.seg_bytes;
+    let seg_elems = plan.seg_elems;
 
     let mut nodes: Vec<NodeState> = (0..n)
         .map(|i| {
@@ -250,6 +299,24 @@ mod tests {
             SystemParams::smartnic_40g(),
             if bfp { Some(BfpCodec::bfp16()) } else { None },
         )
+    }
+
+    #[test]
+    fn segment_plan_equalizes() {
+        let p = SegmentPlan::new(256.0 * 1024.0, 6, 2048 * 2048);
+        assert_eq!(p.chunk_elems, 2048 * 2048 / 6 + 1); // padded
+        assert_eq!(p.seg_bytes * p.segs_per_chunk as f64, p.chunk_bytes);
+        assert!(p.seg_bytes <= 256.0 * 1024.0);
+        // tiny tensors collapse to one segment
+        let tiny = SegmentPlan::new(256.0 * 1024.0, 4, 64);
+        assert_eq!(tiny.segs_per_chunk, 1);
+        assert_eq!(tiny.chunk_elems, 16);
+        // degenerate zero-element gradients keep one empty segment
+        // (NaN here would deadlock the unified ring executor)
+        let empty = SegmentPlan::new(256.0 * 1024.0, 4, 0);
+        assert_eq!(empty.segs_per_chunk, 1);
+        assert_eq!(empty.seg_bytes, 0.0);
+        assert_eq!(empty.seg_elems, 0.0);
     }
 
     #[test]

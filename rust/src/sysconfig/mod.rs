@@ -180,6 +180,54 @@ impl SystemParams {
     }
 }
 
+/// Cluster-level fault injection for the unified event engine: unlike the
+/// per-ring knobs on `nic::NicConfig`, these scale *shared* fabric
+/// resources, so a flapping port or thermally-throttled node degrades
+/// every in-flight collective of every job that touches it.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterFaults {
+    /// (node, bandwidth multiplier in (0, 1]) on that node's Tx uplink
+    pub degraded_links: Vec<(usize, f64)>,
+    /// (node, speed multiplier in (0, 1]) on that node's PCIe + NIC adder
+    pub stragglers: Vec<(usize, f64)>,
+}
+
+impl ClusterFaults {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_degraded_link(mut self, node: usize, scale: f64) -> Self {
+        assert!(scale > 0.0 && scale <= 1.0, "link scale {scale} not in (0, 1]");
+        self.degraded_links.push((node, scale));
+        self
+    }
+
+    pub fn with_straggler(mut self, node: usize, scale: f64) -> Self {
+        assert!(scale > 0.0 && scale <= 1.0, "node scale {scale} not in (0, 1]");
+        self.stragglers.push((node, scale));
+        self
+    }
+
+    /// Combined Tx-bandwidth multiplier for `node`.
+    pub fn link_scale(&self, node: usize) -> f64 {
+        self.degraded_links
+            .iter()
+            .filter(|(n, _)| *n == node)
+            .map(|(_, s)| s)
+            .product()
+    }
+
+    /// Combined PCIe/adder speed multiplier for `node`.
+    pub fn node_scale(&self, node: usize) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|(n, _)| *n == node)
+            .map(|(_, s)| s)
+            .product()
+    }
+}
+
 /// Training workload description (paper Sec. III: L-layer MLP, symmetric
 /// M×M layers, mini-batch B per node).
 #[derive(Clone, Copy, Debug)]
@@ -259,6 +307,18 @@ mod tests {
         let n400 = NicHwParams::arria10_at(400.0);
         assert!((n100.add_flops / n40.add_flops - 2.0).abs() < 1e-9);
         assert!((n400.add_flops / n40.add_flops - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cluster_faults_scale_by_node() {
+        let f = ClusterFaults::none()
+            .with_degraded_link(2, 0.25)
+            .with_straggler(1, 0.5)
+            .with_straggler(1, 0.5);
+        assert_eq!(f.link_scale(2), 0.25);
+        assert_eq!(f.link_scale(0), 1.0);
+        assert_eq!(f.node_scale(1), 0.25); // stacked faults multiply
+        assert_eq!(f.node_scale(2), 1.0);
     }
 
     #[test]

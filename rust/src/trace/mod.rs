@@ -5,6 +5,42 @@
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
+/// Sweep-line maximum of simultaneously-open `(start, end)` intervals.
+/// Empty intervals are ignored, and intervals that merely touch (one ends
+/// exactly where the next starts) do not count as overlapping.
+pub fn max_overlap(intervals: impl IntoIterator<Item = (f64, f64)>) -> usize {
+    // (+1 at start, -1 at end); sort ends before starts at equal time
+    let mut events: Vec<(f64, i32)> = Vec::new();
+    for (start, end) in intervals {
+        if end > start {
+            events.push((start, 1));
+            events.push((end, -1));
+        }
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut open = 0i32;
+    let mut max = 0i32;
+    for (_, delta) in events {
+        open += delta;
+        max = max.max(open);
+    }
+    max as usize
+}
+
+fn check_serial(lane: &str, mut spans: Vec<(f64, f64, &str)>) -> Result<(), String> {
+    spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for w in spans.windows(2) {
+        // allow exact touching (end == start)
+        if w[1].0 < w[0].1 - 1e-12 {
+            return Err(format!(
+                "lane '{lane}': '{}' [{:.6},{:.6}] overlaps '{}' [{:.6},{:.6}]",
+                w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// One span on a lane.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Span {
@@ -58,6 +94,41 @@ impl Trace {
             .sum()
     }
 
+    /// Like [`Trace::time_in`] restricted to one lane.
+    pub fn lane_time_in(&self, lane: &str, prefix: &str) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.lane == lane && s.name.starts_with(prefix))
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Lane names in first-appearance order.
+    pub fn lanes(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for s in &self.spans {
+            if !out.contains(&s.lane.as_str()) {
+                out.push(&s.lane);
+            }
+        }
+        out
+    }
+
+    /// Maximum number of simultaneously-open spans whose name starts with
+    /// `prefix`, across all lanes.  Spans that merely touch (one ends
+    /// exactly where another starts) do not count as concurrent.  This is
+    /// how the unified engine's overlap claims are checked: e.g.
+    /// `max_concurrent("ar") >= 2` means at least two all-reduces were in
+    /// flight at once.
+    pub fn max_concurrent(&self, prefix: &str) -> usize {
+        max_overlap(
+            self.spans
+                .iter()
+                .filter(|s| s.name.starts_with(prefix))
+                .map(|s| (s.start, s.end)),
+        )
+    }
+
     /// Verify no two spans on the same lane overlap (schedule invariant).
     pub fn check_no_lane_overlap(&self) -> Result<(), String> {
         let mut by_lane: BTreeMap<&str, Vec<(f64, f64, &str)>> = BTreeMap::new();
@@ -67,19 +138,24 @@ impl Trace {
                 .or_default()
                 .push((s.start, s.end, &s.name));
         }
-        for (lane, mut spans) in by_lane {
-            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            for w in spans.windows(2) {
-                // allow exact touching (end == start)
-                if w[1].0 < w[0].1 - 1e-12 {
-                    return Err(format!(
-                        "lane '{lane}': '{}' [{:.6},{:.6}] overlaps '{}' [{:.6},{:.6}]",
-                        w[0].2, w[0].0, w[0].1, w[1].2, w[1].0, w[1].1
-                    ));
-                }
-            }
+        for (lane, spans) in by_lane {
+            check_serial(lane, spans)?;
         }
         Ok(())
+    }
+
+    /// Verify one specific lane is serial.  Unlike
+    /// [`Trace::check_no_lane_overlap`] this is usable on unified-engine
+    /// traces, whose collective lanes overlap *by design* while the worker
+    /// lanes must not.
+    pub fn check_lane_serial(&self, lane: &str) -> Result<(), String> {
+        let spans: Vec<(f64, f64, &str)> = self
+            .spans
+            .iter()
+            .filter(|s| s.lane == lane)
+            .map(|s| (s.start, s.end, s.name.as_str()))
+            .collect();
+        check_serial(lane, spans)
     }
 
     /// Render an ASCII Gantt chart (the Fig. 3b visualization): one row
@@ -186,6 +262,36 @@ mod tests {
         t.add("w0", "bwd", 0.0, 2.0);
         t.add("nic0", "ar", 0.5, 1.5); // the whole point of the paper
         assert!(t.check_no_lane_overlap().is_ok());
+    }
+
+    #[test]
+    fn max_concurrent_counts_overlap() {
+        let mut t = Trace::new();
+        t.add("nic", "ar[0]", 0.0, 4.0);
+        t.add("nic", "ar[1]", 1.0, 3.0);
+        t.add("nic", "ar[2]", 2.0, 5.0);
+        t.add("worker", "bwd[0]", 0.0, 10.0); // different prefix: ignored
+        assert_eq!(t.max_concurrent("ar"), 3);
+        assert_eq!(t.max_concurrent("bwd"), 1);
+        assert_eq!(t.max_concurrent("upd"), 0);
+    }
+
+    #[test]
+    fn touching_spans_are_not_concurrent() {
+        let mut t = Trace::new();
+        t.add("nic", "ar[0]", 0.0, 1.0);
+        t.add("nic", "ar[1]", 1.0, 2.0);
+        assert_eq!(t.max_concurrent("ar"), 1);
+    }
+
+    #[test]
+    fn lane_scoped_helpers() {
+        let mut t = Trace::new();
+        t.add("j0/worker", "wait-ar[3]", 0.0, 1.0);
+        t.add("j1/worker", "wait-ar[2]", 0.0, 5.0);
+        assert_eq!(t.lane_time_in("j0/worker", "wait-ar"), 1.0);
+        assert_eq!(t.lane_time_in("j1/worker", "wait-ar"), 5.0);
+        assert_eq!(t.lanes(), vec!["j0/worker", "j1/worker"]);
     }
 
     #[test]

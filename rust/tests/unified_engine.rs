@@ -1,0 +1,263 @@
+// Integration tests for the unified cluster engine refactor:
+//  * data-path property tests: every all-reduce algorithm == serial sum
+//    for random non-power-of-two node counts and ragged-tail gradients;
+//  * exact single-ring parity between the event engine and the serialized
+//    chunk-level NIC simulation (with and without fault injection);
+//  * determinism: identical specs -> identical traces;
+//  * multi-tenant contention and cluster-wide fault propagation;
+//  * per-layer algorithm selection.
+
+use ai_smartnic::analytic::model::SystemKind;
+use ai_smartnic::bfp::BfpCodec;
+use ai_smartnic::cluster::{run_scenario, ClusterSpec, CollectiveAlgo, JobSpec};
+use ai_smartnic::collective::algorithms::{binomial_allreduce, rabenseifner_allreduce};
+use ai_smartnic::collective::data::{ring_allreduce, serial_sum};
+use ai_smartnic::collective::Scheme;
+use ai_smartnic::nic::{simulate_ring_allreduce, NicConfig};
+use ai_smartnic::prop::{forall, gens};
+use ai_smartnic::sysconfig::{ClusterFaults, SystemParams, Workload};
+use ai_smartnic::util::rng::Rng;
+
+fn make_bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.normal() as f32).collect())
+        .collect()
+}
+
+#[test]
+fn prop_all_algorithms_match_serial_on_nonpow2_ragged_shapes() {
+    forall(
+        &gens::pair(gens::usize_in(3..=12), gens::usize_in(1..=400)),
+        60,
+        |&(n0, len0)| {
+            // force a non-power-of-two worker count and a ragged tail
+            // (len not divisible by n, so the last ring chunk is short)
+            let n = if n0.is_power_of_two() { n0 + 1 } else { n0 };
+            let len = if len0 % n == 0 { len0 + 1 } else { len0 };
+            let want = serial_sum(&make_bufs(n, len, (n * 131 + len) as u64));
+            let close = |bufs: &[Vec<f32>]| {
+                bufs.iter().all(|b| {
+                    b.iter()
+                        .zip(&want)
+                        .all(|(g, w)| (g - w).abs() <= w.abs() * 1e-5 + 1e-5)
+                })
+            };
+            let mut a = make_bufs(n, len, (n * 131 + len) as u64);
+            binomial_allreduce(&mut a);
+            let mut b = make_bufs(n, len, (n * 131 + len) as u64);
+            rabenseifner_allreduce(&mut b);
+            let mut c = make_bufs(n, len, (n * 131 + len) as u64);
+            ring_allreduce(&mut c, None);
+            close(&a) && close(&b) && close(&c)
+        },
+    );
+}
+
+fn one_layer_job(
+    sys: SystemParams,
+    n: usize,
+    hidden: usize,
+    bfp: bool,
+    faults: ClusterFaults,
+) -> f64 {
+    let w = Workload {
+        layers: 1,
+        hidden,
+        batch_per_node: 64,
+    };
+    let spec = ClusterSpec::new(sys, n).with_faults(faults).with_job(JobSpec::new(
+        "ring",
+        SystemKind::SmartNic { bfp },
+        w,
+        (0..n).collect(),
+    ));
+    let out = run_scenario(&spec);
+    assert_eq!(out.jobs[0].ar_count, 1);
+    out.jobs[0].mean_ar
+}
+
+#[test]
+fn single_ring_matches_serialized_nic_des_exactly() {
+    // an uncontended event-driven ring performs the identical serve/max
+    // arithmetic as nic::simulate_ring_allreduce — the timings must agree
+    // to float precision, across node counts and compression
+    let sys = SystemParams::smartnic_40g();
+    for n in [2usize, 3, 4, 6, 8] {
+        for bfp in [false, true] {
+            let hidden = 512;
+            let cfg = NicConfig::new(sys, if bfp { Some(BfpCodec::bfp16()) } else { None });
+            let serialized = simulate_ring_allreduce(&cfg, n, hidden * hidden).t_total;
+            let unified = one_layer_job(sys, n, hidden, bfp, ClusterFaults::none());
+            let err = (serialized - unified).abs() / serialized;
+            assert!(
+                err < 1e-9,
+                "n={n} bfp={bfp}: serialized {serialized} unified {unified}"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_ring_matches_serialized_under_faults() {
+    let sys = SystemParams::smartnic_40g();
+    let hidden = 1024;
+    let cfg = NicConfig::new(sys, None)
+        .with_degraded_link(2, 0.25)
+        .with_straggler(4, 0.5);
+    let serialized = simulate_ring_allreduce(&cfg, 6, hidden * hidden).t_total;
+    let faults = ClusterFaults::none()
+        .with_degraded_link(2, 0.25)
+        .with_straggler(4, 0.5);
+    let unified = one_layer_job(sys, 6, hidden, false, faults);
+    let err = (serialized - unified).abs() / serialized;
+    assert!(err < 1e-9, "serialized {serialized} unified {unified}");
+}
+
+fn two_job_spec(batch: usize) -> ClusterSpec {
+    let sys = SystemParams::smartnic_40g();
+    let w = Workload {
+        layers: 8,
+        hidden: 1024,
+        batch_per_node: batch,
+    };
+    let kind = SystemKind::SmartNic { bfp: false };
+    ClusterSpec::new(sys, 4)
+        .with_job(JobSpec::new("j0", kind, w, (0..4).collect()))
+        .with_job(JobSpec::new("j1", kind, w, (0..4).collect()))
+}
+
+#[test]
+fn unified_engine_is_deterministic() {
+    let a = run_scenario(&two_job_spec(64));
+    let b = run_scenario(&two_job_spec(64));
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.trace.spans, b.trace.spans);
+    for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(ja.t_end, jb.t_end);
+        assert_eq!(ja.mean_ar, jb.mean_ar);
+    }
+}
+
+#[test]
+fn multi_tenant_jobs_contend_for_the_fabric() {
+    let sys = SystemParams::smartnic_40g();
+    let w = Workload::paper_mlp(448);
+    let kind = SystemKind::SmartNic { bfp: false };
+    let solo = run_scenario(
+        &ClusterSpec::new(sys, 6).with_job(JobSpec::new("solo", kind, w, (0..6).collect())),
+    );
+    let pair = run_scenario(
+        &ClusterSpec::new(sys, 6)
+            .with_job(JobSpec::new("j0", kind, w, (0..6).collect()))
+            .with_job(JobSpec::new("j1", kind, w, (0..6).collect())),
+    );
+    let t_solo = solo.jobs[0].duration;
+    for j in &pair.jobs {
+        assert!(
+            j.duration > t_solo * 1.05,
+            "{}: {} not slower than isolated {}",
+            j.name,
+            j.duration,
+            t_solo
+        );
+        assert!(
+            j.duration < t_solo * 2.5,
+            "{}: {} implausibly slow vs isolated {}",
+            j.name,
+            j.duration,
+            t_solo
+        );
+    }
+    // the fabric's links are busier than with one tenant
+    assert!(pair.eth_util > solo.eth_util * 1.02);
+}
+
+#[test]
+fn straggler_degrades_every_job() {
+    let healthy = run_scenario(&two_job_spec(448));
+    let faulty = run_scenario(
+        &two_job_spec(448).with_faults(ClusterFaults::none().with_straggler(1, 0.2)),
+    );
+    for (h, f) in healthy.jobs.iter().zip(&faulty.jobs) {
+        assert!(
+            f.duration > h.duration * 1.1,
+            "{}: faulty {} vs healthy {}",
+            f.name,
+            f.duration,
+            h.duration
+        );
+    }
+}
+
+#[test]
+fn per_layer_algorithm_selection_runs_and_costs_more_than_ring() {
+    let sys = SystemParams::smartnic_40g();
+    let w = Workload {
+        layers: 4,
+        hidden: 1024,
+        batch_per_node: 128,
+    };
+    let kind = SystemKind::SmartNic { bfp: false };
+    let ring_only = run_scenario(
+        &ClusterSpec::new(sys, 4).with_job(JobSpec::new("ring", kind, w, (0..4).collect())),
+    );
+    let mixed = run_scenario(
+        &ClusterSpec::new(sys, 4).with_job(
+            JobSpec::new("mixed", kind, w, (0..4).collect()).with_layer_algos(vec![
+                CollectiveAlgo::NicRing,
+                CollectiveAlgo::NicBinomial,
+                CollectiveAlgo::NicRabenseifner,
+                CollectiveAlgo::NicRing,
+            ]),
+        ),
+    );
+    assert_eq!(mixed.jobs[0].ar_count, 4);
+    assert!(mixed.jobs[0].duration.is_finite());
+    // binomial moves ~2·lg(n)·R on the wire vs the ring's 2(N-1)/N·R:
+    // the mixed schedule cannot be faster than ring-everywhere
+    assert!(mixed.jobs[0].duration >= ring_only.jobs[0].duration * 0.999);
+}
+
+#[test]
+fn host_jobs_share_comm_cores() {
+    // two naive-baseline jobs on the same hosts: the shared comm servers
+    // serialize their software all-reduces
+    let sys = SystemParams::baseline_100g();
+    let w = Workload {
+        layers: 4,
+        hidden: 2048,
+        batch_per_node: 448,
+    };
+    let kind = SystemKind::BaselineNaive { scheme: Scheme::Ring };
+    let solo = run_scenario(
+        &ClusterSpec::new(sys, 4).with_job(JobSpec::new("solo", kind, w, (0..4).collect())),
+    );
+    let pair = run_scenario(
+        &ClusterSpec::new(sys, 4)
+            .with_job(JobSpec::new("j0", kind, w, (0..4).collect()))
+            .with_job(JobSpec::new("j1", kind, w, (0..4).collect())),
+    );
+    for j in &pair.jobs {
+        assert!(j.duration > solo.jobs[0].duration);
+    }
+}
+
+#[test]
+fn concurrent_ars_and_wait_accounting() {
+    // B=448 raw at 6 nodes: all-reduce latency exceeds per-segment
+    // compute, so the trace must show overlapping ARs and nonzero waits
+    let sys = SystemParams::smartnic_40g();
+    let w = Workload::paper_mlp(448);
+    let out = run_scenario(&ClusterSpec::new(sys, 6).with_job(JobSpec::new(
+        "j0",
+        SystemKind::SmartNic { bfp: false },
+        w,
+        (0..6).collect(),
+    )));
+    assert!(out.trace.max_concurrent("ar") >= 2);
+    assert!(out.jobs[0].max_inflight >= 2);
+    assert!(out.jobs[0].exposed_wait > 0.0);
+    // worker lane itself must stay serial even while ARs overlap
+    out.trace.check_lane_serial("j0/worker").unwrap();
+}

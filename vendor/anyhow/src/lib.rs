@@ -1,0 +1,109 @@
+//! Minimal offline stand-in for the `anyhow` crate: a string-backed error
+//! type, the `anyhow!` macro, and the `Context` extension trait — exactly
+//! the subset this workspace uses.  `{e}`, `{e:?}` and `{e:#}` all render
+//! the full context chain.
+
+use std::fmt;
+
+/// A string-backed error with an optional context chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a failing `Result`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn macro_formats() {
+        let name = "x";
+        let e = anyhow!("bad {name}: {}", 7);
+        assert_eq!(e.to_string(), "bad x: 7");
+    }
+
+    #[test]
+    fn question_mark_converts_io() {
+        fn inner() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("gone"));
+    }
+
+    #[test]
+    fn with_context_chains() {
+        let e = io_fail().with_context(|| "reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: gone");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+}
