@@ -3,7 +3,10 @@
 //!
 //!   T_F_l  = 2 M_l² B / P_worker          T_B_l = 4 M_l² B / P_worker
 //!   R_l    = b · N · ⌈M_l² / N⌉                       (bits, b = 32)
-//!   T_ring = R_l · 2(N−1) / (N · α·BW_eth · β)
+//!   T_ring = R_l · 2(N−1) / (N · α·BW_eth·β · c)
+//!            (α·BW_eth·β = `NetParams::effective_bw`, the same
+//!            wire-protocol-derated rate the serialized NIC DES and the
+//!            unified fabric give their Tx links; c = BFP compression)
 //!   T_add  = R_l · 2(N−1) / (N · P_FPGA · b)
 //!   T_mem  = 2 R_l / BW_pcie
 //!   T_AR_l = max(T_ring, T_add, T_mem)
@@ -86,20 +89,24 @@ fn t_update_layer(sys: &SystemParams, w: &Workload) -> f64 {
     3.0 * w.grad_bytes_per_layer() / sys.worker.update_membw
 }
 
-/// Smart-NIC all-reduce time for one layer (the Sec. IV-C max of three).
-pub fn smartnic_ar_time(sys: &SystemParams, w: &Workload, n: usize, bfp: bool) -> f64 {
+/// Sec. IV-C T_AR for a raw element count (not tied to a square layer) —
+/// the single copy of the formula, shared with `analytic::validate`.
+pub fn smartnic_ar_time_elems(sys: &SystemParams, elems: usize, n: usize, bfp: bool) -> f64 {
     if n <= 1 {
         return 0.0;
     }
     let nf = n as f64;
     let b_bits = 32.0;
-    let r_bits = b_bits * nf * (w.grad_elems_per_layer() as f64 / nf).ceil();
-    let beta = if bfp {
+    let r_bits = b_bits * nf * (elems as f64 / nf).ceil();
+    let compression = if bfp {
         BfpCodec::bfp16().compression_ratio()
     } else {
         1.0
     };
-    let t_ring = r_bits * 2.0 * (nf - 1.0) / (nf * sys.net.alpha * sys.net.eth_bw * 8.0 * beta);
+    // α·BW_eth·β via NetParams::effective_bw — the same wire-protocol
+    // efficiency the event fabrics apply to their Tx links, so the closed
+    // form and both simulators price the wire identically
+    let t_ring = r_bits * 2.0 * (nf - 1.0) / (nf * sys.net.effective_bw() * 8.0 * compression);
     let t_add = r_bits * 2.0 * (nf - 1.0) / (nf * sys.nic.add_flops * b_bits);
     // Sec. IV-C's T_mem = 2R/BW_pcie.  The DES shows the dependency
     // structure precisely: the full R must come down before the last
@@ -108,6 +115,11 @@ pub fn smartnic_ar_time(sys: &SystemParams, w: &Workload, n: usize, bfp: bool) -
     // to the paper's 2R/BW_pcie as N grows.
     let t_mem = r_bits * (2.0 * nf - 1.0) / (nf * sys.nic.pcie_bw * 8.0);
     t_ring.max(t_add).max(t_mem) + sys.nic_request_overhead
+}
+
+/// Smart-NIC all-reduce time for one layer (the Sec. IV-C max of three).
+pub fn smartnic_ar_time(sys: &SystemParams, w: &Workload, n: usize, bfp: bool) -> f64 {
+    smartnic_ar_time_elems(sys, w.grad_elems_per_layer(), n, bfp)
 }
 
 /// Compute the per-layer primitive times for a system variant.

@@ -6,8 +6,10 @@
 
 use crate::bfp::BfpCodec;
 use crate::nic::{simulate_ring_allreduce, NicConfig};
-use crate::sysconfig::{SystemParams, Workload};
+use crate::sysconfig::SystemParams;
 use crate::util::stats::rel_err;
+
+pub use crate::analytic::model::smartnic_ar_time_elems;
 
 /// One validation point: analytic vs simulated all-reduce time.
 #[derive(Clone, Copy, Debug)]
@@ -33,32 +35,6 @@ pub fn validate_ar(sys: &SystemParams, nodes: usize, elems: usize, bfp: bool) ->
         t_sim,
         rel_err: rel_err(t_analytic, t_sim),
     }
-}
-
-/// Sec. IV-C T_AR for a raw element count (not tied to a square layer).
-pub fn smartnic_ar_time_elems(sys: &SystemParams, elems: usize, n: usize, bfp: bool) -> f64 {
-    let w = Workload {
-        layers: 1,
-        hidden: 1, // shape carrier only; we inject the element count below
-        batch_per_node: 1,
-    };
-    let _ = &w;
-    if n <= 1 {
-        return 0.0;
-    }
-    let nf = n as f64;
-    let b_bits = 32.0;
-    let r_bits = b_bits * nf * (elems as f64 / nf).ceil();
-    let beta = if bfp {
-        BfpCodec::bfp16().compression_ratio()
-    } else {
-        1.0
-    };
-    let t_ring = r_bits * 2.0 * (nf - 1.0) / (nf * sys.net.alpha * sys.net.eth_bw * 8.0 * beta);
-    let t_add = r_bits * 2.0 * (nf - 1.0) / (nf * sys.nic.add_flops * b_bits);
-    // refined T_mem (see analytic::model::smartnic_ar_time)
-    let t_mem = r_bits * (2.0 * nf - 1.0) / (nf * sys.nic.pcie_bw * 8.0);
-    t_ring.max(t_add).max(t_mem) + sys.nic_request_overhead
 }
 
 /// Sweep a grid and return all validation points.

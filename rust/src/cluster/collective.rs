@@ -691,8 +691,15 @@ fn begin_host_round(sim: &mut ClusterSim, st: &mut ClusterState, cid: Collective
         h.round_pending = ranks.len();
     }
     for &node in &ranks {
-        let served = st.fabric.nodes[node].comm.serve(now, work_secs);
-        sim.schedule_at(served + step_cost, move |sim, st| host_round_done(sim, st, cid));
+        // the per-step software cost occupies the comm core (an MPI
+        // progress thread spins through matching and the network hop, it
+        // does not yield), so it is served — not just waited out.  An
+        // uncontended run still reproduces the closed form exactly, while
+        // concurrent collectives cannot hide each other's step overhead
+        // on a shared core, matching the closed form's serial-round
+        // assumption.
+        let served = st.fabric.nodes[node].comm.serve(now, work_secs + step_cost);
+        sim.schedule_at(served, move |sim, st| host_round_done(sim, st, cid));
     }
 }
 

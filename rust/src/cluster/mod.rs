@@ -37,6 +37,7 @@ use crate::netsim::fabric::Fabric;
 use crate::sysconfig::SystemParams;
 use crate::trace::Trace;
 
+pub use crate::netsim::topology::Topology;
 pub use job::{JobSpec, WorkerTask};
 pub use scenario::{run_scenario, ClusterSpec, JobResult, ScenarioOutput};
 

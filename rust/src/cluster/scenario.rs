@@ -1,17 +1,21 @@
 //! Multi-job cluster scenarios: N training jobs on one switch fabric.
 //!
-//! `run_scenario` builds the shared [`Fabric`], compiles every job's
-//! worker schedule, seeds the calendar queue with the jobs' start events
-//! and runs the clock dry.  Jobs that share nodes contend for those
-//! nodes' Tx links, PCIe, adders and comm cores; all jobs contend for
-//! switch egress ports.  Straggler / degraded-link injection lives in the
-//! fabric, so a fault degrades every in-flight collective of every job
-//! that touches the faulty node — not just a single ring.
+//! `run_scenario` builds the shared [`Fabric`] for the spec's
+//! [`Topology`] (flat crossbar by default, leaf–spine via
+//! [`ClusterSpec::with_topology`]), compiles every job's worker schedule,
+//! seeds the calendar queue with the jobs' start events and runs the
+//! clock dry.  Jobs that share nodes contend for those nodes' Tx links,
+//! PCIe, adders and comm cores; all jobs contend for switch egress ports
+//! and — on a leaf–spine fabric — for the oversubscribed leaf uplinks.
+//! Straggler / degraded-link injection lives in the fabric, so a fault
+//! degrades every in-flight collective of every job that touches the
+//! faulty node — not just a single ring.
 
 use super::job::{JobRuntime, JobSpec};
 use super::{job, ClusterSim, ClusterState};
 use crate::netsim::engine::Sim;
 use crate::netsim::fabric::Fabric;
+use crate::netsim::topology::Topology;
 use crate::netsim::Time;
 use crate::sysconfig::{ClusterFaults, SystemParams};
 use crate::trace::Trace;
@@ -20,19 +24,26 @@ use crate::trace::Trace;
 #[derive(Clone, Debug)]
 pub struct ClusterSpec {
     pub sys: SystemParams,
-    pub nodes: usize,
+    pub topology: Topology,
     pub faults: ClusterFaults,
     pub jobs: Vec<JobSpec>,
 }
 
 impl ClusterSpec {
+    /// A flat (single non-blocking crossbar) cluster of `nodes` nodes.
     pub fn new(sys: SystemParams, nodes: usize) -> Self {
         Self {
             sys,
-            nodes,
+            topology: Topology::flat(nodes),
             faults: ClusterFaults::none(),
             jobs: Vec::new(),
         }
+    }
+
+    /// Replace the interconnect shape (e.g. an oversubscribed leaf–spine).
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
     }
 
     pub fn with_job(mut self, job: JobSpec) -> Self {
@@ -43,6 +54,11 @@ impl ClusterSpec {
     pub fn with_faults(mut self, faults: ClusterFaults) -> Self {
         self.faults = faults;
         self
+    }
+
+    /// Total physical nodes on the fabric.
+    pub fn nodes(&self) -> usize {
+        self.topology.nodes()
     }
 }
 
@@ -80,19 +96,19 @@ pub struct ScenarioOutput {
 /// Run `spec` to completion on the unified engine.  Fully deterministic:
 /// identical specs produce identical traces.
 pub fn run_scenario(spec: &ClusterSpec) -> ScenarioOutput {
-    assert!(spec.nodes >= 1, "cluster needs at least one node");
+    let nodes = spec.nodes();
+    assert!(nodes >= 1, "cluster needs at least one node");
     assert!(!spec.jobs.is_empty(), "scenario needs at least one job");
     for &(node, _) in spec.faults.degraded_links.iter().chain(&spec.faults.stragglers) {
         assert!(
-            node < spec.nodes,
-            "fault on node {node} but the fabric has only {} nodes",
-            spec.nodes
+            node < nodes,
+            "fault on node {node} but the fabric has only {nodes} nodes"
         );
     }
     for j in &spec.jobs {
-        let mut seen = vec![false; spec.nodes];
+        let mut seen = vec![false; nodes];
         for &r in &j.ranks {
-            assert!(r < spec.nodes, "job '{}': rank {r} outside the fabric", j.name);
+            assert!(r < nodes, "job '{}': rank {r} outside the fabric", j.name);
             assert!(!seen[r], "job '{}': duplicate rank {r}", j.name);
             seen[r] = true;
         }
@@ -100,7 +116,7 @@ pub fn run_scenario(spec: &ClusterSpec) -> ScenarioOutput {
 
     let mut state = ClusterState {
         sys: spec.sys,
-        fabric: Fabric::new(&spec.sys, spec.nodes, &spec.faults),
+        fabric: Fabric::with_topology(&spec.sys, spec.topology, &spec.faults),
         trace: Trace::new(),
         jobs: spec
             .jobs
@@ -141,8 +157,8 @@ pub fn run_scenario(spec: &ClusterSpec) -> ScenarioOutput {
             }
         })
         .collect();
-    let port_util = (0..spec.nodes)
-        .map(|p| state.fabric.switch.port_utilization(p, makespan))
+    let port_util = (0..nodes)
+        .map(|p| state.fabric.port_utilization(p, makespan))
         .collect();
     ScenarioOutput {
         jobs,
@@ -226,6 +242,60 @@ mod tests {
         let out = run_scenario(&spec);
         assert!(out.jobs[0].t_start == 1.0);
         assert!(out.jobs[0].t_end > 1.0);
+    }
+
+    #[test]
+    fn leaf_spine_strided_ring_pays_the_oversubscription_penalty() {
+        let sys = SystemParams::smartnic_40g();
+        let w = Workload {
+            layers: 2,
+            hidden: 1024,
+            batch_per_node: 64,
+        };
+        let kind = SystemKind::SmartNic { bfp: false };
+        // 2 leaves x 4 nodes, 4:1 tapered: the uplink bundle carries
+        // exactly one port's worth — enough for a contiguous ring's single
+        // crossing flow per leaf, 4x short for the strided ring
+        let topo = Topology::leaf_spine(2, 4, 4.0);
+        let flat = run_scenario(&ClusterSpec::new(sys, 8).with_job(JobSpec::new(
+            "flat",
+            kind,
+            w,
+            (0..8).collect(),
+        )));
+        let contiguous = run_scenario(
+            &ClusterSpec::new(sys, 8).with_topology(topo).with_job(JobSpec::new(
+                "contig",
+                kind,
+                w,
+                topo.contiguous_ranks(8),
+            )),
+        );
+        let strided = run_scenario(
+            &ClusterSpec::new(sys, 8).with_topology(topo).with_job(JobSpec::new(
+                "strided",
+                kind,
+                w,
+                topo.strided_ranks(8),
+            )),
+        );
+        // placement decides whether the ring sees the spine at all: the
+        // strided ring crosses the 4:1 uplinks on every edge
+        assert!(
+            strided.jobs[0].duration > contiguous.jobs[0].duration * 1.5,
+            "strided {} vs contiguous {}",
+            strided.jobs[0].duration,
+            contiguous.jobs[0].duration
+        );
+        // a contiguous ring's one crossing flow per leaf fits the bundle
+        // exactly: it pays only extra spine latency — within a few
+        // percent of flat
+        assert!(
+            contiguous.jobs[0].duration < flat.jobs[0].duration * 1.10,
+            "contiguous {} vs flat {}",
+            contiguous.jobs[0].duration,
+            flat.jobs[0].duration
+        );
     }
 
     #[test]

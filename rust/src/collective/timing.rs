@@ -18,8 +18,11 @@ pub struct HostNet {
 }
 
 impl HostNet {
+    /// Achievable software all-reduce bandwidth: the wire's α·β-derated
+    /// line rate ([`crate::sysconfig::NetParams::effective_bw`]) capped by
+    /// what the host comm cores can push.
     pub fn effective_bw(&self) -> f64 {
-        (self.net.eth_bw * self.net.alpha).min(self.comm_bw_cap)
+        self.net.effective_bw().min(self.comm_bw_cap)
     }
 
     /// Per-step fixed cost: software overhead + one network hop.

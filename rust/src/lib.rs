@@ -24,7 +24,9 @@
 //! Everything dynamic runs as events on a single calendar-queue executive
 //! ([`netsim::engine::Sim`]) over one shared resource world
 //! ([`netsim::fabric::Fabric`]: per-node Tx links, PCIe lanes, FPGA
-//! adders, host comm cores, plus a cut-through switch):
+//! adders, host comm cores, plus a topology-shaped cut-through
+//! interconnect — one flat crossbar or an oversubscribed leaf–spine
+//! fabric, per [`netsim::topology::Topology`]):
 //!
 //! * [`cluster::collective`] — the NIC ring datapath (PCIe fetch → FP32
 //!   adder → Tx → switch → writeback, segment-pipelined), NIC-offloaded

@@ -14,19 +14,22 @@
 //!   train     real data-parallel training through PJRT artifacts
 //!   sim       one simulated iteration with full trace output
 //!   cluster   multi-job scenarios on the unified event engine
+//!   scale     hierarchical scaling sweep (6..512 nodes), BENCH_scaling.json
 //!   bfp       BFP design-space sweep (block size x mantissa bits)
 //!   all       fig2a+fig2b+table1+fig4a+fig4b+validate, write results/
 //! ```
 
 use ai_smartnic::analytic::model::SystemKind;
 use ai_smartnic::bfp::analysis;
-use ai_smartnic::cluster::{run_scenario, ClusterSpec, JobSpec};
+use ai_smartnic::cluster::{run_scenario, ClusterSpec, JobSpec, Topology};
 use ai_smartnic::collective::Scheme;
 use ai_smartnic::coordinator::{
     simulate_iteration, simulate_iteration_unified, ArBackend, Trainer, TrainerConfig,
 };
 use ai_smartnic::sysconfig::ClusterFaults;
-use ai_smartnic::experiments::{ablate, fig2a, fig2b, fig4a, fig4b, table1, validate, write_result};
+use ai_smartnic::experiments::{
+    ablate, fig2a, fig2b, fig4a, fig4b, scaling, table1, validate, write_result,
+};
 use ai_smartnic::log_info;
 use ai_smartnic::sysconfig::{SystemParams, Workload};
 use ai_smartnic::util::cli::Command;
@@ -34,7 +37,7 @@ use ai_smartnic::util::logger::{set_level, Level};
 use ai_smartnic::util::rng::Rng;
 use ai_smartnic::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|bfp|ablate|all> [--help]";
+const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|scale|bfp|ablate|all> [--help]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -53,6 +56,7 @@ fn main() {
         "train" => cmd_train(&rest),
         "sim" => cmd_sim(&rest),
         "cluster" => cmd_cluster(&rest),
+        "scale" => cmd_scale(&rest),
         "bfp" => cmd_bfp(&rest),
         "ablate" => cmd_ablate(&rest),
         "all" => cmd_all(&rest),
@@ -350,8 +354,11 @@ fn cmd_cluster(rest: &[String]) -> i32 {
         .opt("hidden", "2048", "layer width")
         .opt("system", "smartnic+bfp", "baseline-naive | baseline | smartnic | smartnic+bfp")
         .opt("stagger", "0", "start-time offset between jobs (seconds)")
-        .opt("degrade-link", "", "node:scale — degrade one Tx uplink (e.g. 2:0.25)")
-        .opt("straggler", "", "node:scale — slow one node's PCIe + adder")
+        .opt("leaves", "1", "leaf switches (1 = flat crossbar)")
+        .opt("oversub", "1", "leaf uplink oversubscription factor")
+        .opt("placement", "contiguous", "rank placement: contiguous | strided")
+        .opt("degrade-link", "", "node:scale — degrade one link (Tx + egress toward it)")
+        .opt("straggler", "", "node:scale — slow one node's PCIe + adder + comm cores")
         .opt("trace-out", "", "write chrome trace JSON to this path")
         .flag("gantt", "render an ASCII Gantt of every lane");
     let Ok(a) = parse(c, rest) else { return 2 };
@@ -397,10 +404,37 @@ fn cmd_cluster(rest: &[String]) -> i32 {
         };
     }
 
-    let mut spec = ClusterSpec::new(sys, nodes).with_faults(faults.clone());
+    let leaves = a.get_usize("leaves", 1);
+    let oversub = a.get_f64("oversub", 1.0);
+    if !(oversub > 0.0 && oversub.is_finite()) {
+        eprintln!("--oversub must be a positive finite factor");
+        return 2;
+    }
+    let topology = if leaves <= 1 {
+        Topology::flat(nodes)
+    } else {
+        if nodes % leaves != 0 {
+            eprintln!("--leaves {leaves} must divide --nodes {nodes}");
+            return 2;
+        }
+        Topology::leaf_spine(leaves, nodes / leaves, oversub)
+    };
+    let placement = a.get_str("placement", "contiguous");
+    let ranks = match placement.as_str() {
+        "contiguous" => topology.contiguous_ranks(nodes),
+        "strided" => topology.strided_ranks(nodes),
+        other => {
+            eprintln!("unknown placement '{other}' (contiguous|strided)");
+            return 2;
+        }
+    };
+
+    let mut spec = ClusterSpec::new(sys, nodes)
+        .with_topology(topology)
+        .with_faults(faults.clone());
     for j in 0..n_jobs {
         spec = spec.with_job(
-            JobSpec::new(&format!("j{j}"), kind, w, (0..nodes).collect())
+            JobSpec::new(&format!("j{j}"), kind, w, ranks.clone())
                 .starting_at(stagger * j as f64),
         );
     }
@@ -410,8 +444,9 @@ fn cmd_cluster(rest: &[String]) -> i32 {
         "job", "duration (ms)", "mean AR (ms)", "max ARs in flight", "exposed wait (ms)",
     ])
     .with_title(&format!(
-        "{n_jobs} x {} on {nodes} shared nodes — unified engine",
-        kind.name()
+        "{n_jobs} x {} on {nodes} shared nodes ({placement}, {}) — unified engine",
+        kind.name(),
+        topology.describe()
     ));
     for j in &out.jobs {
         t.row(&[
@@ -431,8 +466,9 @@ fn cmd_cluster(rest: &[String]) -> i32 {
     // isolated reference: the same job alone on the same (faulty) fabric
     let solo = run_scenario(
         &ClusterSpec::new(sys, nodes)
+            .with_topology(topology)
             .with_faults(faults)
-            .with_job(JobSpec::new("solo", kind, w, (0..nodes).collect())),
+            .with_job(JobSpec::new("solo", kind, w, ranks.clone())),
     );
     let slow = out.jobs.iter().map(|j| j.duration).fold(0.0, f64::max)
         / solo.jobs[0].duration.max(1e-12);
@@ -449,6 +485,66 @@ fn cmd_cluster(rest: &[String]) -> i32 {
     if !path.is_empty() {
         std::fs::write(&path, out.trace.to_chrome_json()).unwrap();
         println!("trace written to {path} (open in chrome://tracing)");
+    }
+    0
+}
+
+fn cmd_scale(rest: &[String]) -> i32 {
+    let c = Command::new(
+        "scale",
+        "hierarchical scaling sweep: unified engine vs closed form, plus oversubscription",
+    )
+    .opt("nodes", "6,12,32,64,128,512", "node counts for the flat sweep")
+    .opt("batch", "448", "mini-batch per node")
+    .opt("leaves", "4", "leaf switches for the leaf-spine runs")
+    .opt("oversub", "4", "leaf uplink oversubscription factor")
+    .opt("out", "BENCH_scaling.json", "machine-readable output path")
+    .flag("no-json", "skip writing the benchmark file");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let cfg = scaling::ScalingConfig {
+        nodes: a.get_list("nodes").unwrap_or_default(),
+        batch: a.get_usize("batch", 448),
+        leaves: a.get_usize("leaves", 4),
+        oversubscription: a.get_f64("oversub", 4.0),
+    };
+    // get_list silently drops unparsable entries; a typo must not shrink
+    // the sweep while still reporting PASS
+    let raw_nodes = a.get_str("nodes", "");
+    let wanted = raw_nodes.split(',').filter(|s| !s.trim().is_empty()).count();
+    if cfg.nodes.len() != wanted {
+        eprintln!("--nodes contains invalid entries: '{raw_nodes}'");
+        return 2;
+    }
+    if cfg.nodes.is_empty() {
+        eprintln!("--nodes needs at least one node count");
+        return 2;
+    }
+    if !(cfg.oversubscription > 0.0 && cfg.oversubscription.is_finite()) {
+        eprintln!("--oversub must be a positive finite factor");
+        return 2;
+    }
+    let sweep = scaling::run_sweep(&cfg);
+    scaling::print_sweep(&sweep, &cfg);
+    let oversub = scaling::run_oversub(&cfg);
+    scaling::print_oversub(&oversub, &cfg);
+    if !a.flag("no-json") {
+        let path = a.get_str("out", "BENCH_scaling.json");
+        match scaling::write_bench(&path, &cfg, &sweep, &oversub) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    let worst = scaling::worst_err(&sweep);
+    if worst >= scaling::VALIDATE_TOL {
+        eprintln!(
+            "cross-validation FAILED: worst unified-vs-model deviation {:.1}% >= {:.0}%",
+            worst * 100.0,
+            scaling::VALIDATE_TOL * 100.0
+        );
+        return 1;
     }
     0
 }

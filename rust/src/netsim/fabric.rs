@@ -1,5 +1,5 @@
 //! The shared cluster fabric: every timing resource of every node plus the
-//! one switch, owned by a single struct so that *all* in-flight activity —
+//! interconnect, owned by a single struct so that *all* in-flight activity —
 //! concurrent all-reduces of one job, collectives of different jobs, host
 //! MPI traffic — contends on the same FIFO servers.
 //!
@@ -11,14 +11,27 @@
 //! * `comm` — the host's communication cores as a *normalized* rate-1.0
 //!   server: callers enqueue seconds of software all-reduce work, which
 //!   makes jobs with different effective bandwidths shareable on one FIFO.
+//!   A straggling node's comm server runs at `node_scale`, so host-MPI
+//!   rounds on that node drain proportionally slower.
 //!
-//! The switch uses cut-through forwarding ([`Switch::forward_cut_through`])
-//! so an uncontended hop costs exactly `hop_latency` — matching the
-//! serialized NIC DES, which models a hop as Tx serialization + latency —
-//! while flows that converge on one egress port queue-delay each other.
+//! The interconnect follows the [`Topology`]: the paper's single
+//! non-blocking crossbar, or a two-tier leaf–spine fabric where inter-leaf
+//! flows additionally reserve leaf-uplink and spine-egress bundle capacity
+//! (each an aggregated FIFO server sized by the oversubscription factor).
+//! Every stage uses cut-through reservations ([`Switch::forward_cut_through`]
+//! / [`Server::reserve`]) so an uncontended intra-leaf hop costs exactly
+//! `hop_latency` beyond the sender's Tx serialization — matching the
+//! serialized NIC DES — an uncontended inter-leaf hop costs three switch
+//! latencies, and converging flows queue-delay each other wherever their
+//! paths share a reservation stage.
+//!
+//! Fault injection is bidirectional: a degraded link scales both the
+//! victim's Tx uplink *and* the switch egress port toward the victim, so
+//! incast to a flapping port slows down just like traffic out of it.
 
 use super::link::{Link, Pcie, Server};
 use super::switch::Switch;
+use super::topology::Topology;
 use super::Time;
 use crate::sysconfig::{ClusterFaults, SystemParams};
 
@@ -28,37 +41,93 @@ pub struct NodeDevices {
     pub tx: Link,
     pub pcie: Pcie,
     pub adder: Server,
-    /// normalized (rate 1.0) host comm-core server; serves seconds of work
+    /// normalized (rate `node_scale`, 1.0 when healthy) host comm-core
+    /// server; serves seconds of software all-reduce work
     pub comm: Server,
 }
 
-/// The whole cluster's shared resources: one entry per node, one switch.
+/// The switching tier between the nodes' Tx links and their egress ports.
+#[derive(Clone, Debug)]
+pub enum Interconnect {
+    /// one non-blocking crossbar (flat topology)
+    Flat(Switch),
+    /// two-tier leaf–spine fabric
+    LeafSpine {
+        /// per-leaf edge switch; port `p` of leaf `l` serves node
+        /// `l * nodes_per_leaf + p`
+        leaves: Vec<Switch>,
+        /// aggregated leaf→spine uplink bundle, one per leaf
+        uplinks: Vec<Server>,
+        /// aggregated spine→leaf egress bundle, one per leaf
+        downlinks: Vec<Server>,
+        /// per-stage switching latency (same constant as the leaf
+        /// switches'; an inter-leaf path pays it three times)
+        latency: Time,
+    },
+}
+
+/// The whole cluster's shared resources: one entry per node, plus the
+/// topology-shaped interconnect.
 #[derive(Clone, Debug)]
 pub struct Fabric {
     pub nodes: Vec<NodeDevices>,
-    pub switch: Switch,
+    pub topology: Topology,
+    pub interconnect: Interconnect,
 }
 
 impl Fabric {
-    /// Build an `n`-node fabric from one hardware description, applying
-    /// cluster-level fault injection to the affected nodes' resources.
+    /// Build an `n`-node flat-crossbar fabric from one hardware
+    /// description, applying cluster-level fault injection to the affected
+    /// nodes' resources.
     pub fn new(sys: &SystemParams, n: usize, faults: &ClusterFaults) -> Self {
+        Self::with_topology(sys, Topology::flat(n), faults)
+    }
+
+    /// Build the fabric for an arbitrary [`Topology`].
+    pub fn with_topology(sys: &SystemParams, topology: Topology, faults: &ClusterFaults) -> Self {
+        let n = topology.nodes();
         assert!(n >= 1, "fabric needs at least one node");
+        let port_bw = sys.net.effective_bw();
         let nodes = (0..n)
             .map(|i| {
                 let link_scale = faults.link_scale(i);
                 let node_scale = faults.node_scale(i);
                 NodeDevices {
-                    tx: Link::new(sys.net.eth_bw * sys.net.alpha * link_scale, 0.0),
+                    tx: Link::new(port_bw * link_scale, 0.0),
                     pcie: Pcie::new(sys.nic.pcie_bw * node_scale, sys.nic.pcie_latency),
                     adder: Server::new(sys.nic.add_flops * node_scale),
-                    comm: Server::new(1.0),
+                    comm: Server::new(node_scale),
                 }
             })
             .collect();
+        let latency = sys.net.hop_latency;
+        let interconnect = match topology {
+            Topology::Flat { nodes } => Interconnect::Flat(Switch::new_scaled(
+                nodes,
+                port_bw,
+                latency,
+                |p| faults.link_scale(p),
+            )),
+            Topology::LeafSpine { leaves, nodes_per_leaf, .. } => {
+                let bundle_bw = topology.uplink_bw(port_bw);
+                Interconnect::LeafSpine {
+                    leaves: (0..leaves)
+                        .map(|l| {
+                            Switch::new_scaled(nodes_per_leaf, port_bw, latency, |p| {
+                                faults.link_scale(l * nodes_per_leaf + p)
+                            })
+                        })
+                        .collect(),
+                    uplinks: (0..leaves).map(|_| Server::new(bundle_bw)).collect(),
+                    downlinks: (0..leaves).map(|_| Server::new(bundle_bw)).collect(),
+                    latency,
+                }
+            }
+        };
         Self {
             nodes,
-            switch: Switch::new(n, sys.net.eth_bw * sys.net.alpha, sys.net.hop_latency),
+            topology,
+            interconnect,
         }
     }
 
@@ -70,13 +139,61 @@ impl Fabric {
         self.nodes.is_empty()
     }
 
-    /// One wire hop from `src` to `dst`: Tx serialization on the sender's
-    /// uplink, then cut-through switching to the destination port.
-    /// Returns the delivery time at the destination NIC.
+    /// One wire path from `src` to `dst`: Tx serialization on the sender's
+    /// uplink, then cut-through switching along the topology's route —
+    /// directly to the destination port inside one leaf (or on the
+    /// crossbar), or via the sender leaf's uplink bundle and the receiver
+    /// leaf's spine-egress bundle across the spine.  Returns the delivery
+    /// time at the destination NIC.
     #[must_use]
     pub fn hop(&mut self, src: usize, dst: usize, ready: Time, bytes: f64) -> Time {
+        let src_leaf = self.topology.leaf_of(src);
+        let dst_leaf = self.topology.leaf_of(dst);
+        let dst_port = self.topology.leaf_port(dst);
         let serialized = self.nodes[src].tx.transmit(ready, bytes);
-        self.switch.forward_cut_through(dst, serialized, bytes)
+        match &mut self.interconnect {
+            Interconnect::Flat(sw) => sw.forward_cut_through(dst, serialized, bytes),
+            Interconnect::LeafSpine { leaves, uplinks, downlinks, latency } => {
+                if src_leaf == dst_leaf {
+                    leaves[dst_leaf].forward_cut_through(dst_port, serialized, bytes)
+                } else {
+                    let at_spine = uplinks[src_leaf].reserve(serialized, bytes) + *latency;
+                    let at_leaf = downlinks[dst_leaf].reserve(at_spine, bytes) + *latency;
+                    leaves[dst_leaf].forward_cut_through(dst_port, at_leaf, bytes)
+                }
+            }
+        }
+    }
+
+    /// Utilization of the egress port toward `node` over [0, horizon].
+    #[must_use]
+    pub fn port_utilization(&self, node: usize, horizon: Time) -> f64 {
+        match &self.interconnect {
+            Interconnect::Flat(sw) => sw.port_utilization(node, horizon),
+            Interconnect::LeafSpine { leaves, .. } => leaves[self.topology.leaf_of(node)]
+                .port_utilization(self.topology.leaf_port(node), horizon),
+        }
+    }
+
+    /// Configured bandwidth of the egress port toward `node` (bytes/s).
+    #[must_use]
+    pub fn port_rate(&self, node: usize) -> f64 {
+        match &self.interconnect {
+            Interconnect::Flat(sw) => sw.port_rate(node),
+            Interconnect::LeafSpine { leaves, .. } => {
+                leaves[self.topology.leaf_of(node)].port_rate(self.topology.leaf_port(node))
+            }
+        }
+    }
+
+    /// Utilization of `leaf`'s spine uplink bundle over [0, horizon]
+    /// (always 0 on the flat crossbar — there are no uplinks).
+    #[must_use]
+    pub fn uplink_utilization(&self, leaf: usize, horizon: Time) -> f64 {
+        match &self.interconnect {
+            Interconnect::Flat(_) => 0.0,
+            Interconnect::LeafSpine { uplinks, .. } => uplinks[leaf].utilization(horizon),
+        }
     }
 
     /// Mean Tx-link utilization across nodes over [0, horizon].
@@ -131,6 +248,13 @@ mod tests {
         assert_eq!(f.nodes[0].tx.server.rate, gbps(40.0));
         assert_eq!(f.nodes[2].adder.rate, sys.nic.add_flops * 0.25);
         assert_eq!(f.nodes[2].pcie.to_device.server.rate, sys.nic.pcie_bw * 0.25);
+        // regression: a straggler's host comm cores slow down too
+        assert_eq!(f.nodes[2].comm.rate, 0.25);
+        assert_eq!(f.nodes[0].comm.rate, 1.0);
+        // regression: the switch egress port toward the degraded node is
+        // scaled, so incast to it slows down as well
+        assert_eq!(f.port_rate(1), gbps(40.0) * 0.5);
+        assert_eq!(f.port_rate(0), gbps(40.0));
     }
 
     #[test]
@@ -145,5 +269,83 @@ mod tests {
         assert!((t1 - (ser + sys.net.hop_latency)).abs() < 1e-12);
         // the second flow's egress reservation queues behind the first
         assert!((t2 - (2.0 * ser + sys.net.hop_latency)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn incast_toward_degraded_node_slows_down() {
+        // the victim's *egress* port runs slow, so traffic converging on it
+        // queues 4x longer — even though every sender's Tx link is healthy
+        let sys = SystemParams::smartnic_40g();
+        let faults = ClusterFaults::none().with_degraded_link(2, 0.25);
+        let mut f = Fabric::with_topology(&sys, Topology::flat(4), &faults);
+        let bytes = 1e6;
+        let ser = bytes / gbps(40.0);
+        let _ = f.hop(0, 2, 0.0, bytes);
+        let second = f.hop(1, 2, 0.0, bytes);
+        // first reservation occupies 4x the healthy drain time
+        let expect = ser + 4.0 * ser + sys.net.hop_latency;
+        assert!((second - expect).abs() < 1e-12, "{second} vs {expect}");
+    }
+
+    #[test]
+    fn intra_leaf_hop_is_single_latency() {
+        let sys = SystemParams::smartnic_40g();
+        let topo = Topology::leaf_spine(2, 3, 4.0);
+        let mut f = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        let bytes = 1e6;
+        let t = f.hop(0, 2, 0.0, bytes); // both on leaf 0
+        let expect = bytes / gbps(40.0) + sys.net.hop_latency;
+        assert!((t - expect).abs() < 1e-12, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn inter_leaf_hop_pays_three_latencies_when_uncontended() {
+        let sys = SystemParams::smartnic_40g();
+        let topo = Topology::leaf_spine(2, 3, 1.0);
+        let mut f = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        let bytes = 1e6;
+        let t = f.hop(0, 4, 0.0, bytes); // leaf 0 -> leaf 1
+        let expect = bytes / gbps(40.0) + 3.0 * sys.net.hop_latency;
+        assert!((t - expect).abs() < 1e-12, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn oversubscribed_uplink_queues_converging_leaf_exits() {
+        let sys = SystemParams::smartnic_40g();
+        // 3 nodes per leaf, 3:1 oversubscribed: the uplink bundle drains at
+        // exactly one port's rate
+        let topo = Topology::leaf_spine(2, 3, 3.0);
+        let mut f = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        let bytes = 1e6;
+        let ser = bytes / gbps(40.0);
+        let lat = sys.net.hop_latency;
+        // all three leaf-0 nodes send cross-leaf to distinct destinations
+        // at t=0: no egress-port contention, but the shared uplink bundle
+        // serializes them
+        let t0 = f.hop(0, 3, 0.0, bytes);
+        let t1 = f.hop(1, 4, 0.0, bytes);
+        let t2 = f.hop(2, 5, 0.0, bytes);
+        assert!((t0 - (ser + 3.0 * lat)).abs() < 1e-12, "{t0}");
+        assert!((t1 - (2.0 * ser + 3.0 * lat)).abs() < 1e-12, "{t1}");
+        assert!((t2 - (3.0 * ser + 3.0 * lat)).abs() < 1e-12, "{t2}");
+        assert!(f.uplink_utilization(0, t2) > 0.0);
+        assert_eq!(f.uplink_utilization(1, t2), 0.0);
+    }
+
+    #[test]
+    fn non_blocking_uplink_does_not_queue_a_single_flow_train() {
+        let sys = SystemParams::smartnic_40g();
+        let topo = Topology::leaf_spine(2, 2, 1.0);
+        let mut f = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        let bytes = 1e6;
+        let ser = bytes / gbps(40.0);
+        let lat = sys.net.hop_latency;
+        // back-to-back segments of one cross-leaf flow: each is delayed
+        // only by its own Tx serialization (the 2-port bundle drains two
+        // port-rates' worth, so the train never backs up)
+        let t0 = f.hop(0, 2, 0.0, bytes);
+        let t1 = f.hop(0, 2, 0.0, bytes);
+        assert!((t0 - (ser + 3.0 * lat)).abs() < 1e-12);
+        assert!((t1 - (2.0 * ser + 3.0 * lat)).abs() < 1e-12);
     }
 }

@@ -18,14 +18,35 @@ pub struct Switch {
 
 impl Switch {
     pub fn new(ports: usize, port_bw_bytes_per_s: f64, latency: Time) -> Self {
+        Self::new_scaled(ports, port_bw_bytes_per_s, latency, |_| 1.0)
+    }
+
+    /// A switch whose egress port `p` runs at `port_bw * scale_of(p)` —
+    /// the fault-injection hook that makes a degraded physical link slow
+    /// traffic *toward* its node, not just away from it.
+    pub fn new_scaled(
+        ports: usize,
+        port_bw_bytes_per_s: f64,
+        latency: Time,
+        scale_of: impl Fn(usize) -> f64,
+    ) -> Self {
         Self {
-            egress: (0..ports).map(|_| Server::new(port_bw_bytes_per_s)).collect(),
+            egress: (0..ports)
+                .map(|p| Server::new(port_bw_bytes_per_s * scale_of(p)))
+                .collect(),
             latency,
         }
     }
 
     pub fn ports(&self) -> usize {
         self.egress.len()
+    }
+
+    /// Configured bandwidth of one egress port (bytes/s, fault scaling
+    /// included).
+    #[must_use]
+    pub fn port_rate(&self, port: usize) -> f64 {
+        self.egress[port].rate
     }
 
     /// Forward `bytes` arriving at the switch at `arrival` toward
@@ -132,6 +153,21 @@ mod tests {
         // a flow to a different port is unaffected
         let d3 = sw.forward_cut_through(2, 5.0, MB);
         assert!((d3 - (5.0 + 1e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_port_slows_traffic_toward_it_only() {
+        let mut sw = Switch::new_scaled(4, BW, 0.0, |p| if p == 1 { 0.25 } else { 1.0 });
+        assert_eq!(sw.port_rate(1), BW * 0.25);
+        assert_eq!(sw.port_rate(0), BW);
+        // incast of two flows toward the degraded port: the second queues
+        // behind a 4x-longer reservation than it would on a healthy port
+        let _ = sw.forward_cut_through(1, 0.0, MB);
+        let d_degraded = sw.forward_cut_through(1, 0.0, MB);
+        let _ = sw.forward_cut_through(2, 0.0, MB);
+        let d_healthy = sw.forward_cut_through(2, 0.0, MB);
+        assert!((d_degraded - 4.0 * MB / BW).abs() < 1e-12, "{d_degraded}");
+        assert!((d_healthy - MB / BW).abs() < 1e-12, "{d_healthy}");
     }
 
     #[test]

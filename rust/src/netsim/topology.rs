@@ -1,5 +1,167 @@
-//! Ring topology over a switched Ethernet fabric (paper Fig. 3a: FPGAs
-//! connect to a Dell S6100 switch; a logical ring is overlaid on top).
+//! Physical and logical topology of the cluster fabric.
+//!
+//! Two layers:
+//!
+//! * [`Topology`] — the *physical* interconnect shape: either the paper's
+//!   single non-blocking crossbar (Fig. 3a: every FPGA on one Dell S6100)
+//!   or a two-tier leaf–spine fabric with a configurable uplink
+//!   oversubscription factor, the regime NetReduce/ACCL+ show changes
+//!   in-network reduction behavior qualitatively.  The topology also owns
+//!   the *placement* helpers ([`Topology::contiguous_ranks`] /
+//!   [`Topology::strided_ranks`]) that decide whether a logical ring's
+//!   neighbor edges stay inside one leaf (contention-free) or cross the
+//!   oversubscribed spine on every hop.
+//! * [`Ring`] — the *logical* ring overlay and its pipelined all-reduce
+//!   chunk schedule, unchanged from the paper's Sec. II-B.
+
+/// Physical interconnect shape of the cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Topology {
+    /// One non-blocking crossbar switch: every pair of nodes is a single
+    /// hop apart and only egress ports can contend (the seed model).
+    Flat {
+        /// total nodes (= switch ports)
+        nodes: usize,
+    },
+    /// Two-tier leaf–spine: `leaves` edge switches with `nodes_per_leaf`
+    /// down-ports each; every leaf connects to a non-blocking spine tier
+    /// through an uplink bundle carrying `nodes_per_leaf / oversubscription`
+    /// ports worth of bandwidth.  `oversubscription` = 1 is rearrangeably
+    /// non-blocking; > 1 means inter-leaf traffic can queue on the
+    /// uplinks even when every egress port is idle.
+    LeafSpine {
+        leaves: usize,
+        nodes_per_leaf: usize,
+        /// uplink oversubscription factor (any positive value; 1.0 =
+        /// full bisection bandwidth, 4.0 = classic 4:1 tapering)
+        oversubscription: f64,
+    },
+}
+
+impl Topology {
+    /// A flat single-switch fabric of `nodes` ports.
+    pub fn flat(nodes: usize) -> Self {
+        assert!(nodes >= 1, "topology needs at least one node");
+        Topology::Flat { nodes }
+    }
+
+    /// A leaf–spine fabric. `oversubscription` is the ratio of downlink to
+    /// uplink capacity per leaf (1.0 = non-blocking).
+    pub fn leaf_spine(leaves: usize, nodes_per_leaf: usize, oversubscription: f64) -> Self {
+        assert!(leaves >= 1, "need at least one leaf switch");
+        assert!(nodes_per_leaf >= 1, "need at least one node per leaf");
+        assert!(
+            oversubscription > 0.0 && oversubscription.is_finite(),
+            "oversubscription {oversubscription} must be positive and finite"
+        );
+        Topology::LeafSpine {
+            leaves,
+            nodes_per_leaf,
+            oversubscription,
+        }
+    }
+
+    /// Total number of nodes.
+    pub fn nodes(&self) -> usize {
+        match *self {
+            Topology::Flat { nodes } => nodes,
+            Topology::LeafSpine { leaves, nodes_per_leaf, .. } => leaves * nodes_per_leaf,
+        }
+    }
+
+    /// Number of leaf switches (1 for the flat crossbar).
+    pub fn leaves(&self) -> usize {
+        match *self {
+            Topology::Flat { .. } => 1,
+            Topology::LeafSpine { leaves, .. } => leaves,
+        }
+    }
+
+    /// Uplink oversubscription factor (1.0 for the flat crossbar).
+    pub fn oversubscription(&self) -> f64 {
+        match *self {
+            Topology::Flat { .. } => 1.0,
+            Topology::LeafSpine { oversubscription, .. } => oversubscription,
+        }
+    }
+
+    /// Which leaf switch `node` hangs off (0 for the flat crossbar).
+    pub fn leaf_of(&self, node: usize) -> usize {
+        debug_assert!(node < self.nodes());
+        match *self {
+            Topology::Flat { .. } => 0,
+            Topology::LeafSpine { nodes_per_leaf, .. } => node / nodes_per_leaf,
+        }
+    }
+
+    /// `node`'s local down-port index on its leaf switch.
+    pub fn leaf_port(&self, node: usize) -> usize {
+        debug_assert!(node < self.nodes());
+        match *self {
+            Topology::Flat { .. } => node,
+            Topology::LeafSpine { nodes_per_leaf, .. } => node % nodes_per_leaf,
+        }
+    }
+
+    /// Do `a` and `b` share a leaf switch (always true on the crossbar)?
+    pub fn same_leaf(&self, a: usize, b: usize) -> bool {
+        self.leaf_of(a) == self.leaf_of(b)
+    }
+
+    /// Switch hops a packet from `src` to `dst` traverses: 1 inside a leaf
+    /// (or anywhere on the crossbar), 3 across the spine (leaf → spine →
+    /// leaf).
+    pub fn hops(&self, src: usize, dst: usize) -> usize {
+        if self.same_leaf(src, dst) {
+            1
+        } else {
+            3
+        }
+    }
+
+    /// Aggregated leaf→spine (or spine→leaf) bundle bandwidth, given one
+    /// down-port's bandwidth.
+    pub fn uplink_bw(&self, port_bw: f64) -> f64 {
+        match *self {
+            Topology::Flat { nodes } => nodes as f64 * port_bw,
+            Topology::LeafSpine { nodes_per_leaf, oversubscription, .. } => {
+                nodes_per_leaf as f64 * port_bw / oversubscription
+            }
+        }
+    }
+
+    /// Leaf-packing placement: ranks fill one leaf completely before
+    /// spilling into the next, so a `k`-rank ring has at most one spine
+    /// crossing per leaf boundary.
+    pub fn contiguous_ranks(&self, k: usize) -> Vec<usize> {
+        assert!(k <= self.nodes(), "placement of {k} ranks needs {k} nodes");
+        (0..k).collect()
+    }
+
+    /// Leaf-striding (round-robin) placement: consecutive ranks land on
+    /// consecutive leaves, so with >= 2 leaves every ring-neighbor edge
+    /// crosses the spine — the placement that breaks ring
+    /// contention-freedom under oversubscription.
+    pub fn strided_ranks(&self, k: usize) -> Vec<usize> {
+        assert!(k <= self.nodes(), "placement of {k} ranks needs {k} nodes");
+        match *self {
+            Topology::Flat { .. } => (0..k).collect(),
+            Topology::LeafSpine { leaves, nodes_per_leaf, .. } => (0..k)
+                .map(|i| (i % leaves) * nodes_per_leaf + i / leaves)
+                .collect(),
+        }
+    }
+
+    /// Human-readable shape, for tables and logs.
+    pub fn describe(&self) -> String {
+        match *self {
+            Topology::Flat { nodes } => format!("flat crossbar, {nodes} ports"),
+            Topology::LeafSpine { leaves, nodes_per_leaf, oversubscription } => format!(
+                "leaf-spine, {leaves} leaves x {nodes_per_leaf} nodes, {oversubscription}:1 oversubscribed"
+            ),
+        }
+    }
+}
 
 /// A unidirectional ring of `n` nodes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -109,5 +271,63 @@ mod tests {
         assert_eq!(Ring::new(6).allreduce_steps(), 10);
         assert_eq!(Ring::new(2).allreduce_steps(), 2);
         assert_eq!(Ring::new(1).allreduce_steps(), 0);
+    }
+
+    #[test]
+    fn flat_topology_is_one_leaf() {
+        let t = Topology::flat(8);
+        assert_eq!(t.nodes(), 8);
+        assert_eq!(t.leaves(), 1);
+        assert_eq!(t.leaf_of(7), 0);
+        assert_eq!(t.leaf_port(7), 7);
+        assert_eq!(t.hops(0, 7), 1);
+        assert_eq!(t.oversubscription(), 1.0);
+        assert_eq!(t.contiguous_ranks(4), vec![0, 1, 2, 3]);
+        assert_eq!(t.strided_ranks(4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn leaf_spine_addressing() {
+        let t = Topology::leaf_spine(4, 8, 4.0);
+        assert_eq!(t.nodes(), 32);
+        assert_eq!(t.leaves(), 4);
+        assert_eq!(t.leaf_of(0), 0);
+        assert_eq!(t.leaf_of(7), 0);
+        assert_eq!(t.leaf_of(8), 1);
+        assert_eq!(t.leaf_port(8), 0);
+        assert_eq!(t.leaf_port(31), 7);
+        assert!(t.same_leaf(3, 5));
+        assert!(!t.same_leaf(7, 8));
+        assert_eq!(t.hops(3, 5), 1);
+        assert_eq!(t.hops(7, 8), 3);
+        // 4:1 oversubscription: 8 ports of downlink share 2 ports of uplink
+        assert_eq!(t.uplink_bw(5e9), 8.0 * 5e9 / 4.0);
+    }
+
+    #[test]
+    fn strided_placement_crosses_leaves_every_edge() {
+        let t = Topology::leaf_spine(4, 4, 2.0);
+        let ranks = t.strided_ranks(16);
+        // distinct, in range
+        let mut sorted = ranks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 16);
+        assert!(ranks.iter().all(|&r| r < 16));
+        // every consecutive (ring-neighbor) pair sits on different leaves
+        for w in ranks.windows(2) {
+            assert!(!t.same_leaf(w[0], w[1]), "{w:?} share a leaf");
+        }
+        // contiguous placement keeps a 4-rank ring on one leaf
+        let small = t.contiguous_ranks(4);
+        for w in small.windows(2) {
+            assert!(t.same_leaf(w[0], w[1]));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "needs")]
+    fn placement_larger_than_fabric_panics() {
+        let _ = Topology::flat(4).strided_ranks(5);
     }
 }

@@ -167,10 +167,7 @@ pub fn simulate_ring_allreduce(cfg: &NicConfig, n: usize, elems: usize) -> AllRe
                 _ => 1.0,
             };
             NodeState {
-                tx: Link::new(
-                    sys.net.eth_bw * sys.net.alpha * link_scale,
-                    sys.net.hop_latency,
-                ),
+                tx: Link::new(sys.net.effective_bw() * link_scale, sys.net.hop_latency),
                 pcie: Pcie::new(sys.nic.pcie_bw * node_scale, sys.nic.pcie_latency),
                 adder: Server::new(sys.nic.add_flops * node_scale),
             }

@@ -85,8 +85,32 @@ pub struct NetParams {
     pub eth_bw: f64,
     /// achievable fraction of line rate (α)
     pub alpha: f64,
+    /// wire-protocol efficiency (β): the fraction of α·BW_eth left after
+    /// framing/preamble/FCS overhead.  Sec. IV-C's ring term divides by
+    /// α·BW_eth·β; every timing path (closed form, serialized NIC DES,
+    /// unified fabric, host software model) must apply the same factor —
+    /// use [`NetParams::effective_bw`] rather than multiplying by hand.
+    pub beta: f64,
     /// one-hop propagation + switch latency (s)
     pub hop_latency: f64,
+}
+
+impl NetParams {
+    /// Effective payload bandwidth of one port: α·BW_eth·β (bytes/s).
+    /// The single source of truth shared by the analytic model, the
+    /// serialized NIC DES, the unified fabric and the host MPI model.
+    #[must_use]
+    pub fn effective_bw(&self) -> f64 {
+        self.eth_bw * self.alpha * self.beta
+    }
+
+    /// Same parameters with a different wire-protocol efficiency.
+    #[must_use]
+    pub fn with_beta(mut self, beta: f64) -> Self {
+        assert!(beta > 0.0 && beta <= 1.0, "beta {beta} not in (0, 1]");
+        self.beta = beta;
+        self
+    }
 }
 
 /// Smart-NIC-specific parameters.
@@ -148,6 +172,7 @@ impl SystemParams {
             net: NetParams {
                 eth_bw: gbps(100.0),
                 alpha: 0.85, // software NIC efficiency for large messages
+                beta: 1.0, // protocol overhead folded into α for 100G MPI
                 hop_latency: 5.0e-6,
             },
             nic: NicHwParams::arria10_40g(), // unused in baseline
@@ -163,6 +188,7 @@ impl SystemParams {
             net: NetParams {
                 eth_bw: gbps(40.0),
                 alpha: 1.0, // footnote 1: α very close to 1
+                beta: 1.0, // custom lightweight framing ~ negligible overhead
                 hop_latency: 2.0e-6,
             },
             nic: NicHwParams::arria10_40g(),
@@ -319,6 +345,20 @@ mod tests {
         assert_eq!(f.link_scale(0), 1.0);
         assert_eq!(f.node_scale(1), 0.25); // stacked faults multiply
         assert_eq!(f.node_scale(2), 1.0);
+    }
+
+    #[test]
+    fn effective_bw_applies_alpha_and_beta() {
+        let s = SystemParams::baseline_100g();
+        assert_eq!(s.net.effective_bw(), s.net.eth_bw * 0.85);
+        let capped = s.net.with_beta(0.9);
+        assert!((capped.effective_bw() - s.net.eth_bw * 0.85 * 0.9).abs() < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in (0, 1]")]
+    fn beta_out_of_range_panics() {
+        let _ = SystemParams::smartnic_40g().net.with_beta(1.5);
     }
 
     #[test]

@@ -1,0 +1,243 @@
+// Integration tests for the hierarchical (leaf–spine) fabric and the
+// fabric bugfixes that landed with it:
+//  * property test: the pipelined ring schedule is contention-free on a
+//    single leaf (and on the flat crossbar), exhibits measurable queueing
+//    once it spans leaves under >1:1 oversubscription, and stays bounded
+//    when the spine is non-blocking;
+//  * determinism of the multi-hop routing;
+//  * regression: a straggler's host comm cores really slow host-MPI jobs;
+//  * regression: traffic *toward* a degraded node slows (egress-port
+//    fault scaling), and the serialized/unified engines stay close;
+//  * the β wire-protocol-efficiency factor is applied identically by the
+//    closed form, the serialized NIC DES, the unified engine and the
+//    host software model.
+
+use ai_smartnic::analytic::model::SystemKind;
+use ai_smartnic::analytic::validate::{smartnic_ar_time_elems, validate_ar};
+use ai_smartnic::cluster::{run_scenario, ClusterSpec, JobSpec, Topology};
+use ai_smartnic::collective::timing::{allreduce_time, HostNet};
+use ai_smartnic::collective::Scheme;
+use ai_smartnic::coordinator::{simulate_iteration, simulate_iteration_unified};
+use ai_smartnic::netsim::fabric::Fabric;
+use ai_smartnic::netsim::topology::Ring;
+use ai_smartnic::nic::{simulate_ring_allreduce, NicConfig};
+use ai_smartnic::prop::{forall, gens};
+use ai_smartnic::sysconfig::{ClusterFaults, SystemParams, Workload};
+use ai_smartnic::util::stats::rel_err;
+
+/// Replay the pipelined ring schedule through a fabric, one barrier-
+/// synchronized step at a time.  Returns the completion time and whether
+/// every hop finished at exactly its uncontended ideal (Tx serialization
+/// plus the route's switch latencies).
+fn replay_ring(topo: Topology, ranks: &[usize], chunk: f64) -> (f64, bool) {
+    let sys = SystemParams::smartnic_40g();
+    let mut fab = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+    let bw = sys.net.effective_bw();
+    let lat = sys.net.hop_latency;
+    let n = ranks.len();
+    let ring = Ring::new(n);
+    let mut t_step = 0.0f64;
+    let mut contention_free = true;
+    for _step in 0..ring.allreduce_steps() {
+        let mut max_done = t_step;
+        for i in 0..n {
+            let (src, dst) = (ranks[i], ranks[ring.next(i)]);
+            let done = fab.hop(src, dst, t_step, chunk);
+            let ideal = t_step + chunk / bw + topo.hops(src, dst) as f64 * lat;
+            if (done - ideal).abs() > 1e-12 {
+                contention_free = false;
+            }
+            max_done = max_done.max(done);
+        }
+        t_step = max_done;
+    }
+    (t_step, contention_free)
+}
+
+#[test]
+fn prop_ring_contention_freedom_depends_on_placement_and_oversubscription() {
+    let chunk = 1e6;
+    forall(
+        &gens::pair(gens::usize_in(2..=4), gens::usize_in(2..=5)),
+        25,
+        |&(leaves, m)| {
+            let n = leaves * m;
+            let tapered = Topology::leaf_spine(leaves, m, 4.0);
+            let non_blocking = Topology::leaf_spine(leaves, m, 1.0);
+            let crossbar = Topology::flat(n);
+            let flat = replay_ring(crossbar, &crossbar.contiguous_ranks(n), chunk);
+            // a ring confined to one leaf is exactly contention-free,
+            // 4:1 tapering or not — the uplinks are never touched
+            let one_leaf = replay_ring(tapered, &tapered.contiguous_ranks(m), chunk);
+            // strided across leaves, every edge crosses the 4:1 spine:
+            // the schedule queues on the uplink bundles
+            let spanning = replay_ring(tapered, &tapered.strided_ranks(n), chunk);
+            // same placement over a non-blocking spine: only a bounded
+            // transient, no sustained queueing blow-up
+            let nb = replay_ring(non_blocking, &non_blocking.strided_ranks(n), chunk);
+            flat.1
+                && one_leaf.1
+                && !spanning.1
+                && spanning.0 > 2.0 * flat.0
+                && nb.0 < 2.05 * flat.0
+        },
+    );
+}
+
+fn leaf_spine_two_job_spec() -> ClusterSpec {
+    let sys = SystemParams::smartnic_40g();
+    let topo = Topology::leaf_spine(3, 4, 2.0);
+    let w = Workload {
+        layers: 6,
+        hidden: 1024,
+        batch_per_node: 128,
+    };
+    ClusterSpec::new(sys, 12)
+        .with_topology(topo)
+        .with_job(JobSpec::new(
+            "strided",
+            SystemKind::SmartNic { bfp: false },
+            w,
+            topo.strided_ranks(12),
+        ))
+        .with_job(JobSpec::new(
+            "contig",
+            SystemKind::SmartNic { bfp: true },
+            w,
+            topo.contiguous_ranks(12),
+        ))
+}
+
+#[test]
+fn multi_hop_routing_is_deterministic() {
+    let a = run_scenario(&leaf_spine_two_job_spec());
+    let b = run_scenario(&leaf_spine_two_job_spec());
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.trace.spans, b.trace.spans);
+    for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(ja.t_end, jb.t_end);
+        assert_eq!(ja.mean_ar, jb.mean_ar);
+    }
+    // and the strided tenant is the one paying the spine tax
+    assert!(a.jobs[0].mean_ar > a.jobs[1].mean_ar);
+}
+
+#[test]
+fn straggler_slows_host_mpi_comm_cores() {
+    // regression (Fabric::new used to hard-code Server::new(1.0) for the
+    // comm cores): a straggling node's software all-reduce rounds must
+    // drain slower, gating every barrier of a host-MPI job
+    let sys = SystemParams::baseline_100g();
+    let w = Workload {
+        layers: 4,
+        hidden: 2048,
+        batch_per_node: 64,
+    };
+    let kind = SystemKind::BaselineNaive {
+        scheme: Scheme::Ring,
+    };
+    let healthy_out = run_scenario(
+        &ClusterSpec::new(sys, 4).with_job(JobSpec::new("h", kind, w, (0..4).collect())),
+    );
+    let slowed_out = run_scenario(
+        &ClusterSpec::new(sys, 4)
+            .with_faults(ClusterFaults::none().with_straggler(2, 0.25))
+            .with_job(JobSpec::new("s", kind, w, (0..4).collect())),
+    );
+    let (healthy, slowed) = (healthy_out.jobs[0].duration, slowed_out.jobs[0].duration);
+    assert!(
+        slowed > healthy * 1.5,
+        "straggler ignored by host path: {slowed} vs {healthy}"
+    );
+}
+
+#[test]
+fn degraded_link_slows_traffic_toward_the_victim() {
+    // regression: with_degraded_link used to scale only the victim's Tx
+    // uplink; incast toward the victim was unaffected.  Route the same
+    // incast through a faulty and a healthy fabric and compare.
+    let sys = SystemParams::smartnic_40g();
+    let faults = ClusterFaults::none().with_degraded_link(3, 0.25);
+    let mut faulty = Fabric::new(&sys, 6, &faults);
+    let mut healthy = Fabric::new(&sys, 6, &ClusterFaults::none());
+    let bytes = 4e6;
+    let last_faulty = (0..3).map(|s| faulty.hop(s, 3, 0.0, bytes)).fold(0.0, f64::max);
+    let last_healthy = (0..3).map(|s| healthy.hop(s, 3, 0.0, bytes)).fold(0.0, f64::max);
+    assert!(
+        last_faulty > last_healthy * 2.0,
+        "incast unaffected by degraded egress: {last_faulty} vs {last_healthy}"
+    );
+}
+
+#[test]
+fn beta_wire_efficiency_consistent_across_all_paths() {
+    // pin the β factor (satellite of the α·BW_eth·β reconciliation):
+    // every timing path must derate the wire identically.
+    let mut sys = SystemParams::smartnic_40g();
+    sys.net = sys.net.with_beta(0.9);
+
+    // 1) serialized NIC DES == unified engine, exactly, for a single ring
+    let hidden = 1024;
+    let serialized = simulate_ring_allreduce(&NicConfig::new(sys, None), 6, hidden * hidden)
+        .t_total;
+    let w = Workload {
+        layers: 1,
+        hidden,
+        batch_per_node: 64,
+    };
+    let spec = ClusterSpec::new(sys, 6).with_job(JobSpec::new(
+        "ring",
+        SystemKind::SmartNic { bfp: false },
+        w,
+        (0..6).collect(),
+    ));
+    let unified = run_scenario(&spec).jobs[0].mean_ar;
+    assert!(
+        (serialized - unified).abs() / serialized < 1e-9,
+        "beta applied asymmetrically: serialized {serialized} unified {unified}"
+    );
+
+    // 2) closed form vs serialized DES at the paper's layer size
+    let v = validate_ar(&sys, 6, 2048 * 2048, false);
+    assert!(
+        v.rel_err < 0.03,
+        "closed form diverges under beta: {:.1}%",
+        v.rel_err * 100.0
+    );
+
+    // 3) full-iteration parity at the paper's operating point
+    let wl = Workload::paper_mlp(1792);
+    let kind = SystemKind::SmartNic { bfp: false };
+    let ser_iter = simulate_iteration(kind, &sys, &wl, 6).breakdown.t_total;
+    let uni_iter = simulate_iteration_unified(kind, &sys, &wl, 6)
+        .breakdown
+        .t_total;
+    let err = rel_err(ser_iter, uni_iter);
+    assert!(err < 0.03, "iteration parity under beta: {:.2}%", err * 100.0);
+
+    // 4) the closed form actually slows down by 1/beta where the ring
+    // term dominates
+    let base = SystemParams::smartnic_40g();
+    let t_raw = smartnic_ar_time_elems(&base, 4 * 1024 * 1024, 6, false);
+    let t_derated = smartnic_ar_time_elems(&sys, 4 * 1024 * 1024, 6, false);
+    assert!(
+        t_derated > t_raw * 1.05,
+        "beta ignored by the closed form: {t_derated} vs {t_raw}"
+    );
+
+    // 5) the host software model derates the wire the same way (with the
+    // comm-core cap lifted so the wire is the binding constraint)
+    let mk_env = |beta: f64| HostNet {
+        net: SystemParams::baseline_100g().net.with_beta(beta),
+        step_overhead: 0.0,
+        comm_bw_cap: f64::INFINITY,
+    };
+    let bytes = 512.0 * 1024.0 * 1024.0;
+    let full = allreduce_time(Scheme::Ring, 8, bytes, &mk_env(1.0));
+    let half = allreduce_time(Scheme::Ring, 8, bytes, &mk_env(0.5));
+    // bandwidth term doubles; the fixed per-step hop latencies don't
+    assert!(
+        (half / full - 2.0).abs() < 0.01,
+        "host model beta scaling: {half} vs {full}"
+    );
+}
