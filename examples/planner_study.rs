@@ -1,0 +1,64 @@
+//! Topology-aware planner walkthrough: the same 32-node all-reduce on a
+//! 4:1-oversubscribed leaf–spine fabric under every offload the repo
+//! models — the flat NIC ring, the planner's hierarchical plan
+//! (reduce-scatter in leaf → shard ring across the spine → allgather),
+//! NetReduce-style in-switch reduction, and `Auto` (the planner's own
+//! pick) — for both placements.
+//!
+//! Run with: `cargo run --release --example planner_study`
+
+use ai_smartnic::cluster::planner::plan;
+use ai_smartnic::cluster::{CollectiveAlgo, Topology};
+use ai_smartnic::experiments::planner::measure_ar;
+use ai_smartnic::sysconfig::{SwitchParams, SystemParams};
+use ai_smartnic::util::table::{fnum, Table};
+
+fn main() {
+    let base = SystemParams::smartnic_40g();
+    let sys = base.with_switch_reduction(SwitchParams::netreduce(8, &base.net));
+    let n = 32;
+    let hidden = 2048;
+    let topo = Topology::leaf_spine(4, n / 4, 4.0);
+
+    let measure =
+        |ranks: Vec<usize>, algo: CollectiveAlgo| measure_ar(sys, topo, ranks, algo, hidden);
+
+    let mut t = Table::new(&["placement", "algorithm", "AR (ms)", "vs ring"]).with_title(
+        "one 16.8 MB all-reduce, 32 nodes on a 4x8 leaf-spine, 4:1 oversubscribed",
+    );
+    for (placement, ranks) in [
+        ("contiguous", topo.contiguous_ranks(n)),
+        ("strided", topo.strided_ranks(n)),
+    ] {
+        let ring = measure(ranks.clone(), CollectiveAlgo::NicRing);
+        let chosen = plan(&sys, &topo, &ranks, hidden * hidden, 1.0);
+        for (name, algo) in [
+            ("nic-ring", CollectiveAlgo::NicRing),
+            ("hierarchical", CollectiveAlgo::NicHierarchical),
+            ("in-switch", CollectiveAlgo::SwitchReduce),
+            ("auto", CollectiveAlgo::Auto),
+        ] {
+            let ar = measure(ranks.clone(), algo);
+            let label = if name == "auto" {
+                format!("auto -> {}", chosen.kind.name())
+            } else {
+                name.to_string()
+            };
+            t.row(&[
+                placement.to_string(),
+                label,
+                fnum(ar * 1e3, 2),
+                format!("x{}", fnum(ring / ar, 2)),
+            ]);
+        }
+    }
+    t.print();
+
+    println!(
+        "\nstrided placement makes every ring edge cross the tapered spine (~4x penalty);\n\
+         the hierarchical plan crosses it with 1/m-th of the traffic and recovers most of\n\
+         that, and line-rate switch engines beat the NIC ring everywhere — until the\n\
+         aggregation table cannot hold a segment, where the planner falls back to the NIC\n\
+         ring.  `smartnic plan` sweeps 6..512 nodes and writes BENCH_planner.json."
+    );
+}

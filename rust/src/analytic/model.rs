@@ -92,21 +92,39 @@ fn t_update_layer(sys: &SystemParams, w: &Workload) -> f64 {
 /// Sec. IV-C T_AR for a raw element count (not tied to a square layer) —
 /// the single copy of the formula, shared with `analytic::validate`.
 pub fn smartnic_ar_time_elems(sys: &SystemParams, elems: usize, n: usize, bfp: bool) -> f64 {
-    if n <= 1 {
-        return 0.0;
-    }
-    let nf = n as f64;
-    let b_bits = 32.0;
-    let r_bits = b_bits * nf * (elems as f64 / nf).ceil();
     let compression = if bfp {
         BfpCodec::bfp16().compression_ratio()
     } else {
         1.0
     };
+    nic_ring_ar_time_elems(sys, elems, n, compression, 1.0)
+}
+
+/// The ring T_AR generalized for the planner: `wire_ratio` is the wire
+/// compression factor (1.0 = raw FP32) and `uplink_factor` (≥ 1) is the
+/// placement's leaf-uplink contention multiplier — the worst per-step
+/// bundle load relative to one port's serialization, 1.0 on a flat
+/// crossbar or for a placement whose ring edges stay inside leaves
+/// ([`crate::cluster::planner::ring_uplink_factor`] computes it).
+pub fn nic_ring_ar_time_elems(
+    sys: &SystemParams,
+    elems: usize,
+    n: usize,
+    wire_ratio: f64,
+    uplink_factor: f64,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    assert!(uplink_factor >= 1.0, "uplink factor {uplink_factor} < 1");
+    let nf = n as f64;
+    let b_bits = 32.0;
+    let r_bits = b_bits * nf * (elems as f64 / nf).ceil();
     // α·BW_eth·β via NetParams::effective_bw — the same wire-protocol
     // efficiency the event fabrics apply to their Tx links, so the closed
     // form and both simulators price the wire identically
-    let t_ring = r_bits * 2.0 * (nf - 1.0) / (nf * sys.net.effective_bw() * 8.0 * compression);
+    let eff_wire = nf * sys.net.effective_bw() * 8.0 * wire_ratio;
+    let t_ring = r_bits * 2.0 * (nf - 1.0) * uplink_factor / eff_wire;
     let t_add = r_bits * 2.0 * (nf - 1.0) / (nf * sys.nic.add_flops * b_bits);
     // Sec. IV-C's T_mem = 2R/BW_pcie.  The DES shows the dependency
     // structure precisely: the full R must come down before the last
@@ -115,6 +133,124 @@ pub fn smartnic_ar_time_elems(sys: &SystemParams, elems: usize, n: usize, bfp: b
     // to the paper's 2R/BW_pcie as N grows.
     let t_mem = r_bits * (2.0 * nf - 1.0) / (nf * sys.nic.pcie_bw * 8.0);
     t_ring.max(t_add).max(t_mem) + sys.nic_request_overhead
+}
+
+/// Closed form for the hierarchical plan on an `l`-leaf fabric with `m`
+/// ranks per leaf at `oversub`:1 uplink tapering: ring reduce-scatter
+/// inside each leaf, ring all-reduce of the per-rank shards across leaf
+/// representatives (m concurrent rings of l over the spine), ring
+/// allgather inside the leaf — mirroring the barrier-synchronized round
+/// execution of [`crate::cluster::collective::Phase::Rounds`]:
+///
+///   T = T_fetch + (m−1)(c₁/bw + λ + e₁/ρ)                 reduce-scatter
+///     + (l−1)(c₂/bw + q + 3λ + e₂/ρ) + (l−1)(c₂/bw + q + 3λ)   cross AR
+///     + (m−1)(c₁/bw + λ) + T_wb + T_req                    allgather
+///
+/// with c₁ = S/m, c₂ = S/(m·l) on the wire, e₁ = E/m, e₂ = E/(m·l), and
+/// q = (m−1)·c₂·oversub/(m·bw) the uplink-bundle queueing of the m
+/// concurrent spine crossings per leaf per round.
+///
+/// `oversub` is the *effective* per-group tapering, m·bw/uplink_bw: equal
+/// to the fabric's oversubscription factor when the m ranks fill their
+/// leaf, proportionally milder when a job only partially occupies it
+/// (the bundle stays provisioned by the topology's nodes-per-leaf).
+pub fn hierarchical_ar_time_elems(
+    sys: &SystemParams,
+    elems: usize,
+    m: usize,
+    l: usize,
+    oversub: f64,
+    wire_ratio: f64,
+) -> f64 {
+    let n = m * l;
+    if n <= 1 {
+        return 0.0;
+    }
+    let s = elems as f64 * 4.0;
+    let e = elems as f64;
+    let bw = sys.net.effective_bw();
+    let lat = sys.net.hop_latency;
+    let rho = sys.nic.add_flops;
+    let (mf, lf) = (m as f64, l as f64);
+    let t_pcie = s / sys.nic.pcie_bw + sys.nic.pcie_latency;
+    let mut t = sys.nic_request_overhead + 2.0 * t_pcie;
+    if m >= 2 {
+        let c1 = s / mf / wire_ratio;
+        let e1 = e / mf;
+        t += (mf - 1.0) * (c1 / bw + lat + e1 / rho); // reduce-scatter
+        t += (mf - 1.0) * (c1 / bw + lat); // allgather
+    }
+    if l >= 2 {
+        let c2 = s / (mf * lf) / wire_ratio;
+        let e2 = e / (mf * lf);
+        let q = (mf - 1.0) * c2 * oversub / (mf * bw);
+        t += (lf - 1.0) * (c2 / bw + q + 3.0 * lat + e2 / rho); // cross reduce
+        t += (lf - 1.0) * (c2 / bw + q + 3.0 * lat); // cross gather
+    }
+    t
+}
+
+/// Closed form for the NetReduce-style in-switch reduction: every rank
+/// streams its gradient up in segments, the leaf engines fold the m local
+/// contributions, the spine engine folds the l leaf aggregates, and the
+/// reduced stream multicasts back down — a segment pipeline whose total is
+/// the fill of one segment plus (segs−1) times the bottleneck stage,
+/// throttled to fill/window when the aggregation table holds fewer than
+/// `window` segments.  `l = 1` is the single-switch (crossbar or
+/// one-leaf) case; `oversub` is the *effective* per-group tapering
+/// m·bw/uplink_bw (see [`hierarchical_ar_time_elems`]).  Returns infinity
+/// when the switch cannot reduce — the planner then falls back to the
+/// NIC ring.
+pub fn inswitch_ar_time_elems(
+    sys: &SystemParams,
+    elems: usize,
+    m: usize,
+    l: usize,
+    oversub: f64,
+    wire_ratio: f64,
+) -> f64 {
+    let n = m * l;
+    if n <= 1 {
+        return 0.0;
+    }
+    if !sys.switch.enabled() {
+        return f64::INFINITY;
+    }
+    let s = elems as f64 * 4.0;
+    let segs = (s / sys.nic.segment_bytes).ceil().max(1.0);
+    let seg = s / segs;
+    let seg_e = elems as f64 / segs;
+    let wire = seg / wire_ratio;
+    let bw = sys.net.effective_bw();
+    let lat = sys.net.hop_latency;
+    let rho = sys.switch.reduce_flops;
+    let window = (sys.switch.reduce_table_bytes / seg).floor();
+    if window < 1.0 {
+        return f64::INFINITY; // table cannot hold one segment: fall back
+    }
+    let d_f = seg / sys.nic.pcie_bw;
+    let d_t = wire / bw;
+    let d_e = wire / bw;
+    let d_wb = seg / sys.nic.pcie_bw;
+    let (fill, bottleneck) = if l <= 1 {
+        let d_fold = n as f64 * seg_e / rho;
+        (
+            d_f + d_t + d_fold + lat + d_wb + 2.0 * sys.nic.pcie_latency,
+            d_f.max(d_t).max(d_fold).max(d_e).max(d_wb),
+        )
+    } else {
+        let up_bw = m as f64 * bw / oversub;
+        let d_lf = m as f64 * seg_e / rho;
+        let d_u = wire / up_bw;
+        let d_sf = l as f64 * seg_e / rho;
+        let d_d = wire / up_bw;
+        (
+            d_f + d_t + d_lf + lat + d_sf + 2.0 * lat + d_wb + 2.0 * sys.nic.pcie_latency,
+            d_f.max(d_t).max(d_lf).max(d_u).max(d_sf).max(d_d).max(d_e).max(d_wb),
+        )
+    };
+    let b = bottleneck.max(fill / window);
+    sys.nic_request_overhead + fill + (segs - 1.0) * b
 }
 
 /// Smart-NIC all-reduce time for one layer (the Sec. IV-C max of three).
@@ -320,6 +456,69 @@ mod tests {
             1,
         );
         assert!(bd.t_exposed_ar < 1e-6);
+    }
+
+    #[test]
+    fn derated_ring_reduces_to_the_paper_form() {
+        let sys = SystemParams::smartnic_40g();
+        let elems = 2048 * 2048;
+        for n in [2usize, 6, 32] {
+            let paper = smartnic_ar_time_elems(&sys, elems, n, false);
+            let general = nic_ring_ar_time_elems(&sys, elems, n, 1.0, 1.0);
+            assert!((paper - general).abs() < 1e-15, "n={n}");
+        }
+        // the uplink factor scales only the wire term, so a factor-4
+        // derate on a wire-bound point costs at most 4x
+        let derated = nic_ring_ar_time_elems(&sys, elems, 32, 1.0, 4.0);
+        let flat = nic_ring_ar_time_elems(&sys, elems, 32, 1.0, 1.0);
+        assert!(derated > flat * 1.5 && derated <= flat * 4.0 + 1e-12);
+    }
+
+    #[test]
+    fn hierarchical_beats_the_derated_ring_under_tapering() {
+        // 4 leaves x 8 ranks at 4:1: the strided ring pays the full 4x
+        // wire derate, the hierarchical plan crosses the spine with only
+        // the shard traffic
+        let sys = SystemParams::smartnic_40g();
+        let elems = 2048 * 2048;
+        let strided_ring = nic_ring_ar_time_elems(&sys, elems, 32, 1.0, 4.0);
+        let hier = hierarchical_ar_time_elems(&sys, elems, 8, 4, 4.0, 1.0);
+        assert!(
+            hier < strided_ring * 0.8,
+            "hierarchical {hier} vs strided ring {strided_ring}"
+        );
+        // degenerate shapes are free or near-free
+        assert_eq!(hierarchical_ar_time_elems(&sys, elems, 1, 1, 1.0, 1.0), 0.0);
+        assert!(hierarchical_ar_time_elems(&sys, elems, 2, 1, 1.0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn inswitch_closed_form_limits() {
+        use crate::sysconfig::SwitchParams;
+        let plain = SystemParams::smartnic_40g();
+        let elems = 2048 * 2048;
+        // no capability: infinite cost (planner falls back to the ring)
+        assert!(inswitch_ar_time_elems(&plain, elems, 8, 4, 4.0, 1.0).is_infinite());
+        // table too small for one segment: same fallback signal
+        let tiny = plain.with_switch_reduction(SwitchParams {
+            reduce_flops: 1e12,
+            reduce_table_bytes: 1024.0,
+        });
+        assert!(inswitch_ar_time_elems(&tiny, elems, 8, 4, 4.0, 1.0).is_infinite());
+        // infinite-rate engines and an ample table converge to the wire
+        // lower bound: one full gradient per Tx link, pipelined
+        let ideal = plain.with_switch_reduction(SwitchParams {
+            reduce_flops: f64::INFINITY,
+            reduce_table_bytes: 1e18,
+        });
+        let t = inswitch_ar_time_elems(&ideal, elems, 8, 4, 4.0, 1.0);
+        let s = elems as f64 * 4.0;
+        let wire_bound = s / plain.net.effective_bw();
+        assert!(t > wire_bound, "{t} vs {wire_bound}");
+        assert!(t < wire_bound * 1.25, "{t} vs {wire_bound}");
+        // and it undercuts the 4:1-strided NIC ring by a wide margin
+        let ring = nic_ring_ar_time_elems(&plain, elems, 32, 1.0, 4.0);
+        assert!(t < ring * 0.5, "in-switch {t} vs strided ring {ring}");
     }
 
     #[test]

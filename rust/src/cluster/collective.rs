@@ -9,20 +9,29 @@
 //!   is identical to `nic::simulate_ring_allreduce`; the difference is
 //!   that resources are the *shared* fabric servers, so concurrent rings
 //!   queue-delay each other instead of executing in a vacuum.
-//! * **NIC rounds** — binomial and Rabenseifner as barrier-synchronized
-//!   rounds of point-to-point transfers through the same Tx/switch/adder
-//!   path (whole-payload granularity: these are control-plane-scheduled
-//!   offloads, not the FIFO-pipelined ring).
+//! * **Planned** — a sequence of composable [`Phase`]s executed with a
+//!   barrier between phases.  [`Phase::Rounds`] runs barrier-synchronized
+//!   rounds of point-to-point transfers through the Tx/switch/adder path
+//!   (binomial, Rabenseifner, and the planner's hierarchical
+//!   reduce-in-leaf → ring-across-spine → broadcast plans);
+//!   [`Phase::SwitchReduce`] streams the gradient through the switch
+//!   tier's per-egress-port aggregation engines (NetReduce-style,
+//!   segment-pipelined with the engine-table window as the flow control).
+//!   Plans come from [`crate::cluster::planner`]; a plan that degenerates
+//!   to the ring (or must fall back because the switch cannot reduce)
+//!   executes the *exact* native ring path.
 //! * **Host rounds** — software/MPI schemes decomposed by
 //!   [`scheme_rounds`] into per-step rounds served on each node's
 //!   normalized comm-core server; an uncontended run reproduces the
 //!   closed-form `allreduce_time` exactly.
 
+use super::planner::{self, PlanKind};
 use super::{job, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, JobId, NodeId};
 use crate::collective::timing::{scheme_rounds, HostRoundPlan};
 use crate::netsim::topology::Ring;
 use crate::netsim::Time;
 use crate::nic::SegmentPlan;
+use crate::sysconfig::SystemParams;
 
 /// One point-to-point transfer inside a NIC round (local rank indices).
 #[derive(Clone, Copy, Debug)]
@@ -35,12 +44,75 @@ pub struct RoundOp {
     pub reduce_elems: f64,
 }
 
+/// One barrier-synchronized stage of a collective plan
+/// ([`crate::cluster::planner`] builds them, the planned executor runs
+/// them in order with a barrier between consecutive phases).
+#[derive(Clone, Debug)]
+pub enum Phase {
+    /// Barrier-synchronized rounds of point-to-point NIC transfers
+    /// between local ranks.  The executor DMA-fetches the full payload
+    /// once before the plan's first `Rounds` phase and writes it back
+    /// once after the last phase.
+    Rounds(Vec<Vec<RoundOp>>),
+    /// NetReduce-style in-switch reduction of the whole vector: every
+    /// member streams `bytes` up in segments, each leaf `group`'s
+    /// contributions fold at that leaf's aggregation engine, the spine
+    /// engine folds the per-leaf aggregates, and the reduced stream
+    /// multicasts back down.  `groups` holds local rank indices grouped
+    /// by leaf (every member exactly once).
+    SwitchReduce {
+        bytes: f64,
+        elems: f64,
+        groups: Vec<Vec<usize>>,
+    },
+}
+
+impl Phase {
+    /// A phase with nothing to do (skipped by the executor and dropped at
+    /// plan-construction time).
+    pub fn is_empty(&self) -> bool {
+        match self {
+            Phase::Rounds(rounds) => rounds.iter().all(|ops| ops.is_empty()),
+            Phase::SwitchReduce { .. } => false,
+        }
+    }
+
+    /// Total wire bytes this phase moves (Tx sends, plus the up+down legs
+    /// of an in-switch pass), after compression by `wire_ratio`.
+    pub fn wire_bytes(&self, wire_ratio: f64) -> f64 {
+        match self {
+            Phase::Rounds(rounds) => {
+                rounds.iter().flatten().map(|op| op.bytes / wire_ratio).sum()
+            }
+            Phase::SwitchReduce { bytes, groups, .. } => {
+                let members: usize = groups.iter().map(Vec::len).sum();
+                2.0 * members as f64 * bytes / wire_ratio
+            }
+        }
+    }
+
+    /// Genuine f32 adds the phase performs — NIC adders for rounds; for
+    /// an in-switch pass, (mᵍ−1)·E per leaf group plus (G−1)·E across
+    /// groups (the engines' table write-ins are bandwidth, not adds).
+    pub fn reduced_elems(&self) -> f64 {
+        match self {
+            Phase::Rounds(rounds) => {
+                rounds.iter().flatten().map(|op| op.reduce_elems).sum()
+            }
+            Phase::SwitchReduce { elems, groups, .. } => {
+                let local: f64 = groups.iter().map(|g| g.len() as f64 - 1.0).sum();
+                (local + groups.len() as f64 - 1.0) * elems
+            }
+        }
+    }
+}
+
 /// Per-algorithm execution state.
 enum AlgoState {
     /// single-rank no-op: completes instantly
     Noop,
     Ring(RingState),
-    NicRounds(NicRoundsState),
+    Planned(PlannedState),
     Host(HostState),
 }
 
@@ -53,14 +125,51 @@ struct RingState {
     pending_writebacks: usize,
 }
 
-struct NicRoundsState {
-    rounds: Vec<Vec<RoundOp>>,
-    /// full gradient bytes (per-rank fetch/writeback payload)
+/// Progress of a planned (phase-list) collective.
+struct PlannedState {
+    phases: Vec<Phase>,
+    /// host-side DMA payload per rank (fetched before the first `Rounds`
+    /// phase, written back after the last phase)
     bytes: f64,
+    phase_idx: usize,
     fetch_pending: usize,
-    op_pending: usize,
-    current_round: usize,
     wb_pending: usize,
+    /// progress within the current [`Phase::Rounds`]
+    round: usize,
+    op_pending: usize,
+    /// progress within the current [`Phase::SwitchReduce`]
+    sw: Option<SwitchProgress>,
+}
+
+/// Live state of one in-switch reduction pass (segment pipeline).
+struct SwitchProgress {
+    seg_bytes: f64,
+    wire_seg: f64,
+    seg_elems: f64,
+    segs: usize,
+    /// aggregation-table flow control: max segments in flight at once
+    window: usize,
+    /// fetch each segment over PCIe (phase 0 owns the host copy)
+    fetch: bool,
+    /// write each segment back over PCIe (last phase delivers to host)
+    writeback: bool,
+    /// global node id whose egress engine roots the aggregation
+    root: usize,
+    /// local rank -> leaf-group index
+    group_of: Vec<usize>,
+    /// leaf id of each group
+    group_leaves: Vec<usize>,
+    /// all member local ranks, flattened in group order
+    members: Vec<usize>,
+    next_seg: usize,
+    inflight: usize,
+    done: usize,
+    /// [segment][group] -> contributions not yet folded at the leaf engine
+    group_pending: Vec<Vec<usize>>,
+    /// [segment] -> leaf aggregates not yet folded at the spine engine
+    spine_pending: Vec<usize>,
+    /// [segment] -> member deliveries (incl. writeback) outstanding
+    rank_pending: Vec<usize>,
 }
 
 struct HostState {
@@ -100,10 +209,17 @@ impl Collective {
         }
     }
 
-    fn nic_rounds_mut(&mut self) -> &mut NicRoundsState {
+    fn planned_ref(&self) -> &PlannedState {
+        match &self.state {
+            AlgoState::Planned(p) => p,
+            _ => unreachable!("collective {} is not plan-based", self.id),
+        }
+    }
+
+    fn planned_mut(&mut self) -> &mut PlannedState {
         match &mut self.state {
-            AlgoState::NicRounds(r) => r,
-            _ => unreachable!("collective {} is not round-based", self.id),
+            AlgoState::Planned(p) => p,
+            _ => unreachable!("collective {} is not plan-based", self.id),
         }
     }
 
@@ -113,6 +229,45 @@ impl Collective {
             _ => unreachable!("collective {} is not host-based", self.id),
         }
     }
+}
+
+/// Build the native segment-pipelined ring state — the single constructor
+/// shared by `NicRing` and every planner fallback, so a fallback executes
+/// *exactly* the ring path.
+fn ring_state(sys: &SystemParams, n: usize, elems: usize, wire_ratio: f64) -> (AlgoState, f64) {
+    let plan = SegmentPlan::new(sys.nic.segment_bytes, n, elems);
+    let wire_seg = plan.seg_bytes / wire_ratio;
+    let segs = plan.segs_per_chunk;
+    let ring = Ring::new(n);
+    (
+        AlgoState::Ring(RingState {
+            plan,
+            wire_seg,
+            fetch_done: vec![vec![vec![0.0; segs]; n]; n],
+            pending_writebacks: n * n * segs,
+        }),
+        ring.allreduce_steps() as f64 * segs as f64 * wire_seg,
+    )
+}
+
+/// Build the planned-executor state from a phase list (empty phases are
+/// dropped so phase barriers never stall on nothing).
+fn planned_state(phases: Vec<Phase>, bytes: f64, n: usize, wire_ratio: f64) -> (AlgoState, f64) {
+    let phases: Vec<Phase> = phases.into_iter().filter(|p| !p.is_empty()).collect();
+    let wire_total: f64 = phases.iter().map(|p| p.wire_bytes(wire_ratio)).sum();
+    (
+        AlgoState::Planned(PlannedState {
+            phases,
+            bytes,
+            phase_idx: 0,
+            fetch_pending: 0,
+            wb_pending: 0,
+            round: 0,
+            op_pending: 0,
+            sw: None,
+        }),
+        wire_total / n as f64,
+    )
 }
 
 /// Post layer `layer`'s all-reduce for `job` at the current virtual time.
@@ -136,40 +291,36 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
         (AlgoState::Noop, 0.0)
     } else {
         match algo {
-            CollectiveAlgo::NicRing => {
-                let plan = SegmentPlan::new(st.sys.nic.segment_bytes, n, elems);
-                let wire_seg = plan.seg_bytes / wire_ratio;
-                let segs = plan.segs_per_chunk;
-                let ring = Ring::new(n);
-                (
-                    AlgoState::Ring(RingState {
-                        plan,
-                        wire_seg,
-                        fetch_done: vec![vec![vec![0.0; segs]; n]; n],
-                        pending_writebacks: n * n * segs,
-                    }),
-                    ring.allreduce_steps() as f64 * segs as f64 * wire_seg,
-                )
-            }
-            CollectiveAlgo::NicBinomial | CollectiveAlgo::NicRabenseifner => {
-                let rounds = if algo == CollectiveAlgo::NicBinomial {
-                    binomial_rounds(n, padded_bytes, elems as f64)
+            CollectiveAlgo::NicRing => ring_state(&st.sys, n, elems, wire_ratio),
+            CollectiveAlgo::NicBinomial => planned_state(
+                vec![Phase::Rounds(binomial_rounds(n, padded_bytes, elems as f64))],
+                padded_bytes,
+                n,
+                wire_ratio,
+            ),
+            CollectiveAlgo::NicRabenseifner => planned_state(
+                vec![Phase::Rounds(rabenseifner_rounds(n, padded_bytes, elems as f64))],
+                padded_bytes,
+                n,
+                wire_ratio,
+            ),
+            CollectiveAlgo::NicHierarchical
+            | CollectiveAlgo::SwitchReduce
+            | CollectiveAlgo::Auto => {
+                let plan = planner::plan_for_algo(
+                    &st.sys,
+                    &st.fabric.topology,
+                    &ranks,
+                    elems,
+                    wire_ratio,
+                    algo,
+                );
+                if plan.kind == PlanKind::Ring {
+                    // degenerate or fallback plan: the exact native ring
+                    ring_state(&st.sys, n, elems, wire_ratio)
                 } else {
-                    rabenseifner_rounds(n, padded_bytes, elems as f64)
-                };
-                let wire_total: f64 =
-                    rounds.iter().flatten().map(|op| op.bytes / wire_ratio).sum();
-                (
-                    AlgoState::NicRounds(NicRoundsState {
-                        rounds,
-                        bytes: padded_bytes,
-                        fetch_pending: n,
-                        op_pending: 0,
-                        current_round: 0,
-                        wb_pending: 0,
-                    }),
-                    wire_total / n as f64,
-                )
+                    planned_state(plan.phases, plan.payload_bytes, n, wire_ratio)
+                }
             }
             CollectiveAlgo::Host(scheme) => {
                 let env = st.jobs[job].host_env;
@@ -206,7 +357,7 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
     let kind: u8 = match &st.collectives[cid].state {
         AlgoState::Noop => 0,
         AlgoState::Ring(_) => 1,
-        AlgoState::NicRounds(_) => 2,
+        AlgoState::Planned(_) => 2,
         AlgoState::Host(_) => 3,
     };
     match kind {
@@ -219,7 +370,7 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
                 if is_ring {
                     start_ring(sim, st, cid);
                 } else {
-                    start_nic_rounds(sim, st, cid);
+                    start_planned(sim, st, cid);
                 }
             });
         }
@@ -425,50 +576,118 @@ fn ring_writeback_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: Collect
 }
 
 // ---------------------------------------------------------------------
-// NIC round executor (binomial / Rabenseifner)
+// Planned executor: composable phases with a barrier between them
+// (binomial / Rabenseifner / hierarchical / in-switch plans)
 // ---------------------------------------------------------------------
 
-fn start_nic_rounds(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+fn start_planned(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     let now = sim.now();
-    let (ranks, bytes) = {
+    let (ranks, bytes, first_is_switch) = {
         let c = &st.collectives[cid];
-        let r = match &c.state {
-            AlgoState::NicRounds(r) => r,
-            _ => unreachable!(),
-        };
-        (c.ranks.clone(), r.bytes)
+        let p = c.planned_ref();
+        (
+            c.ranks.clone(),
+            p.bytes,
+            matches!(p.phases.first(), Some(Phase::SwitchReduce { .. })),
+        )
     };
+    if first_is_switch {
+        // the in-switch pass pipelines its own per-segment DMA fetches
+        begin_phase(sim, st, cid);
+        return;
+    }
+    // whole-payload DMA fetch on every rank before the first rounds phase
+    st.collectives[cid].planned_mut().fetch_pending = ranks.len();
     for &node in &ranks {
         let done = st.fabric.nodes[node].pcie.to_device.transmit(now, bytes);
-        sim.schedule_at(done, move |sim, st| nic_fetch_done(sim, st, cid));
+        sim.schedule_at(done, move |sim, st| planned_fetch_done(sim, st, cid));
     }
 }
 
-fn nic_fetch_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
-    let r = st.collectives[cid].nic_rounds_mut();
-    r.fetch_pending -= 1;
-    if r.fetch_pending == 0 {
-        begin_nic_round(sim, st, cid, 0);
+fn planned_fetch_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let p = st.collectives[cid].planned_mut();
+    p.fetch_pending -= 1;
+    if p.fetch_pending == 0 {
+        begin_phase(sim, st, cid);
     }
 }
 
-fn begin_nic_round(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId, round: usize) {
+/// Enter the current phase (or finish the plan when none are left).
+fn begin_phase(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let entry = {
+        let p = st.collectives[cid].planned_ref();
+        p.phases.get(p.phase_idx).map(|ph| matches!(ph, Phase::Rounds(_)))
+    };
+    match entry {
+        None => finish_planned(sim, st, cid),
+        Some(true) => {
+            st.collectives[cid].planned_mut().round = 0;
+            begin_planned_round(sim, st, cid, 0);
+        }
+        Some(false) => start_switch_phase(sim, st, cid),
+    }
+}
+
+fn advance_phase(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    st.collectives[cid].planned_mut().phase_idx += 1;
+    begin_phase(sim, st, cid);
+}
+
+/// All phases done: write the payload back unless the plan ended with an
+/// in-switch pass (which delivered per segment).
+fn finish_planned(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let now = sim.now();
+    let (ranks, bytes, switch_tail) = {
+        let c = &st.collectives[cid];
+        let p = c.planned_ref();
+        (
+            c.ranks.clone(),
+            p.bytes,
+            matches!(p.phases.last(), Some(Phase::SwitchReduce { .. })),
+        )
+    };
+    if switch_tail {
+        complete(sim, st, cid);
+        return;
+    }
+    st.collectives[cid].planned_mut().wb_pending = ranks.len();
+    for &node in &ranks {
+        let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, bytes);
+        sim.schedule_at(wb, move |sim, st| planned_wb_done(sim, st, cid));
+    }
+}
+
+fn planned_wb_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let p = st.collectives[cid].planned_mut();
+    p.wb_pending -= 1;
+    if p.wb_pending == 0 {
+        complete(sim, st, cid);
+    }
+}
+
+fn begin_planned_round(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    round: usize,
+) {
     let now = sim.now();
     let (ops, ranks, wire_ratio) = {
         let c = &st.collectives[cid];
-        let r = match &c.state {
-            AlgoState::NicRounds(r) => r,
-            _ => unreachable!(),
+        let p = c.planned_ref();
+        let rounds = match &p.phases[p.phase_idx] {
+            Phase::Rounds(r) => r,
+            _ => unreachable!("round in a non-rounds phase"),
         };
-        (r.rounds[round].clone(), c.ranks.clone(), st.jobs[c.job].wire_ratio)
+        (rounds[round].clone(), c.ranks.clone(), st.jobs[c.job].wire_ratio)
     };
     {
-        let r = st.collectives[cid].nic_rounds_mut();
-        r.current_round = round;
-        r.op_pending = ops.len();
+        let p = st.collectives[cid].planned_mut();
+        p.round = round;
+        p.op_pending = ops.len();
     }
     if ops.is_empty() {
-        nic_round_barrier(sim, st, cid);
+        planned_round_barrier(sim, st, cid);
         return;
     }
     for op in ops {
@@ -479,49 +698,286 @@ fn begin_nic_round(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveI
         sim.schedule_at(arrive, move |sim, st| {
             if reduce_elems > 0.0 {
                 let done = st.fabric.nodes[dst_node].adder.serve(sim.now(), reduce_elems);
-                sim.schedule_at(done, move |sim, st| nic_op_done(sim, st, cid));
+                sim.schedule_at(done, move |sim, st| planned_op_done(sim, st, cid));
             } else {
-                nic_op_done(sim, st, cid);
+                planned_op_done(sim, st, cid);
             }
         });
     }
 }
 
-fn nic_op_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
-    let r = st.collectives[cid].nic_rounds_mut();
-    r.op_pending -= 1;
-    if r.op_pending == 0 {
-        nic_round_barrier(sim, st, cid);
+fn planned_op_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let p = st.collectives[cid].planned_mut();
+    p.op_pending -= 1;
+    if p.op_pending == 0 {
+        planned_round_barrier(sim, st, cid);
     }
 }
 
-fn nic_round_barrier(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
-    let now = sim.now();
-    let (next, n_rounds, bytes, ranks) = {
-        let c = &st.collectives[cid];
-        let r = match &c.state {
-            AlgoState::NicRounds(r) => r,
-            _ => unreachable!(),
+fn planned_round_barrier(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let (next, n_rounds) = {
+        let p = st.collectives[cid].planned_ref();
+        let rounds = match &p.phases[p.phase_idx] {
+            Phase::Rounds(r) => r,
+            _ => unreachable!("barrier in a non-rounds phase"),
         };
-        (r.current_round + 1, r.rounds.len(), r.bytes, c.ranks.clone())
+        (p.round + 1, rounds.len())
     };
     if next < n_rounds {
-        begin_nic_round(sim, st, cid, next);
-        return;
-    }
-    // final round done: every rank writes the reduced gradient back
-    st.collectives[cid].nic_rounds_mut().wb_pending = ranks.len();
-    for &node in &ranks {
-        let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, bytes);
-        sim.schedule_at(wb, move |sim, st| nic_wb_done(sim, st, cid));
+        begin_planned_round(sim, st, cid, next);
+    } else {
+        advance_phase(sim, st, cid);
     }
 }
 
-fn nic_wb_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
-    let r = st.collectives[cid].nic_rounds_mut();
-    r.wb_pending -= 1;
-    if r.wb_pending == 0 {
-        complete(sim, st, cid);
+// ---------------------------------------------------------------------
+// In-switch reduction executor (NetReduce-style segment pipeline)
+// ---------------------------------------------------------------------
+
+fn start_switch_phase(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let (bytes, elems, groups, idx, n_phases, wire_ratio, n) = {
+        let c = &st.collectives[cid];
+        let p = c.planned_ref();
+        let (bytes, elems, groups) = match &p.phases[p.phase_idx] {
+            Phase::SwitchReduce { bytes, elems, groups } => (*bytes, *elems, groups.clone()),
+            _ => unreachable!("switch start in a non-switch phase"),
+        };
+        (
+            bytes,
+            elems,
+            groups,
+            p.phase_idx,
+            p.phases.len(),
+            st.jobs[c.job].wire_ratio,
+            c.ranks.len(),
+        )
+    };
+    assert!(
+        st.fabric.switch_reduce_capable(),
+        "in-switch plan on a fabric without reduction engines (planner fallback bug)"
+    );
+    let segs = (bytes / st.sys.nic.segment_bytes).ceil().max(1.0) as usize;
+    let seg_bytes = bytes / segs as f64;
+    let seg_elems = elems / segs as f64;
+    let wire_seg = seg_bytes / wire_ratio;
+    let window = (st.sys.switch.reduce_table_bytes / seg_bytes).floor() as usize;
+    assert!(window >= 1, "aggregation table smaller than one segment (planner fallback bug)");
+    let window = window.min(segs);
+    let mut group_of = vec![usize::MAX; n];
+    for (g, grp) in groups.iter().enumerate() {
+        for &local in grp {
+            group_of[local] = g;
+        }
+    }
+    let ranks = &st.collectives[cid].ranks;
+    let group_leaves: Vec<usize> = groups
+        .iter()
+        .map(|grp| st.fabric.topology.leaf_of(ranks[grp[0]]))
+        .collect();
+    let root = ranks[groups[0][0]];
+    let members: Vec<usize> = groups.iter().flatten().copied().collect();
+    let member_count = members.len();
+    let per_group: Vec<usize> = groups.iter().map(Vec::len).collect();
+    let n_groups = groups.len();
+    st.collectives[cid].planned_mut().sw = Some(SwitchProgress {
+        seg_bytes,
+        wire_seg,
+        seg_elems,
+        segs,
+        window,
+        fetch: idx == 0,
+        writeback: idx + 1 == n_phases,
+        root,
+        group_of,
+        group_leaves,
+        members,
+        next_seg: 0,
+        inflight: 0,
+        done: 0,
+        group_pending: (0..segs).map(|_| per_group.clone()).collect(),
+        spine_pending: vec![n_groups; segs],
+        rank_pending: vec![member_count; segs],
+    });
+    for _ in 0..window {
+        switch_launch_next(sim, st, cid);
+    }
+}
+
+/// Launch the next segment if a table slot is free: queue every member's
+/// PCIe fetch (or contribute directly when the data is already on-NIC).
+fn switch_launch_next(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let now = sim.now();
+    let launch = {
+        let p = st.collectives[cid].planned_mut();
+        let sw = p.sw.as_mut().expect("no in-switch pass active");
+        if sw.next_seg >= sw.segs || sw.inflight >= sw.window {
+            None
+        } else {
+            let seg = sw.next_seg;
+            sw.next_seg += 1;
+            sw.inflight += 1;
+            Some((seg, sw.fetch, sw.seg_bytes, sw.members.clone()))
+        }
+    };
+    let Some((seg, fetch, seg_bytes, members)) = launch else {
+        return;
+    };
+    for local in members {
+        if fetch {
+            let node = st.collectives[cid].ranks[local];
+            let done = st.fabric.nodes[node].pcie.to_device.transmit(now, seg_bytes);
+            sim.schedule_at(done, move |sim, st| switch_contribute(sim, st, cid, seg, local));
+        } else {
+            switch_contribute(sim, st, cid, seg, local);
+        }
+    }
+}
+
+/// One member's copy of `seg` is on its NIC: Tx-serialize it and fold it
+/// into the local aggregation engine.
+fn switch_contribute(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    seg: usize,
+    local: usize,
+) {
+    let now = sim.now();
+    let (src, root, wire_seg, seg_elems, g) = {
+        let c = &st.collectives[cid];
+        let sw = c.planned_ref().sw.as_ref().expect("no in-switch pass active");
+        (c.ranks[local], sw.root, sw.wire_seg, sw.seg_elems, sw.group_of[local])
+    };
+    let folded = st.fabric.reduce_fold_local(src, root, now, wire_seg, seg_elems);
+    sim.schedule_at(folded, move |sim, st| switch_fold_done(sim, st, cid, seg, g));
+}
+
+/// A contribution folded at group `g`'s leaf engine; when the group is
+/// complete, ship the aggregate to the spine (or multicast directly when
+/// the whole collective sits behind one switch).
+fn switch_fold_done(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    seg: usize,
+    g: usize,
+) {
+    let now = sim.now();
+    let remaining = {
+        let sw = st.collectives[cid].planned_mut().sw.as_mut().unwrap();
+        sw.group_pending[seg][g] -= 1;
+        sw.group_pending[seg][g]
+    };
+    if remaining > 0 {
+        return;
+    }
+    let (spanning, leaf, root, wire_seg, seg_elems) = {
+        let sw = st.collectives[cid].planned_ref().sw.as_ref().unwrap();
+        (
+            sw.group_leaves.len() > 1,
+            sw.group_leaves[g],
+            sw.root,
+            sw.wire_seg,
+            sw.seg_elems,
+        )
+    };
+    if !spanning {
+        switch_multicast(sim, st, cid, seg, g);
+        return;
+    }
+    let at_spine = st.fabric.reduce_fold_spine(leaf, root, now, wire_seg, seg_elems);
+    sim.schedule_at(at_spine, move |sim, st| switch_spine_done(sim, st, cid, seg));
+}
+
+/// A leaf aggregate folded at the spine engine; when all leaves are in,
+/// multicast one copy down every leaf's bundle.
+fn switch_spine_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId, seg: usize) {
+    let now = sim.now();
+    let remaining = {
+        let sw = st.collectives[cid].planned_mut().sw.as_mut().unwrap();
+        sw.spine_pending[seg] -= 1;
+        sw.spine_pending[seg]
+    };
+    if remaining > 0 {
+        return;
+    }
+    let (leaves, wire_seg) = {
+        let sw = st.collectives[cid].planned_ref().sw.as_ref().unwrap();
+        (sw.group_leaves.clone(), sw.wire_seg)
+    };
+    for (g, leaf) in leaves.into_iter().enumerate() {
+        let at_leaf = st.fabric.reduce_downlink(leaf, now, wire_seg);
+        sim.schedule_at(at_leaf, move |sim, st| switch_multicast(sim, st, cid, seg, g));
+    }
+}
+
+/// The reduced segment reached group `g`'s leaf switch: final egress to
+/// every member of the group.
+fn switch_multicast(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    seg: usize,
+    g: usize,
+) {
+    let now = sim.now();
+    let (members, wire_seg) = {
+        let c = &st.collectives[cid];
+        let p = c.planned_ref();
+        let groups = match &p.phases[p.phase_idx] {
+            Phase::SwitchReduce { groups, .. } => groups,
+            _ => unreachable!("multicast in a non-switch phase"),
+        };
+        (groups[g].clone(), p.sw.as_ref().unwrap().wire_seg)
+    };
+    for local in members {
+        let dst = st.collectives[cid].ranks[local];
+        let at_nic = st.fabric.reduce_deliver(dst, now, wire_seg);
+        sim.schedule_at(at_nic, move |sim, st| switch_delivered(sim, st, cid, seg, local));
+    }
+}
+
+/// The reduced segment reached a member's NIC: DMA it to the host when
+/// this pass owns the writeback.
+fn switch_delivered(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    seg: usize,
+    local: usize,
+) {
+    let now = sim.now();
+    let (writeback, seg_bytes, node) = {
+        let c = &st.collectives[cid];
+        let sw = c.planned_ref().sw.as_ref().unwrap();
+        (sw.writeback, sw.seg_bytes, c.ranks[local])
+    };
+    if writeback {
+        let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, seg_bytes);
+        sim.schedule_at(wb, move |sim, st| switch_rank_done(sim, st, cid, seg));
+    } else {
+        switch_rank_done(sim, st, cid, seg);
+    }
+}
+
+/// Segment bookkeeping: free the table slot when every member is served,
+/// then launch the next queued segment or finish the phase.
+fn switch_rank_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId, seg: usize) {
+    let outcome = {
+        let sw = st.collectives[cid].planned_mut().sw.as_mut().unwrap();
+        sw.rank_pending[seg] -= 1;
+        if sw.rank_pending[seg] > 0 {
+            None
+        } else {
+            sw.inflight -= 1;
+            sw.done += 1;
+            Some(sw.done == sw.segs)
+        }
+    };
+    match outcome {
+        None => {}
+        Some(false) => switch_launch_next(sim, st, cid),
+        Some(true) => advance_phase(sim, st, cid),
     }
 }
 

@@ -73,6 +73,13 @@ impl JobSpec {
         self.layer_algos = algos;
         self
     }
+
+    /// Let the topology-aware planner pick every layer's algorithm from
+    /// the fabric shape, placement and message size.
+    pub fn with_auto_planner(mut self) -> Self {
+        self.layer_algos = vec![CollectiveAlgo::Auto; self.workload.layers];
+        self
+    }
 }
 
 /// One step of the worker lane.

@@ -29,6 +29,7 @@
 
 pub mod collective;
 pub mod job;
+pub mod planner;
 pub mod scenario;
 
 use crate::collective::Scheme;
@@ -49,7 +50,8 @@ pub type JobId = usize;
 pub type CollectiveId = usize;
 
 /// Which algorithm a collective runs — NIC-offloaded (on the FPGA
-/// datapath) or host software (on the comm cores).
+/// datapath), switch-resident, planner-selected, or host software (on the
+/// comm cores).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CollectiveAlgo {
     /// segment-pipelined in-network ring (the NIC's native algorithm)
@@ -58,6 +60,17 @@ pub enum CollectiveAlgo {
     NicBinomial,
     /// NIC-offloaded Rabenseifner halving/doubling (round-based)
     NicRabenseifner,
+    /// placement-aware hierarchical plan: ring reduce-scatter inside each
+    /// leaf, ring all-reduce of the shards across the spine, allgather
+    /// inside the leaf ([`planner`] builds the phases)
+    NicHierarchical,
+    /// NetReduce-style in-switch reduction on the fabric's aggregation
+    /// engines; falls back to the exact NIC ring when the switch cannot
+    /// reduce (no engines, or a table too small for one segment)
+    SwitchReduce,
+    /// let [`planner`] pick the cheapest plan for this topology,
+    /// placement and message size
+    Auto,
     /// host/MPI software scheme on the comm cores
     Host(Scheme),
 }
@@ -68,6 +81,9 @@ impl CollectiveAlgo {
             CollectiveAlgo::NicRing => "nic-ring".to_string(),
             CollectiveAlgo::NicBinomial => "nic-binomial".to_string(),
             CollectiveAlgo::NicRabenseifner => "nic-rabenseifner".to_string(),
+            CollectiveAlgo::NicHierarchical => "nic-hierarchical".to_string(),
+            CollectiveAlgo::SwitchReduce => "switch-reduce".to_string(),
+            CollectiveAlgo::Auto => "auto".to_string(),
             CollectiveAlgo::Host(s) => format!("host-{}", s.name()),
         }
     }

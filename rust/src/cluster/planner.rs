@@ -1,0 +1,511 @@
+//! Topology-aware collective planner.
+//!
+//! Given a [`Topology`], a placement (the job's physical ranks), and a
+//! message size, the planner prices every plan it can build with the
+//! closed forms in [`crate::analytic::model`] and returns the cheapest as
+//! a list of composable [`Phase`]s for the unified engine:
+//!
+//! * **Ring** — the NIC's native segment-pipelined ring, derated by the
+//!   placement's leaf-uplink contention factor ([`ring_uplink_factor`]):
+//!   a strided placement on a tapered spine pays ~the oversubscription
+//!   factor on the wire term, the penalty PR 2's sweep measured.
+//! * **Binomial / Rabenseifner** — the round-based NIC offloads, priced
+//!   per round by the worst reservation-stage load on this topology
+//!   ([`rounds_cost`]).
+//! * **Hierarchical** — ring reduce-scatter inside each leaf, ring
+//!   all-reduce of each rank's shard across the leaves (m concurrent
+//!   l-rings over the spine), ring allgather inside the leaf.  Crosses
+//!   the spine with 2(l−1)/l · S/m per rank instead of the strided
+//!   ring's 2(n−1)/n · S — the placement-aware plan that undercuts the
+//!   tapering penalty.  Requires equal-size leaf groups.
+//! * **InSwitch** — NetReduce-style switch-resident reduction
+//!   ([`Phase::SwitchReduce`]), available when the fabric's switch tier
+//!   has aggregation engines and a table that holds at least one
+//!   segment; otherwise the planner falls back to the exact ring path.
+//!
+//! Two invariants are property-tested (`rust/tests/planner.rs`): the
+//! chosen plan is never predicted slower than any fixed single-scheme
+//! plan, and every plan reduces each gradient element exactly once per
+//! peer ((n−1)·E genuine adds).
+
+use super::collective::{binomial_rounds, rabenseifner_rounds, Phase, RoundOp};
+use super::CollectiveAlgo;
+use crate::analytic::model::{
+    hierarchical_ar_time_elems, inswitch_ar_time_elems, nic_ring_ar_time_elems,
+};
+use crate::netsim::topology::Topology;
+use crate::sysconfig::SystemParams;
+
+/// The families of plans the planner can build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanKind {
+    /// native segment-pipelined NIC ring (executed by the ring executor)
+    Ring,
+    /// round-based binomial reduce + broadcast
+    Binomial,
+    /// round-based Rabenseifner halving/doubling
+    Rabenseifner,
+    /// reduce-scatter in leaf → shard all-reduce across the spine →
+    /// allgather in leaf
+    Hierarchical,
+    /// NetReduce-style in-switch reduction
+    InSwitch,
+}
+
+impl PlanKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanKind::Ring => "ring",
+            PlanKind::Binomial => "binomial",
+            PlanKind::Rabenseifner => "rabenseifner",
+            PlanKind::Hierarchical => "hierarchical",
+            PlanKind::InSwitch => "in-switch",
+        }
+    }
+}
+
+/// A priced, executable collective plan.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub kind: PlanKind,
+    /// phases for the planned executor; empty for [`PlanKind::Ring`],
+    /// which runs on the native ring datapath
+    pub phases: Vec<Phase>,
+    /// host-side DMA payload per rank (fetched before the first rounds
+    /// phase, written back after the last; the ring path manages its own
+    /// segment DMA)
+    pub payload_bytes: f64,
+    /// the planner's closed-form cost estimate (seconds)
+    pub predicted: f64,
+}
+
+impl Plan {
+    /// Genuine f32 adds the plan performs.  An all-reduce over `n` ranks
+    /// must reduce every element exactly once per peer: (n−1)·E — the
+    /// conservation invariant, and exactly what `scheme_rounds`' ring
+    /// decomposition implies (n−1 reduce rounds × n ranks × E/n apiece).
+    pub fn reduced_elems(&self, n: usize, elems: usize) -> f64 {
+        if self.kind == PlanKind::Ring {
+            // native ring: each rank reduces n−1 chunks of E/n
+            return (n as f64 - 1.0) * elems as f64;
+        }
+        self.phases.iter().map(Phase::reduced_elems).sum()
+    }
+}
+
+/// Local rank indices grouped by the leaf switch their node hangs off,
+/// in order of first appearance (so group 0 contains local rank 0).
+pub fn leaf_groups(topo: &Topology, ranks: &[usize]) -> Vec<Vec<usize>> {
+    let mut order: Vec<usize> = Vec::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (local, &node) in ranks.iter().enumerate() {
+        let leaf = topo.leaf_of(node);
+        match order.iter().position(|&l| l == leaf) {
+            Some(g) => groups[g].push(local),
+            None => {
+                order.push(leaf);
+                groups.push(vec![local]);
+            }
+        }
+    }
+    groups
+}
+
+/// Leaf-uplink contention multiplier of a ring over this placement: per
+/// pipelined ring step every rank forwards one chunk to its successor, so
+/// a leaf whose `e` ring edges exit (or enter) it pushes `e` concurrent
+/// chunks through a bundle provisioned for `m/oversub` ports —
+/// max(1, e·oversub/m) slower than one port's serialization.
+pub fn ring_uplink_factor(topo: &Topology, ranks: &[usize]) -> f64 {
+    let k = ranks.len();
+    if k <= 1 {
+        return 1.0;
+    }
+    match *topo {
+        Topology::Flat { .. } => 1.0,
+        Topology::LeafSpine { leaves, nodes_per_leaf, oversubscription } => {
+            let mut out = vec![0usize; leaves];
+            let mut inc = vec![0usize; leaves];
+            for i in 0..k {
+                let (a, b) = (ranks[i], ranks[(i + 1) % k]);
+                let (la, lb) = (topo.leaf_of(a), topo.leaf_of(b));
+                if la != lb {
+                    out[la] += 1;
+                    inc[lb] += 1;
+                }
+            }
+            let worst = out.iter().chain(inc.iter()).copied().max().unwrap_or(0) as f64;
+            (worst * oversubscription / nodes_per_leaf as f64).max(1.0)
+        }
+    }
+}
+
+/// Closed-form cost of barrier-synchronized rounds on this topology: per
+/// round, the worst reservation-stage load (any Tx link, leaf uplink or
+/// downlink bundle, destination egress port) plus the route latency and
+/// the worst destination-adder time, plus the plan-level DMA fetch /
+/// writeback and the NIC request overhead.
+pub fn rounds_cost(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    rounds: &[Vec<RoundOp>],
+    wire_ratio: f64,
+    payload_bytes: f64,
+) -> f64 {
+    let bw = sys.net.effective_bw();
+    let lat = sys.net.hop_latency;
+    let rho = sys.nic.add_flops;
+    let n = ranks.len();
+    let up_bw = topo.uplink_bw(bw);
+    let l = topo.leaves();
+    let max = |v: &[f64]| v.iter().fold(0.0f64, |a, &b| a.max(b));
+    let mut t =
+        sys.nic_request_overhead + 2.0 * (payload_bytes / sys.nic.pcie_bw + sys.nic.pcie_latency);
+    for round in rounds {
+        if round.is_empty() {
+            continue;
+        }
+        let mut tx = vec![0.0f64; n];
+        let mut eg = vec![0.0f64; n];
+        let mut up = vec![0.0f64; l];
+        let mut down = vec![0.0f64; l];
+        let mut add = vec![0.0f64; n];
+        let mut hops = 1usize;
+        for op in round {
+            let wire = op.bytes / wire_ratio;
+            tx[op.src] += wire;
+            eg[op.dst] += wire;
+            let (ls, ld) = (topo.leaf_of(ranks[op.src]), topo.leaf_of(ranks[op.dst]));
+            if ls != ld {
+                up[ls] += wire;
+                down[ld] += wire;
+                hops = 3;
+            }
+            add[op.dst] += op.reduce_elems;
+        }
+        let wire_t = (max(&tx) / bw)
+            .max(max(&eg) / bw)
+            .max(max(&up) / up_bw)
+            .max(max(&down) / up_bw);
+        t += wire_t + hops as f64 * lat + max(&add) / rho;
+    }
+    t
+}
+
+/// Hierarchical phases for uniform leaf groups (`m` ranks in each of `l`
+/// groups).  Volumes are exact f64 fractions of the raw gradient so the
+/// plan reduces each element exactly once per peer.
+pub fn hierarchical_phases(groups: &[Vec<usize>], bytes: f64, elems: f64) -> Vec<Phase> {
+    let l = groups.len();
+    let m = groups[0].len();
+    debug_assert!(groups.iter().all(|g| g.len() == m), "groups must be uniform");
+    let mut phases = Vec::new();
+    let intra = |reduce: bool| -> Vec<Vec<RoundOp>> {
+        (0..m.saturating_sub(1))
+            .map(|_| {
+                groups
+                    .iter()
+                    .flat_map(|grp| {
+                        (0..m).map(move |j| RoundOp {
+                            src: grp[j],
+                            dst: grp[(j + 1) % m],
+                            bytes: bytes / m as f64,
+                            reduce_elems: if reduce { elems / m as f64 } else { 0.0 },
+                        })
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    if m >= 2 {
+        phases.push(Phase::Rounds(intra(true))); // reduce-scatter in leaf
+    }
+    if l >= 2 {
+        // each rank's shard (S/m) ring-all-reduced across the leaves: m
+        // concurrent rings of l, one spine crossing per member per round
+        let c2 = bytes / (m * l) as f64;
+        let e2 = elems / (m * l) as f64;
+        let cross: Vec<Vec<RoundOp>> = (0..2 * (l - 1))
+            .map(|r| {
+                let reduce_elems = if r < l - 1 { e2 } else { 0.0 };
+                (0..l)
+                    .flat_map(|g| {
+                        let next = (g + 1) % l;
+                        (0..m).map(move |j| RoundOp {
+                            src: groups[g][j],
+                            dst: groups[next][j],
+                            bytes: c2,
+                            reduce_elems,
+                        })
+                    })
+                    .collect()
+            })
+            .collect();
+        phases.push(Phase::Rounds(cross));
+    }
+    if m >= 2 {
+        phases.push(Phase::Rounds(intra(false))); // allgather in leaf
+    }
+    phases
+}
+
+/// Every plan the planner can price for this configuration (the ring is
+/// always present; hierarchical needs uniform leaf groups on ≥ 2 leaves;
+/// in-switch needs a reduction-capable switch tier).
+pub fn candidates(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+) -> Vec<Plan> {
+    let n = ranks.len();
+    let raw = elems as f64 * 4.0;
+    let padded = elems.div_ceil(n.max(1)).max(1) as f64 * 4.0 * n as f64;
+    let groups = leaf_groups(topo, ranks);
+    let l = groups.len();
+    let m = groups[0].len();
+    let uniform = groups.iter().all(|g| g.len() == m);
+    // The closed forms price the spine by "group size over bundle": their
+    // `oversub` must be the *effective* per-group tapering m·bw /
+    // uplink_bw — equal to the fabric factor when groups fill their
+    // leaves, and proportionally milder when a job only partially
+    // occupies them (the bundle stays provisioned by nodes_per_leaf).
+    let bw = sys.net.effective_bw();
+    let oversub_eff = |grp_m: usize| grp_m as f64 * bw / topo.uplink_bw(bw);
+
+    let mut out = vec![Plan {
+        kind: PlanKind::Ring,
+        phases: Vec::new(),
+        payload_bytes: padded,
+        predicted: nic_ring_ar_time_elems(
+            sys,
+            elems,
+            n,
+            wire_ratio,
+            ring_uplink_factor(topo, ranks),
+        ),
+    }];
+    if n >= 2 {
+        let b_rounds = binomial_rounds(n, padded, elems as f64);
+        let b_cost = rounds_cost(sys, topo, ranks, &b_rounds, wire_ratio, padded);
+        out.push(Plan {
+            kind: PlanKind::Binomial,
+            phases: vec![Phase::Rounds(b_rounds)],
+            payload_bytes: padded,
+            predicted: b_cost,
+        });
+        let r_rounds = rabenseifner_rounds(n, padded, elems as f64);
+        let r_cost = rounds_cost(sys, topo, ranks, &r_rounds, wire_ratio, padded);
+        out.push(Plan {
+            kind: PlanKind::Rabenseifner,
+            phases: vec![Phase::Rounds(r_rounds)],
+            payload_bytes: padded,
+            predicted: r_cost,
+        });
+    }
+    if uniform && l >= 2 {
+        out.push(Plan {
+            kind: PlanKind::Hierarchical,
+            phases: hierarchical_phases(&groups, raw, elems as f64),
+            payload_bytes: raw,
+            predicted: hierarchical_ar_time_elems(sys, elems, m, l, oversub_eff(m), wire_ratio),
+        });
+    }
+    if sys.switch.enabled() && n >= 2 {
+        // ragged groups are priced by their worst leaf: the largest
+        // group's fold is the pipeline's leaf-engine stage time, which is
+        // exactly what bounds the executor's per-segment rate
+        let m_max = groups.iter().map(Vec::len).max().unwrap_or(1);
+        let predicted =
+            inswitch_ar_time_elems(sys, elems, m_max, l, oversub_eff(m_max), wire_ratio);
+        if predicted.is_finite() {
+            out.push(Plan {
+                kind: PlanKind::InSwitch,
+                phases: vec![Phase::SwitchReduce {
+                    bytes: raw,
+                    elems: elems as f64,
+                    groups,
+                }],
+                payload_bytes: raw,
+                predicted,
+            });
+        }
+    }
+    out
+}
+
+/// Pick the cheapest plan for this configuration.
+pub fn plan(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+) -> Plan {
+    candidates(sys, topo, ranks, elems, wire_ratio)
+        .into_iter()
+        .min_by(|a, b| a.predicted.total_cmp(&b.predicted))
+        .expect("the ring candidate always exists")
+}
+
+/// A specific plan family, falling back to the exact native ring when the
+/// requested family is unavailable here (no spine for a hierarchical
+/// plan, or a switch tier that cannot reduce).
+pub fn plan_fixed(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+    kind: PlanKind,
+) -> Plan {
+    let mut cands = candidates(sys, topo, ranks, elems, wire_ratio);
+    let idx = cands
+        .iter()
+        .position(|c| c.kind == kind)
+        .unwrap_or_else(|| {
+            cands
+                .iter()
+                .position(|c| c.kind == PlanKind::Ring)
+                .expect("the ring candidate always exists")
+        });
+    cands.swap_remove(idx)
+}
+
+/// Resolve a planner-backed [`CollectiveAlgo`] into an executable plan.
+pub fn plan_for_algo(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+    algo: CollectiveAlgo,
+) -> Plan {
+    match algo {
+        CollectiveAlgo::Auto => plan(sys, topo, ranks, elems, wire_ratio),
+        CollectiveAlgo::NicHierarchical => {
+            plan_fixed(sys, topo, ranks, elems, wire_ratio, PlanKind::Hierarchical)
+        }
+        CollectiveAlgo::SwitchReduce => {
+            plan_fixed(sys, topo, ranks, elems, wire_ratio, PlanKind::InSwitch)
+        }
+        other => unreachable!("planner invoked for fixed algorithm {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sysconfig::SwitchParams;
+
+    const ELEMS: usize = 2048 * 2048;
+
+    #[test]
+    fn leaf_groups_follow_placement() {
+        let topo = Topology::leaf_spine(2, 3, 4.0);
+        let contig = leaf_groups(&topo, &topo.contiguous_ranks(6));
+        assert_eq!(contig, vec![vec![0, 1, 2], vec![3, 4, 5]]);
+        let strided = leaf_groups(&topo, &topo.strided_ranks(6));
+        // strided: local ranks 0,2,4 land on leaf 0; 1,3,5 on leaf 1
+        assert_eq!(strided, vec![vec![0, 2, 4], vec![1, 3, 5]]);
+        let flat = leaf_groups(&Topology::flat(4), &[0, 1, 2, 3]);
+        assert_eq!(flat.len(), 1);
+    }
+
+    #[test]
+    fn uplink_factor_matches_placement() {
+        let topo = Topology::leaf_spine(4, 8, 4.0);
+        let n = 32;
+        // contiguous: one exit edge per leaf -> the bundle absorbs it
+        let f_contig = ring_uplink_factor(&topo, &topo.contiguous_ranks(n));
+        assert_eq!(f_contig, 1.0);
+        // strided: every edge crosses -> 8 exits share a 2-port bundle
+        let f_strided = ring_uplink_factor(&topo, &topo.strided_ranks(n));
+        assert_eq!(f_strided, 4.0);
+        assert_eq!(ring_uplink_factor(&Topology::flat(n), &topo.contiguous_ranks(n)), 1.0);
+    }
+
+    #[test]
+    fn planner_picks_ring_on_the_flat_crossbar() {
+        let sys = SystemParams::smartnic_40g();
+        let topo = Topology::flat(8);
+        let p = plan(&sys, &topo, &topo.contiguous_ranks(8), ELEMS, 1.0);
+        assert_eq!(p.kind, PlanKind::Ring);
+        assert!(p.phases.is_empty());
+    }
+
+    #[test]
+    fn planner_undercuts_the_strided_ring_on_a_tapered_spine() {
+        let sys = SystemParams::smartnic_40g();
+        let topo = Topology::leaf_spine(4, 8, 4.0);
+        let ranks = topo.strided_ranks(32);
+        let cands = candidates(&sys, &topo, &ranks, ELEMS, 1.0);
+        let ring = cands.iter().find(|c| c.kind == PlanKind::Ring).unwrap();
+        let hier = cands.iter().find(|c| c.kind == PlanKind::Hierarchical).unwrap();
+        assert!(
+            hier.predicted < ring.predicted * 0.8,
+            "hierarchical {} vs strided ring {}",
+            hier.predicted,
+            ring.predicted
+        );
+        let chosen = plan(&sys, &topo, &ranks, ELEMS, 1.0);
+        assert_ne!(chosen.kind, PlanKind::Ring, "planner kept the derated ring");
+    }
+
+    #[test]
+    fn switch_plans_require_a_capable_fabric() {
+        let topo = Topology::leaf_spine(2, 4, 4.0);
+        let ranks = topo.contiguous_ranks(8);
+        let plain = SystemParams::smartnic_40g();
+        assert!(!candidates(&plain, &topo, &ranks, ELEMS, 1.0)
+            .iter()
+            .any(|c| c.kind == PlanKind::InSwitch));
+        // forcing in-switch on a plain fabric falls back to the ring
+        let fb = plan_fixed(&plain, &topo, &ranks, ELEMS, 1.0, PlanKind::InSwitch);
+        assert_eq!(fb.kind, PlanKind::Ring);
+        let netred = plain
+            .with_switch_reduction(SwitchParams::netreduce(4, &plain.net));
+        let cands = candidates(&netred, &topo, &ranks, ELEMS, 1.0);
+        assert!(cands.iter().any(|c| c.kind == PlanKind::InSwitch));
+    }
+
+    #[test]
+    fn hierarchical_needs_uniform_groups() {
+        let sys = SystemParams::smartnic_40g();
+        let topo = Topology::leaf_spine(2, 4, 4.0);
+        // 3 ranks on leaf 0, 2 on leaf 1: ragged -> no hierarchical plan
+        let ranks = vec![0, 1, 2, 4, 5];
+        assert!(!candidates(&sys, &topo, &ranks, ELEMS, 1.0)
+            .iter()
+            .any(|c| c.kind == PlanKind::Hierarchical));
+        let fb = plan_fixed(&sys, &topo, &ranks, ELEMS, 1.0, PlanKind::Hierarchical);
+        assert_eq!(fb.kind, PlanKind::Ring);
+    }
+
+    #[test]
+    fn every_candidate_conserves_the_reduction() {
+        let sys = SystemParams::smartnic_40g()
+            .with_switch_reduction(SwitchParams::netreduce(8, &SystemParams::smartnic_40g().net));
+        for (topo, k) in [
+            (Topology::flat(6), 6usize),
+            (Topology::leaf_spine(3, 4, 4.0), 12),
+            (Topology::leaf_spine(2, 4, 1.0), 8),
+        ] {
+            for ranks in [topo.contiguous_ranks(k), topo.strided_ranks(k)] {
+                for c in candidates(&sys, &topo, &ranks, ELEMS, 1.0) {
+                    let want = (k as f64 - 1.0) * ELEMS as f64;
+                    let got = c.reduced_elems(k, ELEMS);
+                    assert!(
+                        (got - want).abs() <= want * 1e-9,
+                        "{}: {} adds, want {}",
+                        c.kind.name(),
+                        got,
+                        want
+                    );
+                }
+            }
+        }
+    }
+}

@@ -9,6 +9,7 @@ pub mod fig2a;
 pub mod fig2b;
 pub mod fig4a;
 pub mod fig4b;
+pub mod planner;
 pub mod scaling;
 pub mod table1;
 pub mod validate;

@@ -15,6 +15,7 @@
 //!   sim       one simulated iteration with full trace output
 //!   cluster   multi-job scenarios on the unified event engine
 //!   scale     hierarchical scaling sweep (6..512 nodes), BENCH_scaling.json
+//!   plan      topology-aware planner study (NIC vs switch offload), BENCH_planner.json
 //!   bfp       BFP design-space sweep (block size x mantissa bits)
 //!   all       fig2a+fig2b+table1+fig4a+fig4b+validate, write results/
 //! ```
@@ -28,7 +29,7 @@ use ai_smartnic::coordinator::{
 };
 use ai_smartnic::sysconfig::ClusterFaults;
 use ai_smartnic::experiments::{
-    ablate, fig2a, fig2b, fig4a, fig4b, scaling, table1, validate, write_result,
+    ablate, fig2a, fig2b, fig4a, fig4b, planner, scaling, table1, validate, write_result,
 };
 use ai_smartnic::log_info;
 use ai_smartnic::sysconfig::{SystemParams, Workload};
@@ -37,7 +38,7 @@ use ai_smartnic::util::logger::{set_level, Level};
 use ai_smartnic::util::rng::Rng;
 use ai_smartnic::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|scale|bfp|ablate|all> [--help]";
+const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|scale|plan|bfp|ablate|all> [--help]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -57,6 +58,7 @@ fn main() {
         "sim" => cmd_sim(&rest),
         "cluster" => cmd_cluster(&rest),
         "scale" => cmd_scale(&rest),
+        "plan" => cmd_plan(&rest),
         "bfp" => cmd_bfp(&rest),
         "ablate" => cmd_ablate(&rest),
         "all" => cmd_all(&rest),
@@ -544,6 +546,71 @@ fn cmd_scale(rest: &[String]) -> i32 {
             worst * 100.0,
             scaling::VALIDATE_TOL * 100.0
         );
+        return 1;
+    }
+    0
+}
+
+fn cmd_plan(rest: &[String]) -> i32 {
+    let c = Command::new(
+        "plan",
+        "topology-aware planner study: NIC ring vs hierarchical vs in-switch reduction",
+    )
+    .opt("nodes", "6,12,32,64,128,512", "node counts (even, >= 4)")
+    .opt("oversub", "4", "leaf uplink oversubscription factor")
+    .opt("hidden", "2048", "gradient width (hidden^2 elements per all-reduce)")
+    .opt("out", "BENCH_planner.json", "machine-readable output path")
+    .flag("no-json", "skip writing the benchmark file");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let cfg = planner::PlannerConfig {
+        nodes: a.get_list("nodes").unwrap_or_default(),
+        oversubscription: a.get_f64("oversub", 4.0),
+        hidden: a.get_usize("hidden", 2048),
+    };
+    // get_list silently drops unparsable entries; a typo must not shrink
+    // the sweep while still reporting PASS
+    let raw_nodes = a.get_str("nodes", "");
+    let wanted = raw_nodes.split(',').filter(|s| !s.trim().is_empty()).count();
+    if cfg.nodes.len() != wanted || cfg.nodes.is_empty() {
+        eprintln!("--nodes contains invalid entries: '{raw_nodes}'");
+        return 2;
+    }
+    if cfg.nodes.iter().any(|&n| n < 4 || n % 2 != 0) {
+        eprintln!("--nodes must all be even and >= 4, got '{raw_nodes}'");
+        return 2;
+    }
+    if !(cfg.oversubscription > 0.0 && cfg.oversubscription.is_finite()) {
+        eprintln!("--oversub must be a positive finite factor");
+        return 2;
+    }
+    if cfg.hidden == 0 {
+        eprintln!("--hidden must be positive");
+        return 2;
+    }
+    let points = planner::run(&cfg);
+    planner::print(&points, &cfg);
+    if !a.flag("no-json") {
+        let path = a.get_str("out", "BENCH_planner.json");
+        match planner::write_bench(&path, &cfg, &points) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Some(worst) = planner::worst_inswitch_err(&points) {
+        if worst >= planner::INSWITCH_TOL {
+            eprintln!(
+                "in-switch validation FAILED: worst closed-form deviation {:.1}% >= {:.0}%",
+                worst * 100.0,
+                planner::INSWITCH_TOL * 100.0
+            );
+            return 1;
+        }
+    }
+    if !planner::hierarchical_beats_strided_ring(&points) {
+        eprintln!("planner FAILED: hierarchical plan slower than the strided NIC ring");
         return 1;
     }
     0

@@ -60,6 +60,12 @@ pub enum Interconnect {
         uplinks: Vec<Server>,
         /// aggregated spine→leaf egress bundle, one per leaf
         downlinks: Vec<Server>,
+        /// aggregation engine on each leaf's spine-facing port (in-switch
+        /// reduction, NetReduce-style); empty when the switch tier has no
+        /// reduction capability
+        uplink_reducers: Vec<Server>,
+        /// aggregation engine on the spine's egress port toward each leaf
+        spine_reducers: Vec<Server>,
         /// per-stage switching latency (same constant as the leaf
         /// switches'; an inter-leaf path pays it three times)
         latency: Time,
@@ -101,16 +107,26 @@ impl Fabric {
             })
             .collect();
         let latency = sys.net.hop_latency;
+        let reduce = sys.switch;
         let interconnect = match topology {
-            Topology::Flat { nodes } => Interconnect::Flat(Switch::new_scaled(
-                nodes,
-                port_bw,
-                latency,
-                |p| faults.link_scale(p),
-            )),
+            Topology::Flat { nodes } => Interconnect::Flat(
+                Switch::new_scaled(nodes, port_bw, latency, |p| faults.link_scale(p))
+                    .with_reduction(reduce.reduce_flops, reduce.reduce_table_bytes),
+            ),
             Topology::LeafSpine { leaves, nodes_per_leaf, .. } => {
                 let bundle_bw = topology.uplink_bw(port_bw);
+                let engines = || -> Vec<Server> {
+                    if reduce.enabled() {
+                        (0..leaves).map(|_| Server::new(reduce.reduce_flops)).collect()
+                    } else {
+                        Vec::new()
+                    }
+                };
                 Interconnect::LeafSpine {
+                    // leaf switches stay plain forwarders: on a leaf–spine
+                    // fabric the aggregation engines live on the
+                    // spine-facing ports (uplink_reducers / spine_reducers
+                    // below), not on the down-ports
                     leaves: (0..leaves)
                         .map(|l| {
                             Switch::new_scaled(nodes_per_leaf, port_bw, latency, |p| {
@@ -120,6 +136,8 @@ impl Fabric {
                         .collect(),
                     uplinks: (0..leaves).map(|_| Server::new(bundle_bw)).collect(),
                     downlinks: (0..leaves).map(|_| Server::new(bundle_bw)).collect(),
+                    uplink_reducers: engines(),
+                    spine_reducers: engines(),
                     latency,
                 }
             }
@@ -153,7 +171,7 @@ impl Fabric {
         let serialized = self.nodes[src].tx.transmit(ready, bytes);
         match &mut self.interconnect {
             Interconnect::Flat(sw) => sw.forward_cut_through(dst, serialized, bytes),
-            Interconnect::LeafSpine { leaves, uplinks, downlinks, latency } => {
+            Interconnect::LeafSpine { leaves, uplinks, downlinks, latency, .. } => {
                 if src_leaf == dst_leaf {
                     leaves[dst_leaf].forward_cut_through(dst_port, serialized, bytes)
                 } else {
@@ -161,6 +179,88 @@ impl Fabric {
                     let at_leaf = downlinks[dst_leaf].reserve(at_spine, bytes) + *latency;
                     leaves[dst_leaf].forward_cut_through(dst_port, at_leaf, bytes)
                 }
+            }
+        }
+    }
+
+    /// Does the switching tier of this fabric have an in-switch reduction
+    /// capability (engines built from [`crate::sysconfig::SwitchParams`])?
+    #[must_use]
+    pub fn switch_reduce_capable(&self) -> bool {
+        match &self.interconnect {
+            Interconnect::Flat(sw) => sw.reduce_capable(),
+            Interconnect::LeafSpine { uplink_reducers, .. } => !uplink_reducers.is_empty(),
+        }
+    }
+
+    /// In-switch reduction stage 1: Tx-serialize `src`'s contribution of
+    /// `wire_bytes` / `elems` and fold it into the aggregation engine
+    /// serving the group rooted at `root` — the root's egress-port engine
+    /// on the crossbar, or `src`'s leaf's spine-facing engine on a
+    /// leaf–spine fabric.  Returns the fold completion time.
+    #[must_use]
+    pub fn reduce_fold_local(
+        &mut self,
+        src: usize,
+        root: usize,
+        ready: Time,
+        wire_bytes: f64,
+        elems: f64,
+    ) -> Time {
+        let at_switch = self.nodes[src].tx.transmit(ready, wire_bytes);
+        match &mut self.interconnect {
+            Interconnect::Flat(sw) => sw.reduce_contribution(root, at_switch, elems),
+            Interconnect::LeafSpine { uplink_reducers, .. } => {
+                uplink_reducers[self.topology.leaf_of(src)].serve(at_switch, elems)
+            }
+        }
+    }
+
+    /// In-switch reduction stage 2 (groups spanning leaves only): ship
+    /// `leaf`'s aggregated segment through its uplink bundle and fold it
+    /// into the spine engine on the egress toward `root`'s leaf.  Returns
+    /// the spine fold completion time.
+    #[must_use]
+    pub fn reduce_fold_spine(
+        &mut self,
+        leaf: usize,
+        root: usize,
+        ready: Time,
+        wire_bytes: f64,
+        elems: f64,
+    ) -> Time {
+        let root_leaf = self.topology.leaf_of(root);
+        match &mut self.interconnect {
+            Interconnect::Flat(_) => unreachable!("no spine on a flat crossbar"),
+            Interconnect::LeafSpine { uplinks, spine_reducers, latency, .. } => {
+                let at_spine = uplinks[leaf].reserve(ready, wire_bytes) + *latency;
+                spine_reducers[root_leaf].serve(at_spine, elems)
+            }
+        }
+    }
+
+    /// In-switch reduction stage 3a (spanning groups): multicast one copy
+    /// of the reduced segment from the spine down `leaf`'s bundle.
+    /// Returns arrival at the leaf switch.
+    #[must_use]
+    pub fn reduce_downlink(&mut self, leaf: usize, ready: Time, wire_bytes: f64) -> Time {
+        match &mut self.interconnect {
+            Interconnect::Flat(_) => unreachable!("no spine on a flat crossbar"),
+            Interconnect::LeafSpine { downlinks, latency, .. } => {
+                downlinks[leaf].reserve(ready, wire_bytes) + *latency
+            }
+        }
+    }
+
+    /// In-switch reduction stage 3b: final egress of the reduced segment
+    /// toward member `dst`.  Returns arrival at `dst`'s NIC.
+    #[must_use]
+    pub fn reduce_deliver(&mut self, dst: usize, ready: Time, wire_bytes: f64) -> Time {
+        let dst_port = self.topology.leaf_port(dst);
+        match &mut self.interconnect {
+            Interconnect::Flat(sw) => sw.forward_cut_through(dst, ready, wire_bytes),
+            Interconnect::LeafSpine { leaves, .. } => {
+                leaves[self.topology.leaf_of(dst)].forward_cut_through(dst_port, ready, wire_bytes)
             }
         }
     }
@@ -225,7 +325,6 @@ impl Fabric {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::units::gbps;
 
     #[test]
     fn uncontended_hop_costs_serialization_plus_latency() {
@@ -233,7 +332,7 @@ mod tests {
         let mut f = Fabric::new(&sys, 4, &ClusterFaults::none());
         let bytes = 1e6;
         let t = f.hop(0, 1, 0.0, bytes);
-        let expect = bytes / gbps(40.0) + sys.net.hop_latency;
+        let expect = bytes / sys.net.effective_bw() + sys.net.hop_latency;
         assert!((t - expect).abs() < 1e-12, "{t} vs {expect}");
     }
 
@@ -244,8 +343,8 @@ mod tests {
             .with_degraded_link(1, 0.5)
             .with_straggler(2, 0.25);
         let f = Fabric::new(&sys, 3, &faults);
-        assert_eq!(f.nodes[1].tx.server.rate, gbps(40.0) * 0.5);
-        assert_eq!(f.nodes[0].tx.server.rate, gbps(40.0));
+        assert_eq!(f.nodes[1].tx.server.rate, sys.net.effective_bw() * 0.5);
+        assert_eq!(f.nodes[0].tx.server.rate, sys.net.effective_bw());
         assert_eq!(f.nodes[2].adder.rate, sys.nic.add_flops * 0.25);
         assert_eq!(f.nodes[2].pcie.to_device.server.rate, sys.nic.pcie_bw * 0.25);
         // regression: a straggler's host comm cores slow down too
@@ -253,8 +352,8 @@ mod tests {
         assert_eq!(f.nodes[0].comm.rate, 1.0);
         // regression: the switch egress port toward the degraded node is
         // scaled, so incast to it slows down as well
-        assert_eq!(f.port_rate(1), gbps(40.0) * 0.5);
-        assert_eq!(f.port_rate(0), gbps(40.0));
+        assert_eq!(f.port_rate(1), sys.net.effective_bw() * 0.5);
+        assert_eq!(f.port_rate(0), sys.net.effective_bw());
     }
 
     #[test]
@@ -262,7 +361,7 @@ mod tests {
         let sys = SystemParams::smartnic_40g();
         let mut f = Fabric::new(&sys, 4, &ClusterFaults::none());
         let bytes = 1e6;
-        let ser = bytes / gbps(40.0);
+        let ser = bytes / sys.net.effective_bw();
         // two different senders, same destination, same instant
         let t1 = f.hop(0, 2, 0.0, bytes);
         let t2 = f.hop(1, 2, 0.0, bytes);
@@ -279,7 +378,7 @@ mod tests {
         let faults = ClusterFaults::none().with_degraded_link(2, 0.25);
         let mut f = Fabric::with_topology(&sys, Topology::flat(4), &faults);
         let bytes = 1e6;
-        let ser = bytes / gbps(40.0);
+        let ser = bytes / sys.net.effective_bw();
         let _ = f.hop(0, 2, 0.0, bytes);
         let second = f.hop(1, 2, 0.0, bytes);
         // first reservation occupies 4x the healthy drain time
@@ -294,7 +393,7 @@ mod tests {
         let mut f = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
         let bytes = 1e6;
         let t = f.hop(0, 2, 0.0, bytes); // both on leaf 0
-        let expect = bytes / gbps(40.0) + sys.net.hop_latency;
+        let expect = bytes / sys.net.effective_bw() + sys.net.hop_latency;
         assert!((t - expect).abs() < 1e-12, "{t} vs {expect}");
     }
 
@@ -305,7 +404,7 @@ mod tests {
         let mut f = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
         let bytes = 1e6;
         let t = f.hop(0, 4, 0.0, bytes); // leaf 0 -> leaf 1
-        let expect = bytes / gbps(40.0) + 3.0 * sys.net.hop_latency;
+        let expect = bytes / sys.net.effective_bw() + 3.0 * sys.net.hop_latency;
         assert!((t - expect).abs() < 1e-12, "{t} vs {expect}");
     }
 
@@ -317,7 +416,7 @@ mod tests {
         let topo = Topology::leaf_spine(2, 3, 3.0);
         let mut f = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
         let bytes = 1e6;
-        let ser = bytes / gbps(40.0);
+        let ser = bytes / sys.net.effective_bw();
         let lat = sys.net.hop_latency;
         // all three leaf-0 nodes send cross-leaf to distinct destinations
         // at t=0: no egress-port contention, but the shared uplink bundle
@@ -338,7 +437,7 @@ mod tests {
         let topo = Topology::leaf_spine(2, 2, 1.0);
         let mut f = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
         let bytes = 1e6;
-        let ser = bytes / gbps(40.0);
+        let ser = bytes / sys.net.effective_bw();
         let lat = sys.net.hop_latency;
         // back-to-back segments of one cross-leaf flow: each is delayed
         // only by its own Tx serialization (the 2-port bundle drains two
@@ -347,5 +446,75 @@ mod tests {
         let t1 = f.hop(0, 2, 0.0, bytes);
         assert!((t0 - (ser + 3.0 * lat)).abs() < 1e-12);
         assert!((t1 - (2.0 * ser + 3.0 * lat)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plain_fabric_cannot_reduce_in_switch() {
+        let sys = SystemParams::smartnic_40g();
+        let flat = Fabric::new(&sys, 4, &ClusterFaults::none());
+        assert!(!flat.switch_reduce_capable());
+        let topo = Topology::leaf_spine(2, 2, 2.0);
+        let ls = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        assert!(!ls.switch_reduce_capable());
+    }
+
+    #[test]
+    fn flat_reduce_path_times_fold_and_delivery() {
+        use crate::sysconfig::SwitchParams;
+        let rate = 1e9; // 1 G adds/s
+        let sys = SystemParams::smartnic_40g().with_switch_reduction(SwitchParams {
+            reduce_flops: rate,
+            reduce_table_bytes: 16.0 * 1024.0 * 1024.0,
+        });
+        let mut f = Fabric::new(&sys, 3, &ClusterFaults::none());
+        assert!(f.switch_reduce_capable());
+        let bytes = 1e6;
+        let elems = bytes / 4.0;
+        let ser = bytes / sys.net.effective_bw();
+        // three contributions converging on root 0's engine: they all
+        // arrive at `ser` and fold FIFO at 0.25 ms apiece
+        let folds: Vec<f64> =
+            (0..3).map(|src| f.reduce_fold_local(src, 0, 0.0, bytes, elems)).collect();
+        for (k, t) in folds.iter().enumerate() {
+            let expect = ser + (k as f64 + 1.0) * elems / rate;
+            assert!((t - expect).abs() < 1e-12, "{k}: {t} vs {expect}");
+        }
+        // delivery of the reduced segment pays egress + one switch latency
+        let d = f.reduce_deliver(1, folds[2], bytes);
+        assert!((d - (folds[2] + sys.net.hop_latency)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn leaf_spine_reduce_path_uses_uplink_and_spine_engines() {
+        use crate::sysconfig::SwitchParams;
+        let rate = 1e9;
+        let sys = SystemParams::smartnic_40g().with_switch_reduction(SwitchParams {
+            reduce_flops: rate,
+            reduce_table_bytes: 16.0 * 1024.0 * 1024.0,
+        });
+        let topo = Topology::leaf_spine(2, 2, 2.0);
+        let mut f = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        let bytes = 1e6;
+        let elems = bytes / 4.0;
+        let ser = bytes / sys.net.effective_bw();
+        let lat = sys.net.hop_latency;
+        // leaf 0's two members fold into leaf 0's spine-facing engine
+        let f0 = f.reduce_fold_local(0, 0, 0.0, bytes, elems);
+        let f1 = f.reduce_fold_local(1, 0, 0.0, bytes, elems);
+        assert!((f0 - (ser + elems / rate)).abs() < 1e-12);
+        assert!((f1 - (ser + 2.0 * elems / rate)).abs() < 1e-12);
+        // leaf 1's members use their own leaf engine — no cross-queueing
+        let g0 = f.reduce_fold_local(2, 0, 0.0, bytes, elems);
+        assert!((g0 - (ser + elems / rate)).abs() < 1e-12);
+        // each leaf ships its aggregate up and folds at the spine engine
+        // toward the root's leaf (uncontended uplink: cut-through start +
+        // one latency, then the fold)
+        let s0 = f.reduce_fold_spine(0, 0, f1, bytes, elems);
+        assert!((s0 - (f1 + lat + elems / rate)).abs() < 1e-12);
+        // multicast down and final egress pay one latency per stage
+        let down = f.reduce_downlink(1, s0, bytes);
+        assert!((down - (s0 + lat)).abs() < 1e-12);
+        let at_nic = f.reduce_deliver(3, down, bytes);
+        assert!((at_nic - (down + lat)).abs() < 1e-12);
     }
 }

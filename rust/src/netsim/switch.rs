@@ -8,10 +8,19 @@
 use super::link::Server;
 use super::Time;
 
-/// A non-blocking crossbar switch with per-egress-port serialization.
+/// A non-blocking crossbar switch with per-egress-port serialization and
+/// an optional per-egress-port reduction capability (NetReduce,
+/// arXiv:2009.09736): each port can own an aggregation engine that folds
+/// arriving f32 streams into an on-chip table before forwarding the
+/// reduced stream out of the port.
 #[derive(Clone, Debug)]
 pub struct Switch {
     egress: Vec<Server>,
+    /// per-egress-port aggregation engines; empty on a plain forwarding
+    /// switch (the seed behavior)
+    reducers: Vec<Server>,
+    /// per-port aggregation table capacity (bytes of f32 accumulators)
+    table_bytes: f64,
     /// port-to-port forwarding latency
     pub latency: Time,
 }
@@ -34,8 +43,45 @@ impl Switch {
             egress: (0..ports)
                 .map(|p| Server::new(port_bw_bytes_per_s * scale_of(p)))
                 .collect(),
+            reducers: Vec::new(),
+            table_bytes: 0.0,
             latency,
         }
+    }
+
+    /// Attach an aggregation engine of `reduce_flops` f32 adds/s and a
+    /// `table_bytes` accumulation table to every egress port.  Zero for
+    /// either leaves the switch a plain forwarding fabric.
+    #[must_use]
+    pub fn with_reduction(mut self, reduce_flops: f64, table_bytes: f64) -> Self {
+        if reduce_flops > 0.0 && table_bytes > 0.0 {
+            self.reducers = (0..self.egress.len()).map(|_| Server::new(reduce_flops)).collect();
+            self.table_bytes = table_bytes;
+        }
+        self
+    }
+
+    /// Can this switch reduce in-network?
+    #[must_use]
+    pub fn reduce_capable(&self) -> bool {
+        !self.reducers.is_empty()
+    }
+
+    /// Aggregation table capacity per port (bytes; 0 when not capable).
+    #[must_use]
+    pub fn table_bytes(&self) -> f64 {
+        self.table_bytes
+    }
+
+    /// Fold one contribution of `elems` f32 values into `port`'s
+    /// aggregation engine; returns the time the contribution is folded
+    /// into the table.  Every contribution — the table write-in included —
+    /// costs `elems` adds of engine bandwidth, FIFO with everything else
+    /// the engine is folding.
+    #[must_use]
+    pub fn reduce_contribution(&mut self, port: usize, arrival: Time, elems: f64) -> Time {
+        assert!(self.reduce_capable(), "switch has no reduction capability");
+        self.reducers[port].serve(arrival, elems)
     }
 
     pub fn ports(&self) -> usize {
@@ -79,6 +125,9 @@ impl Switch {
     pub fn reset(&mut self) {
         for p in &mut self.egress {
             p.reset();
+        }
+        for r in &mut self.reducers {
+            r.reset();
         }
     }
 }
@@ -176,6 +225,42 @@ mod tests {
         let _ = sw.forward(0, 0.0, MB);
         assert_eq!(sw.port_utilization(0, 0.0), 0.0);
         assert!(sw.port_utilization(0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn plain_switch_has_no_reduction() {
+        let sw = Switch::new(4, BW, 0.0);
+        assert!(!sw.reduce_capable());
+        assert_eq!(sw.table_bytes(), 0.0);
+        // zero rate or zero table keeps it plain
+        assert!(!Switch::new(4, BW, 0.0).with_reduction(0.0, 1e6).reduce_capable());
+        assert!(!Switch::new(4, BW, 0.0).with_reduction(1e9, 0.0).reduce_capable());
+    }
+
+    #[test]
+    fn reduce_contributions_serialize_on_the_port_engine() {
+        // engine at 1 G adds/s: four simultaneous 1 M-element contributions
+        // fold FIFO, 1 ms each
+        let mut sw = Switch::new(4, BW, 0.0).with_reduction(1e9, 1e6);
+        assert!(sw.reduce_capable());
+        let e = 1e6;
+        let folds: Vec<f64> = (0..4).map(|_| sw.reduce_contribution(0, 0.0, e)).collect();
+        for (k, t) in folds.iter().enumerate() {
+            assert!((t - (k as f64 + 1.0) * 1e-3).abs() < 1e-12, "{k}: {t}");
+        }
+        // a different port's engine is independent
+        let other = sw.reduce_contribution(1, 0.0, e);
+        assert!((other - 1e-3).abs() < 1e-12);
+        // engines reset with the switch
+        sw.reset();
+        assert!((sw.reduce_contribution(0, 0.0, e) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "no reduction capability")]
+    fn reducing_on_a_plain_switch_panics() {
+        let mut sw = Switch::new(2, BW, 0.0);
+        let _ = sw.reduce_contribution(0, 0.0, 1.0);
     }
 
     #[test]

@@ -111,6 +111,22 @@ impl NetParams {
         self.beta = beta;
         self
     }
+
+    /// Wire-protocol efficiency of Ethernet framing at a given MTU: the
+    /// fraction of line rate left for payload after the per-frame preamble
+    /// + SFD (8 B), Ethernet header (14 B), FCS (4 B) and inter-frame gap
+    /// (12 B) on the wire, and a 40 B L3/L4 (or equivalent custom
+    /// transport) header inside the MTU:
+    ///
+    ///   β(mtu) = (mtu − 40) / (mtu + 38)
+    ///
+    /// ≈ 0.949 at MTU 1500 and ≈ 0.991 at MTU 9000 — the 0.94–0.99 band
+    /// real Ethernet fabrics sit in, instead of the seed's β = 1.0.
+    #[must_use]
+    pub fn ethernet_framing_beta(mtu_bytes: f64) -> f64 {
+        assert!(mtu_bytes > 40.0, "MTU {mtu_bytes} cannot carry a 40 B transport header");
+        (mtu_bytes - 40.0) / (mtu_bytes + 38.0)
+    }
 }
 
 /// Smart-NIC-specific parameters.
@@ -152,12 +168,58 @@ impl NicHwParams {
     }
 }
 
+/// In-switch (NetReduce-style) reduction capability of the switching tier:
+/// every egress port can own an aggregation engine that folds arriving f32
+/// streams into an on-chip table and forwards the reduced stream, instead
+/// of the NICs reducing at the ring hops.  `passthrough()` (both fields 0)
+/// models a plain forwarding switch — the seed behavior.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SwitchParams {
+    /// aggregation throughput of one egress-port engine (f32 adds/s);
+    /// every contribution folded into the table costs `elems` adds,
+    /// including the first (the table write-in shares the same datapath)
+    pub reduce_flops: f64,
+    /// per-port aggregation table capacity (bytes of f32 accumulators):
+    /// bounds how many segments may be in flight through the switch at
+    /// once; 0 disables in-switch reduction regardless of `reduce_flops`
+    pub reduce_table_bytes: f64,
+}
+
+impl SwitchParams {
+    /// A plain forwarding switch with no reduction capability.
+    pub fn passthrough() -> Self {
+        Self {
+            reduce_flops: 0.0,
+            reduce_table_bytes: 0.0,
+        }
+    }
+
+    /// NetReduce-style provisioning (arXiv:2009.09736): each egress engine
+    /// keeps line rate for a full `radix`-port incast of f32 streams
+    /// (radix × line-rate elements/s) with a few MB of on-chip table.
+    pub fn netreduce(radix: usize, net: &NetParams) -> Self {
+        assert!(radix >= 1, "switch needs at least one port");
+        Self {
+            reduce_flops: radix as f64 * net.eth_bw / 4.0,
+            reduce_table_bytes: 4.0 * 1024.0 * 1024.0,
+        }
+    }
+
+    /// Is in-switch reduction usable at all (positive rate *and* table)?
+    #[must_use]
+    pub fn enabled(&self) -> bool {
+        self.reduce_flops > 0.0 && self.reduce_table_bytes > 0.0
+    }
+}
+
 /// Full system description for one experiment configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct SystemParams {
     pub worker: WorkerParams,
     pub net: NetParams,
     pub nic: NicHwParams,
+    /// reduction capability of the switching tier (passthrough = none)
+    pub switch: SwitchParams,
     /// MPI/software per-message overhead for host all-reduce (s per step)
     pub host_step_overhead: f64,
     /// driver overhead for launching one non-blocking NIC all-reduce (s)
@@ -165,17 +227,27 @@ pub struct SystemParams {
 }
 
 impl SystemParams {
+    /// Jumbo-frame MTU both testbeds run at (Sec. V-A: large-message
+    /// all-reduce traffic), used to derive the presets' framing β.
+    pub const MTU_BYTES: f64 = 9000.0;
+
     /// The paper's baseline: conventional 100 GbE NICs, host MPI all-reduce.
     pub fn baseline_100g() -> Self {
+        // β carries the real Ethernet framing overhead at MTU 9000; α is
+        // re-fitted so α·β keeps the calibrated 0.85 software efficiency —
+        // the paper-point validations (Figs. 2a/4a) are pinned to α·β, not
+        // to either factor alone.
+        let beta = NetParams::ethernet_framing_beta(Self::MTU_BYTES);
         Self {
             worker: WorkerParams::xeon_8280(),
             net: NetParams {
                 eth_bw: gbps(100.0),
-                alpha: 0.85, // software NIC efficiency for large messages
-                beta: 1.0, // protocol overhead folded into α for 100G MPI
+                alpha: 0.85 / beta, // re-fit: α·β == the calibrated 0.85
+                beta,
                 hop_latency: 5.0e-6,
             },
             nic: NicHwParams::arria10_40g(), // unused in baseline
+            switch: SwitchParams::passthrough(),
             host_step_overhead: 15.0e-6,
             nic_request_overhead: 5.0e-6,
         }
@@ -187,11 +259,16 @@ impl SystemParams {
             worker: WorkerParams::xeon_8280(),
             net: NetParams {
                 eth_bw: gbps(40.0),
-                alpha: 1.0, // footnote 1: α very close to 1
-                beta: 1.0, // custom lightweight framing ~ negligible overhead
+                alpha: 1.0, // footnote 1: α very close to 1 (DMA/protocol)
+                // the custom lightweight framing still rides Ethernet
+                // frames (preamble/IFG/FCS + a small transport header), so
+                // the jumbo-MTU framing efficiency applies: ≈ 0.991.
+                // smartnic_effective_fraction_pinned guards the E6 points.
+                beta: NetParams::ethernet_framing_beta(Self::MTU_BYTES),
                 hop_latency: 2.0e-6,
             },
             nic: NicHwParams::arria10_40g(),
+            switch: SwitchParams::passthrough(),
             host_step_overhead: 15.0e-6,
             nic_request_overhead: 5.0e-6,
         }
@@ -203,6 +280,13 @@ impl SystemParams {
         s.net.eth_bw = gbps(eth_gbps);
         s.nic = NicHwParams::arria10_at(eth_gbps);
         s
+    }
+
+    /// Same system with an in-switch reduction capability on the fabric.
+    #[must_use]
+    pub fn with_switch_reduction(mut self, switch: SwitchParams) -> Self {
+        self.switch = switch;
+        self
     }
 }
 
@@ -349,10 +433,62 @@ mod tests {
 
     #[test]
     fn effective_bw_applies_alpha_and_beta() {
+        // α was re-fitted against the framing β so the product stays the
+        // calibrated 0.85 of line rate
         let s = SystemParams::baseline_100g();
-        assert_eq!(s.net.effective_bw(), s.net.eth_bw * 0.85);
+        assert!((s.net.effective_bw() - s.net.eth_bw * 0.85).abs() < 1.0);
         let capped = s.net.with_beta(0.9);
-        assert!((capped.effective_bw() - s.net.eth_bw * 0.85 * 0.9).abs() < 1e-3);
+        assert!((capped.effective_bw() - s.net.eth_bw * s.net.alpha * 0.9).abs() < 1.0);
+    }
+
+    #[test]
+    fn ethernet_framing_beta_matches_known_mtus() {
+        // MTU 1500: 1460 payload / 1538 wire bytes ≈ 0.9493
+        let b1500 = NetParams::ethernet_framing_beta(1500.0);
+        assert!((b1500 - 1460.0 / 1538.0).abs() < 1e-12);
+        assert!((0.94..0.96).contains(&b1500), "{b1500}");
+        // MTU 9000 (jumbo): ≈ 0.9914
+        let b9000 = NetParams::ethernet_framing_beta(9000.0);
+        assert!((b9000 - 8960.0 / 9038.0).abs() < 1e-12);
+        assert!((0.985..0.995).contains(&b9000), "{b9000}");
+        // monotone in MTU: framing amortizes over larger frames
+        assert!(b9000 > b1500);
+    }
+
+    #[test]
+    fn presets_carry_real_framing_beta() {
+        // both presets now run β ≠ 1.0 — the seed pinned 1.0 and the
+        // ROADMAP calibration item closes here
+        let base = SystemParams::baseline_100g();
+        let nic = SystemParams::smartnic_40g();
+        let b = NetParams::ethernet_framing_beta(SystemParams::MTU_BYTES);
+        assert_eq!(base.net.beta, b);
+        assert_eq!(nic.net.beta, b);
+        assert!(base.net.beta < 1.0 && base.net.beta > 0.98);
+    }
+
+    #[test]
+    fn smartnic_effective_fraction_pinned() {
+        // the smart NIC's α stays 1.0 (paper footnote 1); β costs 0.86% of
+        // line rate — pin the band so a future β change cannot silently
+        // shift every E6 operating point
+        let s = SystemParams::smartnic_40g();
+        let frac = s.net.effective_bw() / s.net.eth_bw;
+        assert!((0.985..1.0).contains(&frac), "effective fraction {frac}");
+    }
+
+    #[test]
+    fn switch_params_enablement() {
+        let off = SwitchParams::passthrough();
+        assert!(!off.enabled());
+        let net = SystemParams::smartnic_40g().net;
+        let on = SwitchParams::netreduce(8, &net);
+        assert!(on.enabled());
+        // line-rate provisioning: 8 ports x 5 GB/s of f32 = 10 G adds/s
+        assert!((on.reduce_flops - 8.0 * gbps(40.0) / 4.0).abs() < 1.0);
+        // rate without table is still disabled (the fallback guard)
+        let no_table = SwitchParams { reduce_table_bytes: 0.0, ..on };
+        assert!(!no_table.enabled());
     }
 
     #[test]

@@ -1,0 +1,114 @@
+// Golden-schema tests for the CI benchmark artifacts
+// (`BENCH_scaling.json` from `smartnic scale`, `BENCH_planner.json` from
+// `smartnic plan`): the exact key structure is pinned here and every
+// document must survive a parse round-trip, so the artifact shape cannot
+// drift without a test failure.
+
+use ai_smartnic::experiments::{planner, scaling};
+use ai_smartnic::util::json::Json;
+
+/// Assert that every `/`-separated key path resolves in `doc`; a leading
+/// `0` element indexes into an array.
+fn assert_paths(doc: &Json, paths: &[&str]) {
+    for path in paths {
+        let mut cur = doc;
+        for part in path.split('/') {
+            cur = if let Ok(i) = part.parse::<usize>() {
+                cur.idx(i)
+                    .unwrap_or_else(|| panic!("missing array index '{part}' in '{path}'"))
+            } else {
+                cur.get(part)
+                    .unwrap_or_else(|| panic!("missing key '{part}' in '{path}'"))
+            };
+        }
+    }
+}
+
+#[test]
+fn bench_scaling_schema_is_pinned() {
+    let cfg = scaling::ScalingConfig {
+        nodes: vec![8],
+        leaves: 4,
+        ..scaling::ScalingConfig::default()
+    };
+    let sweep = scaling::run_sweep(&cfg);
+    let oversub = scaling::run_oversub(&cfg);
+    assert!(!oversub.is_empty(), "8 nodes on 4 leaves must produce oversub points");
+    let j = scaling::to_json(&cfg, &sweep, &oversub);
+    assert_paths(
+        &j,
+        &[
+            "config/batch",
+            "config/leaves",
+            "config/oversubscription",
+            "config/validate_tol",
+            "sweep/0/nodes",
+            "sweep/0/model_s/baseline",
+            "sweep/0/model_s/smartnic",
+            "sweep/0/model_s/smartnic+bfp",
+            "sweep/0/unified_s/baseline",
+            "sweep/0/unified_s/smartnic",
+            "sweep/0/unified_s/smartnic+bfp",
+            "sweep/0/rel_err/baseline",
+            "sweep/0/speedup_vs_baseline/model_nic",
+            "sweep/0/speedup_vs_baseline/model_bfp",
+            "sweep/0/speedup_vs_baseline/unified_nic",
+            "sweep/0/speedup_vs_baseline/unified_bfp",
+            "oversubscription_penalty/0/nodes",
+            "oversubscription_penalty/0/scheme",
+            "oversubscription_penalty/0/flat_ar_s",
+            "oversubscription_penalty/0/spanning_ar_s",
+            "oversubscription_penalty/0/penalty",
+        ],
+    );
+    // round-trip: the writer's output parses back to the same document
+    let parsed = Json::parse(&j.to_string_pretty()).expect("BENCH_scaling must parse");
+    assert_eq!(parsed, j);
+    // and numeric leaves stay numeric
+    assert!(j.get("sweep").unwrap().idx(0).unwrap().get("nodes").unwrap().as_usize() == Some(8));
+}
+
+#[test]
+fn bench_planner_schema_is_pinned() {
+    let cfg = planner::PlannerConfig {
+        nodes: vec![6],
+        ..planner::PlannerConfig::default()
+    };
+    let points = planner::run(&cfg);
+    assert_eq!(points.len(), 2, "contiguous + strided");
+    let j = planner::to_json(&cfg, &points);
+    let mut paths = vec![
+        "config/oversubscription".to_string(),
+        "config/hidden".to_string(),
+        "config/inswitch_tol".to_string(),
+        "gates/worst_inswitch_err".to_string(),
+        "gates/hierarchical_beats_strided_ring".to_string(),
+    ];
+    for i in 0..2 {
+        for key in ["nodes", "leaves", "placement", "chosen"] {
+            paths.push(format!("points/{i}/{key}"));
+        }
+        for algo in planner::ALGOS {
+            paths.push(format!("points/{i}/measured_s/{algo}"));
+            paths.push(format!("points/{i}/model_s/{algo}"));
+        }
+        for key in ["hierarchical", "in_switch", "auto"] {
+            paths.push(format!("points/{i}/speedup_vs_ring/{key}"));
+        }
+    }
+    let path_refs: Vec<&str> = paths.iter().map(String::as_str).collect();
+    assert_paths(&j, &path_refs);
+    let parsed = Json::parse(&j.to_string_pretty()).expect("BENCH_planner must parse");
+    assert_eq!(parsed, j);
+    // the gate fields carry the types the CI gate reads
+    assert!(j
+        .get("gates")
+        .unwrap()
+        .get("hierarchical_beats_strided_ring")
+        .unwrap()
+        .as_bool()
+        .is_some());
+    assert!(
+        j.get("gates").unwrap().get("worst_inswitch_err").unwrap().as_f64().unwrap() >= 0.0
+    );
+}
