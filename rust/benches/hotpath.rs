@@ -5,7 +5,7 @@
 use ai_smartnic::benchkit::Bencher;
 use ai_smartnic::bfp::BfpCodec;
 use ai_smartnic::collective::data::ring_allreduce;
-use ai_smartnic::netsim::engine::Sim;
+use ai_smartnic::netsim::engine::{EngineKind, Sim, World};
 use ai_smartnic::nic::{simulate_ring_allreduce, NicConfig};
 use ai_smartnic::sysconfig::SystemParams;
 use ai_smartnic::util::rng::Rng;
@@ -55,15 +55,32 @@ fn main() {
         simulate_ring_allreduce(&cfg, 32, 2048 * 2048)
     });
 
-    // --- calendar-queue engine ------------------------------------------
-    b.bench("DES engine: 100k events", || {
-        let mut sim: Sim<u64> = Sim::new();
-        let mut count = 0u64;
+    // --- typed-event engine vs the boxed-closure baseline ---------------
+    struct Count(u64);
+    impl World for Count {
+        type Event = ();
+        fn handle(_sim: &mut Sim<Self>, state: &mut Self, _event: ()) {
+            state.0 += 1;
+        }
+    }
+    b.bench("DES engine: 100k typed events", || {
+        let mut sim: Sim<Count> = Sim::new();
+        let mut count = Count(0);
         for i in 0..100_000u64 {
-            sim.schedule(i as f64 * 1e-6, |_, c: &mut u64| *c += 1);
+            sim.schedule(i as f64 * 1e-6, ());
         }
         sim.run(&mut count);
-        assert_eq!(count, 100_000);
-        count
+        assert_eq!(count.0, 100_000);
+        count.0
+    });
+    b.bench("DES engine: 100k boxed closures (baseline)", || {
+        let mut sim: Sim<Count> = Sim::with_engine(EngineKind::BoxedBaseline);
+        let mut count = Count(0);
+        for i in 0..100_000u64 {
+            sim.schedule_closure(i as f64 * 1e-6, |_, c: &mut Count| c.0 += 1);
+        }
+        sim.run(&mut count);
+        assert_eq!(count.0, 100_000);
+        count.0
     });
 }

@@ -19,6 +19,40 @@
 //! overlapped host baseline, T_AR comes from the software collective cost
 //! model and T_B carries the core-stealing slowdown; for the naive
 //! baseline all terms serialize.
+//!
+//! Beyond the paper's flat ring, the planner's plan families each have a
+//! closed form here, paired with the unified-engine path that executes
+//! them (see `docs/ARCHITECTURE.md` for the full table):
+//!
+//! * [`nic_ring_ar_time_elems`] — the ring T_AR generalized with a wire
+//!   compression ratio and the placement's leaf-uplink contention factor;
+//! * [`hierarchical_ar_time_elems`] — reduce-scatter in leaf → shard
+//!   ring across the spine → allgather in leaf, priced round by round;
+//! * [`inswitch_ar_time_elems`] — the **in-switch pipeline closed
+//!   form**: the gradient streams through the switch tier's aggregation
+//!   engines as `segs` segments, so the total is one segment's *fill*
+//!   (PCIe fetch → Tx → folds → multicast → writeback) plus `(segs − 1)`
+//!   times the *bottleneck* stage, throttled to `fill / window` when the
+//!   aggregation table holds only `window` segments; infinite (planner
+//!   falls back to the ring) when the switch cannot reduce or the table
+//!   cannot hold one segment.
+//!
+//! The pairing is measured, not assumed — for example, switch-side
+//! reduction beating the uplink-derated ring on a provisioned fabric is
+//! exactly what `smartnic plan` gates on:
+//!
+//! ```
+//! use ai_smartnic::analytic::model::{inswitch_ar_time_elems, nic_ring_ar_time_elems};
+//! use ai_smartnic::experiments::planner::planner_system;
+//!
+//! // 4 leaves x 8 ranks, 4:1-tapered spine, NetReduce-provisioned
+//! let sys = planner_system(4, 8);
+//! let elems = 1 << 20;
+//! // strided ring pays the ~4x uplink factor; the switch pipeline does not
+//! let ring = nic_ring_ar_time_elems(&sys, elems, 32, 1.0, 4.0);
+//! let inswitch = inswitch_ar_time_elems(&sys, elems, 8, 4, 4.0, 1.0);
+//! assert!(inswitch.is_finite() && inswitch < ring);
+//! ```
 
 use crate::bfp::BfpCodec;
 use crate::collective::host::HostStrategy;

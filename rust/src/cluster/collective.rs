@@ -1,6 +1,9 @@
 //! Event-driven collectives on the shared fabric.
 //!
-//! Three executors, all posting events on the one cluster clock:
+//! Three executors, all posting typed [`Event`]s on the one cluster
+//! clock (each pipeline stage below is one [`Event`] variant, dispatched
+//! back into this module by [`ClusterState`]'s
+//! [`World::handle`](crate::netsim::engine::World::handle) match loop):
 //!
 //! * **Ring** — the NIC's native segment-pipelined ring all-reduce.  Per
 //!   segment: PCIe fetch → (Tx serialize → switch → receive) per hop →
@@ -26,7 +29,7 @@
 //!   closed-form `allreduce_time` exactly.
 
 use super::planner::{self, PlanKind};
-use super::{job, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, JobId, NodeId};
+use super::{job, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, Event, JobId, NodeId};
 use crate::collective::timing::{scheme_rounds, HostRoundPlan};
 use crate::netsim::topology::Ring;
 use crate::netsim::Time;
@@ -356,27 +359,41 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
     // across the &mut state calls below
     let kind: u8 = match &st.collectives[cid].state {
         AlgoState::Noop => 0,
-        AlgoState::Ring(_) => 1,
-        AlgoState::Planned(_) => 2,
-        AlgoState::Host(_) => 3,
+        AlgoState::Ring(_) | AlgoState::Planned(_) => 1,
+        AlgoState::Host(_) => 2,
     };
     match kind {
         0 => complete(sim, st, cid),
-        1 | 2 => {
+        1 => {
             // driver hands the descriptor to the NIC after a fixed overhead
             let overhead = st.sys.nic_request_overhead;
-            let is_ring = kind == 1;
-            sim.schedule(overhead, move |sim, st| {
-                if is_ring {
-                    start_ring(sim, st, cid);
-                } else {
-                    start_planned(sim, st, cid);
-                }
-            });
+            sim.schedule(overhead, Event::CollectiveStart { cid: cid as u32 });
         }
         _ => begin_host_round(sim, st, cid, 0),
     }
     cid
+}
+
+/// [`Event::CollectiveStart`]: the NIC driver's request overhead elapsed —
+/// enter the executor matching the collective's algorithm state.
+pub(super) fn on_start(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    // classify first so no borrow of the collective is held across the
+    // &mut state calls below
+    let is_ring = matches!(&st.collectives[cid].state, AlgoState::Ring(_));
+    if is_ring {
+        start_ring(sim, st, cid);
+    } else {
+        assert!(
+            matches!(&st.collectives[cid].state, AlgoState::Planned(_)),
+            "start event on a non-NIC collective {cid}"
+        );
+        start_planned(sim, st, cid);
+    }
+}
+
+/// [`Event::CollectiveComplete`]: a latency-only tail elapsed.
+pub(super) fn on_complete(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    complete(sim, st, cid);
 }
 
 /// Mark `cid` complete at the current time, record its trace span, and
@@ -438,7 +455,15 @@ fn start_ring(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
         let chunk0 = ring.send_chunk(local, 0);
         for seg in 0..segs {
             let t = fetch[local][chunk0][seg];
-            sim.schedule_at(t, move |sim, st| ring_send(sim, st, cid, 0, local, seg));
+            sim.schedule_at(
+                t,
+                Event::RingSend {
+                    cid: cid as u32,
+                    step: 0,
+                    rank: local as u32,
+                    seg: seg as u32,
+                },
+            );
         }
     }
     st.collectives[cid].ring_mut().fetch_done = fetch;
@@ -446,7 +471,7 @@ fn start_ring(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
 
 /// Local rank `i`'s copy of segment `seg` for ring step `step` is ready in
 /// its Tx path: serialize onto the uplink and switch it to the successor.
-fn ring_send(
+pub(super) fn ring_send(
     sim: &mut ClusterSim,
     st: &mut ClusterState,
     cid: CollectiveId,
@@ -466,11 +491,19 @@ fn ring_send(
         (c.ranks[i], c.ranks[j], j, r.wire_seg)
     };
     let arrive = st.fabric.hop(src, dst, now, wire_seg);
-    sim.schedule_at(arrive, move |sim, st| ring_recv(sim, st, cid, step, j, seg));
+    sim.schedule_at(
+        arrive,
+        Event::RingRecv {
+            cid: cid as u32,
+            step: step as u32,
+            rank: j as u32,
+            seg: seg as u32,
+        },
+    );
 }
 
 /// Segment `seg` of ring step `step` arrived at local rank `j`.
-fn ring_recv(
+pub(super) fn ring_recv(
     sim: &mut ClusterSim,
     st: &mut ClusterState,
     cid: CollectiveId,
@@ -497,9 +530,15 @@ fn ring_recv(
     if reduce_phase {
         // join with the local fetched copy, then reduce on the adder
         if local_ready > now {
-            sim.schedule_at(local_ready, move |sim, st| {
-                ring_reduce(sim, st, cid, step, j, seg)
-            });
+            sim.schedule_at(
+                local_ready,
+                Event::RingReduce {
+                    cid: cid as u32,
+                    step: step as u32,
+                    rank: j as u32,
+                    seg: seg as u32,
+                },
+            );
         } else {
             ring_reduce(sim, st, cid, step, j, seg);
         }
@@ -511,7 +550,7 @@ fn ring_recv(
 
 /// Both inputs of the reduce are present at local rank `j`: occupy the
 /// FP32 adder.
-fn ring_reduce(
+pub(super) fn ring_reduce(
     sim: &mut ClusterSim,
     st: &mut ClusterState,
     cid: CollectiveId,
@@ -529,13 +568,21 @@ fn ring_reduce(
         (c.ranks[j], r.plan.seg_elems)
     };
     let done = st.fabric.nodes[node].adder.serve(now, seg_elems);
-    sim.schedule_at(done, move |sim, st| ring_segment_final(sim, st, cid, step, j, seg));
+    sim.schedule_at(
+        done,
+        Event::RingFinal {
+            cid: cid as u32,
+            step: step as u32,
+            rank: j as u32,
+            seg: seg as u32,
+        },
+    );
 }
 
 /// Local rank `j`'s copy of this segment is final for `step`: write it
 /// back to the host if it is a final copy, and forward it on the next
 /// step if the ring continues.
-fn ring_segment_final(
+pub(super) fn ring_segment_final(
     sim: &mut ClusterSim,
     st: &mut ClusterState,
     cid: CollectiveId,
@@ -560,14 +607,14 @@ fn ring_segment_final(
     };
     if step >= rs_steps - 1 {
         let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, seg_bytes);
-        sim.schedule_at(wb, move |sim, st| ring_writeback_done(sim, st, cid));
+        sim.schedule_at(wb, Event::RingWritebackDone { cid: cid as u32 });
     }
     if step + 1 < total_steps {
         ring_send(sim, st, cid, step + 1, j, seg);
     }
 }
 
-fn ring_writeback_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+pub(super) fn ring_writeback_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     let r = st.collectives[cid].ring_mut();
     r.pending_writebacks -= 1;
     if r.pending_writebacks == 0 {
@@ -600,11 +647,11 @@ fn start_planned(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId)
     st.collectives[cid].planned_mut().fetch_pending = ranks.len();
     for &node in &ranks {
         let done = st.fabric.nodes[node].pcie.to_device.transmit(now, bytes);
-        sim.schedule_at(done, move |sim, st| planned_fetch_done(sim, st, cid));
+        sim.schedule_at(done, Event::PlannedFetchDone { cid: cid as u32 });
     }
 }
 
-fn planned_fetch_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+pub(super) fn planned_fetch_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     let p = st.collectives[cid].planned_mut();
     p.fetch_pending -= 1;
     if p.fetch_pending == 0 {
@@ -653,11 +700,11 @@ fn finish_planned(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId
     st.collectives[cid].planned_mut().wb_pending = ranks.len();
     for &node in &ranks {
         let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, bytes);
-        sim.schedule_at(wb, move |sim, st| planned_wb_done(sim, st, cid));
+        sim.schedule_at(wb, Event::PlannedWbDone { cid: cid as u32 });
     }
 }
 
-fn planned_wb_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+pub(super) fn planned_wb_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     let p = st.collectives[cid].planned_mut();
     p.wb_pending -= 1;
     if p.wb_pending == 0 {
@@ -693,20 +740,35 @@ fn begin_planned_round(
     for op in ops {
         let wire = op.bytes / wire_ratio;
         let arrive = st.fabric.hop(ranks[op.src], ranks[op.dst], now, wire);
-        let dst_node = ranks[op.dst];
-        let reduce_elems = op.reduce_elems;
-        sim.schedule_at(arrive, move |sim, st| {
-            if reduce_elems > 0.0 {
-                let done = st.fabric.nodes[dst_node].adder.serve(sim.now(), reduce_elems);
-                sim.schedule_at(done, move |sim, st| planned_op_done(sim, st, cid));
-            } else {
-                planned_op_done(sim, st, cid);
-            }
-        });
+        sim.schedule_at(
+            arrive,
+            Event::PlannedOpArrive {
+                cid: cid as u32,
+                dst: ranks[op.dst] as u32,
+                reduce_elems: op.reduce_elems,
+            },
+        );
     }
 }
 
-fn planned_op_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+/// A round op's payload arrived at node `dst`: occupy `dst`'s adder when
+/// the op reduces, then count the op done.
+pub(super) fn planned_op_arrive(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    dst: NodeId,
+    reduce_elems: f64,
+) {
+    if reduce_elems > 0.0 {
+        let done = st.fabric.nodes[dst].adder.serve(sim.now(), reduce_elems);
+        sim.schedule_at(done, Event::PlannedOpDone { cid: cid as u32 });
+    } else {
+        planned_op_done(sim, st, cid);
+    }
+}
+
+pub(super) fn planned_op_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     let p = st.collectives[cid].planned_mut();
     p.op_pending -= 1;
     if p.op_pending == 0 {
@@ -826,7 +888,14 @@ fn switch_launch_next(sim: &mut ClusterSim, st: &mut ClusterState, cid: Collecti
         if fetch {
             let node = st.collectives[cid].ranks[local];
             let done = st.fabric.nodes[node].pcie.to_device.transmit(now, seg_bytes);
-            sim.schedule_at(done, move |sim, st| switch_contribute(sim, st, cid, seg, local));
+            sim.schedule_at(
+                done,
+                Event::SwitchContribute {
+                    cid: cid as u32,
+                    seg: seg as u32,
+                    rank: local as u32,
+                },
+            );
         } else {
             switch_contribute(sim, st, cid, seg, local);
         }
@@ -835,7 +904,7 @@ fn switch_launch_next(sim: &mut ClusterSim, st: &mut ClusterState, cid: Collecti
 
 /// One member's copy of `seg` is on its NIC: Tx-serialize it and fold it
 /// into the local aggregation engine.
-fn switch_contribute(
+pub(super) fn switch_contribute(
     sim: &mut ClusterSim,
     st: &mut ClusterState,
     cid: CollectiveId,
@@ -849,13 +918,20 @@ fn switch_contribute(
         (c.ranks[local], sw.root, sw.wire_seg, sw.seg_elems, sw.group_of[local])
     };
     let folded = st.fabric.reduce_fold_local(src, root, now, wire_seg, seg_elems);
-    sim.schedule_at(folded, move |sim, st| switch_fold_done(sim, st, cid, seg, g));
+    sim.schedule_at(
+        folded,
+        Event::SwitchFoldDone {
+            cid: cid as u32,
+            seg: seg as u32,
+            group: g as u32,
+        },
+    );
 }
 
 /// A contribution folded at group `g`'s leaf engine; when the group is
 /// complete, ship the aggregate to the spine (or multicast directly when
 /// the whole collective sits behind one switch).
-fn switch_fold_done(
+pub(super) fn switch_fold_done(
     sim: &mut ClusterSim,
     st: &mut ClusterState,
     cid: CollectiveId,
@@ -886,12 +962,17 @@ fn switch_fold_done(
         return;
     }
     let at_spine = st.fabric.reduce_fold_spine(leaf, root, now, wire_seg, seg_elems);
-    sim.schedule_at(at_spine, move |sim, st| switch_spine_done(sim, st, cid, seg));
+    sim.schedule_at(at_spine, Event::SwitchSpineDone { cid: cid as u32, seg: seg as u32 });
 }
 
 /// A leaf aggregate folded at the spine engine; when all leaves are in,
 /// multicast one copy down every leaf's bundle.
-fn switch_spine_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId, seg: usize) {
+pub(super) fn switch_spine_done(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    seg: usize,
+) {
     let now = sim.now();
     let remaining = {
         let sw = st.collectives[cid].planned_mut().sw.as_mut().unwrap();
@@ -907,13 +988,20 @@ fn switch_spine_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: Collectiv
     };
     for (g, leaf) in leaves.into_iter().enumerate() {
         let at_leaf = st.fabric.reduce_downlink(leaf, now, wire_seg);
-        sim.schedule_at(at_leaf, move |sim, st| switch_multicast(sim, st, cid, seg, g));
+        sim.schedule_at(
+            at_leaf,
+            Event::SwitchMulticast {
+                cid: cid as u32,
+                seg: seg as u32,
+                group: g as u32,
+            },
+        );
     }
 }
 
 /// The reduced segment reached group `g`'s leaf switch: final egress to
 /// every member of the group.
-fn switch_multicast(
+pub(super) fn switch_multicast(
     sim: &mut ClusterSim,
     st: &mut ClusterState,
     cid: CollectiveId,
@@ -933,13 +1021,20 @@ fn switch_multicast(
     for local in members {
         let dst = st.collectives[cid].ranks[local];
         let at_nic = st.fabric.reduce_deliver(dst, now, wire_seg);
-        sim.schedule_at(at_nic, move |sim, st| switch_delivered(sim, st, cid, seg, local));
+        sim.schedule_at(
+            at_nic,
+            Event::SwitchDelivered {
+                cid: cid as u32,
+                seg: seg as u32,
+                rank: local as u32,
+            },
+        );
     }
 }
 
 /// The reduced segment reached a member's NIC: DMA it to the host when
 /// this pass owns the writeback.
-fn switch_delivered(
+pub(super) fn switch_delivered(
     sim: &mut ClusterSim,
     st: &mut ClusterState,
     cid: CollectiveId,
@@ -954,7 +1049,7 @@ fn switch_delivered(
     };
     if writeback {
         let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, seg_bytes);
-        sim.schedule_at(wb, move |sim, st| switch_rank_done(sim, st, cid, seg));
+        sim.schedule_at(wb, Event::SwitchRankDone { cid: cid as u32, seg: seg as u32 });
     } else {
         switch_rank_done(sim, st, cid, seg);
     }
@@ -962,7 +1057,12 @@ fn switch_delivered(
 
 /// Segment bookkeeping: free the table slot when every member is served,
 /// then launch the next queued segment or finish the phase.
-fn switch_rank_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId, seg: usize) {
+pub(super) fn switch_rank_done(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    seg: usize,
+) {
     let outcome = {
         let sw = st.collectives[cid].planned_mut().sw.as_mut().unwrap();
         sw.rank_pending[seg] -= 1;
@@ -1135,7 +1235,7 @@ fn begin_host_round(sim: &mut ClusterSim, st: &mut ClusterState, cid: Collective
         // latency-only tail (e.g. the pipelined tree's fill steps)
         let tail = extra as f64 * step_cost;
         if tail > 0.0 {
-            sim.schedule(tail, move |sim, st| complete(sim, st, cid));
+            sim.schedule(tail, Event::CollectiveComplete { cid: cid as u32 });
         } else {
             complete(sim, st, cid);
         }
@@ -1155,11 +1255,11 @@ fn begin_host_round(sim: &mut ClusterSim, st: &mut ClusterState, cid: Collective
         // on a shared core, matching the closed form's serial-round
         // assumption.
         let served = st.fabric.nodes[node].comm.serve(now, work_secs + step_cost);
-        sim.schedule_at(served, move |sim, st| host_round_done(sim, st, cid));
+        sim.schedule_at(served, Event::HostRoundDone { cid: cid as u32 });
     }
 }
 
-fn host_round_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+pub(super) fn host_round_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     let (pending, round) = {
         let h = st.collectives[cid].host_mut();
         h.round_pending -= 1;

@@ -14,7 +14,9 @@
 //! difference between the two engines is attributable purely to how
 //! communication is executed.
 
-use super::{collective, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, JobId, NodeId};
+use super::{
+    collective, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, Event, JobId, NodeId,
+};
 use crate::analytic::model::{layer_times, LayerTimes, SystemKind};
 use crate::bfp::BfpCodec;
 use crate::collective::timing::HostNet;
@@ -215,7 +217,7 @@ pub fn run_worker(sim: &mut ClusterSim, st: &mut ClusterState, jid: JobId) {
                 st.jobs[jid].next_task = idx + 1;
                 let lane = st.jobs[jid].worker_lane.clone();
                 st.trace.add(&lane, &label, now, now + dur);
-                sim.schedule_at(now + dur, move |sim, st| run_worker(sim, st, jid));
+                sim.schedule_at(now + dur, Event::JobWake { job: jid as u32 });
                 return;
             }
             WorkerTask::PostAr { layer } => {

@@ -4,7 +4,7 @@
 //! `nic::simulate_ring_allreduce` and `coordinator::simulate_iteration`
 //! run one collective / one job at a time on private servers (the
 //! serialized compatibility path kept for the E6 closed-form validation),
-//! here every activity in the cluster is an event on a single
+//! here every activity in the cluster is a typed [`Event`] on a single
 //! [`netsim::engine::Sim`] clock sharing one [`netsim::fabric::Fabric`]:
 //!
 //! * the smart-NIC ring datapath (PCIe fetch → adder → Tx → switch →
@@ -33,14 +33,15 @@ pub mod planner;
 pub mod scenario;
 
 use crate::collective::Scheme;
-use crate::netsim::engine::Sim;
+use crate::netsim::engine::{Sim, World};
 use crate::netsim::fabric::Fabric;
 use crate::sysconfig::SystemParams;
 use crate::trace::Trace;
 
+pub use crate::netsim::engine::EngineKind;
 pub use crate::netsim::topology::Topology;
 pub use job::{JobSpec, WorkerTask};
-pub use scenario::{run_scenario, ClusterSpec, JobResult, ScenarioOutput};
+pub use scenario::{run_scenario, run_scenario_on, ClusterSpec, JobResult, ScenarioOutput};
 
 /// Physical node index into the fabric.
 pub type NodeId = usize;
@@ -99,8 +100,124 @@ pub struct ClusterState {
     pub collectives: Vec<collective::Collective>,
 }
 
-/// The event type of the unified engine.
+/// The executive type of the unified engine.
 pub type ClusterSim = Sim<ClusterState>;
+
+/// The typed event vocabulary of the unified cluster engine.
+///
+/// One variant per scheduler client step — the trainer's worker wake-ups
+/// ([`cluster::job`]), the three collective executors' pipeline stages
+/// ([`cluster::collective`]: the NIC ring, the planned phase executor
+/// with its in-switch segment pipeline, and the host/MPI rounds) — each
+/// dispatched by [`ClusterState`]'s [`World::handle`] match loop.  All
+/// fields are `u32` indices into [`ClusterState`] bookkeeping (plus the
+/// one `f64` payload a round op carries), so an [`Event`] is a compact
+/// `Copy` value: the engine's arena stores it inline, with no per-event
+/// allocation and no closure captures.
+///
+/// [`cluster::job`]: crate::cluster::job
+/// [`cluster::collective`]: crate::cluster::collective
+#[derive(Clone, Copy, Debug)]
+pub enum Event {
+    /// (re)enter a job's worker loop (job start, or a compute span ended)
+    JobWake { job: u32 },
+    /// the NIC driver hands `cid`'s descriptor to the datapath (the
+    /// fixed request overhead elapsed)
+    CollectiveStart { cid: u32 },
+    /// mark `cid` complete at the event time (host latency-only tail)
+    CollectiveComplete { cid: u32 },
+    /// ring: `rank`'s copy of `seg` is ready for `step` — serialize it
+    /// to the successor
+    RingSend { cid: u32, step: u32, rank: u32, seg: u32 },
+    /// ring: `seg` of `step` arrived at `rank`
+    RingRecv { cid: u32, step: u32, rank: u32, seg: u32 },
+    /// ring: both reduce inputs present at `rank` — occupy the FP32 adder
+    RingReduce { cid: u32, step: u32, rank: u32, seg: u32 },
+    /// ring: `rank`'s copy of `seg` is final for `step` (reduce or
+    /// store-and-forward done)
+    RingFinal { cid: u32, step: u32, rank: u32, seg: u32 },
+    /// ring: one final-copy PCIe writeback finished
+    RingWritebackDone { cid: u32 },
+    /// planned: one rank's whole-payload DMA fetch finished
+    PlannedFetchDone { cid: u32 },
+    /// planned: a round op's payload arrived at node `dst` (the reduce,
+    /// if any, follows on `dst`'s adder)
+    PlannedOpArrive { cid: u32, dst: u32, reduce_elems: f64 },
+    /// planned: one round op fully done (including its reduce)
+    PlannedOpDone { cid: u32 },
+    /// planned: one rank's final PCIe writeback finished
+    PlannedWbDone { cid: u32 },
+    /// in-switch: a member's copy of `seg` is on its NIC — fold it into
+    /// the local aggregation engine
+    SwitchContribute { cid: u32, seg: u32, rank: u32 },
+    /// in-switch: one contribution folded at `group`'s leaf engine
+    SwitchFoldDone { cid: u32, seg: u32, group: u32 },
+    /// in-switch: one leaf aggregate folded at the spine engine
+    SwitchSpineDone { cid: u32, seg: u32 },
+    /// in-switch: the reduced `seg` reached `group`'s leaf switch
+    SwitchMulticast { cid: u32, seg: u32, group: u32 },
+    /// in-switch: the reduced `seg` reached a member's NIC
+    SwitchDelivered { cid: u32, seg: u32, rank: u32 },
+    /// in-switch: one member fully served for `seg` (incl. writeback)
+    SwitchRankDone { cid: u32, seg: u32 },
+    /// host: one rank's software round drained on its comm-core server
+    HostRoundDone { cid: u32 },
+}
+
+/// Widen a compact event index back to the bookkeeping index type.
+fn ix(i: u32) -> usize {
+    i as usize
+}
+
+impl World for ClusterState {
+    type Event = Event;
+
+    fn handle(sim: &mut ClusterSim, st: &mut ClusterState, event: Event) {
+        match event {
+            Event::JobWake { job } => job::run_worker(sim, st, ix(job)),
+            Event::CollectiveStart { cid } => collective::on_start(sim, st, ix(cid)),
+            Event::CollectiveComplete { cid } => collective::on_complete(sim, st, ix(cid)),
+            Event::RingSend { cid, step, rank, seg } => {
+                collective::ring_send(sim, st, ix(cid), ix(step), ix(rank), ix(seg));
+            }
+            Event::RingRecv { cid, step, rank, seg } => {
+                collective::ring_recv(sim, st, ix(cid), ix(step), ix(rank), ix(seg));
+            }
+            Event::RingReduce { cid, step, rank, seg } => {
+                collective::ring_reduce(sim, st, ix(cid), ix(step), ix(rank), ix(seg));
+            }
+            Event::RingFinal { cid, step, rank, seg } => {
+                collective::ring_segment_final(sim, st, ix(cid), ix(step), ix(rank), ix(seg));
+            }
+            Event::RingWritebackDone { cid } => collective::ring_writeback_done(sim, st, ix(cid)),
+            Event::PlannedFetchDone { cid } => collective::planned_fetch_done(sim, st, ix(cid)),
+            Event::PlannedOpArrive { cid, dst, reduce_elems } => {
+                collective::planned_op_arrive(sim, st, ix(cid), ix(dst), reduce_elems);
+            }
+            Event::PlannedOpDone { cid } => collective::planned_op_done(sim, st, ix(cid)),
+            Event::PlannedWbDone { cid } => collective::planned_wb_done(sim, st, ix(cid)),
+            Event::SwitchContribute { cid, seg, rank } => {
+                collective::switch_contribute(sim, st, ix(cid), ix(seg), ix(rank));
+            }
+            Event::SwitchFoldDone { cid, seg, group } => {
+                collective::switch_fold_done(sim, st, ix(cid), ix(seg), ix(group));
+            }
+            Event::SwitchSpineDone { cid, seg } => {
+                collective::switch_spine_done(sim, st, ix(cid), ix(seg));
+            }
+            Event::SwitchMulticast { cid, seg, group } => {
+                collective::switch_multicast(sim, st, ix(cid), ix(seg), ix(group));
+            }
+            Event::SwitchDelivered { cid, seg, rank } => {
+                collective::switch_delivered(sim, st, ix(cid), ix(seg), ix(rank));
+            }
+            Event::SwitchRankDone { cid, seg } => {
+                collective::switch_rank_done(sim, st, ix(cid), ix(seg));
+            }
+            Event::HostRoundDone { cid } => collective::host_round_done(sim, st, ix(cid)),
+        }
+    }
+}
 
 impl ClusterState {
     /// One job's collective records, in the order they were posted (ARs

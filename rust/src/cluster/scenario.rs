@@ -12,8 +12,8 @@
 //! faulty node — not just a single ring.
 
 use super::job::{JobRuntime, JobSpec};
-use super::{job, ClusterSim, ClusterState};
-use crate::netsim::engine::Sim;
+use super::{ClusterSim, ClusterState, Event};
+use crate::netsim::engine::{EngineKind, Sim};
 use crate::netsim::fabric::Fabric;
 use crate::netsim::topology::Topology;
 use crate::netsim::Time;
@@ -91,11 +91,23 @@ pub struct ScenarioOutput {
     pub adder_util: f64,
     /// switch egress-port utilization, one entry per node
     pub port_util: Vec<f64>,
+    /// high-water mark of the engine's pending-event count
+    pub peak_queue_depth: usize,
 }
 
 /// Run `spec` to completion on the unified engine.  Fully deterministic:
 /// identical specs produce identical traces.
 pub fn run_scenario(spec: &ClusterSpec) -> ScenarioOutput {
+    run_scenario_on(spec, EngineKind::Typed)
+}
+
+/// [`run_scenario`] on an explicit engine backend: the typed calendar
+/// engine in production, or the boxed-closure baseline that `smartnic
+/// engine-bench` and the cross-engine equivalence suite
+/// (`rust/tests/engine_equiv.rs`) measure it against.  Both backends
+/// execute the identical `(time, seq)` event order, so their outputs are
+/// bit-identical.
+pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput {
     let nodes = spec.nodes();
     assert!(nodes >= 1, "cluster needs at least one node");
     assert!(!spec.jobs.is_empty(), "scenario needs at least one job");
@@ -125,9 +137,9 @@ pub fn run_scenario(spec: &ClusterSpec) -> ScenarioOutput {
             .collect(),
         collectives: Vec::new(),
     };
-    let mut sim: ClusterSim = Sim::new();
+    let mut sim: ClusterSim = Sim::with_engine(engine);
     for (jid, j) in spec.jobs.iter().enumerate() {
-        sim.schedule_at(j.start_at, move |sim, st| job::run_worker(sim, st, jid));
+        sim.schedule_at(j.start_at, Event::JobWake { job: jid as u32 });
     }
     sim.run(&mut state);
 
@@ -168,6 +180,7 @@ pub fn run_scenario(spec: &ClusterSpec) -> ScenarioOutput {
         pcie_util: state.fabric.mean_pcie_util(makespan),
         adder_util: state.fabric.mean_adder_util(makespan),
         port_util,
+        peak_queue_depth: sim.peak_pending(),
         trace: state.trace,
     }
 }

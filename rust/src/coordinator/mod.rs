@@ -20,4 +20,6 @@ pub mod unified;
 
 pub use simulate::{simulate_iteration, SimOutput};
 pub use trainer::{ArBackend, Optimizer, StepStats, Trainer, TrainerConfig};
-pub use unified::{simulate_iteration_unified, simulate_iteration_unified_faulty};
+pub use unified::{
+    simulate_iteration_unified, simulate_iteration_unified_faulty, simulate_iteration_unified_on,
+};

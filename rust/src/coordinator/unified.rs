@@ -21,7 +21,7 @@
 
 use super::simulate::SimOutput;
 use crate::analytic::model::{layer_times, IterationBreakdown, SystemKind};
-use crate::cluster::{run_scenario, ClusterSpec, JobSpec};
+use crate::cluster::{run_scenario_on, ClusterSpec, EngineKind, JobSpec};
 use crate::sysconfig::{ClusterFaults, SystemParams, Workload};
 
 /// Simulate one training iteration of `w` on `n` nodes under `kind`,
@@ -43,10 +43,25 @@ pub fn simulate_iteration_unified_faulty(
     n: usize,
     faults: &ClusterFaults,
 ) -> SimOutput {
+    simulate_iteration_unified_on(kind, sys, w, n, faults, EngineKind::Typed)
+}
+
+/// [`simulate_iteration_unified_faulty`] on an explicit engine backend —
+/// the cross-engine equivalence suite (`rust/tests/engine_equiv.rs`)
+/// pins the typed engine to the boxed-closure baseline at the paper's
+/// E6 operating points through this entry.
+pub fn simulate_iteration_unified_on(
+    kind: SystemKind,
+    sys: &SystemParams,
+    w: &Workload,
+    n: usize,
+    faults: &ClusterFaults,
+    engine: EngineKind,
+) -> SimOutput {
     let spec = ClusterSpec::new(*sys, n)
         .with_faults(faults.clone())
         .with_job(JobSpec::new("j0", kind, *w, (0..n).collect()));
-    let out = run_scenario(&spec);
+    let out = run_scenario_on(&spec, engine);
     let job = &out.jobs[0];
 
     let lt = layer_times(kind, sys, w, n);

@@ -1,0 +1,358 @@
+//! E9 — engine-core benchmark: the typed-event calendar engine against
+//! the boxed-closure baseline it replaced.
+//!
+//! For every node count, one paper-sized all-reduce runs to completion
+//! on the unified engine under the three scale-relevant plan families —
+//! the NIC ring, the planner's hierarchical plan, and NetReduce-style
+//! in-switch reduction — on the planner study's 4:1-tapered leaf–spine
+//! fabric (racks of 8, contiguous placement).  Every point records
+//! events executed, events/second, peak queue depth and wall-clock; at
+//! the baselined node counts the same scenario is re-run on
+//! [`EngineKind::BoxedBaseline`] (the PR-3 representation: one
+//! `Box<dyn FnOnce>` per event on a `BinaryHeap`) so the speedup is
+//! measured, not estimated.
+//!
+//! `smartnic engine-bench` prints the table and writes
+//! `BENCH_engine.json` (schema documented in `docs/BENCHMARKS.md`,
+//! pinned by `rust/tests/bench_schema.rs`).  The run fails (nonzero
+//! exit) if the typed engine is not at least [`SPEEDUP_GATE`]x faster
+//! than the baseline on the [`GATE_NODES`]-node NIC ring, or if the two
+//! representations disagree on virtual time by more than
+//! [`VIRTUAL_TIME_TOL`] anywhere.
+
+use crate::analytic::model::SystemKind;
+use crate::cluster::{
+    run_scenario_on, ClusterSpec, CollectiveAlgo, EngineKind, JobSpec, ScenarioOutput, Topology,
+};
+use crate::experiments::planner::{leaf_shape, planner_system};
+use crate::sysconfig::Workload;
+use crate::util::json::Json;
+use crate::util::stats::rel_err;
+use crate::util::table::{fnum, Table};
+use std::time::Instant;
+
+/// Plan families benchmarked at every node count, in row order.
+pub const ALGOS: [(&str, CollectiveAlgo); 3] = [
+    ("nic-ring", CollectiveAlgo::NicRing),
+    ("hierarchical", CollectiveAlgo::NicHierarchical),
+    ("in-switch", CollectiveAlgo::SwitchReduce),
+];
+
+/// Wall-clock speedup the typed engine must reach over the boxed
+/// baseline on the NIC ring at [`GATE_NODES`] nodes.
+pub const SPEEDUP_GATE: f64 = 5.0;
+
+/// Node count the speedup gate is pinned at (the PR-2 sweep's largest
+/// point, where the boxed engine scheduled tens of millions of
+/// closures).
+pub const GATE_NODES: usize = 512;
+
+/// Both representations must agree on every virtual-time result to this
+/// relative tolerance (they execute the identical event order, so the
+/// observed deviation is exactly zero).
+pub const VIRTUAL_TIME_TOL: f64 = 1e-9;
+
+/// Sweep parameters.
+#[derive(Clone, Debug)]
+pub struct EngineBenchConfig {
+    /// node counts for the typed-engine sweep (even, >= 4)
+    pub nodes: Vec<usize>,
+    /// node counts additionally re-run on the boxed-closure baseline
+    pub baseline_nodes: Vec<usize>,
+    /// leaf uplink oversubscription factor
+    pub oversubscription: f64,
+    /// gradient width: hidden² elements per all-reduce
+    pub hidden: usize,
+}
+
+impl Default for EngineBenchConfig {
+    fn default() -> Self {
+        Self {
+            nodes: vec![128, 512, 2048],
+            baseline_nodes: vec![128, 512],
+            oversubscription: 4.0,
+            hidden: 2048,
+        }
+    }
+}
+
+/// One (node count, plan family) cell of the benchmark.
+#[derive(Clone, Debug)]
+pub struct EnginePoint {
+    pub nodes: usize,
+    pub algo: &'static str,
+    /// virtual makespan of the scenario (seconds of simulated time)
+    pub virtual_s: f64,
+    /// events executed by the typed engine
+    pub events: u64,
+    /// high-water mark of the typed engine's pending-event count
+    pub peak_queue: usize,
+    /// typed-engine wall-clock (seconds)
+    pub wall_s: f64,
+    /// typed-engine throughput
+    pub events_per_sec: f64,
+    /// boxed-closure baseline wall-clock (None when not baselined)
+    pub baseline_wall_s: Option<f64>,
+    pub baseline_events_per_sec: Option<f64>,
+    /// baseline wall-clock over typed wall-clock
+    pub speedup: Option<f64>,
+    /// relative virtual-time deviation typed vs boxed
+    pub virtual_err: Option<f64>,
+}
+
+/// The scenario a point runs: one `hidden`²-element all-reduce on the
+/// planner study's provisioned leaf–spine fabric, contiguous placement.
+fn bench_spec(n: usize, algo: CollectiveAlgo, cfg: &EngineBenchConfig) -> ClusterSpec {
+    assert!(n >= 4 && n % 2 == 0, "engine bench needs even node counts >= 4, got {n}");
+    let (leaves, m) = leaf_shape(n);
+    let sys = planner_system(leaves, m);
+    let topo = Topology::leaf_spine(leaves, m, cfg.oversubscription);
+    let w = Workload {
+        layers: 1,
+        hidden: cfg.hidden,
+        batch_per_node: 64,
+    };
+    ClusterSpec::new(sys, n).with_topology(topo).with_job(
+        JobSpec::new("bench", SystemKind::SmartNic { bfp: false }, w, topo.contiguous_ranks(n))
+            .with_layer_algos(vec![algo]),
+    )
+}
+
+fn timed_run(spec: &ClusterSpec, engine: EngineKind) -> (ScenarioOutput, f64) {
+    let t0 = Instant::now();
+    let out = run_scenario_on(spec, engine);
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run the full benchmark.
+pub fn run(cfg: &EngineBenchConfig) -> Vec<EnginePoint> {
+    let mut out = Vec::new();
+    for &n in &cfg.nodes {
+        for (name, algo) in ALGOS {
+            let spec = bench_spec(n, algo, cfg);
+            let (typed, wall) = timed_run(&spec, EngineKind::Typed);
+            let mut point = EnginePoint {
+                nodes: n,
+                algo: name,
+                virtual_s: typed.makespan,
+                events: typed.events,
+                peak_queue: typed.peak_queue_depth,
+                wall_s: wall,
+                events_per_sec: typed.events as f64 / wall.max(1e-12),
+                baseline_wall_s: None,
+                baseline_events_per_sec: None,
+                speedup: None,
+                virtual_err: None,
+            };
+            if cfg.baseline_nodes.contains(&n) {
+                let (boxed, boxed_wall) = timed_run(&spec, EngineKind::BoxedBaseline);
+                assert_eq!(
+                    boxed.events, typed.events,
+                    "engines diverged in event count at n={n} {name}"
+                );
+                point.baseline_wall_s = Some(boxed_wall);
+                point.baseline_events_per_sec = Some(boxed.events as f64 / boxed_wall.max(1e-12));
+                point.speedup = Some(boxed_wall / wall.max(1e-12));
+                point.virtual_err = Some(rel_err(boxed.makespan, typed.makespan));
+            }
+            out.push(point);
+        }
+    }
+    out
+}
+
+/// The gate measurement: typed-vs-boxed wall-clock speedup on the NIC
+/// ring at [`GATE_NODES`] nodes.  `None` when the sweep holds no
+/// baselined ring run there — the gate then has nothing to say and must
+/// not report a vacuous PASS.
+pub fn gate_speedup(points: &[EnginePoint]) -> Option<f64> {
+    points
+        .iter()
+        .find(|p| p.nodes == GATE_NODES && p.algo == "nic-ring")
+        .and_then(|p| p.speedup)
+}
+
+/// Worst typed-vs-boxed virtual-time deviation across baselined points.
+pub fn worst_virtual_err(points: &[EnginePoint]) -> Option<f64> {
+    points
+        .iter()
+        .filter_map(|p| p.virtual_err)
+        .fold(None, |acc: Option<f64>, e| Some(acc.map_or(e, |a| a.max(e))))
+}
+
+/// Largest node count the sweep completed.
+pub fn max_nodes_completed(points: &[EnginePoint]) -> usize {
+    points.iter().map(|p| p.nodes).max().unwrap_or(0)
+}
+
+pub fn print(points: &[EnginePoint], cfg: &EngineBenchConfig) {
+    let mut t = Table::new(&[
+        "nodes",
+        "algo",
+        "events",
+        "peak queue",
+        "typed (s)",
+        "Mev/s",
+        "boxed (s)",
+        "speedup",
+    ])
+    .with_title(&format!(
+        "engine bench — typed arena vs boxed closures, hidden={} on {}:1 leaf-spine",
+        cfg.hidden, cfg.oversubscription
+    ));
+    for p in points {
+        t.row(&[
+            p.nodes.to_string(),
+            p.algo.to_string(),
+            p.events.to_string(),
+            p.peak_queue.to_string(),
+            fnum(p.wall_s, 3),
+            fnum(p.events_per_sec / 1e6, 2),
+            p.baseline_wall_s.map_or("-".to_string(), |w| fnum(w, 3)),
+            p.speedup.map_or("-".to_string(), |s| format!("x{}", fnum(s, 2))),
+        ]);
+    }
+    t.print();
+    match gate_speedup(points) {
+        Some(s) => println!(
+            "typed vs boxed on the {GATE_NODES}-node NIC ring: x{:.2} (gate x{SPEEDUP_GATE}) — {}",
+            s,
+            if s >= SPEEDUP_GATE { "PASS" } else { "FAIL" }
+        ),
+        None => println!(
+            "speedup gate: not validated (no baselined {GATE_NODES}-node NIC ring in the sweep)"
+        ),
+    }
+    match worst_virtual_err(points) {
+        Some(e) => println!(
+            "virtual-time parity typed vs boxed: worst {:.2e} (tol {VIRTUAL_TIME_TOL:.0e}) — {}",
+            e,
+            if e <= VIRTUAL_TIME_TOL { "PASS" } else { "FAIL" }
+        ),
+        None => println!("virtual-time parity: not validated (no baselined points)"),
+    }
+    println!("largest completed sweep: {} nodes", max_nodes_completed(points));
+}
+
+/// Serialize the benchmark to the `BENCH_engine.json` schema
+/// (documented in `docs/BENCHMARKS.md`).
+pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint]) -> Json {
+    Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("hidden", Json::Num(cfg.hidden as f64)),
+                ("oversubscription", Json::Num(cfg.oversubscription)),
+                ("speedup_gate", Json::Num(SPEEDUP_GATE)),
+                ("gate_nodes", Json::Num(GATE_NODES as f64)),
+                ("virtual_time_tol", Json::Num(VIRTUAL_TIME_TOL)),
+            ]),
+        ),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        let baseline = match (p.baseline_wall_s, p.baseline_events_per_sec) {
+                            (Some(wall), Some(eps)) => Json::obj(vec![
+                                ("wall_s", Json::Num(wall)),
+                                ("events_per_sec", Json::Num(eps)),
+                                ("speedup", Json::Num(p.speedup.unwrap_or(0.0))),
+                                ("virtual_err", Json::Num(p.virtual_err.unwrap_or(0.0))),
+                            ]),
+                            _ => Json::Null,
+                        };
+                        Json::obj(vec![
+                            ("nodes", Json::Num(p.nodes as f64)),
+                            ("algo", Json::Str(p.algo.to_string())),
+                            ("virtual_s", Json::Num(p.virtual_s)),
+                            ("events", Json::Num(p.events as f64)),
+                            ("peak_queue_depth", Json::Num(p.peak_queue as f64)),
+                            ("wall_s", Json::Num(p.wall_s)),
+                            ("events_per_sec", Json::Num(p.events_per_sec)),
+                            ("baseline", baseline),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gates",
+            Json::obj(vec![
+                (
+                    "ring_gate_speedup",
+                    match gate_speedup(points) {
+                        Some(s) => Json::Num(s),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "speedup_pass",
+                    match gate_speedup(points) {
+                        Some(s) => Json::Bool(s >= SPEEDUP_GATE),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "worst_virtual_err",
+                    match worst_virtual_err(points) {
+                        Some(e) => Json::Num(e),
+                        None => Json::Null,
+                    },
+                ),
+                ("max_nodes_completed", Json::Num(max_nodes_completed(points) as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Write the benchmark to `path` (repo convention: `BENCH_engine.json`,
+/// uploaded as a CI artifact).
+pub fn write_bench(
+    path: &str,
+    cfg: &EngineBenchConfig,
+    points: &[EnginePoint],
+) -> std::io::Result<()> {
+    std::fs::write(path, to_json(cfg, points).to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> EngineBenchConfig {
+        EngineBenchConfig {
+            nodes: vec![8],
+            baseline_nodes: vec![8],
+            oversubscription: 4.0,
+            hidden: 128,
+        }
+    }
+
+    #[test]
+    fn tiny_sweep_produces_all_plan_families() {
+        let points = run(&tiny_cfg());
+        assert_eq!(points.len(), ALGOS.len());
+        for p in &points {
+            assert!(p.events > 0, "{}: no events", p.algo);
+            assert!(p.virtual_s > 0.0 && p.virtual_s.is_finite());
+            assert!(p.peak_queue > 0);
+            assert!(p.speedup.is_some(), "{}: baseline missing", p.algo);
+        }
+    }
+
+    #[test]
+    fn engines_agree_on_virtual_time() {
+        let points = run(&tiny_cfg());
+        let worst = worst_virtual_err(&points).expect("baselined points exist");
+        assert!(worst <= VIRTUAL_TIME_TOL, "virtual-time drift {worst}");
+    }
+
+    #[test]
+    fn gate_is_not_vacuous_without_the_pinned_point() {
+        let points = run(&tiny_cfg());
+        assert!(gate_speedup(&points).is_none(), "8-node sweep cannot claim the 512-node gate");
+        assert_eq!(max_nodes_completed(&points), 8);
+    }
+}

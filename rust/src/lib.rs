@@ -19,14 +19,17 @@
 //!   MXU-tiled matmul, the BFP compress/decompress datapath, and the NIC
 //!   FP32 adder.
 //!
-//! ## Simulation architecture: one event engine
+//! ## Simulation architecture: one typed-event engine
 //!
-//! Everything dynamic runs as events on a single calendar-queue executive
-//! ([`netsim::engine::Sim`]) over one shared resource world
-//! ([`netsim::fabric::Fabric`]: per-node Tx links, PCIe lanes, FPGA
-//! adders, host comm cores, plus a topology-shaped cut-through
-//! interconnect — one flat crossbar or an oversubscribed leaf–spine
-//! fabric, per [`netsim::topology::Topology`]):
+//! Everything dynamic runs as typed events on a single calendar-queue
+//! executive ([`netsim::engine::Sim`] — an index-arena of compact
+//! [`cluster::Event`]s ordered by a bucketed wheel with heap overflow,
+//! dispatched by [`netsim::engine::World::handle`]'s match loop) over
+//! one shared resource world ([`netsim::fabric::Fabric`]: per-node Tx
+//! links, PCIe lanes, FPGA adders, host comm cores, plus a
+//! topology-shaped cut-through interconnect — one flat crossbar or an
+//! oversubscribed leaf–spine fabric, per
+//! [`netsim::topology::Topology`]):
 //!
 //! * [`cluster::collective`] — the NIC ring datapath (PCIe fetch → FP32
 //!   adder → Tx → switch → writeback, segment-pipelined), NIC-offloaded
@@ -51,6 +54,33 @@
 //! Python never runs at training time: the Rust runtime loads the AOT
 //! artifacts through PJRT (`runtime`) and drives them from the training
 //! loop (`coordinator::trainer`).
+//!
+//! New contributors: `docs/ARCHITECTURE.md` walks the module map, the
+//! schedule → reserve → release event lifecycle, the five collective
+//! plan families and the closed-form pairings; `docs/BENCHMARKS.md`
+//! documents the three CI benchmark artifacts and their gates.
+//!
+//! ## Quickstart: one training job on the unified engine
+//!
+//! ```
+//! use ai_smartnic::analytic::model::SystemKind;
+//! use ai_smartnic::cluster::{run_scenario, ClusterSpec, JobSpec};
+//! use ai_smartnic::sysconfig::{SystemParams, Workload};
+//!
+//! // a 6-node smart-NIC cluster (flat crossbar), one 2-layer job
+//! let sys = SystemParams::smartnic_40g();
+//! let w = Workload { layers: 2, hidden: 256, batch_per_node: 32 };
+//! let spec = ClusterSpec::new(sys, 6).with_job(JobSpec::new(
+//!     "j0",
+//!     SystemKind::SmartNic { bfp: true },
+//!     w,
+//!     (0..6).collect(),
+//! ));
+//! let out = run_scenario(&spec);
+//! assert_eq!(out.jobs[0].ar_count, 2); // one all-reduce per layer
+//! assert!(out.jobs[0].duration > 0.0);
+//! assert!(out.events > 0 && out.peak_queue_depth > 0);
+//! ```
 
 pub mod analytic;
 pub mod benchkit;

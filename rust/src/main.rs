@@ -16,6 +16,7 @@
 //!   cluster   multi-job scenarios on the unified event engine
 //!   scale     hierarchical scaling sweep (6..512 nodes), BENCH_scaling.json
 //!   plan      topology-aware planner study (NIC vs switch offload), BENCH_planner.json
+//!   engine-bench  typed-event engine vs boxed-closure baseline, BENCH_engine.json
 //!   bfp       BFP design-space sweep (block size x mantissa bits)
 //!   all       fig2a+fig2b+table1+fig4a+fig4b+validate, write results/
 //! ```
@@ -29,7 +30,8 @@ use ai_smartnic::coordinator::{
 };
 use ai_smartnic::sysconfig::ClusterFaults;
 use ai_smartnic::experiments::{
-    ablate, fig2a, fig2b, fig4a, fig4b, planner, scaling, table1, validate, write_result,
+    ablate, engine_bench, fig2a, fig2b, fig4a, fig4b, planner, scaling, table1, validate,
+    write_result,
 };
 use ai_smartnic::log_info;
 use ai_smartnic::sysconfig::{SystemParams, Workload};
@@ -38,7 +40,7 @@ use ai_smartnic::util::logger::{set_level, Level};
 use ai_smartnic::util::rng::Rng;
 use ai_smartnic::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|scale|plan|bfp|ablate|all> [--help]";
+const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|scale|plan|engine-bench|bfp|ablate|all> [--help]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -59,6 +61,7 @@ fn main() {
         "cluster" => cmd_cluster(&rest),
         "scale" => cmd_scale(&rest),
         "plan" => cmd_plan(&rest),
+        "engine-bench" => cmd_engine_bench(&rest),
         "bfp" => cmd_bfp(&rest),
         "ablate" => cmd_ablate(&rest),
         "all" => cmd_all(&rest),
@@ -612,6 +615,90 @@ fn cmd_plan(rest: &[String]) -> i32 {
     if !planner::hierarchical_beats_strided_ring(&points) {
         eprintln!("planner FAILED: hierarchical plan slower than the strided NIC ring");
         return 1;
+    }
+    0
+}
+
+fn cmd_engine_bench(rest: &[String]) -> i32 {
+    let c = Command::new(
+        "engine-bench",
+        "typed-event calendar engine vs the boxed-closure baseline (BENCH_engine.json)",
+    )
+    .opt("nodes", "128,512,2048", "node counts for the typed sweep (even, >= 4)")
+    .opt("baseline-nodes", "128,512", "node counts also run on the boxed-closure baseline")
+    .opt("oversub", "4", "leaf uplink oversubscription factor")
+    .opt("hidden", "2048", "gradient width (hidden^2 elements per all-reduce)")
+    .opt("out", "BENCH_engine.json", "machine-readable output path")
+    .flag("no-json", "skip writing the benchmark file");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let cfg = engine_bench::EngineBenchConfig {
+        nodes: a.get_list("nodes").unwrap_or_default(),
+        baseline_nodes: a.get_list("baseline-nodes").unwrap_or_default(),
+        oversubscription: a.get_f64("oversub", 4.0),
+        hidden: a.get_usize("hidden", 2048),
+    };
+    // get_list silently drops unparsable entries; a typo must not shrink
+    // the sweep (or silently disable the baseline gates) while still
+    // reporting PASS
+    let raw_nodes = a.get_str("nodes", "");
+    let wanted = raw_nodes.split(',').filter(|s| !s.trim().is_empty()).count();
+    if cfg.nodes.len() != wanted || cfg.nodes.is_empty() {
+        eprintln!("--nodes contains invalid entries: '{raw_nodes}'");
+        return 2;
+    }
+    let raw_base = a.get_str("baseline-nodes", "");
+    let base_wanted = raw_base.split(',').filter(|s| !s.trim().is_empty()).count();
+    if cfg.baseline_nodes.len() != base_wanted {
+        eprintln!("--baseline-nodes contains invalid entries: '{raw_base}'");
+        return 2;
+    }
+    if let Some(orphan) = cfg.baseline_nodes.iter().find(|&&n| !cfg.nodes.contains(&n)) {
+        eprintln!("--baseline-nodes {orphan} is not in --nodes, so it would never be baselined");
+        return 2;
+    }
+    if cfg.nodes.iter().chain(&cfg.baseline_nodes).any(|&n| n < 4 || n % 2 != 0) {
+        eprintln!("node counts must all be even and >= 4");
+        return 2;
+    }
+    if !(cfg.oversubscription > 0.0 && cfg.oversubscription.is_finite()) {
+        eprintln!("--oversub must be a positive finite factor");
+        return 2;
+    }
+    if cfg.hidden == 0 {
+        eprintln!("--hidden must be positive");
+        return 2;
+    }
+    let points = engine_bench::run(&cfg);
+    engine_bench::print(&points, &cfg);
+    if !a.flag("no-json") {
+        let path = a.get_str("out", "BENCH_engine.json");
+        match engine_bench::write_bench(&path, &cfg, &points) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Some(worst) = engine_bench::worst_virtual_err(&points) {
+        if worst > engine_bench::VIRTUAL_TIME_TOL {
+            eprintln!(
+                "engine parity FAILED: typed vs boxed virtual time deviates by {worst:.2e} \
+                 (tol {:.0e})",
+                engine_bench::VIRTUAL_TIME_TOL
+            );
+            return 1;
+        }
+    }
+    if let Some(speedup) = engine_bench::gate_speedup(&points) {
+        if speedup < engine_bench::SPEEDUP_GATE {
+            eprintln!(
+                "engine speedup FAILED: x{speedup:.2} on the {}-node NIC ring (gate x{})",
+                engine_bench::GATE_NODES,
+                engine_bench::SPEEDUP_GATE
+            );
+            return 1;
+        }
     }
     0
 }

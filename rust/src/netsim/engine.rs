@@ -1,36 +1,326 @@
-//! Calendar-queue discrete-event engine.
+//! Typed-event discrete-event engine.
 //!
-//! Events are boxed closures scheduled at absolute virtual times; ties are
-//! broken by insertion sequence so execution order is fully deterministic.
+//! Until PR 5 every event was a `Box<dyn FnOnce>` on one `BinaryHeap`;
+//! the 512-node ring sweep scheduled tens of millions of them, and the
+//! allocation + deep-heap traffic was the wall-clock bottleneck on the
+//! road to 2k-node sweeps.  The engine now runs on three pieces:
+//!
+//! * a **typed event vocabulary** per simulation: the [`World`] trait
+//!   couples a mutable state type with a compact (ideally `Copy`)
+//!   [`World::Event`] enum and the match-loop dispatcher
+//!   [`World::handle`] — no closure captures, no virtual calls;
+//! * an **index-based arena** holding pending events: slots are recycled
+//!   through a free list, so steady-state scheduling performs no heap
+//!   allocation at all;
+//! * a **hierarchical calendar queue**: a bucketed wheel over the near
+//!   future (the current bucket drains through a small binary heap) with
+//!   a heap overflow for far-future events, keyed on finite `f64`
+//!   virtual time.  Ties break by insertion sequence — the *same* total
+//!   order as the boxed engine, so virtual-time results are
+//!   bit-identical across representations.
+//!
+//! The PR-3 representation is retained behind
+//! [`EngineKind::BoxedBaseline`] (one boxed closure per event on a
+//! `BinaryHeap`): `smartnic engine-bench` measures the typed engine
+//! against it and `rust/tests/engine_equiv.rs` pins the two to identical
+//! virtual time.  [`Sim::schedule_closure`] remains as a thin escape
+//! hatch for tests; every production scheduler client posts typed
+//! events.
+//!
+//! ```
+//! use ai_smartnic::netsim::engine::{Sim, World};
+//!
+//! /// A world is state + an event vocabulary + a dispatcher.
+//! struct Counter {
+//!     fired: Vec<u32>,
+//! }
+//! impl World for Counter {
+//!     type Event = u32;
+//!     fn handle(_sim: &mut Sim<Self>, state: &mut Self, event: u32) {
+//!         state.fired.push(event);
+//!     }
+//! }
+//!
+//! let mut sim: Sim<Counter> = Sim::new();
+//! let mut world = Counter { fired: Vec::new() };
+//! sim.schedule(2.0e-6, 2);
+//! sim.schedule(1.0e-6, 1);
+//! let end = sim.run(&mut world);
+//! assert_eq!(end, 2.0e-6);
+//! assert_eq!(world.fired, vec![1, 2]);
+//! ```
 
 use super::Time;
-use std::cmp::Ordering;
+use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
 
-type Action<S> = Box<dyn FnOnce(&mut Sim<S>, &mut S)>;
+/// A simulation world: the mutable state threaded through every event,
+/// its typed event vocabulary, and the dispatcher that executes one
+/// event at its scheduled virtual time.
+pub trait World: Sized + 'static {
+    /// The compact event representation.  Keep it small and `Copy`: the
+    /// engine stores events by value in the arena.
+    type Event: 'static;
 
-struct Scheduled<S> {
+    /// Execute `event` at its fire time.  `sim.now()` is the event's
+    /// scheduled time; the handler may schedule further events.
+    fn handle(sim: &mut Sim<Self>, state: &mut Self, event: Self::Event);
+}
+
+/// A boxed action: the test escape hatch, and the unit of the
+/// [`EngineKind::BoxedBaseline`] representation.
+type Action<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
+
+/// One pending queue entry: a typed event, or an escape-hatch closure.
+enum Stored<W: World> {
+    Event(W::Event),
+    Closure(Action<W>),
+}
+
+/// Which queue representation a [`Sim`] runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// typed-event arena + hierarchical calendar queue (the default)
+    Typed,
+    /// the PR-3 representation — one boxed closure per event on a
+    /// `BinaryHeap` — kept as the benchmark and equivalence baseline
+    BoxedBaseline,
+}
+
+// ---------------------------------------------------------------------
+// Calendar queue: (time, seq) keys over an index arena
+// ---------------------------------------------------------------------
+
+/// Queue key.  `(time, seq)` is the engine's total order (`total_cmp`
+/// is safe because scheduling rejects non-finite times); `slot` indexes
+/// the event arena.
+#[derive(Clone, Copy)]
+struct Key {
     time: Time,
     seq: u64,
-    action: Action<S>,
+    slot: u32,
 }
 
-impl<S> PartialEq for Scheduled<S> {
+impl PartialEq for Key {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.cmp(other) == Ordering::Equal
     }
 }
-impl<S> Eq for Scheduled<S> {}
-impl<S> PartialOrd for Scheduled<S> {
+impl Eq for Key {}
+impl PartialOrd for Key {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
-impl<S> Ord for Scheduled<S> {
+impl Ord for Key {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert for earliest-first.  `total_cmp`
-        // is a total order over f64 (schedule_at rejects non-finite times,
-        // so NaN can never corrupt the heap invariant).
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Pending-event storage: slots recycled through a LIFO free list, so
+/// steady-state scheduling reuses hot memory instead of allocating.
+struct Arena<W: World> {
+    slots: Vec<Option<Stored<W>>>,
+    free: Vec<u32>,
+}
+
+impl<W: World> Arena<W> {
+    fn new() -> Self {
+        Self {
+            slots: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    fn insert(&mut self, stored: Stored<W>) -> u32 {
+        match self.free.pop() {
+            Some(slot) => {
+                self.slots[slot as usize] = Some(stored);
+                slot
+            }
+            None => {
+                assert!(
+                    self.slots.len() < u32::MAX as usize,
+                    "event arena exhausted (more than 2^32-1 pending events)"
+                );
+                self.slots.push(Some(stored));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    fn take(&mut self, slot: u32) -> Stored<W> {
+        let stored = self.slots[slot as usize]
+            .take()
+            .expect("empty arena slot (engine bug)");
+        self.free.push(slot);
+        stored
+    }
+}
+
+/// Buckets in the wheel.
+const BUCKETS: usize = 512;
+/// Maximum overflow events moved per wheel rebase.
+const REFILL_BATCH: usize = 8192;
+
+/// The hierarchical calendar queue.
+///
+/// Bucket `i` covers virtual times `[base + i·width, base + (i+1)·width)`;
+/// buckets below `next_bucket` have been drained into the `front` heap
+/// (which therefore holds the global minimum once non-empty), and events
+/// past the wheel horizon wait in the `overflow` heap.  When the wheel
+/// empties, `refill` rebases it on the earliest overflow batch and
+/// re-derives `width` from that batch's span, so bucket granularity
+/// tracks the simulation's actual event density.
+///
+/// Placement is decided purely by the bucket index a time maps to, and a
+/// whole bucket moves into `front` at once — so every pending event with
+/// a key below any bucketed event's key is always in `front`, and pops
+/// follow the exact `(time, seq)` order of a single global heap.
+struct Calendar {
+    /// events already past the wheel frontier, drained in key order
+    front: BinaryHeap<Reverse<Key>>,
+    /// wheel origin: bucket 0 starts here
+    base: Time,
+    /// bucket granularity (seconds); always finite and > 0
+    width: Time,
+    /// buckets below this index have been drained into `front`
+    next_bucket: usize,
+    buckets: Vec<Vec<Key>>,
+    /// events at or beyond the wheel horizon
+    overflow: BinaryHeap<Reverse<Key>>,
+    len: usize,
+}
+
+impl Calendar {
+    fn new() -> Self {
+        Self {
+            front: BinaryHeap::new(),
+            base: 0.0,
+            width: 1e-6,
+            next_bucket: 0,
+            buckets: (0..BUCKETS).map(|_| Vec::new()).collect(),
+            overflow: BinaryHeap::new(),
+            len: 0,
+        }
+    }
+
+    /// Wheel index `time` maps to under the current `(base, width)`.
+    /// The saturating float→usize cast sends negatives to 0 (such times
+    /// sit below the frontier and belong in `front`) and huge quotients
+    /// to `usize::MAX` (beyond the horizon: overflow).
+    fn index_of(&self, time: Time) -> usize {
+        ((time - self.base) / self.width) as usize
+    }
+
+    fn push(&mut self, key: Key) {
+        self.len += 1;
+        let idx = self.index_of(key.time);
+        if idx < self.next_bucket {
+            self.front.push(Reverse(key));
+        } else if idx < BUCKETS {
+            self.buckets[idx].push(key);
+        } else {
+            self.overflow.push(Reverse(key));
+        }
+    }
+
+    /// Advance buckets into `front` until it holds the global minimum
+    /// (no-op when it already does; returns with `front` empty only when
+    /// the whole queue is empty).
+    fn ensure_front(&mut self) {
+        while self.front.is_empty() {
+            while self.next_bucket < BUCKETS && self.buckets[self.next_bucket].is_empty() {
+                self.next_bucket += 1;
+            }
+            if self.next_bucket < BUCKETS {
+                let idx = self.next_bucket;
+                self.next_bucket += 1;
+                while let Some(key) = self.buckets[idx].pop() {
+                    self.front.push(Reverse(key));
+                }
+            } else if !self.refill() {
+                return;
+            }
+        }
+    }
+
+    /// The wheel is exhausted: rebase it on the earliest overflow batch.
+    /// Returns false when the overflow is empty too.
+    fn refill(&mut self) -> bool {
+        let Some(Reverse(first)) = self.overflow.pop() else {
+            return false;
+        };
+        let mut batch = Vec::with_capacity(REFILL_BATCH.min(self.overflow.len() + 1));
+        batch.push(first);
+        while batch.len() < REFILL_BATCH {
+            match self.overflow.pop() {
+                Some(Reverse(key)) => batch.push(key),
+                None => break,
+            }
+        }
+        // Heap pops arrive in key order, so the batch is time-sorted:
+        // size the wheel to its span.  A zero span (all ties) keeps the
+        // previous width — everything lands in bucket 0.
+        let span = batch[batch.len() - 1].time - first.time;
+        if span > 0.0 {
+            self.width = span / BUCKETS as f64;
+        }
+        self.base = first.time;
+        self.next_bucket = 0;
+        for key in batch {
+            let idx = self.index_of(key.time);
+            if idx < BUCKETS {
+                self.buckets[idx].push(key);
+            } else {
+                // float rounding at the horizon (or a degenerate width):
+                // spill back.  `first` always maps to bucket 0, so every
+                // refill makes progress.
+                self.overflow.push(Reverse(key));
+            }
+        }
+        true
+    }
+
+    fn pop(&mut self) -> Option<Key> {
+        self.ensure_front();
+        let Reverse(key) = self.front.pop()?;
+        self.len -= 1;
+        Some(key)
+    }
+
+    fn peek_time(&mut self) -> Option<Time> {
+        self.ensure_front();
+        self.front.peek().map(|Reverse(key)| key.time)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Boxed-closure baseline representation (PR 3)
+// ---------------------------------------------------------------------
+
+struct BoxedScheduled<W: World> {
+    time: Time,
+    seq: u64,
+    action: Action<W>,
+}
+
+impl<W: World> PartialEq for BoxedScheduled<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<W: World> Eq for BoxedScheduled<W> {}
+impl<W: World> PartialOrd for BoxedScheduled<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W: World> Ord for BoxedScheduled<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for earliest-first, exactly
+        // as the PR-3 engine did.
         other
             .time
             .total_cmp(&self.time)
@@ -38,28 +328,64 @@ impl<S> Ord for Scheduled<S> {
     }
 }
 
-/// The simulation executive.  `S` is the user's world state, threaded by
-/// &mut into every event so closures never capture aliased state.
-pub struct Sim<S> {
-    now: Time,
-    seq: u64,
-    queue: BinaryHeap<Scheduled<S>>,
-    events_run: u64,
+enum QueueImpl<W: World> {
+    Typed {
+        calendar: Calendar,
+        arena: Arena<W>,
+    },
+    Boxed(BinaryHeap<BoxedScheduled<W>>),
 }
 
-impl<S> Default for Sim<S> {
+// ---------------------------------------------------------------------
+// The executive
+// ---------------------------------------------------------------------
+
+/// The simulation executive.  `W` is the simulation world: its state is
+/// threaded by `&mut` into every event, so handlers never capture
+/// aliased state.
+pub struct Sim<W: World> {
+    now: Time,
+    seq: u64,
+    events_run: u64,
+    peak_pending: usize,
+    queue: QueueImpl<W>,
+}
+
+impl<W: World> Default for Sim<W> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<S> Sim<S> {
+impl<W: World> Sim<W> {
+    /// A typed-event calendar-queue engine (the production default).
     pub fn new() -> Self {
+        Self::with_engine(EngineKind::Typed)
+    }
+
+    /// An engine on an explicit queue representation.
+    pub fn with_engine(kind: EngineKind) -> Self {
+        let queue = match kind {
+            EngineKind::Typed => QueueImpl::Typed {
+                calendar: Calendar::new(),
+                arena: Arena::new(),
+            },
+            EngineKind::BoxedBaseline => QueueImpl::Boxed(BinaryHeap::new()),
+        };
         Self {
             now: 0.0,
             seq: 0,
-            queue: BinaryHeap::new(),
             events_run: 0,
+            peak_pending: 0,
+            queue,
+        }
+    }
+
+    /// Which representation this engine runs on.
+    pub fn engine_kind(&self) -> EngineKind {
+        match &self.queue {
+            QueueImpl::Typed { .. } => EngineKind::Typed,
+            QueueImpl::Boxed(_) => EngineKind::BoxedBaseline,
         }
     }
 
@@ -72,62 +398,143 @@ impl<S> Sim<S> {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        match &self.queue {
+            QueueImpl::Typed { calendar, .. } => calendar.len,
+            QueueImpl::Boxed(heap) => heap.len(),
+        }
     }
 
-    /// Schedule `action` to run `delay` seconds from now.
-    pub fn schedule(&mut self, delay: Time, action: impl FnOnce(&mut Sim<S>, &mut S) + 'static) {
+    /// High-water mark of the pending-event count (the benchmark's
+    /// peak-queue-depth metric).
+    pub fn peak_pending(&self) -> usize {
+        self.peak_pending
+    }
+
+    /// Schedule a typed event `delay` seconds from now.
+    pub fn schedule(&mut self, delay: Time, event: W::Event) {
+        self.assert_delay(delay);
+        self.schedule_at(self.now + delay, event);
+    }
+
+    /// Schedule a typed event at an absolute time (>= now, finite — a
+    /// NaN or infinite time would corrupt the queue order).
+    pub fn schedule_at(&mut self, time: Time, event: W::Event) {
+        self.check_time(time);
+        self.push_stored(time, Stored::Event(event));
+    }
+
+    /// Escape hatch (tests only): schedule a boxed closure `delay`
+    /// seconds from now.  Production scheduler clients post typed
+    /// events via [`Sim::schedule`] / [`Sim::schedule_at`].
+    pub fn schedule_closure(
+        &mut self,
+        delay: Time,
+        action: impl FnOnce(&mut Sim<W>, &mut W) + 'static,
+    ) {
+        self.assert_delay(delay);
+        self.schedule_closure_at(self.now + delay, action);
+    }
+
+    /// Escape hatch (tests only): [`Sim::schedule_closure`] at an
+    /// absolute time.
+    pub fn schedule_closure_at(
+        &mut self,
+        time: Time,
+        action: impl FnOnce(&mut Sim<W>, &mut W) + 'static,
+    ) {
+        self.check_time(time);
+        self.push_stored(time, Stored::Closure(Box::new(action)));
+    }
+
+    fn assert_delay(&self, delay: Time) {
         assert!(
             delay.is_finite() && delay >= 0.0,
             "delay must be finite and non-negative, got {delay}"
         );
-        self.schedule_at(self.now + delay, action);
     }
 
-    /// Schedule `action` at an absolute time (>= now, finite — a NaN or
-    /// infinite time would silently corrupt the heap order).
-    pub fn schedule_at(&mut self, time: Time, action: impl FnOnce(&mut Sim<S>, &mut S) + 'static) {
+    fn check_time(&self, time: Time) {
         assert!(time.is_finite(), "event time must be finite, got {time}");
         assert!(
             time >= self.now,
             "cannot schedule into the past: {time} < {}",
             self.now
         );
-        self.queue.push(Scheduled {
-            time,
-            seq: self.seq,
-            action: Box::new(action),
-        });
+    }
+
+    fn push_stored(&mut self, time: Time, stored: Stored<W>) {
+        let seq = self.seq;
         self.seq += 1;
+        match &mut self.queue {
+            QueueImpl::Typed { calendar, arena } => {
+                let slot = arena.insert(stored);
+                calendar.push(Key { time, seq, slot });
+            }
+            QueueImpl::Boxed(heap) => {
+                let action: Action<W> = match stored {
+                    Stored::Closure(action) => action,
+                    Stored::Event(event) => {
+                        Box::new(move |sim: &mut Sim<W>, state: &mut W| {
+                            W::handle(sim, state, event)
+                        })
+                    }
+                };
+                heap.push(BoxedScheduled { time, seq, action });
+            }
+        }
+        self.peak_pending = self.peak_pending.max(self.pending());
+    }
+
+    fn pop_next(&mut self) -> Option<(Time, Stored<W>)> {
+        match &mut self.queue {
+            QueueImpl::Typed { calendar, arena } => {
+                let key = calendar.pop()?;
+                Some((key.time, arena.take(key.slot)))
+            }
+            QueueImpl::Boxed(heap) => {
+                heap.pop().map(|s| (s.time, Stored::Closure(s.action)))
+            }
+        }
+    }
+
+    /// Virtual time of the earliest pending event.
+    fn peek_time(&mut self) -> Option<Time> {
+        match &mut self.queue {
+            QueueImpl::Typed { calendar, .. } => calendar.peek_time(),
+            QueueImpl::Boxed(heap) => heap.peek().map(|s| s.time),
+        }
     }
 
     /// Run until the queue drains; returns final virtual time.
-    pub fn run(&mut self, state: &mut S) -> Time {
+    pub fn run(&mut self, state: &mut W) -> Time {
         while self.step(state) {}
         self.now
     }
 
-    /// Run at most until virtual time `t_end` (events at exactly t_end run).
-    pub fn run_until(&mut self, state: &mut S, t_end: Time) -> Time {
-        while let Some(head) = self.queue.peek() {
-            if head.time > t_end {
+    /// Run at most until virtual time `t_end` (events at exactly t_end
+    /// run).
+    pub fn run_until(&mut self, state: &mut W, t_end: Time) -> Time {
+        while let Some(head) = self.peek_time() {
+            if head > t_end {
                 break;
             }
             self.step(state);
         }
-        self.now = self.now.max(t_end.min(self.now + 0.0));
         self.now
     }
 
     /// Execute the single earliest event.  Returns false when empty.
-    pub fn step(&mut self, state: &mut S) -> bool {
-        match self.queue.pop() {
+    pub fn step(&mut self, state: &mut W) -> bool {
+        match self.pop_next() {
             None => false,
-            Some(ev) => {
-                debug_assert!(ev.time >= self.now);
-                self.now = ev.time;
+            Some((time, stored)) => {
+                debug_assert!(time >= self.now);
+                self.now = time;
                 self.events_run += 1;
-                (ev.action)(self, state);
+                match stored {
+                    Stored::Event(event) => W::handle(self, state, event),
+                    Stored::Closure(action) => action(self, state),
+                }
                 true
             }
         }
@@ -138,85 +545,192 @@ impl<S> Sim<S> {
 mod tests {
     use super::*;
 
+    /// Typed test world: events are plain tags, logged at dispatch.
+    struct Log {
+        fired: Vec<u32>,
+        times: Vec<Time>,
+    }
+
+    impl Log {
+        fn new() -> Self {
+            Self {
+                fired: Vec::new(),
+                times: Vec::new(),
+            }
+        }
+    }
+
+    impl World for Log {
+        type Event = u32;
+        fn handle(sim: &mut Sim<Self>, state: &mut Self, event: u32) {
+            state.fired.push(event);
+            state.times.push(sim.now());
+        }
+    }
+
+    fn both_kinds() -> [EngineKind; 2] {
+        [EngineKind::Typed, EngineKind::BoxedBaseline]
+    }
+
     #[test]
     fn events_run_in_time_order() {
-        let mut sim: Sim<Vec<u32>> = Sim::new();
-        let mut log = Vec::new();
-        sim.schedule(3.0, |_, s: &mut Vec<u32>| s.push(3));
-        sim.schedule(1.0, |_, s| s.push(1));
-        sim.schedule(2.0, |_, s| s.push(2));
-        sim.run(&mut log);
-        assert_eq!(log, vec![1, 2, 3]);
+        for kind in both_kinds() {
+            let mut sim: Sim<Log> = Sim::with_engine(kind);
+            let mut log = Log::new();
+            sim.schedule(3.0, 3);
+            sim.schedule(1.0, 1);
+            sim.schedule(2.0, 2);
+            sim.run(&mut log);
+            assert_eq!(log.fired, vec![1, 2, 3], "{kind:?}");
+        }
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut sim: Sim<Vec<u32>> = Sim::new();
-        let mut log = Vec::new();
-        for i in 0..10 {
-            sim.schedule(1.0, move |_, s: &mut Vec<u32>| s.push(i));
+        for kind in both_kinds() {
+            let mut sim: Sim<Log> = Sim::with_engine(kind);
+            let mut log = Log::new();
+            for i in 0..10 {
+                sim.schedule(1.0, i);
+            }
+            sim.run(&mut log);
+            assert_eq!(log.fired, (0..10).collect::<Vec<_>>(), "{kind:?}");
         }
-        sim.run(&mut log);
-        assert_eq!(log, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
     fn events_can_schedule_events() {
-        let mut sim: Sim<Vec<f64>> = Sim::new();
-        let mut log = Vec::new();
-        sim.schedule(1.0, |sim, _s: &mut Vec<f64>| {
-            sim.schedule(0.5, |sim2, s2: &mut Vec<f64>| s2.push(sim2.now()));
+        // the closure escape hatch still composes with typed dispatch
+        let mut sim: Sim<Log> = Sim::new();
+        let mut log = Log::new();
+        sim.schedule_closure(1.0, |sim, _state| {
+            sim.schedule(0.5, 7);
         });
         let end = sim.run(&mut log);
-        assert_eq!(log, vec![1.5]);
+        assert_eq!(log.fired, vec![7]);
+        assert_eq!(log.times, vec![1.5]);
         assert_eq!(end, 1.5);
     }
 
     #[test]
     fn run_until_stops() {
-        let mut sim: Sim<u32> = Sim::new();
-        let mut count = 0u32;
-        for i in 1..=10 {
-            sim.schedule(i as f64, |_, c: &mut u32| *c += 1);
+        for kind in both_kinds() {
+            let mut sim: Sim<Log> = Sim::with_engine(kind);
+            let mut log = Log::new();
+            for i in 1..=10 {
+                sim.schedule(f64::from(i), i as u32);
+            }
+            sim.run_until(&mut log, 5.0);
+            assert_eq!(log.fired.len(), 5, "{kind:?}");
+            assert_eq!(sim.pending(), 5, "{kind:?}");
+            sim.run(&mut log);
+            assert_eq!(log.fired.len(), 10, "{kind:?}");
         }
-        sim.run_until(&mut count, 5.0);
-        assert_eq!(count, 5);
-        assert_eq!(sim.pending(), 5);
-        sim.run(&mut count);
-        assert_eq!(count, 10);
     }
 
     #[test]
     #[should_panic(expected = "finite")]
     fn scheduling_nan_time_panics() {
-        let mut sim: Sim<()> = Sim::new();
-        sim.schedule_at(f64::NAN, |_, _| {});
+        let mut sim: Sim<Log> = Sim::new();
+        sim.schedule_at(f64::NAN, 0);
     }
 
     #[test]
     #[should_panic(expected = "finite")]
     fn scheduling_infinite_delay_panics() {
-        let mut sim: Sim<()> = Sim::new();
-        sim.schedule(f64::INFINITY, |_, _| {});
+        let mut sim: Sim<Log> = Sim::new();
+        sim.schedule(f64::INFINITY, 0);
     }
 
     #[test]
     #[should_panic(expected = "past")]
     fn scheduling_into_past_panics() {
-        let mut sim: Sim<()> = Sim::new();
-        sim.schedule(1.0, |sim, _| {
-            sim.schedule_at(0.5, |_, _| {});
+        let mut sim: Sim<Log> = Sim::new();
+        sim.schedule_closure(1.0, |sim, _state| {
+            sim.schedule_at(0.5, 0);
         });
-        sim.run(&mut ());
+        sim.run(&mut Log::new());
     }
 
     #[test]
-    fn event_count_tracked() {
-        let mut sim: Sim<()> = Sim::new();
+    fn event_count_and_peak_depth_tracked() {
+        let mut sim: Sim<Log> = Sim::new();
         for _ in 0..100 {
-            sim.schedule(1.0, |_, _| {});
+            sim.schedule(1.0, 0);
         }
-        sim.run(&mut ());
+        sim.run(&mut Log::new());
         assert_eq!(sim.events_run(), 100);
+        assert_eq!(sim.peak_pending(), 100);
+        assert_eq!(sim.pending(), 0);
+    }
+
+    #[test]
+    fn far_future_events_cross_the_overflow_heap() {
+        // spread times far past the initial wheel horizon so pushes land
+        // in the overflow and pops exercise the rebase path
+        let mut sim: Sim<Log> = Sim::new();
+        let mut log = Log::new();
+        for i in (0..200).rev() {
+            sim.schedule_at(f64::from(i) * 10.0, i as u32);
+        }
+        sim.run(&mut log);
+        assert_eq!(log.fired, (0..200).collect::<Vec<_>>());
+        assert_eq!(log.times.last().copied(), Some(1990.0));
+    }
+
+    #[test]
+    fn typed_and_boxed_execute_identically_under_stress() {
+        // a deterministic pseudo-random cascade: every event schedules
+        // up to two children at quasi-random offsets; both
+        // representations must fire the same tags at the same times in
+        // the same order
+        struct Cascade {
+            order: Vec<(u64, u32)>,
+            budget: u32,
+        }
+        impl World for Cascade {
+            type Event = u32;
+            fn handle(sim: &mut Sim<Self>, state: &mut Self, event: u32) {
+                state.order.push((sim.now().to_bits(), event));
+                if state.budget == 0 {
+                    return;
+                }
+                state.budget -= 1;
+                // xorshift-style offsets: identical for both engines
+                let mix = (u64::from(event)).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+                let a = (mix >> 33) % 1000;
+                let b = (mix >> 13) % 1000;
+                sim.schedule(a as f64 * 1e-7, event.wrapping_mul(3).wrapping_add(1));
+                if event % 3 != 0 {
+                    sim.schedule(b as f64 * 1e-4, event.wrapping_mul(5).wrapping_add(2));
+                }
+            }
+        }
+        let run = |kind: EngineKind| {
+            let mut sim: Sim<Cascade> = Sim::with_engine(kind);
+            let mut world = Cascade {
+                order: Vec::new(),
+                budget: 20_000,
+            };
+            for i in 0..64 {
+                sim.schedule(f64::from(i % 7) * 1e-5, i);
+            }
+            sim.run(&mut world);
+            world.order
+        };
+        assert_eq!(run(EngineKind::Typed), run(EngineKind::BoxedBaseline));
+    }
+
+    #[test]
+    fn simultaneous_ties_at_the_refill_boundary_stay_ordered() {
+        // many events at exactly the same far-future instant: the wheel
+        // rebases with a zero span and must still drain in seq order
+        let mut sim: Sim<Log> = Sim::new();
+        let mut log = Log::new();
+        for i in 0..100 {
+            sim.schedule_at(5.0, i);
+        }
+        sim.run(&mut log);
+        assert_eq!(log.fired, (0..100).collect::<Vec<_>>());
     }
 }

@@ -3,9 +3,11 @@
 //! Replaces the paper's physical testbed (6 Xeon nodes + Arria-10 NICs +
 //! a Dell S6100 switch) with a deterministic simulator.  Three layers:
 //!
-//! * [`engine`] — the calendar-queue DES every simulation in the crate now
-//!   runs on: closures scheduled at virtual times with a total event
-//!   order (finite times enforced, ties broken by insertion sequence);
+//! * [`engine`] — the typed-event DES every simulation in the crate runs
+//!   on: compact events in an index arena, ordered by a hierarchical
+//!   calendar queue with a total event order (finite times enforced,
+//!   ties broken by insertion sequence), dispatched by each world's
+//!   match loop;
 //! * [`link`] — FIFO *servers* (links, PCIe, adders) with busy-until
 //!   semantics.  Events call `serve`/`transmit`/`reserve` at their fire
 //!   times, so anything sharing a server — concurrent all-reduces, other

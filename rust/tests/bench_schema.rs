@@ -1,10 +1,17 @@
 // Golden-schema tests for the CI benchmark artifacts
 // (`BENCH_scaling.json` from `smartnic scale`, `BENCH_planner.json` from
-// `smartnic plan`): the exact key structure is pinned here and every
-// document must survive a parse round-trip, so the artifact shape cannot
-// drift without a test failure.
+// `smartnic plan`, `BENCH_engine.json` from `smartnic engine-bench`):
+// the exact key structure is pinned here and every document must survive
+// a parse round-trip, so the artifact shape cannot drift without a test
+// failure.
+//
+// The schemas themselves (field meanings, units, pass/fail gates) are
+// documented in `docs/BENCHMARKS.md`; every key path asserted below must
+// appear there, and every schema change must update BOTH this file and
+// that document — the cross-reference is deliberate so docs and tests
+// cannot drift silently.
 
-use ai_smartnic::experiments::{planner, scaling};
+use ai_smartnic::experiments::{engine_bench, planner, scaling};
 use ai_smartnic::util::json::Json;
 
 /// Assert that every `/`-separated key path resolves in `doc`; a leading
@@ -111,4 +118,59 @@ fn bench_planner_schema_is_pinned() {
     assert!(
         j.get("gates").unwrap().get("worst_inswitch_err").unwrap().as_f64().unwrap() >= 0.0
     );
+}
+
+#[test]
+fn bench_engine_schema_is_pinned() {
+    let cfg = engine_bench::EngineBenchConfig {
+        nodes: vec![8],
+        baseline_nodes: vec![8],
+        oversubscription: 4.0,
+        hidden: 128,
+    };
+    let points = engine_bench::run(&cfg);
+    assert_eq!(points.len(), engine_bench::ALGOS.len(), "one point per plan family");
+    let j = engine_bench::to_json(&cfg, &points);
+    let mut paths = vec![
+        "config/hidden".to_string(),
+        "config/oversubscription".to_string(),
+        "config/speedup_gate".to_string(),
+        "config/gate_nodes".to_string(),
+        "config/virtual_time_tol".to_string(),
+        "gates/ring_gate_speedup".to_string(),
+        "gates/speedup_pass".to_string(),
+        "gates/worst_virtual_err".to_string(),
+        "gates/max_nodes_completed".to_string(),
+    ];
+    for i in 0..points.len() {
+        for key in [
+            "nodes",
+            "algo",
+            "virtual_s",
+            "events",
+            "peak_queue_depth",
+            "wall_s",
+            "events_per_sec",
+            "baseline",
+        ] {
+            paths.push(format!("points/{i}/{key}"));
+        }
+        // this tiny sweep baselines every point, so the baseline object
+        // must be populated, not Null
+        for key in ["wall_s", "events_per_sec", "speedup", "virtual_err"] {
+            paths.push(format!("points/{i}/baseline/{key}"));
+        }
+    }
+    let path_refs: Vec<&str> = paths.iter().map(String::as_str).collect();
+    assert_paths(&j, &path_refs);
+    let parsed = Json::parse(&j.to_string_pretty()).expect("BENCH_engine must parse");
+    assert_eq!(parsed, j);
+    // the gate fields carry the types the CI gate reads: an 8-node sweep
+    // has no 512-node ring point, so the speedup gate must be Null (not
+    // a vacuous PASS), while parity and completion stay populated
+    let gates = j.get("gates").unwrap();
+    assert_eq!(gates.get("ring_gate_speedup"), Some(&Json::Null));
+    assert_eq!(gates.get("speedup_pass"), Some(&Json::Null));
+    assert!(gates.get("worst_virtual_err").unwrap().as_f64().unwrap() <= 1e-9);
+    assert_eq!(gates.get("max_nodes_completed").unwrap().as_usize(), Some(8));
 }

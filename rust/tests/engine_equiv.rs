@@ -1,0 +1,249 @@
+// Cross-engine equivalence suite: the typed-event calendar engine
+// (`EngineKind::Typed`) must reproduce the boxed-closure baseline
+// (`EngineKind::BoxedBaseline` — the PR-3 representation) bit-for-bit.
+// Both backends execute the identical `(time, seq)` event order, so
+// every virtual-time result must agree within 1e-9 (the observed
+// deviation is exactly zero) for every plan family at N in {6, 32, 128},
+// under concurrency, ties, multi-tenancy and fault injection — and the
+// engine-behavior contracts (determinism under ties, schedule-into-past
+// panics) must survive the representation change.
+
+use ai_smartnic::analytic::model::SystemKind;
+use ai_smartnic::cluster::{
+    run_scenario_on, ClusterSpec, CollectiveAlgo, EngineKind, JobSpec, ScenarioOutput, Topology,
+};
+use ai_smartnic::collective::Scheme;
+use ai_smartnic::coordinator::simulate_iteration_unified_on;
+use ai_smartnic::experiments::planner::{leaf_shape, planner_system};
+use ai_smartnic::netsim::engine::{Sim, World};
+use ai_smartnic::sysconfig::{ClusterFaults, SystemParams, Workload};
+use ai_smartnic::util::stats::rel_err;
+
+/// Node counts every plan family is pinned at.
+const PINNED: [usize; 3] = [6, 32, 128];
+/// Virtual-time agreement required between the two representations.
+const TOL: f64 = 1e-9;
+
+/// Small-but-nontrivial gradient width per node count (keeps the debug
+/// build fast while still pipelining multiple ring steps per rank).
+fn hidden_for(n: usize) -> usize {
+    if n >= 128 {
+        256
+    } else {
+        512
+    }
+}
+
+fn run_both(spec: &ClusterSpec) -> (ScenarioOutput, ScenarioOutput) {
+    (
+        run_scenario_on(spec, EngineKind::Typed),
+        run_scenario_on(spec, EngineKind::BoxedBaseline),
+    )
+}
+
+fn assert_equiv(spec: &ClusterSpec, label: &str) {
+    let (typed, boxed) = run_both(spec);
+    assert_eq!(typed.events, boxed.events, "{label}: event counts diverged");
+    assert_eq!(typed.jobs.len(), boxed.jobs.len(), "{label}");
+    for (t, b) in typed.jobs.iter().zip(&boxed.jobs) {
+        assert_eq!(t.ar_count, b.ar_count, "{label}/{}", t.name);
+        assert!(
+            rel_err(b.duration, t.duration) <= TOL,
+            "{label}/{}: typed {} vs boxed {}",
+            t.name,
+            t.duration,
+            b.duration
+        );
+        assert!(
+            rel_err(b.mean_ar, t.mean_ar) <= TOL,
+            "{label}/{}: mean AR typed {} vs boxed {}",
+            t.name,
+            t.mean_ar,
+            b.mean_ar
+        );
+    }
+    assert!(
+        rel_err(boxed.makespan, typed.makespan) <= TOL,
+        "{label}: makespan typed {} vs boxed {}",
+        typed.makespan,
+        boxed.makespan
+    );
+}
+
+/// One single-job spec on the planner study's provisioned leaf–spine
+/// fabric (the shape every plan family can run on).
+fn family_spec(n: usize, algo: CollectiveAlgo) -> ClusterSpec {
+    let (leaves, m) = leaf_shape(n);
+    let sys = planner_system(leaves, m);
+    let topo = Topology::leaf_spine(leaves, m, 4.0);
+    let w = Workload {
+        layers: 2,
+        hidden: hidden_for(n),
+        batch_per_node: 64,
+    };
+    ClusterSpec::new(sys, n).with_topology(topo).with_job(
+        JobSpec::new("j0", SystemKind::SmartNic { bfp: false }, w, topo.contiguous_ranks(n))
+            .with_layer_algos(vec![algo; 2]),
+    )
+}
+
+#[test]
+fn ring_matches_boxed_engine_at_pinned_sizes() {
+    for n in PINNED {
+        assert_equiv(&family_spec(n, CollectiveAlgo::NicRing), &format!("ring/n={n}"));
+    }
+}
+
+#[test]
+fn binomial_matches_boxed_engine_at_pinned_sizes() {
+    for n in PINNED {
+        assert_equiv(&family_spec(n, CollectiveAlgo::NicBinomial), &format!("binomial/n={n}"));
+    }
+}
+
+#[test]
+fn rabenseifner_matches_boxed_engine_at_pinned_sizes() {
+    for n in PINNED {
+        assert_equiv(
+            &family_spec(n, CollectiveAlgo::NicRabenseifner),
+            &format!("rabenseifner/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn hierarchical_matches_boxed_engine_at_pinned_sizes() {
+    for n in PINNED {
+        assert_equiv(
+            &family_spec(n, CollectiveAlgo::NicHierarchical),
+            &format!("hierarchical/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn inswitch_matches_boxed_engine_at_pinned_sizes() {
+    for n in PINNED {
+        assert_equiv(&family_spec(n, CollectiveAlgo::SwitchReduce), &format!("in-switch/n={n}"));
+    }
+}
+
+#[test]
+fn e6_operating_points_identical_across_engines() {
+    // the acceptance bar: at the paper's E6 operating points the typed
+    // engine must land on the previous engine's virtual time within 1e-9
+    let sys = SystemParams::smartnic_40g();
+    for batch in [448, 1792] {
+        let w = Workload::paper_mlp(batch);
+        for bfp in [false, true] {
+            let kind = SystemKind::SmartNic { bfp };
+            let faults = ClusterFaults::none();
+            let typed =
+                simulate_iteration_unified_on(kind, &sys, &w, 6, &faults, EngineKind::Typed);
+            let boxed = simulate_iteration_unified_on(
+                kind,
+                &sys,
+                &w,
+                6,
+                &faults,
+                EngineKind::BoxedBaseline,
+            );
+            let err = rel_err(boxed.breakdown.t_total, typed.breakdown.t_total);
+            assert!(
+                err <= TOL,
+                "B={batch} bfp={bfp}: typed {} vs boxed {} ({err:.2e})",
+                typed.breakdown.t_total,
+                boxed.breakdown.t_total
+            );
+            assert!(rel_err(boxed.t_ar_layer, typed.t_ar_layer) <= TOL);
+        }
+    }
+}
+
+#[test]
+fn multi_tenant_faulty_scenario_identical_across_engines() {
+    // two jobs sharing nodes (NIC ring + host MPI) under straggler and
+    // degraded-link injection: heavy tie traffic on shared servers
+    let sys = SystemParams::smartnic_40g();
+    let w = Workload {
+        layers: 3,
+        hidden: 256,
+        batch_per_node: 32,
+    };
+    let spec = ClusterSpec::new(sys, 8)
+        .with_faults(ClusterFaults::none().with_straggler(2, 0.5).with_degraded_link(5, 0.25))
+        .with_job(JobSpec::new(
+            "nic",
+            SystemKind::SmartNic { bfp: true },
+            w,
+            (0..8).collect(),
+        ))
+        .with_job(
+            JobSpec::new(
+                "host",
+                SystemKind::BaselineOverlapped { scheme: Scheme::Ring, comm_cores: 2 },
+                w,
+                vec![1, 3, 5, 7],
+            )
+            .starting_at(2e-4),
+        );
+    assert_equiv(&spec, "multi-tenant");
+}
+
+#[test]
+fn typed_engine_is_deterministic_under_ties() {
+    // identical specs must produce identical traces run-to-run, and a
+    // burst of same-instant events must drain in insertion order
+    let spec = family_spec(32, CollectiveAlgo::NicRing);
+    let a = run_scenario_on(&spec, EngineKind::Typed);
+    let b = run_scenario_on(&spec, EngineKind::Typed);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "nondeterministic makespan");
+    assert_eq!(
+        a.jobs[0].duration.to_bits(),
+        b.jobs[0].duration.to_bits(),
+        "nondeterministic job duration"
+    );
+}
+
+/// Minimal world for the engine-contract tests below.
+struct TieLog {
+    fired: Vec<u32>,
+}
+
+impl World for TieLog {
+    type Event = u32;
+    fn handle(_sim: &mut Sim<Self>, state: &mut Self, event: u32) {
+        state.fired.push(event);
+    }
+}
+
+#[test]
+fn simultaneous_events_fire_in_insertion_order_on_both_engines() {
+    for kind in [EngineKind::Typed, EngineKind::BoxedBaseline] {
+        let mut sim: Sim<TieLog> = Sim::with_engine(kind);
+        let mut log = TieLog { fired: Vec::new() };
+        for i in 0..1000 {
+            sim.schedule_at(1e-3, i);
+        }
+        sim.run(&mut log);
+        assert_eq!(log.fired, (0..1000).collect::<Vec<_>>(), "{kind:?}");
+    }
+}
+
+#[test]
+#[should_panic(expected = "past")]
+fn scheduling_into_the_past_still_panics() {
+    let mut sim: Sim<TieLog> = Sim::new();
+    sim.schedule_closure(1.0, |sim, _state| {
+        sim.schedule_at(0.25, 9);
+    });
+    sim.run(&mut TieLog { fired: Vec::new() });
+}
+
+#[test]
+#[should_panic(expected = "finite")]
+fn scheduling_non_finite_times_still_panics() {
+    let mut sim: Sim<TieLog> = Sim::new();
+    sim.schedule_at(f64::INFINITY, 0);
+}
