@@ -31,10 +31,12 @@
 use super::planner::{self, PlanKind};
 use super::{job, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, Event, JobId, NodeId};
 use crate::collective::timing::{scheme_rounds, HostRoundPlan};
+use crate::netsim::fabric::HopOutcome;
 use crate::netsim::topology::Ring;
 use crate::netsim::Time;
 use crate::nic::SegmentPlan;
 use crate::sysconfig::SystemParams;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// One point-to-point transfer inside a NIC round (local rank indices).
 #[derive(Clone, Copy, Debug)]
@@ -123,9 +125,36 @@ struct RingState {
     plan: SegmentPlan,
     /// wire bytes per segment (after compression)
     wire_seg: f64,
-    /// [local rank][chunk][segment] -> time available in the input FIFO
-    fetch_done: Vec<Vec<Vec<Time>>>,
-    pending_writebacks: usize,
+    /// closed-form DMA-queue cursor, one entry per local rank: first
+    /// fetch starts at `fetch_base` and each segment drains in
+    /// `fetch_step` seconds (see [`RingState::fetch_time`]).  Replaces
+    /// the old `[rank][chunk][segment]` table, whose O(n²·segs) memory
+    /// made 16k+-node rings unbuildable.
+    fetch_base: Vec<Time>,
+    fetch_step: Vec<f64>,
+    /// PCIe to-device latency added to every fetch completion
+    fetch_latency: Time,
+    /// final-copy writebacks outstanding; atomic so partition workers
+    /// may decrement concurrently on a parallel run
+    pending_writebacks: AtomicUsize,
+    /// bit pattern of the latest writeback completion time (`f64`
+    /// to-bits order is monotone for non-negative floats, so an atomic
+    /// max over bits is a max over times)
+    last_writeback: AtomicU64,
+}
+
+impl RingState {
+    /// When segment `seg` of `chunk` lands in local rank `j`'s input
+    /// FIFO.  Rank `j` DMA-fetches its chunks in ring-consumption order
+    /// `[j, j-1, ..., j-(n-1)] (mod n)` — its own step-0 send chunk
+    /// first, then each received chunk — one segment every `fetch_step`
+    /// seconds behind a single FIFO DMA queue, so the whole table is
+    /// this closed form.
+    fn fetch_time(&self, n: usize, j: usize, chunk: usize, seg: usize) -> Time {
+        let pos = (j + n - chunk) % n;
+        let queued = (pos * self.plan.segs_per_chunk + seg + 1) as f64;
+        self.fetch_base[j] + queued * self.fetch_step[j] + self.fetch_latency
+    }
 }
 
 /// Progress of a planned (phase-list) collective.
@@ -246,8 +275,11 @@ fn ring_state(sys: &SystemParams, n: usize, elems: usize, wire_ratio: f64) -> (A
         AlgoState::Ring(RingState {
             plan,
             wire_seg,
-            fetch_done: vec![vec![vec![0.0; segs]; n]; n],
-            pending_writebacks: n * n * segs,
+            fetch_base: Vec::new(),
+            fetch_step: Vec::new(),
+            fetch_latency: 0.0,
+            pending_writebacks: AtomicUsize::new(n * n * segs),
+            last_writeback: AtomicU64::new(0),
         }),
         ring.allreduce_steps() as f64 * segs as f64 * wire_seg,
     )
@@ -431,30 +463,38 @@ fn start_ring(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     let ring = Ring::new(n);
     let segs = plan.segs_per_chunk;
 
-    // Issue every PCIe fetch now, in the order the schedule consumes
+    // Queue every PCIe fetch now, in the order the schedule consumes
     // chunks (chunk sent at step 0 first, then received chunks' local
-    // counterparts) — the same DMA queue order as the serialized path.
-    let mut fetch = vec![vec![vec![0.0f64; segs]; n]; n];
-    for (local, &node) in ranks.iter().enumerate() {
-        let mut order = vec![ring.send_chunk(local, 0)];
-        for s in 0..ring.reduce_scatter_steps() {
-            order.push(ring.recv_chunk(local, s));
-        }
-        order.dedup();
-        for chunk in order {
-            for seg in 0..segs {
-                fetch[local][chunk][seg] =
-                    st.fabric.nodes[node].pcie.to_device.transmit(now, plan.seg_bytes);
-            }
-        }
+    // counterparts) — the same DMA queue order as the serialized path,
+    // reserved in bulk so one uniform-segment closed form replaces the
+    // per-segment table.
+    {
+        let r = st.collectives[cid].ring_mut();
+        r.fetch_base = Vec::with_capacity(n);
+        r.fetch_step = Vec::with_capacity(n);
+    }
+    for &node in &ranks {
+        let dev = &mut st.fabric.nodes[node].pcie.to_device;
+        let base = now.max(dev.server.busy_until());
+        let _ = dev.server.serve(now, (n * segs) as f64 * plan.seg_bytes);
+        let step = plan.seg_bytes / dev.server.rate;
+        let latency = dev.latency;
+        let r = st.collectives[cid].ring_mut();
+        r.fetch_base.push(base);
+        r.fetch_step.push(step);
+        r.fetch_latency = latency;
     }
 
-    // Step-0 sends fire as each segment of the first chunk lands in the
+    // Step-0 sends fire as each segment of the first chunk — rank
+    // `local`'s own chunk, position 0 in its fetch order — lands in the
     // input FIFO.
-    for local in 0..n {
+    for (local, &node) in ranks.iter().enumerate() {
         let chunk0 = ring.send_chunk(local, 0);
         for seg in 0..segs {
-            let t = fetch[local][chunk0][seg];
+            let t = match &st.collectives[cid].state {
+                AlgoState::Ring(r) => r.fetch_time(n, local, chunk0, seg),
+                _ => unreachable!(),
+            };
             sim.schedule_at(
                 t,
                 Event::RingSend {
@@ -462,11 +502,11 @@ fn start_ring(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
                     step: 0,
                     rank: local as u32,
                     seg: seg as u32,
+                    node: node as u32,
                 },
             );
         }
     }
-    st.collectives[cid].ring_mut().fetch_done = fetch;
 }
 
 /// Local rank `i`'s copy of segment `seg` for ring step `step` is ready in
@@ -490,7 +530,54 @@ pub(super) fn ring_send(
         };
         (c.ranks[i], c.ranks[j], j, r.wire_seg)
     };
-    let arrive = st.fabric.hop(src, dst, now, wire_seg);
+    // The sender's half of the hop only: an intra-leaf segment delivers
+    // directly, a cross-leaf one surfaces at the spine and the receiving
+    // leaf times the downlink half when `RingXArrive` fires there.
+    match st.fabric.hop_split(src, dst, now, wire_seg) {
+        HopOutcome::Delivered(arrive) => sim.schedule_at(
+            arrive,
+            Event::RingRecv {
+                cid: cid as u32,
+                step: step as u32,
+                rank: j as u32,
+                seg: seg as u32,
+                node: dst as u32,
+            },
+        ),
+        HopOutcome::AtSpine(at_spine) => sim.schedule_at(
+            at_spine,
+            Event::RingXArrive {
+                cid: cid as u32,
+                step: step as u32,
+                rank: j as u32,
+                seg: seg as u32,
+                node: dst as u32,
+            },
+        ),
+    }
+}
+
+/// [`Event::RingXArrive`]: a cross-leaf segment for local rank `j` (on
+/// `node`) reached the spine — reserve the receiving leaf's downlink
+/// bundle and cut through to the destination port.
+pub(super) fn ring_xarrive(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    step: usize,
+    j: usize,
+    seg: usize,
+    node: NodeId,
+) {
+    let now = sim.now();
+    let wire_seg = {
+        let c = &st.collectives[cid];
+        match &c.state {
+            AlgoState::Ring(r) => r.wire_seg,
+            _ => unreachable!(),
+        }
+    };
+    let arrive = st.fabric.hop_deliver(node, now, wire_seg);
     sim.schedule_at(
         arrive,
         Event::RingRecv {
@@ -498,6 +585,7 @@ pub(super) fn ring_send(
             step: step as u32,
             rank: j as u32,
             seg: seg as u32,
+            node: node as u32,
         },
     );
 }
@@ -512,20 +600,21 @@ pub(super) fn ring_recv(
     seg: usize,
 ) {
     let now = sim.now();
-    let (reduce_phase, local_ready) = {
+    let (reduce_phase, local_ready, node) = {
         let c = &st.collectives[cid];
-        let ring = Ring::new(c.ranks.len());
+        let n = c.ranks.len();
+        let ring = Ring::new(n);
         let reduce_phase = step < ring.reduce_scatter_steps();
         let local_ready = if reduce_phase {
             let r = match &c.state {
                 AlgoState::Ring(r) => r,
                 _ => unreachable!(),
             };
-            r.fetch_done[j][ring.recv_chunk(j, step)][seg]
+            r.fetch_time(n, j, ring.recv_chunk(j, step), seg)
         } else {
             0.0
         };
-        (reduce_phase, local_ready)
+        (reduce_phase, local_ready, c.ranks[j])
     };
     if reduce_phase {
         // join with the local fetched copy, then reduce on the adder
@@ -537,6 +626,7 @@ pub(super) fn ring_recv(
                     step: step as u32,
                     rank: j as u32,
                     seg: seg as u32,
+                    node: node as u32,
                 },
             );
         } else {
@@ -575,6 +665,7 @@ pub(super) fn ring_reduce(
             step: step as u32,
             rank: j as u32,
             seg: seg as u32,
+            node: node as u32,
         },
     );
 }
@@ -607,18 +698,29 @@ pub(super) fn ring_segment_final(
     };
     if step >= rs_steps - 1 {
         let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, seg_bytes);
-        sim.schedule_at(wb, Event::RingWritebackDone { cid: cid as u32 });
+        sim.schedule_at(wb, Event::RingWritebackDone { cid: cid as u32, node: node as u32 });
     }
     if step + 1 < total_steps {
         ring_send(sim, st, cid, step + 1, j, seg);
     }
 }
 
+/// [`Event::RingWritebackDone`]: count one final-copy writeback.  The
+/// counters are atomic so every leaf partition's writebacks fold in
+/// concurrently on a parallel run; the rank that retires the last one
+/// observes the true maximum completion time (the `AcqRel` decrement's
+/// release sequence orders all earlier `fetch_max` calls before the
+/// final load) and posts the global completion event at it.
 pub(super) fn ring_writeback_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
-    let r = st.collectives[cid].ring_mut();
-    r.pending_writebacks -= 1;
-    if r.pending_writebacks == 0 {
-        complete(sim, st, cid);
+    let now = sim.now();
+    let r = match &st.collectives[cid].state {
+        AlgoState::Ring(r) => r,
+        _ => unreachable!("collective {cid} is not a ring"),
+    };
+    r.last_writeback.fetch_max(now.to_bits(), Ordering::AcqRel);
+    if r.pending_writebacks.fetch_sub(1, Ordering::AcqRel) == 1 {
+        let t_done = f64::from_bits(r.last_writeback.load(Ordering::Acquire));
+        sim.schedule_at(t_done, Event::CollectiveComplete { cid: cid as u32 });
     }
 }
 
@@ -764,7 +866,9 @@ pub(super) fn planned_op_arrive(
         let done = st.fabric.nodes[dst].adder.serve(sim.now(), reduce_elems);
         sim.schedule_at(done, Event::PlannedOpDone { cid: cid as u32 });
     } else {
-        planned_op_done(sim, st, cid);
+        // always via the event queue: the arrival runs on `dst`'s leaf
+        // partition, the round barrier on the coordinator
+        sim.schedule_at(sim.now(), Event::PlannedOpDone { cid: cid as u32 });
     }
 }
 

@@ -33,15 +33,19 @@ pub mod planner;
 pub mod scenario;
 
 use crate::collective::Scheme;
-use crate::netsim::engine::{Sim, World};
+use crate::netsim::engine::{PartitionedWorld, Sim, World, GLOBAL_PARTITION};
 use crate::netsim::fabric::Fabric;
+use crate::netsim::Time;
 use crate::sysconfig::SystemParams;
 use crate::trace::Trace;
 
-pub use crate::netsim::engine::EngineKind;
+pub use crate::netsim::engine::{EngineKind, PartitionStats};
 pub use crate::netsim::topology::Topology;
 pub use job::{JobSpec, WorkerTask};
-pub use scenario::{run_scenario, run_scenario_on, ClusterSpec, JobResult, ScenarioOutput};
+pub use scenario::{
+    run_scenario, run_scenario_capped, run_scenario_on, CappedRun, ClusterSpec, JobResult,
+    ScenarioOutput,
+};
 
 /// Physical node index into the fabric.
 pub type NodeId = usize;
@@ -115,6 +119,11 @@ pub type ClusterSim = Sim<ClusterState>;
 /// `Copy` value: the engine's arena stores it inline, with no per-event
 /// allocation and no closure captures.
 ///
+/// Every node-local variant (the ring pipeline stages and the planned
+/// round arrivals) carries the *global* node id it executes on, so the
+/// parallel engine's stateless [`PartitionedWorld::route`] can assign it
+/// to the owning leaf partition from the event value alone.
+///
 /// [`cluster::job`]: crate::cluster::job
 /// [`cluster::collective`]: crate::cluster::collective
 #[derive(Clone, Copy, Debug)]
@@ -126,18 +135,24 @@ pub enum Event {
     CollectiveStart { cid: u32 },
     /// mark `cid` complete at the event time (host latency-only tail)
     CollectiveComplete { cid: u32 },
-    /// ring: `rank`'s copy of `seg` is ready for `step` — serialize it
-    /// to the successor
-    RingSend { cid: u32, step: u32, rank: u32, seg: u32 },
-    /// ring: `seg` of `step` arrived at `rank`
-    RingRecv { cid: u32, step: u32, rank: u32, seg: u32 },
-    /// ring: both reduce inputs present at `rank` — occupy the FP32 adder
-    RingReduce { cid: u32, step: u32, rank: u32, seg: u32 },
+    /// ring: `rank`'s copy of `seg` (on `node`) is ready for `step` —
+    /// serialize it to the successor
+    RingSend { cid: u32, step: u32, rank: u32, seg: u32, node: u32 },
+    /// ring: `seg` of `step` arrived at `rank` (on `node`)
+    RingRecv { cid: u32, step: u32, rank: u32, seg: u32, node: u32 },
+    /// ring: both reduce inputs present at `rank` — occupy `node`'s FP32
+    /// adder
+    RingReduce { cid: u32, step: u32, rank: u32, seg: u32, node: u32 },
     /// ring: `rank`'s copy of `seg` is final for `step` (reduce or
     /// store-and-forward done)
-    RingFinal { cid: u32, step: u32, rank: u32, seg: u32 },
-    /// ring: one final-copy PCIe writeback finished
-    RingWritebackDone { cid: u32 },
+    RingFinal { cid: u32, step: u32, rank: u32, seg: u32, node: u32 },
+    /// ring: a cross-leaf segment for `rank` (on `node`) reached the
+    /// spine — the destination leaf times the downlink half of the hop
+    /// (this is the spine crossing the parallel engine ships between
+    /// partitions)
+    RingXArrive { cid: u32, step: u32, rank: u32, seg: u32, node: u32 },
+    /// ring: one final-copy PCIe writeback finished on `node`
+    RingWritebackDone { cid: u32, node: u32 },
     /// planned: one rank's whole-payload DMA fetch finished
     PlannedFetchDone { cid: u32 },
     /// planned: a round op's payload arrived at node `dst` (the reduce,
@@ -177,19 +192,24 @@ impl World for ClusterState {
             Event::JobWake { job } => job::run_worker(sim, st, ix(job)),
             Event::CollectiveStart { cid } => collective::on_start(sim, st, ix(cid)),
             Event::CollectiveComplete { cid } => collective::on_complete(sim, st, ix(cid)),
-            Event::RingSend { cid, step, rank, seg } => {
+            Event::RingSend { cid, step, rank, seg, .. } => {
                 collective::ring_send(sim, st, ix(cid), ix(step), ix(rank), ix(seg));
             }
-            Event::RingRecv { cid, step, rank, seg } => {
+            Event::RingRecv { cid, step, rank, seg, .. } => {
                 collective::ring_recv(sim, st, ix(cid), ix(step), ix(rank), ix(seg));
             }
-            Event::RingReduce { cid, step, rank, seg } => {
+            Event::RingReduce { cid, step, rank, seg, .. } => {
                 collective::ring_reduce(sim, st, ix(cid), ix(step), ix(rank), ix(seg));
             }
-            Event::RingFinal { cid, step, rank, seg } => {
+            Event::RingFinal { cid, step, rank, seg, .. } => {
                 collective::ring_segment_final(sim, st, ix(cid), ix(step), ix(rank), ix(seg));
             }
-            Event::RingWritebackDone { cid } => collective::ring_writeback_done(sim, st, ix(cid)),
+            Event::RingXArrive { cid, step, rank, seg, node } => {
+                collective::ring_xarrive(sim, st, ix(cid), ix(step), ix(rank), ix(seg), ix(node));
+            }
+            Event::RingWritebackDone { cid, .. } => {
+                collective::ring_writeback_done(sim, st, ix(cid));
+            }
             Event::PlannedFetchDone { cid } => collective::planned_fetch_done(sim, st, ix(cid)),
             Event::PlannedOpArrive { cid, dst, reduce_elems } => {
                 collective::planned_op_arrive(sim, st, ix(cid), ix(dst), reduce_elems);
@@ -216,6 +236,62 @@ impl World for ClusterState {
             }
             Event::HostRoundDone { cid } => collective::host_round_done(sim, st, ix(cid)),
         }
+    }
+}
+
+/// The cluster's partition routing table: one partition per leaf switch
+/// (the whole cluster is one partition on a flat crossbar), captured from
+/// the topology when a parallel run starts.
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionMap {
+    nodes_per_leaf: u32,
+    leaves: u32,
+}
+
+impl PartitionedWorld for ClusterState {
+    type Map = PartitionMap;
+
+    fn partition_map(&self) -> PartitionMap {
+        match self.fabric.topology {
+            Topology::Flat { nodes } => PartitionMap {
+                nodes_per_leaf: (nodes as u32).max(1),
+                leaves: 1,
+            },
+            Topology::LeafSpine { leaves, nodes_per_leaf, .. } => PartitionMap {
+                nodes_per_leaf: nodes_per_leaf as u32,
+                leaves: leaves as u32,
+            },
+        }
+    }
+
+    fn partition_count(map: &PartitionMap) -> usize {
+        map.leaves as usize
+    }
+
+    /// Node-local pipeline stages belong to the leaf owning their node;
+    /// everything else (job control, collective barriers, host rounds,
+    /// the in-switch executor's spine-coupled stages) runs globally on
+    /// the coordinator.
+    fn route(map: &PartitionMap, event: &Event) -> u32 {
+        match event {
+            Event::RingSend { node, .. }
+            | Event::RingRecv { node, .. }
+            | Event::RingReduce { node, .. }
+            | Event::RingFinal { node, .. }
+            | Event::RingXArrive { node, .. }
+            | Event::RingWritebackDone { node, .. } => node / map.nodes_per_leaf,
+            Event::PlannedOpArrive { dst, .. } => dst / map.nodes_per_leaf,
+            _ => GLOBAL_PARTITION,
+        }
+    }
+
+    /// Conservative lookahead: every path from one partition (or the
+    /// coordinator) into another pays at least one switch hop latency
+    /// (spine crossings, planned-round deliveries) or one PCIe latency
+    /// (the ring's step-0 DMA fetches issued at collective start), so the
+    /// minimum of the two bounds how far a partition may safely run ahead.
+    fn lookahead(&self) -> Time {
+        self.sys.net.hop_latency.min(self.sys.nic.pcie_latency)
     }
 }
 

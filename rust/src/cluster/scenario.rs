@@ -13,7 +13,7 @@
 
 use super::job::{JobRuntime, JobSpec};
 use super::{ClusterSim, ClusterState, Event};
-use crate::netsim::engine::{EngineKind, Sim};
+use crate::netsim::engine::{EngineKind, PartitionStats, Sim};
 use crate::netsim::fabric::Fabric;
 use crate::netsim::topology::Topology;
 use crate::netsim::Time;
@@ -93,6 +93,20 @@ pub struct ScenarioOutput {
     pub port_util: Vec<f64>,
     /// high-water mark of the engine's pending-event count
     pub peak_queue_depth: usize,
+    /// per-partition load of a parallel run (entry 0 is the coordinator,
+    /// entries 1.. the leaf partitions); empty on sequential engines.
+    /// Surfaces parallel load imbalance from the CLI without a profiler.
+    pub partitions: Vec<PartitionStats>,
+}
+
+/// What a budget-capped run (see [`run_scenario_capped`]) produces: how
+/// far virtual time advanced, how many events that took, and how the
+/// work spread across partitions.  No per-job results — capped runs stop
+/// mid-flight, so jobs are generally unfinished.
+pub struct CappedRun {
+    pub virtual_s: f64,
+    pub events: u64,
+    pub partitions: Vec<PartitionStats>,
 }
 
 /// Run `spec` to completion on the unified engine.  Fully deterministic:
@@ -101,13 +115,10 @@ pub fn run_scenario(spec: &ClusterSpec) -> ScenarioOutput {
     run_scenario_on(spec, EngineKind::Typed)
 }
 
-/// [`run_scenario`] on an explicit engine backend: the typed calendar
-/// engine in production, or the boxed-closure baseline that `smartnic
-/// engine-bench` and the cross-engine equivalence suite
-/// (`rust/tests/engine_equiv.rs`) measure it against.  Both backends
-/// execute the identical `(time, seq)` event order, so their outputs are
-/// bit-identical.
-pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput {
+/// Validate `spec`, build the shared fabric and seed the job start
+/// events.  Common front half of [`run_scenario_on`] and
+/// [`run_scenario_capped`].
+fn init(spec: &ClusterSpec, engine: EngineKind) -> (ClusterSim, ClusterState) {
     let nodes = spec.nodes();
     assert!(nodes >= 1, "cluster needs at least one node");
     assert!(!spec.jobs.is_empty(), "scenario needs at least one job");
@@ -126,7 +137,7 @@ pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput
         }
     }
 
-    let mut state = ClusterState {
+    let state = ClusterState {
         sys: spec.sys,
         fabric: Fabric::with_topology(&spec.sys, spec.topology, &spec.faults),
         trace: Trace::new(),
@@ -141,7 +152,34 @@ pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput
     for (jid, j) in spec.jobs.iter().enumerate() {
         sim.schedule_at(j.start_at, Event::JobWake { job: jid as u32 });
     }
-    sim.run(&mut state);
+    (sim, state)
+}
+
+/// Drain the calendar on the backend `engine` selects: the parallel
+/// executive fans a leaf-partitioned copy of the queue across worker
+/// threads, every other kind drains sequentially.
+fn drive(sim: &mut ClusterSim, state: &mut ClusterState, engine: EngineKind) {
+    match engine {
+        EngineKind::Parallel { threads } => {
+            sim.run_parallel(state, threads);
+        }
+        _ => {
+            sim.run(state);
+        }
+    }
+}
+
+/// [`run_scenario`] on an explicit engine backend: the typed calendar
+/// engine in production, the leaf-partitioned parallel executive
+/// (`EngineKind::Parallel`), or — under the `testing` feature — the
+/// boxed-closure baseline that `smartnic engine-bench` and the
+/// cross-engine equivalence suite (`rust/tests/engine_equiv.rs`)
+/// measure it against.  All backends execute the same virtual-time
+/// trajectory, so their outputs agree to float precision.
+pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput {
+    let nodes = spec.nodes();
+    let (mut sim, mut state) = init(spec, engine);
+    drive(&mut sim, &mut state, engine);
 
     let makespan = state.trace.makespan();
     let jobs: Vec<JobResult> = state
@@ -181,7 +219,25 @@ pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput
         adder_util: state.fabric.mean_adder_util(makespan),
         port_util,
         peak_queue_depth: sim.peak_pending(),
+        partitions: sim.partition_stats().to_vec(),
         trace: state.trace,
+    }
+}
+
+/// Run `spec` for at most `max_events` events and report how far virtual
+/// time got.  This is the honest way to benchmark node counts (16k–64k)
+/// whose full runs would take 10^10+ events: both engines burn the same
+/// budget and events/sec is comparable, but no job-completion claims are
+/// made.  Panics if `max_events` is 0.
+pub fn run_scenario_capped(spec: &ClusterSpec, engine: EngineKind, max_events: u64) -> CappedRun {
+    assert!(max_events > 0, "capped run needs a positive event budget");
+    let (mut sim, mut state) = init(spec, engine);
+    sim.set_event_budget(Some(max_events));
+    drive(&mut sim, &mut state, engine);
+    CappedRun {
+        virtual_s: sim.now(),
+        events: sim.events_run(),
+        partitions: sim.partition_stats().to_vec(),
     }
 }
 
@@ -309,6 +365,55 @@ mod tests {
             contiguous.jobs[0].duration,
             flat.jobs[0].duration
         );
+    }
+
+    #[test]
+    fn parallel_engine_matches_sequential_on_leaf_spine() {
+        let sys = SystemParams::smartnic_40g();
+        let w = Workload {
+            layers: 2,
+            hidden: 256,
+            batch_per_node: 32,
+        };
+        let topo = Topology::leaf_spine(2, 4, 4.0);
+        let spec = ClusterSpec::new(sys, 8).with_topology(topo).with_job(JobSpec::new(
+            "par",
+            SystemKind::SmartNic { bfp: true },
+            w,
+            topo.contiguous_ranks(8),
+        ));
+        let seq = run_scenario(&spec);
+        let par = run_scenario_on(&spec, EngineKind::Parallel { threads: 2 });
+        assert_eq!(seq.events, par.events);
+        let err = rel_err(seq.makespan, par.makespan);
+        assert!(err < 1e-9, "parallel {} vs sequential {}", par.makespan, seq.makespan);
+        // sequential runs report no partitions; parallel reports the
+        // coordinator plus one entry per leaf, accounting for every event
+        assert!(seq.partitions.is_empty());
+        assert_eq!(par.partitions.len(), 3);
+        let total: u64 = par.partitions.iter().map(|p| p.events).sum();
+        assert_eq!(total, par.events);
+    }
+
+    #[test]
+    fn capped_run_respects_the_event_budget() {
+        let sys = SystemParams::smartnic_40g();
+        let w = Workload {
+            layers: 4,
+            hidden: 512,
+            batch_per_node: 64,
+        };
+        let spec = ClusterSpec::new(sys, 3).with_job(JobSpec::new(
+            "cap",
+            SystemKind::SmartNic { bfp: true },
+            w,
+            vec![0, 1, 2],
+        ));
+        let full = run_scenario(&spec);
+        let capped = run_scenario_capped(&spec, EngineKind::Typed, 20);
+        assert!(capped.events <= full.events);
+        assert!(capped.events >= 20, "budget is a floor for stopping, not a skip");
+        assert!(capped.virtual_s <= full.makespan);
     }
 
     #[test]

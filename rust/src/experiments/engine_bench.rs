@@ -1,5 +1,6 @@
 //! E9 — engine-core benchmark: the typed-event calendar engine against
-//! the boxed-closure baseline it replaced.
+//! the boxed-closure baseline it replaced, and the leaf-partitioned
+//! parallel executive against the sequential typed engine.
 //!
 //! For every node count, one paper-sized all-reduce runs to completion
 //! on the unified engine under the three scale-relevant plan families —
@@ -8,21 +9,31 @@
 //! fabric (racks of 8, contiguous placement).  Every point records
 //! events executed, events/second, peak queue depth and wall-clock; at
 //! the baselined node counts the same scenario is re-run on
-//! [`EngineKind::BoxedBaseline`] (the PR-3 representation: one
-//! `Box<dyn FnOnce>` per event on a `BinaryHeap`) so the speedup is
-//! measured, not estimated.
+//! `EngineKind::BoxedBaseline` (the PR-3 representation: one
+//! `Box<dyn FnOnce>` per event on a `BinaryHeap`, compiled only under
+//! the `testing` feature) so the speedup is measured, not estimated.
+//! NIC-ring points additionally re-run on `EngineKind::Parallel` at
+//! every configured thread count; those runs are uncapped, so the
+//! parallel executive's virtual time is checked against the typed
+//! engine's to [`VIRTUAL_TIME_TOL`].
 //!
-//! `smartnic engine-bench` prints the table and writes
+//! A second, ring-only sweep takes the engine to 16k–64k nodes.  Full
+//! completion there costs 10^10+ events, so every scaling run burns the
+//! same bounded event budget ([`EngineBenchConfig::max_events`]) and
+//! reports throughput over that budget — the honest way to compare
+//! engines at node counts nothing finishes at.  The 4-thread parallel
+//! run must reach [`PARALLEL_SPEEDUP_GATE`]x the single-thread
+//! events/sec on the [`PARALLEL_GATE_NODES`]-node ring.
+//!
+//! `smartnic engine-bench` prints the tables and writes
 //! `BENCH_engine.json` (schema documented in `docs/BENCHMARKS.md`,
 //! pinned by `rust/tests/bench_schema.rs`).  The run fails (nonzero
-//! exit) if the typed engine is not at least [`SPEEDUP_GATE`]x faster
-//! than the baseline on the [`GATE_NODES`]-node NIC ring, or if the two
-//! representations disagree on virtual time by more than
-//! [`VIRTUAL_TIME_TOL`] anywhere.
+//! exit) if any gate with data fails.
 
 use crate::analytic::model::SystemKind;
 use crate::cluster::{
-    run_scenario_on, ClusterSpec, CollectiveAlgo, EngineKind, JobSpec, ScenarioOutput, Topology,
+    run_scenario_capped, run_scenario_on, ClusterSpec, CollectiveAlgo, EngineKind, JobSpec,
+    PartitionStats, ScenarioOutput, Topology,
 };
 use crate::experiments::planner::{leaf_shape, planner_system};
 use crate::sysconfig::Workload;
@@ -47,10 +58,22 @@ pub const SPEEDUP_GATE: f64 = 5.0;
 /// closures).
 pub const GATE_NODES: usize = 512;
 
-/// Both representations must agree on every virtual-time result to this
-/// relative tolerance (they execute the identical event order, so the
-/// observed deviation is exactly zero).
+/// Engine backends must agree on every virtual-time result to this
+/// relative tolerance.  Typed vs boxed execute the identical event
+/// order, so the observed deviation is exactly zero; the parallel
+/// executive reorders only exact ties, so its deviation is float dust.
 pub const VIRTUAL_TIME_TOL: f64 = 1e-9;
+
+/// Events/sec ratio the [`PARALLEL_GATE_THREADS`]-thread parallel run
+/// must reach over the single-thread parallel run on the
+/// [`PARALLEL_GATE_NODES`]-node ring scaling point.
+pub const PARALLEL_SPEEDUP_GATE: f64 = 2.0;
+
+/// Scaling-sweep node count the parallel speedup gate is pinned at.
+pub const PARALLEL_GATE_NODES: usize = 16384;
+
+/// Worker-thread count the parallel speedup gate is pinned at.
+pub const PARALLEL_GATE_THREADS: usize = 4;
 
 /// Sweep parameters.
 #[derive(Clone, Debug)]
@@ -59,6 +82,12 @@ pub struct EngineBenchConfig {
     pub nodes: Vec<usize>,
     /// node counts additionally re-run on the boxed-closure baseline
     pub baseline_nodes: Vec<usize>,
+    /// worker-thread counts for the parallel executive rows
+    pub threads: Vec<usize>,
+    /// ring-only node counts for the event-budget-capped scaling sweep
+    pub scaling_nodes: Vec<usize>,
+    /// event budget every scaling run burns before stopping
+    pub max_events: u64,
     /// leaf uplink oversubscription factor
     pub oversubscription: f64,
     /// gradient width: hidden² elements per all-reduce
@@ -70,10 +99,25 @@ impl Default for EngineBenchConfig {
         Self {
             nodes: vec![128, 512, 2048],
             baseline_nodes: vec![128, 512],
+            threads: vec![1, 2, 4],
+            scaling_nodes: vec![4096, 16384, 65536],
+            max_events: 2_000_000,
             oversubscription: 4.0,
             hidden: 2048,
         }
     }
+}
+
+/// One parallel-executive re-run of a typed sweep point.
+#[derive(Clone, Debug)]
+pub struct ParallelRow {
+    pub threads: usize,
+    pub wall_s: f64,
+    pub events_per_sec: f64,
+    /// relative virtual-time deviation parallel vs typed
+    pub virtual_err: f64,
+    /// events on the busiest leaf partition over the per-leaf mean
+    pub imbalance: Option<f64>,
 }
 
 /// One (node count, plan family) cell of the benchmark.
@@ -98,6 +142,23 @@ pub struct EnginePoint {
     pub speedup: Option<f64>,
     /// relative virtual-time deviation typed vs boxed
     pub virtual_err: Option<f64>,
+    /// parallel-executive re-runs (NIC-ring points only)
+    pub parallel: Vec<ParallelRow>,
+}
+
+/// One row of the event-budget-capped ring scaling sweep.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub nodes: usize,
+    /// parallel worker threads; 0 marks the sequential typed reference
+    pub threads: usize,
+    /// virtual time reached when the event budget ran out
+    pub virtual_s: f64,
+    pub events: u64,
+    pub wall_s: f64,
+    pub events_per_sec: f64,
+    /// events on the busiest leaf partition over the per-leaf mean
+    pub imbalance: Option<f64>,
 }
 
 /// The scenario a point runs: one `hidden`²-element all-reduce on the
@@ -124,7 +185,34 @@ fn timed_run(spec: &ClusterSpec, engine: EngineKind) -> (ScenarioOutput, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
-/// Run the full benchmark.
+/// Busiest leaf partition's event count over the per-leaf mean.  `None`
+/// for sequential runs (no partitions) or degenerate fabrics.
+fn imbalance(parts: &[PartitionStats]) -> Option<f64> {
+    // entry 0 is the coordinator; leaves start at 1
+    let leaves = parts.get(1..)?;
+    let total: u64 = leaves.iter().map(|p| p.events).sum();
+    if leaves.is_empty() || total == 0 {
+        return None;
+    }
+    let mean = total as f64 / leaves.len() as f64;
+    let max = leaves.iter().map(|p| p.events).max().unwrap_or(0) as f64;
+    Some(max / mean)
+}
+
+/// The boxed-closure baseline exists only when the `testing` feature
+/// compiles it; production builds of the bench report no baseline rows
+/// rather than carrying the dead representation.
+#[cfg(any(test, feature = "testing"))]
+fn baseline_run(spec: &ClusterSpec) -> Option<(ScenarioOutput, f64)> {
+    Some(timed_run(spec, EngineKind::BoxedBaseline))
+}
+
+#[cfg(not(any(test, feature = "testing")))]
+fn baseline_run(_spec: &ClusterSpec) -> Option<(ScenarioOutput, f64)> {
+    None
+}
+
+/// Run the full-completion benchmark sweep.
 pub fn run(cfg: &EngineBenchConfig) -> Vec<EnginePoint> {
     let mut out = Vec::new();
     for &n in &cfg.nodes {
@@ -143,19 +231,76 @@ pub fn run(cfg: &EngineBenchConfig) -> Vec<EnginePoint> {
                 baseline_events_per_sec: None,
                 speedup: None,
                 virtual_err: None,
+                parallel: Vec::new(),
             };
             if cfg.baseline_nodes.contains(&n) {
-                let (boxed, boxed_wall) = timed_run(&spec, EngineKind::BoxedBaseline);
-                assert_eq!(
-                    boxed.events, typed.events,
-                    "engines diverged in event count at n={n} {name}"
-                );
-                point.baseline_wall_s = Some(boxed_wall);
-                point.baseline_events_per_sec = Some(boxed.events as f64 / boxed_wall.max(1e-12));
-                point.speedup = Some(boxed_wall / wall.max(1e-12));
-                point.virtual_err = Some(rel_err(boxed.makespan, typed.makespan));
+                if let Some((boxed, boxed_wall)) = baseline_run(&spec) {
+                    assert_eq!(
+                        boxed.events, typed.events,
+                        "engines diverged in event count at n={n} {name}"
+                    );
+                    point.baseline_wall_s = Some(boxed_wall);
+                    point.baseline_events_per_sec =
+                        Some(boxed.events as f64 / boxed_wall.max(1e-12));
+                    point.speedup = Some(boxed_wall / wall.max(1e-12));
+                    point.virtual_err = Some(rel_err(boxed.makespan, typed.makespan));
+                }
+            }
+            if name == "nic-ring" {
+                for &t in &cfg.threads {
+                    let (par, par_wall) = timed_run(&spec, EngineKind::Parallel { threads: t });
+                    assert_eq!(
+                        par.events, typed.events,
+                        "parallel executive diverged in event count at n={n} threads={t}"
+                    );
+                    point.parallel.push(ParallelRow {
+                        threads: t,
+                        wall_s: par_wall,
+                        events_per_sec: par.events as f64 / par_wall.max(1e-12),
+                        virtual_err: rel_err(par.makespan, typed.makespan),
+                        imbalance: imbalance(&par.partitions),
+                    });
+                }
             }
             out.push(point);
+        }
+    }
+    out
+}
+
+/// Run the event-budget-capped ring scaling sweep: per node count one
+/// typed reference plus one parallel run per configured thread count,
+/// each burning [`EngineBenchConfig::max_events`].
+pub fn run_scaling(cfg: &EngineBenchConfig) -> Vec<ScalingPoint> {
+    let mut out = Vec::new();
+    for &n in &cfg.scaling_nodes {
+        let spec = bench_spec(n, CollectiveAlgo::NicRing, cfg);
+        let t0 = Instant::now();
+        let typed = run_scenario_capped(&spec, EngineKind::Typed, cfg.max_events);
+        let wall = t0.elapsed().as_secs_f64();
+        out.push(ScalingPoint {
+            nodes: n,
+            threads: 0,
+            virtual_s: typed.virtual_s,
+            events: typed.events,
+            wall_s: wall,
+            events_per_sec: typed.events as f64 / wall.max(1e-12),
+            imbalance: None,
+        });
+        for &t in &cfg.threads {
+            let t0 = Instant::now();
+            let engine = EngineKind::Parallel { threads: t };
+            let par = run_scenario_capped(&spec, engine, cfg.max_events);
+            let wall = t0.elapsed().as_secs_f64();
+            out.push(ScalingPoint {
+                nodes: n,
+                threads: t,
+                virtual_s: par.virtual_s,
+                events: par.events,
+                wall_s: wall,
+                events_per_sec: par.events as f64 / wall.max(1e-12),
+                imbalance: imbalance(&par.partitions),
+            });
         }
     }
     out
@@ -180,12 +325,44 @@ pub fn worst_virtual_err(points: &[EnginePoint]) -> Option<f64> {
         .fold(None, |acc: Option<f64>, e| Some(acc.map_or(e, |a| a.max(e))))
 }
 
-/// Largest node count the sweep completed.
+/// Worst parallel-vs-typed virtual-time deviation across the uncapped
+/// parallel rows of the full-completion sweep.
+pub fn worst_parallel_virtual_err(points: &[EnginePoint]) -> Option<f64> {
+    points
+        .iter()
+        .flat_map(|p| p.parallel.iter().map(|r| r.virtual_err))
+        .fold(None, |acc: Option<f64>, e| Some(acc.map_or(e, |a| a.max(e))))
+}
+
+/// The parallel scaling gate: events/sec of the
+/// [`PARALLEL_GATE_THREADS`]-thread run over the 1-thread run on the
+/// [`PARALLEL_GATE_NODES`]-node ring scaling point.  `None` when the
+/// sweep holds no such pair — no vacuous PASS.
+pub fn parallel_gate_speedup(scaling: &[ScalingPoint]) -> Option<f64> {
+    let eps = |t: usize| {
+        scaling
+            .iter()
+            .find(|p| p.nodes == PARALLEL_GATE_NODES && p.threads == t)
+            .map(|p| p.events_per_sec)
+    };
+    match (eps(PARALLEL_GATE_THREADS), eps(1)) {
+        (Some(multi), Some(single)) if single > 0.0 => Some(multi / single),
+        _ => None,
+    }
+}
+
+/// Largest node count the full-completion sweep completed.
 pub fn max_nodes_completed(points: &[EnginePoint]) -> usize {
     points.iter().map(|p| p.nodes).max().unwrap_or(0)
 }
 
-pub fn print(points: &[EnginePoint], cfg: &EngineBenchConfig) {
+/// Largest node count the capped scaling sweep produced a measurement
+/// for (every row executed at least one event).
+pub fn scaling_max_nodes(scaling: &[ScalingPoint]) -> usize {
+    scaling.iter().filter(|p| p.events > 0).map(|p| p.nodes).max().unwrap_or(0)
+}
+
+pub fn print(points: &[EnginePoint], scaling: &[ScalingPoint], cfg: &EngineBenchConfig) {
     let mut t = Table::new(&[
         "nodes",
         "algo",
@@ -213,6 +390,48 @@ pub fn print(points: &[EnginePoint], cfg: &EngineBenchConfig) {
         ]);
     }
     t.print();
+    if points.iter().any(|p| !p.parallel.is_empty()) {
+        let mut t = Table::new(&["nodes", "threads", "wall (s)", "Mev/s", "virtual err", "imbal"])
+            .with_title("parallel executive — uncapped NIC-ring re-runs vs typed");
+        for p in points {
+            for r in &p.parallel {
+                t.row(&[
+                    p.nodes.to_string(),
+                    r.threads.to_string(),
+                    fnum(r.wall_s, 3),
+                    fnum(r.events_per_sec / 1e6, 2),
+                    format!("{:.1e}", r.virtual_err),
+                    r.imbalance.map_or("-".to_string(), |i| fnum(i, 2)),
+                ]);
+            }
+        }
+        t.print();
+    }
+    if !scaling.is_empty() {
+        let mut t =
+            Table::new(&["nodes", "engine", "events", "virtual (s)", "wall (s)", "Mev/s", "imbal"])
+                .with_title(&format!(
+                    "ring scaling sweep — {} events per run, typed reference vs parallel",
+                    cfg.max_events
+                ));
+        for p in scaling {
+            let engine = if p.threads == 0 {
+                "typed".to_string()
+            } else {
+                format!("par x{}", p.threads)
+            };
+            t.row(&[
+                p.nodes.to_string(),
+                engine,
+                p.events.to_string(),
+                fnum(p.virtual_s, 6),
+                fnum(p.wall_s, 3),
+                fnum(p.events_per_sec / 1e6, 2),
+                p.imbalance.map_or("-".to_string(), |i| fnum(i, 2)),
+            ]);
+        }
+        t.print();
+    }
     match gate_speedup(points) {
         Some(s) => println!(
             "typed vs boxed on the {GATE_NODES}-node NIC ring: x{:.2} (gate x{SPEEDUP_GATE}) — {}",
@@ -231,12 +450,34 @@ pub fn print(points: &[EnginePoint], cfg: &EngineBenchConfig) {
         ),
         None => println!("virtual-time parity: not validated (no baselined points)"),
     }
+    match worst_parallel_virtual_err(points) {
+        Some(e) => println!(
+            "virtual-time parity parallel vs typed: worst {:.2e} (tol {VIRTUAL_TIME_TOL:.0e}) — {}",
+            e,
+            if e <= VIRTUAL_TIME_TOL { "PASS" } else { "FAIL" }
+        ),
+        None => println!("parallel parity: not validated (no parallel rows)"),
+    }
+    match parallel_gate_speedup(scaling) {
+        Some(s) => println!(
+            "parallel x{PARALLEL_GATE_THREADS} vs x1 on the {PARALLEL_GATE_NODES}-node ring: \
+             x{:.2} (gate x{PARALLEL_SPEEDUP_GATE}) — {}",
+            s,
+            if s >= PARALLEL_SPEEDUP_GATE { "PASS" } else { "FAIL" }
+        ),
+        None => println!(
+            "parallel scaling gate: not validated (no {PARALLEL_GATE_NODES}-node scaling pair)"
+        ),
+    }
     println!("largest completed sweep: {} nodes", max_nodes_completed(points));
+    if !scaling.is_empty() {
+        println!("largest capped scaling point: {} nodes", scaling_max_nodes(scaling));
+    }
 }
 
 /// Serialize the benchmark to the `BENCH_engine.json` schema
 /// (documented in `docs/BENCHMARKS.md`).
-pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint]) -> Json {
+pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint], scaling: &[ScalingPoint]) -> Json {
     Json::obj(vec![
         (
             "config",
@@ -246,6 +487,18 @@ pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint]) -> Json {
                 ("speedup_gate", Json::Num(SPEEDUP_GATE)),
                 ("gate_nodes", Json::Num(GATE_NODES as f64)),
                 ("virtual_time_tol", Json::Num(VIRTUAL_TIME_TOL)),
+                (
+                    "threads",
+                    Json::Arr(cfg.threads.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ),
+                (
+                    "scaling_nodes",
+                    Json::Arr(cfg.scaling_nodes.iter().map(|&n| Json::Num(n as f64)).collect()),
+                ),
+                ("max_events", Json::Num(cfg.max_events as f64)),
+                ("parallel_speedup_gate", Json::Num(PARALLEL_SPEEDUP_GATE)),
+                ("parallel_gate_nodes", Json::Num(PARALLEL_GATE_NODES as f64)),
+                ("parallel_gate_threads", Json::Num(PARALLEL_GATE_THREADS as f64)),
             ]),
         ),
         (
@@ -263,6 +516,20 @@ pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint]) -> Json {
                             ]),
                             _ => Json::Null,
                         };
+                        let parallel = Json::Arr(
+                            p.parallel
+                                .iter()
+                                .map(|r| {
+                                    Json::obj(vec![
+                                        ("threads", Json::Num(r.threads as f64)),
+                                        ("wall_s", Json::Num(r.wall_s)),
+                                        ("events_per_sec", Json::Num(r.events_per_sec)),
+                                        ("virtual_err", Json::Num(r.virtual_err)),
+                                        ("imbalance", r.imbalance.map_or(Json::Null, Json::Num)),
+                                    ])
+                                })
+                                .collect(),
+                        );
                         Json::obj(vec![
                             ("nodes", Json::Num(p.nodes as f64)),
                             ("algo", Json::Str(p.algo.to_string())),
@@ -272,6 +539,26 @@ pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint]) -> Json {
                             ("wall_s", Json::Num(p.wall_s)),
                             ("events_per_sec", Json::Num(p.events_per_sec)),
                             ("baseline", baseline),
+                            ("parallel", parallel),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "scaling",
+            Json::Arr(
+                scaling
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("nodes", Json::Num(p.nodes as f64)),
+                            ("threads", Json::Num(p.threads as f64)),
+                            ("virtual_s", Json::Num(p.virtual_s)),
+                            ("events", Json::Num(p.events as f64)),
+                            ("wall_s", Json::Num(p.wall_s)),
+                            ("events_per_sec", Json::Num(p.events_per_sec)),
+                            ("imbalance", p.imbalance.map_or(Json::Null, Json::Num)),
                         ])
                     })
                     .collect(),
@@ -301,7 +588,29 @@ pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint]) -> Json {
                         None => Json::Null,
                     },
                 ),
+                (
+                    "parallel_worst_virtual_err",
+                    match worst_parallel_virtual_err(points) {
+                        Some(e) => Json::Num(e),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "parallel_scaling_speedup",
+                    match parallel_gate_speedup(scaling) {
+                        Some(s) => Json::Num(s),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "parallel_scaling_pass",
+                    match parallel_gate_speedup(scaling) {
+                        Some(s) => Json::Bool(s >= PARALLEL_SPEEDUP_GATE),
+                        None => Json::Null,
+                    },
+                ),
                 ("max_nodes_completed", Json::Num(max_nodes_completed(points) as f64)),
+                ("scaling_max_nodes_completed", Json::Num(scaling_max_nodes(scaling) as f64)),
             ]),
         ),
     ])
@@ -313,8 +622,9 @@ pub fn write_bench(
     path: &str,
     cfg: &EngineBenchConfig,
     points: &[EnginePoint],
+    scaling: &[ScalingPoint],
 ) -> std::io::Result<()> {
-    std::fs::write(path, to_json(cfg, points).to_string_pretty())
+    std::fs::write(path, to_json(cfg, points, scaling).to_string_pretty())
 }
 
 #[cfg(test)]
@@ -325,6 +635,9 @@ mod tests {
         EngineBenchConfig {
             nodes: vec![8],
             baseline_nodes: vec![8],
+            threads: vec![1, 2],
+            scaling_nodes: vec![],
+            max_events: 5_000,
             oversubscription: 4.0,
             hidden: 128,
         }
@@ -347,6 +660,42 @@ mod tests {
         let points = run(&tiny_cfg());
         let worst = worst_virtual_err(&points).expect("baselined points exist");
         assert!(worst <= VIRTUAL_TIME_TOL, "virtual-time drift {worst}");
+    }
+
+    #[test]
+    fn parallel_rows_cover_the_ring_and_agree_with_typed() {
+        let cfg = tiny_cfg();
+        let points = run(&cfg);
+        for p in &points {
+            if p.algo == "nic-ring" {
+                assert_eq!(p.parallel.len(), cfg.threads.len());
+            } else {
+                assert!(p.parallel.is_empty(), "{}: unexpected parallel rows", p.algo);
+            }
+        }
+        let worst = worst_parallel_virtual_err(&points).expect("parallel rows exist");
+        assert!(worst <= VIRTUAL_TIME_TOL, "parallel virtual-time drift {worst}");
+    }
+
+    #[test]
+    fn capped_scaling_sweep_reports_every_engine() {
+        let cfg = EngineBenchConfig {
+            scaling_nodes: vec![8],
+            max_events: 500,
+            ..tiny_cfg()
+        };
+        let scaling = run_scaling(&cfg);
+        // typed reference + one row per thread count
+        assert_eq!(scaling.len(), 1 + cfg.threads.len());
+        assert_eq!(scaling[0].threads, 0);
+        assert!(scaling[0].events <= cfg.max_events, "typed cap is strict");
+        for p in &scaling {
+            assert!(p.events > 0);
+            assert!(p.virtual_s > 0.0 && p.virtual_s.is_finite());
+        }
+        assert_eq!(scaling_max_nodes(&scaling), 8);
+        // an 8-node sweep cannot claim the 16384-node gate
+        assert!(parallel_gate_speedup(&scaling).is_none());
     }
 
     #[test]

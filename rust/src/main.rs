@@ -16,14 +16,16 @@
 //!   cluster   multi-job scenarios on the unified event engine
 //!   scale     hierarchical scaling sweep (6..512 nodes), BENCH_scaling.json
 //!   plan      topology-aware planner study (NIC vs switch offload), BENCH_planner.json
-//!   engine-bench  typed-event engine vs boxed-closure baseline, BENCH_engine.json
+//!   engine-bench  typed engine vs boxed baseline + parallel scaling, BENCH_engine.json
 //!   bfp       BFP design-space sweep (block size x mantissa bits)
 //!   all       fig2a+fig2b+table1+fig4a+fig4b+validate, write results/
 //! ```
 
 use ai_smartnic::analytic::model::SystemKind;
 use ai_smartnic::bfp::analysis;
-use ai_smartnic::cluster::{run_scenario, ClusterSpec, JobSpec, Topology};
+use ai_smartnic::cluster::{
+    run_scenario, run_scenario_on, ClusterSpec, EngineKind, JobSpec, Topology,
+};
 use ai_smartnic::collective::Scheme;
 use ai_smartnic::coordinator::{
     simulate_iteration, simulate_iteration_unified, ArBackend, Trainer, TrainerConfig,
@@ -362,6 +364,7 @@ fn cmd_cluster(rest: &[String]) -> i32 {
         .opt("leaves", "1", "leaf switches (1 = flat crossbar)")
         .opt("oversub", "1", "leaf uplink oversubscription factor")
         .opt("placement", "contiguous", "rank placement: contiguous | strided")
+        .opt("threads", "0", "parallel-engine worker threads (0 = sequential typed engine)")
         .opt("degrade-link", "", "node:scale — degrade one link (Tx + egress toward it)")
         .opt("straggler", "", "node:scale — slow one node's PCIe + adder + comm cores")
         .opt("trace-out", "", "write chrome trace JSON to this path")
@@ -443,7 +446,13 @@ fn cmd_cluster(rest: &[String]) -> i32 {
                 .starting_at(stagger * j as f64),
         );
     }
-    let out = run_scenario(&spec);
+    let threads = a.get_usize("threads", 0);
+    let engine = if threads == 0 {
+        EngineKind::Typed
+    } else {
+        EngineKind::Parallel { threads }
+    };
+    let out = run_scenario_on(&spec, engine);
 
     let mut t = Table::new(&[
         "job", "duration (ms)", "mean AR (ms)", "max ARs in flight", "exposed wait (ms)",
@@ -467,6 +476,21 @@ fn cmd_cluster(rest: &[String]) -> i32 {
         "fabric: eth util {:.2}, pcie util {:.2}, adder util {:.2}, {} events",
         out.eth_util, out.pcie_util, out.adder_util, out.events
     );
+    if !out.partitions.is_empty() {
+        // parallel runs: entry 0 is the coordinator, the rest the leaf
+        // partitions — the events spread is the load-imbalance signal
+        let mut t = Table::new(&["partition", "events", "peak queue depth"])
+            .with_title(&format!("parallel engine load ({threads} threads)"));
+        for (i, p) in out.partitions.iter().enumerate() {
+            let name = if i == 0 {
+                "coordinator".to_string()
+            } else {
+                format!("leaf {}", i - 1)
+            };
+            t.row(&[name, p.events.to_string(), p.peak_queue_depth.to_string()]);
+        }
+        t.print();
+    }
 
     // isolated reference: the same job alone on the same (faulty) fabric
     let solo = run_scenario(
@@ -626,6 +650,9 @@ fn cmd_engine_bench(rest: &[String]) -> i32 {
     )
     .opt("nodes", "128,512,2048", "node counts for the typed sweep (even, >= 4)")
     .opt("baseline-nodes", "128,512", "node counts also run on the boxed-closure baseline")
+    .opt("threads", "1,2,4", "worker-thread counts for the parallel executive rows")
+    .opt("scaling-nodes", "4096,16384,65536", "ring-only node counts for the capped scaling sweep")
+    .opt("max-events", "2000000", "event budget each capped scaling run burns")
     .opt("oversub", "4", "leaf uplink oversubscription factor")
     .opt("hidden", "2048", "gradient width (hidden^2 elements per all-reduce)")
     .opt("out", "BENCH_engine.json", "machine-readable output path")
@@ -634,6 +661,9 @@ fn cmd_engine_bench(rest: &[String]) -> i32 {
     let cfg = engine_bench::EngineBenchConfig {
         nodes: a.get_list("nodes").unwrap_or_default(),
         baseline_nodes: a.get_list("baseline-nodes").unwrap_or_default(),
+        threads: a.get_list("threads").unwrap_or_default(),
+        scaling_nodes: a.get_list("scaling-nodes").unwrap_or_default(),
+        max_events: a.get_u64("max-events", 2_000_000),
         oversubscription: a.get_f64("oversub", 4.0),
         hidden: a.get_usize("hidden", 2048),
     };
@@ -656,8 +686,34 @@ fn cmd_engine_bench(rest: &[String]) -> i32 {
         eprintln!("--baseline-nodes {orphan} is not in --nodes, so it would never be baselined");
         return 2;
     }
-    if cfg.nodes.iter().chain(&cfg.baseline_nodes).any(|&n| n < 4 || n % 2 != 0) {
+    let raw_threads = a.get_str("threads", "");
+    let threads_wanted = raw_threads.split(',').filter(|s| !s.trim().is_empty()).count();
+    if cfg.threads.len() != threads_wanted || cfg.threads.is_empty() {
+        eprintln!("--threads contains invalid entries: '{raw_threads}'");
+        return 2;
+    }
+    if cfg.threads.iter().any(|&t| t == 0) {
+        eprintln!("--threads entries must be >= 1");
+        return 2;
+    }
+    let raw_scaling = a.get_str("scaling-nodes", "");
+    let scaling_wanted = raw_scaling.split(',').filter(|s| !s.trim().is_empty()).count();
+    if cfg.scaling_nodes.len() != scaling_wanted {
+        eprintln!("--scaling-nodes contains invalid entries: '{raw_scaling}'");
+        return 2;
+    }
+    if cfg
+        .nodes
+        .iter()
+        .chain(&cfg.baseline_nodes)
+        .chain(&cfg.scaling_nodes)
+        .any(|&n| n < 4 || n % 2 != 0)
+    {
         eprintln!("node counts must all be even and >= 4");
+        return 2;
+    }
+    if cfg.max_events == 0 {
+        eprintln!("--max-events must be positive");
         return 2;
     }
     if !(cfg.oversubscription > 0.0 && cfg.oversubscription.is_finite()) {
@@ -669,10 +725,11 @@ fn cmd_engine_bench(rest: &[String]) -> i32 {
         return 2;
     }
     let points = engine_bench::run(&cfg);
-    engine_bench::print(&points, &cfg);
+    let scaling = engine_bench::run_scaling(&cfg);
+    engine_bench::print(&points, &scaling, &cfg);
     if !a.flag("no-json") {
         let path = a.get_str("out", "BENCH_engine.json");
-        match engine_bench::write_bench(&path, &cfg, &points) {
+        match engine_bench::write_bench(&path, &cfg, &points, &scaling) {
             Ok(()) => println!("wrote {path}"),
             Err(e) => {
                 eprintln!("failed to write {path}: {e}");
@@ -690,12 +747,34 @@ fn cmd_engine_bench(rest: &[String]) -> i32 {
             return 1;
         }
     }
+    if let Some(worst) = engine_bench::worst_parallel_virtual_err(&points) {
+        if worst > engine_bench::VIRTUAL_TIME_TOL {
+            eprintln!(
+                "engine parity FAILED: parallel vs typed virtual time deviates by {worst:.2e} \
+                 (tol {:.0e})",
+                engine_bench::VIRTUAL_TIME_TOL
+            );
+            return 1;
+        }
+    }
     if let Some(speedup) = engine_bench::gate_speedup(&points) {
         if speedup < engine_bench::SPEEDUP_GATE {
             eprintln!(
                 "engine speedup FAILED: x{speedup:.2} on the {}-node NIC ring (gate x{})",
                 engine_bench::GATE_NODES,
                 engine_bench::SPEEDUP_GATE
+            );
+            return 1;
+        }
+    }
+    if let Some(speedup) = engine_bench::parallel_gate_speedup(&scaling) {
+        if speedup < engine_bench::PARALLEL_SPEEDUP_GATE {
+            eprintln!(
+                "parallel scaling FAILED: x{speedup:.2} at {} threads on the {}-node ring \
+                 (gate x{})",
+                engine_bench::PARALLEL_GATE_THREADS,
+                engine_bench::PARALLEL_GATE_NODES,
+                engine_bench::PARALLEL_SPEEDUP_GATE
             );
             return 1;
         }

@@ -1,4 +1,4 @@
-//! Typed-event discrete-event engine.
+//! Typed-event discrete-event engine, sequential and parallel.
 //!
 //! Until PR 5 every event was a `Box<dyn FnOnce>` on one `BinaryHeap`;
 //! the 512-node ring sweep scheduled tens of millions of them, and the
@@ -19,13 +19,22 @@
 //!   order as the boxed engine, so virtual-time results are
 //!   bit-identical across representations.
 //!
-//! The PR-3 representation is retained behind
-//! [`EngineKind::BoxedBaseline`] (one boxed closure per event on a
-//! `BinaryHeap`): `smartnic engine-bench` measures the typed engine
-//! against it and `rust/tests/engine_equiv.rs` pins the two to identical
-//! virtual time.  [`Sim::schedule_closure`] remains as a thin escape
-//! hatch for tests; every production scheduler client posts typed
-//! events.
+//! On top of the sequential engine sits a **conservative parallel
+//! executive** ([`EngineKind::Parallel`] / [`Sim::run_parallel`]): a
+//! [`PartitionedWorld`] declares how events map onto partitions (for the
+//! cluster simulation, one partition per leaf switch) and a lookahead
+//! window derived from the minimum cross-partition delay.  Partition
+//! calendars advance independently inside each window on
+//! `std::thread::scope` workers; cross-partition and coordinator-bound
+//! events are deferred into bounded channels and merged at the window
+//! barrier in a deterministic `(time, partition)` order, so the result
+//! is bit-identical for any thread count.  See the "Parallel engine"
+//! section of `docs/ARCHITECTURE.md` for the safety argument.
+//!
+//! The PR-3 boxed-closure representation and the `Sim::schedule_closure`
+//! escape hatch are compiled only for tests (`cfg(test)` or the
+//! `testing` cargo feature): the typed path is the only production entry
+//! point.
 //!
 //! ```
 //! use ai_smartnic::netsim::engine::{Sim, World};
@@ -59,31 +68,92 @@ use std::collections::BinaryHeap;
 /// event at its scheduled virtual time.
 pub trait World: Sized + 'static {
     /// The compact event representation.  Keep it small and `Copy`: the
-    /// engine stores events by value in the arena.
-    type Event: 'static;
+    /// engine stores events by value in the arena (and ships them across
+    /// partition workers, hence `Send`).
+    type Event: Send + 'static;
 
     /// Execute `event` at its fire time.  `sim.now()` is the event's
     /// scheduled time; the handler may schedule further events.
     fn handle(sim: &mut Sim<Self>, state: &mut Self, event: Self::Event);
 }
 
-/// A boxed action: the test escape hatch, and the unit of the
-/// [`EngineKind::BoxedBaseline`] representation.
-type Action<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
+/// Partition id of events the coordinator runner must execute between
+/// windows of a parallel run (job control, collective barriers, spine
+/// resources — anything not owned by a single partition).
+pub const GLOBAL_PARTITION: u32 = u32::MAX;
 
-/// One pending queue entry: a typed event, or an escape-hatch closure.
+/// A [`World`] that additionally knows how to shard itself for the
+/// conservative parallel executive ([`Sim::run_parallel`]).
+///
+/// The contract the routing must uphold (the engine's schedule-into-the-
+/// past panic is the runtime detector for violations):
+///
+/// * an event routed to partition `p` must, when handled, mutate only
+///   state owned by `p` (plus state no other partition's events touch);
+/// * any event a handler schedules into a *different* partition must be
+///   at least [`PartitionedWorld::lookahead`] seconds in the future;
+/// * events routed to [`GLOBAL_PARTITION`] may touch anything — they run
+///   on the coordinator thread, never concurrently with partition
+///   workers.
+pub trait PartitionedWorld: World {
+    /// Immutable routing table captured once per run (cheap to copy into
+    /// every worker's router closure).
+    type Map: Copy + Send + 'static;
+
+    /// Snapshot the routing table.
+    fn partition_map(&self) -> Self::Map;
+
+    /// Number of partitions the map shards events into.
+    fn partition_count(map: &Self::Map) -> usize;
+
+    /// Owning partition of `event`, or [`GLOBAL_PARTITION`].
+    fn route(map: &Self::Map, event: &Self::Event) -> u32;
+
+    /// Conservative lookahead: the minimum virtual-time delay of any
+    /// cross-partition scheduling path.  Zero degrades the executive to
+    /// same-timestamp cohort draining (still correct, less parallel).
+    fn lookahead(&self) -> Time;
+}
+
+/// Per-runner counters of a parallel run ([`Sim::partition_stats`]):
+/// entry 0 is the coordinator, entries 1.. the partitions in index
+/// order.  The spread of `events` across partitions is the load-balance
+/// signal `smartnic engine-bench` reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PartitionStats {
+    /// events this runner executed
+    pub events: u64,
+    /// high-water mark of this runner's pending-event count
+    pub peak_queue_depth: usize,
+}
+
+/// A boxed action: the unit of the test-only boxed-closure baseline.
+#[cfg(any(test, feature = "testing"))]
+type Action<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W) + Send>;
+
+/// One pending queue entry: a typed event or (tests only) a closure.
 enum Stored<W: World> {
     Event(W::Event),
+    #[cfg(any(test, feature = "testing"))]
     Closure(Action<W>),
 }
 
-/// Which queue representation a [`Sim`] runs on.
+/// Which queue representation / executive a [`Sim`] runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     /// typed-event arena + hierarchical calendar queue (the default)
     Typed,
+    /// the typed engine under the leaf-partitioned conservative parallel
+    /// executive: [`Sim::run_parallel`] with this many worker threads
+    /// (1 = the windowed executive without thread spawns)
+    Parallel {
+        /// worker threads partitions are chunked across
+        threads: usize,
+    },
     /// the PR-3 representation — one boxed closure per event on a
     /// `BinaryHeap` — kept as the benchmark and equivalence baseline
+    /// (tests and the `testing` feature only)
+    #[cfg(any(test, feature = "testing"))]
     BoxedBaseline,
 }
 
@@ -297,26 +367,31 @@ impl Calendar {
 }
 
 // ---------------------------------------------------------------------
-// Boxed-closure baseline representation (PR 3)
+// Boxed-closure baseline representation (PR 3, tests only)
 // ---------------------------------------------------------------------
 
+#[cfg(any(test, feature = "testing"))]
 struct BoxedScheduled<W: World> {
     time: Time,
     seq: u64,
     action: Action<W>,
 }
 
+#[cfg(any(test, feature = "testing"))]
 impl<W: World> PartialEq for BoxedScheduled<W> {
     fn eq(&self, other: &Self) -> bool {
         self.time == other.time && self.seq == other.seq
     }
 }
+#[cfg(any(test, feature = "testing"))]
 impl<W: World> Eq for BoxedScheduled<W> {}
+#[cfg(any(test, feature = "testing"))]
 impl<W: World> PartialOrd for BoxedScheduled<W> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
+#[cfg(any(test, feature = "testing"))]
 impl<W: World> Ord for BoxedScheduled<W> {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap: invert for earliest-first, exactly
@@ -333,12 +408,25 @@ enum QueueImpl<W: World> {
         calendar: Calendar,
         arena: Arena<W>,
     },
+    #[cfg(any(test, feature = "testing"))]
     Boxed(BinaryHeap<BoxedScheduled<W>>),
 }
 
 // ---------------------------------------------------------------------
 // The executive
 // ---------------------------------------------------------------------
+
+/// Raw shared-state handle for window workers.  Workers derive disjoint
+/// access from the [`PartitionedWorld`] routing contract: inside a
+/// window, each partition's events touch only that partition's state,
+/// and the coordinator never runs concurrently with workers.
+struct StatePtr<W>(*mut W);
+
+// SAFETY: the pointer is only dereferenced by window workers, whose
+// access is disjoint by the PartitionedWorld routing contract, and the
+// referent outlives the thread scope.
+unsafe impl<W: Send> Send for StatePtr<W> {}
+unsafe impl<W: Send> Sync for StatePtr<W> {}
 
 /// The simulation executive.  `W` is the simulation world: its state is
 /// threaded by `&mut` into every event, so handlers never capture
@@ -348,7 +436,21 @@ pub struct Sim<W: World> {
     seq: u64,
     events_run: u64,
     peak_pending: usize,
+    kind: EngineKind,
     queue: QueueImpl<W>,
+    /// partition this runner owns ([`GLOBAL_PARTITION`] outside a
+    /// parallel run, and for the coordinator inside one)
+    my_partition: u32,
+    /// when set, `schedule_at` diverts events owned by other partitions
+    /// into `deferred` instead of this runner's queue
+    #[allow(clippy::type_complexity)]
+    router: Option<Box<dyn Fn(&W::Event) -> u32 + Send>>,
+    /// cross-partition emissions awaiting the next window barrier
+    deferred: Vec<(Time, W::Event)>,
+    /// per-runner counters of the last parallel run
+    part_stats: Vec<PartitionStats>,
+    /// stop running once this many events executed (bench event cap)
+    budget: Option<u64>,
 }
 
 impl<W: World> Default for Sim<W> {
@@ -366,27 +468,31 @@ impl<W: World> Sim<W> {
     /// An engine on an explicit queue representation.
     pub fn with_engine(kind: EngineKind) -> Self {
         let queue = match kind {
-            EngineKind::Typed => QueueImpl::Typed {
+            #[cfg(any(test, feature = "testing"))]
+            EngineKind::BoxedBaseline => QueueImpl::Boxed(BinaryHeap::new()),
+            _ => QueueImpl::Typed {
                 calendar: Calendar::new(),
                 arena: Arena::new(),
             },
-            EngineKind::BoxedBaseline => QueueImpl::Boxed(BinaryHeap::new()),
         };
         Self {
             now: 0.0,
             seq: 0,
             events_run: 0,
             peak_pending: 0,
+            kind,
             queue,
+            my_partition: GLOBAL_PARTITION,
+            router: None,
+            deferred: Vec::new(),
+            part_stats: Vec::new(),
+            budget: None,
         }
     }
 
     /// Which representation this engine runs on.
     pub fn engine_kind(&self) -> EngineKind {
-        match &self.queue {
-            QueueImpl::Typed { .. } => EngineKind::Typed,
-            QueueImpl::Boxed(_) => EngineKind::BoxedBaseline,
-        }
+        self.kind
     }
 
     pub fn now(&self) -> Time {
@@ -400,14 +506,32 @@ impl<W: World> Sim<W> {
     pub fn pending(&self) -> usize {
         match &self.queue {
             QueueImpl::Typed { calendar, .. } => calendar.len,
+            #[cfg(any(test, feature = "testing"))]
             QueueImpl::Boxed(heap) => heap.len(),
         }
     }
 
     /// High-water mark of the pending-event count (the benchmark's
-    /// peak-queue-depth metric).
+    /// peak-queue-depth metric).  After a parallel run: the worst single
+    /// runner's high-water mark.
     pub fn peak_pending(&self) -> usize {
         self.peak_pending
+    }
+
+    /// Per-runner counters of the last [`Sim::run_parallel`] call
+    /// (entry 0 = coordinator, 1.. = partitions); empty after a
+    /// sequential run.
+    pub fn partition_stats(&self) -> &[PartitionStats] {
+        &self.part_stats
+    }
+
+    /// Cap the total number of events a subsequent run executes (`None`
+    /// = unbounded).  The benchmark's big-N sweeps use this to measure
+    /// steady-state throughput without draining quadratically many ring
+    /// events; a parallel run checks the cap at window granularity, so
+    /// it may overshoot by one window (deterministically).
+    pub fn set_event_budget(&mut self, budget: Option<u64>) {
+        self.budget = budget;
     }
 
     /// Schedule a typed event `delay` seconds from now.
@@ -420,16 +544,27 @@ impl<W: World> Sim<W> {
     /// NaN or infinite time would corrupt the queue order).
     pub fn schedule_at(&mut self, time: Time, event: W::Event) {
         self.check_time(time);
+        if let Some(router) = &self.router {
+            let p = router(&event);
+            if p != self.my_partition {
+                // another runner owns this event: hold it for the next
+                // window barrier (the coordinator drains its buffer
+                // after every global step)
+                self.deferred.push((time, event));
+                return;
+            }
+        }
         self.push_stored(time, Stored::Event(event));
     }
 
     /// Escape hatch (tests only): schedule a boxed closure `delay`
     /// seconds from now.  Production scheduler clients post typed
     /// events via [`Sim::schedule`] / [`Sim::schedule_at`].
+    #[cfg(any(test, feature = "testing"))]
     pub fn schedule_closure(
         &mut self,
         delay: Time,
-        action: impl FnOnce(&mut Sim<W>, &mut W) + 'static,
+        action: impl FnOnce(&mut Sim<W>, &mut W) + Send + 'static,
     ) {
         self.assert_delay(delay);
         self.schedule_closure_at(self.now + delay, action);
@@ -437,10 +572,11 @@ impl<W: World> Sim<W> {
 
     /// Escape hatch (tests only): [`Sim::schedule_closure`] at an
     /// absolute time.
+    #[cfg(any(test, feature = "testing"))]
     pub fn schedule_closure_at(
         &mut self,
         time: Time,
-        action: impl FnOnce(&mut Sim<W>, &mut W) + 'static,
+        action: impl FnOnce(&mut Sim<W>, &mut W) + Send + 'static,
     ) {
         self.check_time(time);
         self.push_stored(time, Stored::Closure(Box::new(action)));
@@ -470,6 +606,7 @@ impl<W: World> Sim<W> {
                 let slot = arena.insert(stored);
                 calendar.push(Key { time, seq, slot });
             }
+            #[cfg(any(test, feature = "testing"))]
             QueueImpl::Boxed(heap) => {
                 let action: Action<W> = match stored {
                     Stored::Closure(action) => action,
@@ -491,6 +628,7 @@ impl<W: World> Sim<W> {
                 let key = calendar.pop()?;
                 Some((key.time, arena.take(key.slot)))
             }
+            #[cfg(any(test, feature = "testing"))]
             QueueImpl::Boxed(heap) => {
                 heap.pop().map(|s| (s.time, Stored::Closure(s.action)))
             }
@@ -501,13 +639,16 @@ impl<W: World> Sim<W> {
     fn peek_time(&mut self) -> Option<Time> {
         match &mut self.queue {
             QueueImpl::Typed { calendar, .. } => calendar.peek_time(),
+            #[cfg(any(test, feature = "testing"))]
             QueueImpl::Boxed(heap) => heap.peek().map(|s| s.time),
         }
     }
 
-    /// Run until the queue drains; returns final virtual time.
+    /// Run until the queue drains (or the event budget is hit); returns
+    /// final virtual time.
     pub fn run(&mut self, state: &mut W) -> Time {
-        while self.step(state) {}
+        let budget = self.budget.unwrap_or(u64::MAX);
+        while self.events_run < budget && self.step(state) {}
         self.now
     }
 
@@ -523,6 +664,21 @@ impl<W: World> Sim<W> {
         self.now
     }
 
+    /// Drain events strictly below `end` (or, when `inclusive`, up to
+    /// and including it — the same-timestamp cohort mode).
+    fn run_window(&mut self, state: &mut W, end: Time, inclusive: bool) {
+        if inclusive {
+            self.run_until(state, end);
+        } else {
+            while let Some(head) = self.peek_time() {
+                if head >= end {
+                    break;
+                }
+                self.step(state);
+            }
+        }
+    }
+
     /// Execute the single earliest event.  Returns false when empty.
     pub fn step(&mut self, state: &mut W) -> bool {
         match self.pop_next() {
@@ -533,11 +689,190 @@ impl<W: World> Sim<W> {
                 self.events_run += 1;
                 match stored {
                     Stored::Event(event) => W::handle(self, state, event),
+                    #[cfg(any(test, feature = "testing"))]
                     Stored::Closure(action) => action(self, state),
                 }
                 true
             }
         }
+    }
+
+    /// Hand this runner's deferred emissions to their owning partitions
+    /// (coordinator side: called after every global step, so partitions
+    /// see globally produced events before their next window).
+    fn flush_deferred(&mut self, parts: &mut [Sim<W>]) {
+        if self.deferred.is_empty() {
+            return;
+        }
+        let drained = std::mem::take(&mut self.deferred);
+        for (time, event) in drained {
+            let p = self.router.as_ref().map_or(GLOBAL_PARTITION, |r| r(&event));
+            debug_assert_ne!(p, self.my_partition, "deferred event routed back to its source");
+            parts[p as usize].schedule_at(time, event);
+        }
+    }
+
+    /// Run to completion under the leaf-partitioned conservative
+    /// parallel executive.
+    ///
+    /// The loop alternates two phases:
+    ///
+    /// 1. while the coordinator's head event is not later than every
+    ///    partition's head, execute it alone with full `&mut W` access
+    ///    (global events may touch anything);
+    /// 2. otherwise open a window `[T, T + lookahead)` at the minimum
+    ///    partition head `T` (clamped below the coordinator's head) and
+    ///    drain every partition's events inside it concurrently on
+    ///    `threads` scoped workers — safe because, by the
+    ///    [`PartitionedWorld`] contract, no event inside the window can
+    ///    affect another partition earlier than the window's end.
+    ///
+    /// Cross-partition/coordinator emissions are deferred during the
+    /// window and merged at the barrier in ascending `(time, partition)`
+    /// order, so the executed order — and therefore every virtual-time
+    /// result — is identical for any `threads`, including 1.
+    pub fn run_parallel(&mut self, state: &mut W, threads: usize) -> Time
+    where
+        W: PartitionedWorld + Send,
+    {
+        assert!(threads >= 1, "parallel engine needs at least one thread");
+        let map = state.partition_map();
+        let nparts = W::partition_count(&map);
+        assert!(nparts >= 1, "parallel engine needs at least one partition");
+        let lookahead = state.lookahead();
+        assert!(
+            lookahead.is_finite() && lookahead >= 0.0,
+            "lookahead must be finite and non-negative, got {lookahead}"
+        );
+
+        let mut parts: Vec<Sim<W>> = (0..nparts)
+            .map(|p| {
+                let pmap = map;
+                let mut part = Sim::with_engine(EngineKind::Typed);
+                part.my_partition = p as u32;
+                part.router = Some(Box::new(move |ev: &W::Event| W::route(&pmap, ev)));
+                part
+            })
+            .collect();
+        self.my_partition = GLOBAL_PARTITION;
+        self.router = Some(Box::new(move |ev: &W::Event| W::route(&map, ev)));
+
+        // Re-route everything scheduled before the run (job seeds): pop
+        // in (time, seq) order, push through the router.
+        let mut seeds: Vec<(Time, W::Event)> = Vec::new();
+        while let Some((time, stored)) = self.pop_next() {
+            match stored {
+                Stored::Event(event) => seeds.push((time, event)),
+                #[cfg(any(test, feature = "testing"))]
+                Stored::Closure(_) => {
+                    panic!("EngineKind::Parallel cannot route closures; post typed events")
+                }
+            }
+        }
+        for (time, event) in seeds {
+            self.schedule_at(time, event);
+        }
+        self.flush_deferred(&mut parts);
+
+        let budget = self.budget.unwrap_or(u64::MAX);
+        loop {
+            let total: u64 = self.events_run + parts.iter().map(|p| p.events_run).sum::<u64>();
+            if total >= budget {
+                break;
+            }
+            let t_global = self.peek_time();
+            let t_local = parts
+                .iter_mut()
+                .filter_map(|p| p.peek_time())
+                .min_by(|a, b| a.total_cmp(b));
+            let window_start = match (t_global, t_local) {
+                (None, None) => break,
+                (Some(_), None) => {
+                    self.step(state);
+                    self.flush_deferred(&mut parts);
+                    continue;
+                }
+                (Some(g), Some(l)) if g <= l => {
+                    self.step(state);
+                    self.flush_deferred(&mut parts);
+                    continue;
+                }
+                (_, Some(l)) => l,
+            };
+
+            // A window: [start, end) exclusive when lookahead > 0, the
+            // same-timestamp cohort {start} otherwise.  The coordinator's
+            // head caps the end so no partition overruns a pending
+            // global event.
+            let cap = t_global.unwrap_or(f64::INFINITY);
+            let (end, inclusive) = if lookahead > 0.0 {
+                ((window_start + lookahead).min(cap), false)
+            } else {
+                (window_start, true)
+            };
+
+            let workers = threads.min(parts.len());
+            if workers <= 1 {
+                for part in parts.iter_mut() {
+                    part.run_window(state, end, inclusive);
+                }
+            } else {
+                let chunk = parts.len().div_ceil(workers);
+                let shared = StatePtr(state as *mut W);
+                std::thread::scope(|scope| {
+                    for slice in parts.chunks_mut(chunk) {
+                        let shared = &shared;
+                        scope.spawn(move || {
+                            // SAFETY: every worker holds the pointer to
+                            // the same state, but the PartitionedWorld
+                            // routing contract guarantees the events it
+                            // executes touch only its own partitions'
+                            // state; the coordinator is parked at the
+                            // scope join.
+                            let st = unsafe { &mut *shared.0 };
+                            for part in slice.iter_mut() {
+                                part.run_window(st, end, inclusive);
+                            }
+                        });
+                    }
+                });
+            }
+
+            // Barrier: merge the window's cross-partition emissions in
+            // ascending time; the sort is stable, so ties keep partition
+            // index order — deterministic for any thread count.
+            let mut moved: Vec<(Time, W::Event)> = Vec::new();
+            for part in parts.iter_mut() {
+                moved.append(&mut part.deferred);
+            }
+            moved.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for (time, event) in moved {
+                let p = W::route(&map, &event);
+                if p == GLOBAL_PARTITION {
+                    self.schedule_at(time, event);
+                } else {
+                    parts[p as usize].schedule_at(time, event);
+                }
+            }
+        }
+
+        // Fold the partitions back into this runner's counters.
+        self.part_stats = Vec::with_capacity(parts.len() + 1);
+        self.part_stats.push(PartitionStats {
+            events: self.events_run,
+            peak_queue_depth: self.peak_pending,
+        });
+        for part in &parts {
+            self.part_stats.push(PartitionStats {
+                events: part.events_run,
+                peak_queue_depth: part.peak_pending,
+            });
+            self.events_run += part.events_run;
+            self.now = self.now.max(part.now);
+            self.peak_pending = self.peak_pending.max(part.peak_pending);
+        }
+        self.router = None;
+        self.now
     }
 }
 
@@ -626,6 +961,22 @@ mod tests {
             sim.run(&mut log);
             assert_eq!(log.fired.len(), 10, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn event_budget_caps_a_run() {
+        let mut sim: Sim<Log> = Sim::new();
+        let mut log = Log::new();
+        for i in 0..100 {
+            sim.schedule(f64::from(i), i as u32);
+        }
+        sim.set_event_budget(Some(7));
+        sim.run(&mut log);
+        assert_eq!(log.fired.len(), 7);
+        assert_eq!(sim.pending(), 93);
+        sim.set_event_budget(None);
+        sim.run(&mut log);
+        assert_eq!(log.fired.len(), 100);
     }
 
     #[test]
@@ -732,5 +1083,146 @@ mod tests {
         }
         sim.run(&mut log);
         assert_eq!(log.fired, (0..100).collect::<Vec<_>>());
+    }
+
+    // -----------------------------------------------------------------
+    // Parallel executive
+    // -----------------------------------------------------------------
+
+    const PARTS: usize = 3;
+    const LOOKAHEAD: Time = 1e-6;
+
+    /// A partitioned toy world: events tagged `v` with `v % 5 == 0` are
+    /// global, the rest belong to partition `v % PARTS`.  Local handlers
+    /// only touch their own partition's log and schedule same-partition
+    /// or global children; global handlers fan out to partitions with
+    /// delays >= LOOKAHEAD — the full PartitionedWorld contract.
+    struct Sharded {
+        logs: Vec<Vec<(u64, u32)>>,
+        glog: Vec<(u64, u32)>,
+    }
+
+    impl Sharded {
+        fn new() -> Self {
+            Self {
+                logs: (0..PARTS).map(|_| Vec::new()).collect(),
+                glog: Vec::new(),
+            }
+        }
+    }
+
+    fn shard_of(event: u32) -> u32 {
+        if event % 5 == 0 {
+            GLOBAL_PARTITION
+        } else {
+            event % PARTS as u32
+        }
+    }
+
+    impl World for Sharded {
+        type Event = u32;
+        fn handle(sim: &mut Sim<Self>, state: &mut Self, event: u32) {
+            let stamp = sim.now().to_bits();
+            if event % 5 == 0 {
+                state.glog.push((stamp, event));
+                if event < 1000 {
+                    // fan out to every partition, one lookahead away
+                    for k in 1..=3u32 {
+                        sim.schedule(LOOKAHEAD * f64::from(k), event + k);
+                    }
+                }
+            } else {
+                state.logs[(event % PARTS as u32) as usize].push((stamp, event));
+                if event < 1000 {
+                    // a same-partition child (any delay is fine) and a
+                    // global child (the coordinator owns no clock bound)
+                    sim.schedule(LOOKAHEAD * 0.25, event + PARTS as u32 * 3);
+                    if event % 7 == 0 {
+                        sim.schedule(LOOKAHEAD * 0.5, event * 5);
+                    }
+                }
+            }
+        }
+    }
+
+    impl PartitionedWorld for Sharded {
+        type Map = ();
+        fn partition_map(&self) -> Self::Map {}
+        fn partition_count(_map: &Self::Map) -> usize {
+            PARTS
+        }
+        fn route(_map: &Self::Map, event: &Self::Event) -> u32 {
+            shard_of(*event)
+        }
+        fn lookahead(&self) -> Time {
+            LOOKAHEAD
+        }
+    }
+
+    fn run_sharded(threads: Option<usize>) -> (Sharded, Time, u64) {
+        let mut sim: Sim<Sharded> = match threads {
+            None => Sim::new(),
+            Some(t) => Sim::with_engine(EngineKind::Parallel { threads: t }),
+        };
+        let mut world = Sharded::new();
+        for i in 1..40u32 {
+            sim.schedule_at(f64::from(i) * 1e-7, i);
+        }
+        let end = match threads {
+            None => sim.run(&mut world),
+            Some(t) => sim.run_parallel(&mut world, t),
+        };
+        (world, end, sim.events_run())
+    }
+
+    #[test]
+    fn parallel_executive_is_thread_count_invariant() {
+        // bit-identical logs (values and times) for 1, 2 and 4 threads
+        let (w1, end1, n1) = run_sharded(Some(1));
+        for threads in [2, 4] {
+            let (w, end, n) = run_sharded(Some(threads));
+            assert_eq!(w.logs, w1.logs, "threads={threads}");
+            assert_eq!(w.glog, w1.glog, "threads={threads}");
+            assert_eq!(end.to_bits(), end1.to_bits(), "threads={threads}");
+            assert_eq!(n, n1, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_executive_matches_sequential_results() {
+        // same events, same per-event times and same final clock as the
+        // sequential engine; only cross-runner tie order may differ, so
+        // compare per-partition logs as sorted multisets
+        let (seq, seq_end, seq_n) = run_sharded(None);
+        let (par, par_end, par_n) = run_sharded(Some(4));
+        assert_eq!(par_n, seq_n, "event counts diverged");
+        assert_eq!(par_end.to_bits(), seq_end.to_bits(), "final clocks diverged");
+        let sorted = |mut v: Vec<(u64, u32)>| {
+            v.sort_unstable();
+            v
+        };
+        for p in 0..PARTS {
+            assert_eq!(
+                sorted(par.logs[p].clone()),
+                sorted(seq.logs[p].clone()),
+                "partition {p} diverged"
+            );
+        }
+        assert_eq!(sorted(par.glog), sorted(seq.glog), "global log diverged");
+    }
+
+    #[test]
+    fn parallel_partition_stats_are_reported() {
+        let mut sim: Sim<Sharded> = Sim::with_engine(EngineKind::Parallel { threads: 2 });
+        let mut world = Sharded::new();
+        for i in 1..40u32 {
+            sim.schedule_at(f64::from(i) * 1e-7, i);
+        }
+        sim.run_parallel(&mut world, 2);
+        let stats = sim.partition_stats();
+        assert_eq!(stats.len(), PARTS + 1, "coordinator + one entry per partition");
+        let total: u64 = stats.iter().map(|s| s.events).sum();
+        assert_eq!(total, sim.events_run());
+        assert!(stats.iter().skip(1).any(|s| s.events > 0), "no partition ran events");
     }
 }

@@ -81,6 +81,21 @@ pub struct Fabric {
     pub interconnect: Interconnect,
 }
 
+/// Result of the source half of a wire path ([`Fabric::hop_split`]):
+/// either the hop stayed inside the source partition and finished, or it
+/// reached the spine and the destination half must be timed separately
+/// (by the destination leaf's owner — this is the cut the parallel
+/// engine's cross-partition messages ride on).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HopOutcome {
+    /// intra-leaf (or flat-crossbar) hop: delivery time at the
+    /// destination NIC
+    Delivered(Time),
+    /// inter-leaf hop: arrival time at the spine, after the sender's Tx
+    /// serialization, its leaf's uplink bundle and one switch latency
+    AtSpine(Time),
+}
+
 impl Fabric {
     /// Build an `n`-node flat-crossbar fabric from one hardware
     /// description, applying cluster-level fault injection to the affected
@@ -179,6 +194,52 @@ impl Fabric {
                     let at_leaf = downlinks[dst_leaf].reserve(at_spine, bytes) + *latency;
                     leaves[dst_leaf].forward_cut_through(dst_port, at_leaf, bytes)
                 }
+            }
+        }
+    }
+
+    /// The source half of [`Fabric::hop`]: Tx serialization plus the
+    /// route up to (but not across) the spine.  Touches only resources
+    /// owned by `src`'s leaf, so a partitioned run may call it from the
+    /// leaf's worker; the destination half ([`Fabric::hop_deliver`]) is
+    /// then timed by the destination leaf when the cross-partition
+    /// message arrives.  `hop_split` + `hop_deliver` compose to exactly
+    /// one [`Fabric::hop`] when the calls are made in the same order.
+    #[must_use]
+    pub fn hop_split(&mut self, src: usize, dst: usize, ready: Time, bytes: f64) -> HopOutcome {
+        let src_leaf = self.topology.leaf_of(src);
+        let dst_leaf = self.topology.leaf_of(dst);
+        let dst_port = self.topology.leaf_port(dst);
+        let serialized = self.nodes[src].tx.transmit(ready, bytes);
+        match &mut self.interconnect {
+            Interconnect::Flat(sw) => {
+                HopOutcome::Delivered(sw.forward_cut_through(dst, serialized, bytes))
+            }
+            Interconnect::LeafSpine { leaves, uplinks, latency, .. } => {
+                if src_leaf == dst_leaf {
+                    HopOutcome::Delivered(leaves[dst_leaf].forward_cut_through(
+                        dst_port, serialized, bytes,
+                    ))
+                } else {
+                    HopOutcome::AtSpine(uplinks[src_leaf].reserve(serialized, bytes) + *latency)
+                }
+            }
+        }
+    }
+
+    /// The destination half of a spine crossing: reserve the destination
+    /// leaf's spine-egress bundle from `at_spine` and cut through the
+    /// leaf switch to `dst`'s port.  Touches only resources owned by
+    /// `dst`'s leaf.
+    #[must_use]
+    pub fn hop_deliver(&mut self, dst: usize, at_spine: Time, bytes: f64) -> Time {
+        let dst_leaf = self.topology.leaf_of(dst);
+        let dst_port = self.topology.leaf_port(dst);
+        match &mut self.interconnect {
+            Interconnect::Flat(_) => unreachable!("no spine crossing on a flat crossbar"),
+            Interconnect::LeafSpine { leaves, downlinks, latency, .. } => {
+                let at_leaf = downlinks[dst_leaf].reserve(at_spine, bytes) + *latency;
+                leaves[dst_leaf].forward_cut_through(dst_port, at_leaf, bytes)
             }
         }
     }
@@ -446,6 +507,37 @@ mod tests {
         let t1 = f.hop(0, 2, 0.0, bytes);
         assert!((t0 - (ser + 3.0 * lat)).abs() < 1e-12);
         assert!((t1 - (2.0 * ser + 3.0 * lat)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hop_split_plus_deliver_compose_to_exactly_one_hop() {
+        let sys = SystemParams::smartnic_40g();
+        let topo = Topology::leaf_spine(2, 3, 3.0);
+        let mut whole = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        let mut halves = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        let bytes = 1e6;
+        // a mixed train: intra-leaf, then two converging spine crossings
+        let flows = [(0usize, 2usize), (0, 4), (1, 4)];
+        for (src, dst) in flows {
+            let direct = whole.hop(src, dst, 0.0, bytes);
+            let split = match halves.hop_split(src, dst, 0.0, bytes) {
+                HopOutcome::Delivered(t) => t,
+                HopOutcome::AtSpine(at_spine) => halves.hop_deliver(dst, at_spine, bytes),
+            };
+            assert_eq!(direct.to_bits(), split.to_bits(), "{src}->{dst}");
+        }
+    }
+
+    #[test]
+    fn flat_hop_split_always_delivers() {
+        let sys = SystemParams::smartnic_40g();
+        let mut f = Fabric::new(&sys, 4, &ClusterFaults::none());
+        let bytes = 1e6;
+        let expect = bytes / sys.net.effective_bw() + sys.net.hop_latency;
+        match f.hop_split(0, 1, 0.0, bytes) {
+            HopOutcome::Delivered(t) => assert!((t - expect).abs() < 1e-12, "{t} vs {expect}"),
+            HopOutcome::AtSpine(_) => panic!("flat crossbar has no spine"),
+        }
     }
 
     #[test]

@@ -125,22 +125,37 @@ fn bench_engine_schema_is_pinned() {
     let cfg = engine_bench::EngineBenchConfig {
         nodes: vec![8],
         baseline_nodes: vec![8],
+        threads: vec![1, 2],
+        scaling_nodes: vec![8],
+        max_events: 500,
         oversubscription: 4.0,
         hidden: 128,
     };
     let points = engine_bench::run(&cfg);
     assert_eq!(points.len(), engine_bench::ALGOS.len(), "one point per plan family");
-    let j = engine_bench::to_json(&cfg, &points);
+    let scaling = engine_bench::run_scaling(&cfg);
+    assert_eq!(scaling.len(), 1 + cfg.threads.len(), "typed reference + one row per thread");
+    let j = engine_bench::to_json(&cfg, &points, &scaling);
     let mut paths = vec![
         "config/hidden".to_string(),
         "config/oversubscription".to_string(),
         "config/speedup_gate".to_string(),
         "config/gate_nodes".to_string(),
         "config/virtual_time_tol".to_string(),
+        "config/threads".to_string(),
+        "config/scaling_nodes".to_string(),
+        "config/max_events".to_string(),
+        "config/parallel_speedup_gate".to_string(),
+        "config/parallel_gate_nodes".to_string(),
+        "config/parallel_gate_threads".to_string(),
         "gates/ring_gate_speedup".to_string(),
         "gates/speedup_pass".to_string(),
         "gates/worst_virtual_err".to_string(),
+        "gates/parallel_worst_virtual_err".to_string(),
+        "gates/parallel_scaling_speedup".to_string(),
+        "gates/parallel_scaling_pass".to_string(),
         "gates/max_nodes_completed".to_string(),
+        "gates/scaling_max_nodes_completed".to_string(),
     ];
     for i in 0..points.len() {
         for key in [
@@ -152,6 +167,7 @@ fn bench_engine_schema_is_pinned() {
             "wall_s",
             "events_per_sec",
             "baseline",
+            "parallel",
         ] {
             paths.push(format!("points/{i}/{key}"));
         }
@@ -161,16 +177,35 @@ fn bench_engine_schema_is_pinned() {
             paths.push(format!("points/{i}/baseline/{key}"));
         }
     }
+    // the NIC ring is row 0 and carries one parallel row per configured
+    // thread count
+    for i in 0..cfg.threads.len() {
+        for key in ["threads", "wall_s", "events_per_sec", "virtual_err", "imbalance"] {
+            paths.push(format!("points/0/parallel/{i}/{key}"));
+        }
+    }
+    for i in 0..scaling.len() {
+        for key in
+            ["nodes", "threads", "virtual_s", "events", "wall_s", "events_per_sec", "imbalance"]
+        {
+            paths.push(format!("scaling/{i}/{key}"));
+        }
+    }
     let path_refs: Vec<&str> = paths.iter().map(String::as_str).collect();
     assert_paths(&j, &path_refs);
     let parsed = Json::parse(&j.to_string_pretty()).expect("BENCH_engine must parse");
     assert_eq!(parsed, j);
     // the gate fields carry the types the CI gate reads: an 8-node sweep
-    // has no 512-node ring point, so the speedup gate must be Null (not
-    // a vacuous PASS), while parity and completion stay populated
+    // has no 512-node ring point and no 16384-node scaling pair, so both
+    // speedup gates must be Null (not a vacuous PASS), while parity and
+    // completion stay populated
     let gates = j.get("gates").unwrap();
     assert_eq!(gates.get("ring_gate_speedup"), Some(&Json::Null));
     assert_eq!(gates.get("speedup_pass"), Some(&Json::Null));
+    assert_eq!(gates.get("parallel_scaling_speedup"), Some(&Json::Null));
+    assert_eq!(gates.get("parallel_scaling_pass"), Some(&Json::Null));
     assert!(gates.get("worst_virtual_err").unwrap().as_f64().unwrap() <= 1e-9);
+    assert!(gates.get("parallel_worst_virtual_err").unwrap().as_f64().unwrap() <= 1e-9);
     assert_eq!(gates.get("max_nodes_completed").unwrap().as_usize(), Some(8));
+    assert_eq!(gates.get("scaling_max_nodes_completed").unwrap().as_usize(), Some(8));
 }

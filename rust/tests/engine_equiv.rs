@@ -7,6 +7,13 @@
 // under concurrency, ties, multi-tenancy and fault injection — and the
 // engine-behavior contracts (determinism under ties, schedule-into-past
 // panics) must survive the representation change.
+//
+// The leaf-partitioned parallel executive (`EngineKind::Parallel`) is
+// held to the same bar against the sequential typed engine: every plan
+// family at N in {128, 2048} and threads in {1, 2, 4} must agree within
+// 1e-9, the multi-tenant faulty scenario included, and results must be
+// bit-identical across thread counts (ties are resolved by partition
+// index at the window barrier, never by scheduling races).
 
 use ai_smartnic::analytic::model::SystemKind;
 use ai_smartnic::cluster::{
@@ -126,6 +133,177 @@ fn inswitch_matches_boxed_engine_at_pinned_sizes() {
     for n in PINNED {
         assert_equiv(&family_spec(n, CollectiveAlgo::SwitchReduce), &format!("in-switch/n={n}"));
     }
+}
+
+/// Node counts the parallel executive is pinned at (2048 exercises 256
+/// leaf partitions; 128 keeps a small-window regime in the mix).
+const PAR_PINNED: [usize; 2] = [128, 2048];
+/// Worker-thread counts every parallel pin runs under.
+const PAR_THREADS: [usize; 3] = [1, 2, 4];
+
+/// Single-layer variant of [`family_spec`], sized so the 2048-node ring
+/// stays debug-build fast (event count scales with n², not hidden).
+fn par_family_spec(n: usize, algo: CollectiveAlgo) -> ClusterSpec {
+    let (leaves, m) = leaf_shape(n);
+    let sys = planner_system(leaves, m);
+    let topo = Topology::leaf_spine(leaves, m, 4.0);
+    let w = Workload {
+        layers: 1,
+        hidden: if n >= 2048 { 128 } else { 256 },
+        batch_per_node: 64,
+    };
+    ClusterSpec::new(sys, n).with_topology(topo).with_job(
+        JobSpec::new("j0", SystemKind::SmartNic { bfp: false }, w, topo.contiguous_ranks(n))
+            .with_layer_algos(vec![algo]),
+    )
+}
+
+/// The parallel executive must agree with the sequential typed engine
+/// within [`TOL`] at every thread count, and the parallel runs must be
+/// bit-identical to each other (thread count must not change results).
+fn assert_parallel_equiv(spec: &ClusterSpec, label: &str) {
+    let typed = run_scenario_on(spec, EngineKind::Typed);
+    let mut first: Option<ScenarioOutput> = None;
+    for t in PAR_THREADS {
+        let par = run_scenario_on(spec, EngineKind::Parallel { threads: t });
+        assert_eq!(par.events, typed.events, "{label}/t={t}: event counts diverged");
+        assert!(
+            rel_err(typed.makespan, par.makespan) <= TOL,
+            "{label}/t={t}: makespan parallel {} vs typed {}",
+            par.makespan,
+            typed.makespan
+        );
+        for (p, s) in par.jobs.iter().zip(&typed.jobs) {
+            assert_eq!(p.ar_count, s.ar_count, "{label}/t={t}/{}", p.name);
+            assert!(
+                rel_err(s.duration, p.duration) <= TOL,
+                "{label}/t={t}/{}: parallel {} vs typed {}",
+                p.name,
+                p.duration,
+                s.duration
+            );
+            assert!(
+                rel_err(s.mean_ar, p.mean_ar) <= TOL,
+                "{label}/t={t}/{}: mean AR parallel {} vs typed {}",
+                p.name,
+                p.mean_ar,
+                s.mean_ar
+            );
+        }
+        match &first {
+            None => first = Some(par),
+            Some(f) => {
+                assert_eq!(
+                    f.makespan.to_bits(),
+                    par.makespan.to_bits(),
+                    "{label}/t={t}: thread count changed the makespan"
+                );
+                for (a, b) in f.jobs.iter().zip(&par.jobs) {
+                    assert_eq!(
+                        a.duration.to_bits(),
+                        b.duration.to_bits(),
+                        "{label}/t={t}/{}: thread count changed the duration",
+                        a.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_ring_matches_typed_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_parallel_equiv(&par_family_spec(n, CollectiveAlgo::NicRing), &format!("ring/n={n}"));
+    }
+}
+
+#[test]
+fn parallel_binomial_matches_typed_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_parallel_equiv(
+            &par_family_spec(n, CollectiveAlgo::NicBinomial),
+            &format!("binomial/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn parallel_rabenseifner_matches_typed_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_parallel_equiv(
+            &par_family_spec(n, CollectiveAlgo::NicRabenseifner),
+            &format!("rabenseifner/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn parallel_hierarchical_matches_typed_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_parallel_equiv(
+            &par_family_spec(n, CollectiveAlgo::NicHierarchical),
+            &format!("hierarchical/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn parallel_inswitch_matches_typed_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_parallel_equiv(
+            &par_family_spec(n, CollectiveAlgo::SwitchReduce),
+            &format!("in-switch/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn parallel_multi_tenant_faulty_scenario_matches_typed() {
+    // two jobs sharing nodes under straggler and degraded-link
+    // injection, on a 2-leaf fabric so ring traffic crosses partitions
+    // while the host job's rounds run on the coordinator
+    let sys = SystemParams::smartnic_40g();
+    let w = Workload {
+        layers: 3,
+        hidden: 256,
+        batch_per_node: 32,
+    };
+    let topo = Topology::leaf_spine(2, 4, 4.0);
+    let spec = ClusterSpec::new(sys, 8)
+        .with_topology(topo)
+        .with_faults(ClusterFaults::none().with_straggler(2, 0.5).with_degraded_link(5, 0.25))
+        .with_job(JobSpec::new(
+            "nic",
+            SystemKind::SmartNic { bfp: true },
+            w,
+            topo.contiguous_ranks(8),
+        ))
+        .with_job(
+            JobSpec::new(
+                "host",
+                SystemKind::BaselineOverlapped { scheme: Scheme::Ring, comm_cores: 2 },
+                w,
+                vec![1, 3, 5, 7],
+            )
+            .starting_at(2e-4),
+        );
+    assert_parallel_equiv(&spec, "parallel-multi-tenant");
+}
+
+#[test]
+fn parallel_engine_is_deterministic_run_to_run() {
+    // same spec, same thread count: bit-identical results
+    let spec = par_family_spec(128, CollectiveAlgo::NicRing);
+    let a = run_scenario_on(&spec, EngineKind::Parallel { threads: 4 });
+    let b = run_scenario_on(&spec, EngineKind::Parallel { threads: 4 });
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "nondeterministic parallel makespan");
+    assert_eq!(
+        a.jobs[0].duration.to_bits(),
+        b.jobs[0].duration.to_bits(),
+        "nondeterministic parallel job duration"
+    );
 }
 
 #[test]
