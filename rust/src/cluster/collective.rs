@@ -711,6 +711,16 @@ pub(super) fn ring_segment_final(
 /// observes the true maximum completion time (the `AcqRel` decrement's
 /// release sequence orders all earlier `fetch_max` calls before the
 /// final load) and posts the global completion event at it.
+///
+/// *Which* partition wins the countdown race varies with thread
+/// interleaving, but the emitted `(t_done, CollectiveComplete{cid})`
+/// pair does not, and the barrier merge orders same-time events by
+/// [`PartitionedWorld::merge_key`] — not by emitting partition — so the
+/// coordinator's execution order is identical across thread counts.
+/// The zero-delay emission (`t_done` can equal `now`) is the
+/// coordinator carve-out documented on the `PartitionedWorld` contract.
+///
+/// [`PartitionedWorld::merge_key`]: crate::netsim::engine::PartitionedWorld::merge_key
 pub(super) fn ring_writeback_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     let now = sim.now();
     let r = match &st.collectives[cid].state {
@@ -867,7 +877,9 @@ pub(super) fn planned_op_arrive(
         sim.schedule_at(done, Event::PlannedOpDone { cid: cid as u32 });
     } else {
         // always via the event queue: the arrival runs on `dst`'s leaf
-        // partition, the round barrier on the coordinator
+        // partition, the round barrier on the coordinator.  The zero
+        // delay is legal only because PlannedOpDone routes to the
+        // coordinator — the carve-out on the PartitionedWorld contract.
         sim.schedule_at(sim.now(), Event::PlannedOpDone { cid: cid as u32 });
     }
 }

@@ -248,7 +248,23 @@ pub struct PartitionMap {
     leaves: u32,
 }
 
-impl PartitionedWorld for ClusterState {
+// SAFETY (the `PartitionedWorld` routing contract):
+//
+// * `route` confines every node-local pipeline stage to the leaf
+//   partition owning its `node`/`dst`; those handlers touch only that
+//   node's servers (Tx, PCIe, adder, comm core), the leaf's
+//   uplink/downlink bundles (`Fabric::hop_split` books uplink resources
+//   of the *source* leaf only; `hop_deliver` the *destination* leaf's
+//   only), and per-collective counters that are either per-rank slots or
+//   atomics (`RingState::{pending_writebacks,last_writeback}`).
+// * Every cross-leaf path re-enters another partition through
+//   `RingXArrive` at >= one switch-hop latency, and every
+//   coordinator-fanned chain re-enters at >= one PCIe latency — i.e. >=
+//   `lookahead()`.
+// * All remaining variants route to the coordinator; their zero-delay
+//   emissions (`RingWritebackDone` completion, zero-reduce
+//   `PlannedOpDone`) are the documented coordinator carve-out.
+unsafe impl PartitionedWorld for ClusterState {
     type Map = PartitionMap;
 
     fn partition_map(&self) -> PartitionMap {
@@ -290,8 +306,59 @@ impl PartitionedWorld for ClusterState {
     /// (spine crossings, planned-round deliveries) or one PCIe latency
     /// (the ring's step-0 DMA fetches issued at collective start), so the
     /// minimum of the two bounds how far a partition may safely run ahead.
+    /// Partition-to-*coordinator* emissions are exempt (the carve-out in
+    /// the [`PartitionedWorld`] contract): `ring_writeback_done` and
+    /// zero-reduce `planned_op_arrive` post completion events at the
+    /// current time, which is legal because the coordinator executes them
+    /// at the window barrier and their downstream effects re-enter
+    /// partitions only through chains at least one lookahead long.
     fn lookahead(&self) -> Time {
         self.sys.net.hop_latency.min(self.sys.nic.pcie_latency)
+    }
+
+    /// Thread-independent barrier tie-break: the variant tag plus every
+    /// identifying index, packed so that any two same-time deferred
+    /// events which are *not* interchangeable (identical handler effect)
+    /// compare differently no matter which worker emitted them.  The one
+    /// emission whose carrier genuinely races is the ring's
+    /// `CollectiveComplete`, posted by whichever rank retires the last
+    /// writeback — its key depends only on `cid`.
+    fn merge_key(_map: &PartitionMap, event: &Event) -> u128 {
+        // tag(8) | cid(24) | f1(32) | f2(32) | f3(32): cid is an index
+        // into `ClusterState::collectives` (nowhere near 2^24), and every
+        // per-event index (rank, node, step, seg, group) fits u32.
+        const fn pack(tag: u8, cid: u32, f1: u32, f2: u32, f3: u32) -> u128 {
+            ((tag as u128) << 120)
+                | (((cid & 0x00ff_ffff) as u128) << 96)
+                | ((f1 as u128) << 64)
+                | ((f2 as u128) << 32)
+                | (f3 as u128)
+        }
+        match *event {
+            Event::JobWake { job } => pack(0, 0, job, 0, 0),
+            Event::CollectiveStart { cid } => pack(1, cid, 0, 0, 0),
+            Event::CollectiveComplete { cid } => pack(2, cid, 0, 0, 0),
+            Event::RingSend { cid, step, rank, seg, .. } => pack(3, cid, step, rank, seg),
+            Event::RingRecv { cid, step, rank, seg, .. } => pack(4, cid, step, rank, seg),
+            Event::RingReduce { cid, step, rank, seg, .. } => pack(5, cid, step, rank, seg),
+            Event::RingFinal { cid, step, rank, seg, .. } => pack(6, cid, step, rank, seg),
+            Event::RingXArrive { cid, step, rank, seg, .. } => pack(7, cid, step, rank, seg),
+            Event::RingWritebackDone { cid, node } => pack(8, cid, node, 0, 0),
+            Event::PlannedFetchDone { cid } => pack(9, cid, 0, 0, 0),
+            Event::PlannedOpArrive { cid, dst, reduce_elems } => {
+                let bits = reduce_elems.to_bits();
+                pack(10, cid, dst, (bits >> 32) as u32, bits as u32)
+            }
+            Event::PlannedOpDone { cid } => pack(11, cid, 0, 0, 0),
+            Event::PlannedWbDone { cid } => pack(12, cid, 0, 0, 0),
+            Event::SwitchContribute { cid, seg, rank } => pack(13, cid, seg, rank, 0),
+            Event::SwitchFoldDone { cid, seg, group } => pack(14, cid, seg, group, 0),
+            Event::SwitchSpineDone { cid, seg } => pack(15, cid, seg, 0, 0),
+            Event::SwitchMulticast { cid, seg, group } => pack(16, cid, seg, group, 0),
+            Event::SwitchDelivered { cid, seg, rank } => pack(17, cid, seg, rank, 0),
+            Event::SwitchRankDone { cid, seg } => pack(18, cid, seg, 0, 0),
+            Event::HostRoundDone { cid } => pack(19, cid, 0, 0, 0),
+        }
     }
 }
 

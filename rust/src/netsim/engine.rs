@@ -27,8 +27,10 @@
 //! calendars advance independently inside each window on
 //! `std::thread::scope` workers; cross-partition and coordinator-bound
 //! events are deferred into bounded channels and merged at the window
-//! barrier in a deterministic `(time, partition)` order, so the result
-//! is bit-identical for any thread count.  See the "Parallel engine"
+//! barrier in a deterministic `(time, merge-key)` order — the key is a
+//! thread-independent function of the event itself, so the result is
+//! bit-identical for any thread count even when *which* worker emits an
+//! event is decided by an atomic race.  See the "Parallel engine"
 //! section of `docs/ARCHITECTURE.md` for the safety argument.
 //!
 //! The PR-3 boxed-closure representation and the `Sim::schedule_closure`
@@ -60,6 +62,7 @@
 //! ```
 
 use super::Time;
+use std::cell::UnsafeCell;
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
 
@@ -85,17 +88,37 @@ pub const GLOBAL_PARTITION: u32 = u32::MAX;
 /// A [`World`] that additionally knows how to shard itself for the
 /// conservative parallel executive ([`Sim::run_parallel`]).
 ///
-/// The contract the routing must uphold (the engine's schedule-into-the-
-/// past panic is the runtime detector for violations):
+/// # Safety
+///
+/// The *safe* function [`Sim::run_parallel`] executes different
+/// partitions' events concurrently against one shared state with no
+/// synchronization, deriving the disjointness of their accesses from
+/// the routing contract below — an implementation that breaks the
+/// contract causes a data race, not merely wrong numbers, which is why
+/// the trait is `unsafe` to implement.  The engine's
+/// schedule-into-the-past panic and the barrier's lookahead
+/// debug-assertion are runtime *detectors* for violations, not the
+/// proof.  Implementors must guarantee:
 ///
 /// * an event routed to partition `p` must, when handled, mutate only
-///   state owned by `p` (plus state no other partition's events touch);
-/// * any event a handler schedules into a *different* partition must be
+///   state owned by `p` (plus state no other partition's events touch;
+///   atomics are fine);
+/// * any event a handler schedules into a *different partition* must be
 ///   at least [`PartitionedWorld::lookahead`] seconds in the future;
-/// * events routed to [`GLOBAL_PARTITION`] may touch anything — they run
-///   on the coordinator thread, never concurrently with partition
-///   workers.
-pub trait PartitionedWorld: World {
+/// * events routed to [`GLOBAL_PARTITION`] may touch anything and may
+///   be scheduled with **any** delay >= 0 (the coordinator carve-out):
+///   they run on the coordinator thread, never concurrently with
+///   partition workers.  The carve-out is sound because the
+///   coordinator's head clamps every window end (no partition drains
+///   past a pending global event) and the coordinator's clock never
+///   passes the earliest un-drained partition event, so a merged global
+///   emission is never in the coordinator's past.  Mind the ordering
+///   consequence: a global event emitted mid-window executes only at
+///   the barrier, after sibling partitions have drained events *later*
+///   than it — its effects must therefore feed back into partitions
+///   only through future events, which the first two rules already
+///   force to be at least one lookahead away.
+pub unsafe trait PartitionedWorld: World {
     /// Immutable routing table captured once per run (cheap to copy into
     /// every worker's router closure).
     type Map: Copy + Send + 'static;
@@ -113,6 +136,17 @@ pub trait PartitionedWorld: World {
     /// cross-partition scheduling path.  Zero degrades the executive to
     /// same-timestamp cohort draining (still correct, less parallel).
     fn lookahead(&self) -> Time;
+
+    /// Thread-independent tie-break for same-time deferred emissions at
+    /// the window barrier.  Which *partition* carries an emission can
+    /// itself be interleaving-dependent — e.g. an atomic countdown where
+    /// whichever rank decrements to zero posts the completion event — so
+    /// the merge orders equal-time events by this key, never by source
+    /// partition index.  Two distinct events that can legally share a
+    /// timestamp must either map to distinct keys or be interchangeable
+    /// (identical handler effect); otherwise the run is not reproducible
+    /// across thread counts.
+    fn merge_key(map: &Self::Map, event: &Self::Event) -> u128;
 }
 
 /// Per-runner counters of a parallel run ([`Sim::partition_stats`]):
@@ -416,17 +450,31 @@ enum QueueImpl<W: World> {
 // The executive
 // ---------------------------------------------------------------------
 
-/// Raw shared-state handle for window workers.  Workers derive disjoint
-/// access from the [`PartitionedWorld`] routing contract: inside a
-/// window, each partition's events touch only that partition's state,
-/// and the coordinator never runs concurrently with workers.
-struct StatePtr<W>(*mut W);
+/// Shared-state handle for window workers.  The coordinator's exclusive
+/// borrow is reinterpreted as a shared [`UnsafeCell`] reference for the
+/// span of one window, so no worker ever materializes a long-lived
+/// `&mut W`: [`Sim::run_window_shared`] forms an exclusive reference
+/// only for the duration of a single handler call, and the accesses
+/// those calls make are disjoint across workers by the (`unsafe`)
+/// [`PartitionedWorld`] routing contract.
+struct SharedState<'a, W>(&'a UnsafeCell<W>);
 
-// SAFETY: the pointer is only dereferenced by window workers, whose
-// access is disjoint by the PartitionedWorld routing contract, and the
-// referent outlives the thread scope.
-unsafe impl<W: Send> Send for StatePtr<W> {}
-unsafe impl<W: Send> Sync for StatePtr<W> {}
+impl<W> Clone for SharedState<'_, W> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<W> Copy for SharedState<'_, W> {}
+
+// SAFETY: the cell is dereferenced only inside `run_window_shared`,
+// whose per-handler accesses are disjoint across concurrent workers by
+// the `PartitionedWorld` routing contract; the coordinator is parked at
+// the thread-scope join while workers run, and the referent outlives
+// the scope.  `Send` is what the worker closures need (each captures
+// its own copy); `W: Send` bounds both, as handing the handle to
+// another thread hands it mutable access to `W`.
+unsafe impl<W: Send> Send for SharedState<'_, W> {}
+unsafe impl<W: Send> Sync for SharedState<'_, W> {}
 
 /// The simulation executive.  `W` is the simulation world: its state is
 /// threaded by `&mut` into every event, so handlers never capture
@@ -679,6 +727,48 @@ impl<W: World> Sim<W> {
         }
     }
 
+    /// [`Sim::run_window`] for parallel window workers: the state is
+    /// shared behind an [`UnsafeCell`], and an exclusive reference is
+    /// materialized per handler call only — no `&mut W` is live across
+    /// two events, let alone across the whole window, while sibling
+    /// workers run.
+    ///
+    /// # Safety
+    ///
+    /// Every concurrent accessor of the shared state must be another
+    /// `run_window_shared` worker draining a *different* partition of a
+    /// [`PartitionedWorld`] whose (unsafe-trait) routing contract holds,
+    /// and the referent must outlive the call.
+    unsafe fn run_window_shared(
+        &mut self,
+        shared: SharedState<'_, W>,
+        end: Time,
+        inclusive: bool,
+    ) {
+        while let Some(head) = self.peek_time() {
+            let past_end = if inclusive { head > end } else { head >= end };
+            if past_end {
+                break;
+            }
+            let Some((time, stored)) = self.pop_next() else {
+                break;
+            };
+            debug_assert!(time >= self.now);
+            self.now = time;
+            self.events_run += 1;
+            // SAFETY: exclusive for the span of this one handler call —
+            // sibling workers' handlers touch disjoint state by the
+            // routing contract, and the reference dies before the next
+            // pop.
+            let state = unsafe { &mut *shared.0.get() };
+            match stored {
+                Stored::Event(event) => W::handle(self, state, event),
+                #[cfg(any(test, feature = "testing"))]
+                Stored::Closure(action) => action(self, state),
+            }
+        }
+    }
+
     /// Execute the single earliest event.  Returns false when empty.
     pub fn step(&mut self, state: &mut W) -> bool {
         match self.pop_next() {
@@ -728,9 +818,12 @@ impl<W: World> Sim<W> {
     ///    affect another partition earlier than the window's end.
     ///
     /// Cross-partition/coordinator emissions are deferred during the
-    /// window and merged at the barrier in ascending `(time, partition)`
-    /// order, so the executed order — and therefore every virtual-time
-    /// result — is identical for any `threads`, including 1.
+    /// window and merged at the barrier in ascending
+    /// `(time, merge-key)` order — [`PartitionedWorld::merge_key`] is a
+    /// function of the event alone, so the executed order, and
+    /// therefore every virtual-time result, is identical for any
+    /// `threads` (including 1) even when which partition carries an
+    /// emission is decided by an atomic race.
     pub fn run_parallel(&mut self, state: &mut W, threads: usize) -> Time
     where
         W: PartitionedWorld + Send,
@@ -818,20 +911,27 @@ impl<W: World> Sim<W> {
                 }
             } else {
                 let chunk = parts.len().div_ceil(workers);
-                let shared = StatePtr(state as *mut W);
+                // SAFETY of the cast: `UnsafeCell<W>` is
+                // `repr(transparent)` over `W`, so reborrowing the
+                // exclusive reference as a shared cell reference is the
+                // standard `UnsafeCell::from_mut` construction.  It
+                // routes all further access through raw pointers: any
+                // `&mut W` is confined to a single handler call inside
+                // `run_window_shared`, so no two live `&mut W` span
+                // each other across threads.
+                let shared = SharedState(unsafe { &*(state as *mut W as *const UnsafeCell<W>) });
                 std::thread::scope(|scope| {
                     for slice in parts.chunks_mut(chunk) {
-                        let shared = &shared;
                         scope.spawn(move || {
-                            // SAFETY: every worker holds the pointer to
-                            // the same state, but the PartitionedWorld
-                            // routing contract guarantees the events it
-                            // executes touch only its own partitions'
-                            // state; the coordinator is parked at the
-                            // scope join.
-                            let st = unsafe { &mut *shared.0 };
                             for part in slice.iter_mut() {
-                                part.run_window(st, end, inclusive);
+                                // SAFETY: concurrent workers drain
+                                // disjoint partition slices of an
+                                // `unsafe impl PartitionedWorld` world
+                                // (whose routing contract guarantees
+                                // their handlers touch disjoint state),
+                                // and the coordinator is parked at the
+                                // scope join until all workers finish.
+                                unsafe { part.run_window_shared(shared, end, inclusive) };
                             }
                         });
                     }
@@ -839,18 +939,34 @@ impl<W: World> Sim<W> {
             }
 
             // Barrier: merge the window's cross-partition emissions in
-            // ascending time; the sort is stable, so ties keep partition
-            // index order — deterministic for any thread count.
-            let mut moved: Vec<(Time, W::Event)> = Vec::new();
+            // ascending (time, merge-key) order.  The key — a function
+            // of the event alone — breaks same-time ties, never the
+            // source partition index: which partition carries an
+            // emission can itself be interleaving-dependent (e.g. the
+            // ring's completion event is posted by whichever rank
+            // retires the last writeback), so source order would not
+            // reproduce across thread counts.
+            let mut moved: Vec<(Time, u128, W::Event)> = Vec::new();
             for part in parts.iter_mut() {
-                moved.append(&mut part.deferred);
+                for (time, event) in part.deferred.drain(..) {
+                    moved.push((time, W::merge_key(&map, &event), event));
+                }
             }
-            moved.sort_by(|a, b| a.0.total_cmp(&b.0));
-            for (time, event) in moved {
+            moved.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for (time, _key, event) in moved {
                 let p = W::route(&map, &event);
                 if p == GLOBAL_PARTITION {
+                    // coordinator carve-out: any delay >= 0 is legal
                     self.schedule_at(time, event);
                 } else {
+                    // the PartitionedWorld lookahead contract: a
+                    // partition-bound emission from inside the window
+                    // must land at or past the window's end
+                    debug_assert!(
+                        time >= end,
+                        "cross-partition event violates the lookahead contract: \
+                         scheduled at {time}, inside the window ending at {end}"
+                    );
                     parts[p as usize].schedule_at(time, event);
                 }
             }
@@ -1145,7 +1261,10 @@ mod tests {
         }
     }
 
-    impl PartitionedWorld for Sharded {
+    // SAFETY: `route` sends each event to the partition whose log it
+    // mutates, global fan-outs re-enter partitions >= LOOKAHEAD in the
+    // future, and same-partition children never leave their shard.
+    unsafe impl PartitionedWorld for Sharded {
         type Map = ();
         fn partition_map(&self) -> Self::Map {}
         fn partition_count(_map: &Self::Map) -> usize {
@@ -1156,6 +1275,9 @@ mod tests {
         }
         fn lookahead(&self) -> Time {
             LOOKAHEAD
+        }
+        fn merge_key(_map: &Self::Map, event: &Self::Event) -> u128 {
+            u128::from(*event)
         }
     }
 

@@ -146,6 +146,7 @@ fn bench_engine_schema_is_pinned() {
         "config/scaling_nodes".to_string(),
         "config/max_events".to_string(),
         "config/parallel_speedup_gate".to_string(),
+        "config/parallel_speedup_floor".to_string(),
         "config/parallel_gate_nodes".to_string(),
         "config/parallel_gate_threads".to_string(),
         "gates/ring_gate_speedup".to_string(),
@@ -154,6 +155,7 @@ fn bench_engine_schema_is_pinned() {
         "gates/parallel_worst_virtual_err".to_string(),
         "gates/parallel_scaling_speedup".to_string(),
         "gates/parallel_scaling_pass".to_string(),
+        "gates/parallel_scaling_floor_pass".to_string(),
         "gates/max_nodes_completed".to_string(),
         "gates/scaling_max_nodes_completed".to_string(),
     ];
@@ -204,6 +206,7 @@ fn bench_engine_schema_is_pinned() {
     assert_eq!(gates.get("speedup_pass"), Some(&Json::Null));
     assert_eq!(gates.get("parallel_scaling_speedup"), Some(&Json::Null));
     assert_eq!(gates.get("parallel_scaling_pass"), Some(&Json::Null));
+    assert_eq!(gates.get("parallel_scaling_floor_pass"), Some(&Json::Null));
     assert!(gates.get("worst_virtual_err").unwrap().as_f64().unwrap() <= 1e-9);
     assert!(gates.get("parallel_worst_virtual_err").unwrap().as_f64().unwrap() <= 1e-9);
     assert_eq!(gates.get("max_nodes_completed").unwrap().as_usize(), Some(8));
