@@ -275,7 +275,7 @@ mod tests {
             let (i, &xm) = x
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                .max_by(|a, b| a.1.abs().total_cmp(&b.1.abs()))
                 .unwrap();
             let rel = (q[i] - xm).abs() / xm.abs();
             assert!(rel <= 2.0f32.powi(-7) + 1e-6, "rel {rel} at {xm}");

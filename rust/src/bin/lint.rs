@@ -1,0 +1,350 @@
+//! `smartnic-lint` — the project's determinism/soundness lint pass.
+//!
+//! Scans `rust/src` for constructs that have historically broken the
+//! simulator's determinism or soundness guarantees (docs/INVARIANTS.md,
+//! "Correctness tooling").  Entirely offline, no dependencies; CI runs it
+//! and fails on any finding not justified in `rust/lint-allow.txt`.
+//!
+//! Rules (each finding names one):
+//!
+//! * `float-ord` — raw `f64` ordering (`partial_cmp`, or `sort_by`
+//!   without `total_cmp`) anywhere outside `netsim/engine.rs`.  NaN-blind
+//!   comparators panic or reorder nondeterministically; the engine owns
+//!   the one vetted `(time, seq)` comparator, everything else must use
+//!   `total_cmp`.
+//! * `undocumented-unsafe` — an `unsafe` block or `unsafe impl` whose
+//!   contiguous preceding comment block lacks a `SAFETY:` line.
+//! * `hash-iteration` — `HashMap`/`HashSet` in the simulation modules
+//!   (`netsim/`, `cluster/`).  Iteration order is randomized per process,
+//!   so any event emission fed from it diverges run to run; the sim uses
+//!   index-addressed `Vec`s instead.
+//! * `non-finite-schedule` — a `schedule` call whose argument expression
+//!   mentions `INFINITY`/`NAN` on the call line.  Non-finite times poison
+//!   the calendar's total order (the checked executive catches the
+//!   dynamic case; this catches the static one).
+//! * `wall-clock` — `Instant::now`/`SystemTime::now` in the simulation
+//!   modules.  Virtual time must never observe the host clock.
+//!
+//! Test code (everything from the first `#[cfg(test)]` line down) is
+//! exempt: negative tests deliberately construct violations.
+//!
+//! Output: one line per finding, a summary, and a `LINT.json` report;
+//! exit 1 on un-allowlisted findings, 2 on stale allowlist entries.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const RULES: [&str; 5] = [
+    "float-ord",
+    "undocumented-unsafe",
+    "hash-iteration",
+    "non-finite-schedule",
+    "wall-clock",
+];
+
+/// Modules whose virtual-time discipline the sim-scoped rules guard.
+const SIM_SCOPES: [&str; 2] = ["netsim/", "cluster/"];
+
+/// The one file allowed to order raw event times: it owns the vetted
+/// `(time, seq)` calendar comparator.
+const FLOAT_ORD_EXEMPT: &str = "netsim/engine.rs";
+
+struct Finding {
+    path: String,
+    line: usize,
+    rule: &'static str,
+    excerpt: String,
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("rust/src");
+    let mut allow_path = PathBuf::from("rust/lint-allow.txt");
+    let mut out_path = PathBuf::from("LINT.json");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = PathBuf::from(next_arg(&mut args, "--root")),
+            "--allow" => allow_path = PathBuf::from(next_arg(&mut args, "--allow")),
+            "--out" => out_path = PathBuf::from(next_arg(&mut args, "--out")),
+            "--help" | "-h" => {
+                println!(
+                    "usage: smartnic-lint [--root rust/src] [--allow rust/lint-allow.txt] \
+                     [--out LINT.json]"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown option '{other}' (see --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let mut files = Vec::new();
+    collect_rs_files(&root, &mut files);
+    files.sort();
+    if files.is_empty() {
+        eprintln!("smartnic-lint: no .rs files under {}", root.display());
+        return ExitCode::from(2);
+    }
+
+    let mut findings = Vec::new();
+    for path in &files {
+        match std::fs::read_to_string(path) {
+            Ok(text) => scan_file(path, &text, &mut findings),
+            Err(e) => {
+                eprintln!("smartnic-lint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let allow = match load_allowlist(&allow_path) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("smartnic-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut used = vec![false; allow.len()];
+    let mut reported = Vec::new();
+    let mut allowed = 0usize;
+    for f in findings {
+        let key = (f.path.as_str(), f.rule);
+        if let Some(i) = allow.iter().position(|(p, r)| (p.as_str(), r.as_str()) == key) {
+            used[i] = true;
+            allowed += 1;
+        } else {
+            reported.push(f);
+        }
+    }
+
+    for f in &reported {
+        println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.excerpt);
+    }
+    let stale: Vec<&(String, String)> =
+        allow.iter().zip(&used).filter(|(_, &u)| !u).map(|(e, _)| e).collect();
+    for (p, r) in &stale {
+        eprintln!("stale allowlist entry (no matching finding): {p}:{r}");
+    }
+
+    if let Err(e) = std::fs::write(&out_path, report_json(&files, &reported, allowed)) {
+        eprintln!("smartnic-lint: cannot write {}: {e}", out_path.display());
+        return ExitCode::from(2);
+    }
+    println!(
+        "smartnic-lint: {} file(s), {} finding(s), {} allowlisted -> {}",
+        files.len(),
+        reported.len(),
+        allowed,
+        out_path.display()
+    );
+    if !stale.is_empty() {
+        ExitCode::from(2)
+    } else if !reported.is_empty() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn next_arg(args: &mut impl Iterator<Item = String>, name: &str) -> String {
+    args.next().unwrap_or_else(|| {
+        eprintln!("{name} needs a value");
+        std::process::exit(2);
+    })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            // the lint binary itself quotes the patterns it searches for
+            if path.file_name().is_some_and(|n| n == "bin") {
+                continue;
+            }
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Strip an inline `//` comment (good enough for matching: a pattern
+/// hidden this way could only mask a finding on its own line, never
+/// invent one).
+fn code_of(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn scan_file(path: &Path, text: &str, findings: &mut Vec<Finding>) {
+    let rel = path.to_string_lossy().replace('\\', "/");
+    let in_sim_scope = SIM_SCOPES.iter().any(|s| rel.contains(s));
+    let float_ord_applies = !rel.ends_with(FLOAT_ORD_EXEMPT);
+    let lines: Vec<&str> = text.lines().collect();
+    for (i, raw) in lines.iter().enumerate() {
+        let trimmed = raw.trim_start();
+        // negative tests construct violations on purpose; everything from
+        // the first test-only region down is out of scope
+        if trimmed.starts_with("#[cfg(test)]") {
+            break;
+        }
+        if trimmed.starts_with("//") {
+            continue;
+        }
+        let code = code_of(raw);
+        let mut hit = |rule: &'static str| {
+            findings.push(Finding {
+                path: rel.clone(),
+                line: i + 1,
+                rule,
+                excerpt: raw.trim().chars().take(90).collect(),
+            });
+        };
+        if float_ord_applies
+            && (code.contains(".partial_cmp(")
+                || (code.contains(".sort_by(") && !code.contains("total_cmp")))
+        {
+            hit("float-ord");
+        }
+        if (code.contains("unsafe {") || code.contains("unsafe impl"))
+            && !safety_comment_above(&lines, i)
+        {
+            hit("undocumented-unsafe");
+        }
+        if in_sim_scope && (code.contains("HashMap") || code.contains("HashSet")) {
+            hit("hash-iteration");
+        }
+        if code.contains(".schedule") && (code.contains("INFINITY") || code.contains("NAN")) {
+            hit("non-finite-schedule");
+        }
+        if in_sim_scope && (code.contains("Instant::now") || code.contains("SystemTime::now")) {
+            hit("wall-clock");
+        }
+    }
+}
+
+/// Walk the contiguous comment block directly above line `i` (skipping
+/// attribute lines) and report whether it contains a `SAFETY:` marker.
+fn safety_comment_above(lines: &[&str], i: usize) -> bool {
+    if lines.get(i).is_some_and(|l| l.contains("SAFETY:")) {
+        return true;
+    }
+    let mut k = i;
+    while k > 0 {
+        k -= 1;
+        let t = lines[k].trim_start();
+        if t.starts_with("//") {
+            if t.contains("SAFETY:") {
+                return true;
+            }
+        } else if t.starts_with("#[") || t.starts_with("#![") {
+            // attributes may sit between the comment and the item
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// `path:rule  # justification` per line; `#` lines and blanks ignored.
+/// Every entry must carry an inline justification.
+fn load_allowlist(path: &Path) -> Result<Vec<(String, String)>, String> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(format!("cannot read {}: {e}", path.display())),
+    };
+    let mut entries = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (entry, justification) = match line.split_once('#') {
+            Some((e, j)) if !j.trim().is_empty() => (e.trim(), j.trim()),
+            _ => {
+                return Err(format!(
+                    "{}:{}: allowlist entry needs an inline '# justification'",
+                    path.display(),
+                    i + 1
+                ));
+            }
+        };
+        let _ = justification;
+        let Some((p, rule)) = entry.rsplit_once(':') else {
+            return Err(format!("{}:{}: expected 'path:rule'", path.display(), i + 1));
+        };
+        if !RULES.contains(&rule.trim()) {
+            return Err(format!(
+                "{}:{}: unknown rule '{}' (known: {})",
+                path.display(),
+                i + 1,
+                rule.trim(),
+                RULES.join(", ")
+            ));
+        }
+        entries.push((p.trim().to_string(), rule.trim().to_string()));
+    }
+    if entries.len() > 5 {
+        return Err(format!(
+            "{}: {} entries — the allowlist is capped at 5; fix the code instead",
+            path.display(),
+            entries.len()
+        ));
+    }
+    Ok(entries)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn report_json(files: &[PathBuf], reported: &[Finding], allowed: usize) -> String {
+    let mut per_rule = String::new();
+    for (k, rule) in RULES.iter().enumerate() {
+        let n = reported.iter().filter(|f| f.rule == *rule).count();
+        if k > 0 {
+            per_rule.push_str(", ");
+        }
+        let _ = write!(per_rule, "\"{rule}\": {n}");
+    }
+    let mut list = String::new();
+    for (k, f) in reported.iter().enumerate() {
+        if k > 0 {
+            list.push_str(", ");
+        }
+        let _ = write!(
+            list,
+            "{{\"path\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"excerpt\": \"{}\"}}",
+            json_escape(&f.path),
+            f.line,
+            f.rule,
+            json_escape(&f.excerpt)
+        );
+    }
+    format!(
+        "{{\n  \"files_scanned\": {},\n  \"findings\": {},\n  \"allowlisted\": {},\n  \
+         \"per_rule\": {{{per_rule}}},\n  \"findings_list\": [{list}]\n}}\n",
+        files.len(),
+        reported.len(),
+        allowed
+    )
+}

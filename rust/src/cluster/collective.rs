@@ -234,6 +234,48 @@ impl Collective {
         self.t_done.map(|d| d - self.t_post)
     }
 
+    /// The exactly-once reduction ledger (`docs/INVARIANTS.md`,
+    /// `reduce-conservation`): f32 elements this collective's executor
+    /// must push through `(node adders, switch aggregation engines)` by
+    /// completion.  Ring: every reduce-scatter step folds one segment on
+    /// every rank — `(n−1)·n·segs·seg_elems` adder elements.  Planned
+    /// rounds: exactly the ops' `reduce_elems`.  In-switch passes count
+    /// engine *bandwidth* (table write-ins included): every member
+    /// streams the full vector through its leaf engine, and a spanning
+    /// pass additionally folds each group's aggregate at the spine.
+    /// Host/noop collectives fold nothing on either pool.
+    #[must_use]
+    pub fn expected_reduce_served(&self) -> (f64, f64) {
+        let n = self.ranks.len() as f64;
+        match &self.state {
+            AlgoState::Noop | AlgoState::Host(_) => (0.0, 0.0),
+            AlgoState::Ring(r) => {
+                let segs = r.plan.segs_per_chunk as f64;
+                ((n - 1.0) * n * segs * r.plan.seg_elems, 0.0)
+            }
+            AlgoState::Planned(p) => {
+                let mut adders = 0.0;
+                let mut engines = 0.0;
+                for phase in &p.phases {
+                    match phase {
+                        Phase::Rounds(rounds) => {
+                            adders +=
+                                rounds.iter().flatten().map(|op| op.reduce_elems).sum::<f64>();
+                        }
+                        Phase::SwitchReduce { elems, groups, .. } => {
+                            let members: usize = groups.iter().map(Vec::len).sum();
+                            engines += members as f64 * elems;
+                            if groups.len() > 1 {
+                                engines += groups.len() as f64 * elems;
+                            }
+                        }
+                    }
+                }
+                (adders, engines)
+            }
+        }
+    }
+
     fn ring_mut(&mut self) -> &mut RingState {
         match &mut self.state {
             AlgoState::Ring(r) => r,
@@ -1387,6 +1429,9 @@ pub(super) fn host_round_done(sim: &mut ClusterSim, st: &mut ClusterState, cid: 
 }
 
 #[cfg(test)]
+// exact float equalities are deliberate: byte/element bookkeeping is
+// exact arithmetic the tests pin bit-for-bit
+#[allow(clippy::float_cmp)]
 mod tests {
     use super::*;
 

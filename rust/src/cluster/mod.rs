@@ -27,9 +27,15 @@
 //! [`netsim::fabric::Fabric`]: crate::netsim::fabric::Fabric
 //! [`collective::timing::scheme_rounds`]: crate::collective::timing::scheme_rounds
 
+// Only this file's `unsafe impl PartitionedWorld` (below) may contain
+// `unsafe` in the cluster subtree; the executors and drivers forbid it.
+#[forbid(unsafe_code)]
 pub mod collective;
+#[forbid(unsafe_code)]
 pub mod job;
+#[forbid(unsafe_code)]
 pub mod planner;
+#[forbid(unsafe_code)]
 pub mod scenario;
 
 use crate::collective::Scheme;
@@ -248,7 +254,7 @@ pub struct PartitionMap {
     leaves: u32,
 }
 
-// SAFETY (the `PartitionedWorld` routing contract):
+// SAFETY: the `PartitionedWorld` routing contract holds —
 //
 // * `route` confines every node-local pipeline stage to the leaf
 //   partition owning its `node`/`dst`; those handlers touch only that

@@ -13,6 +13,7 @@
 
 use super::job::{JobRuntime, JobSpec};
 use super::{ClusterSim, ClusterState, Event};
+use crate::netsim::audit::{AuditReport, AuditViolation};
 use crate::netsim::engine::{EngineKind, PartitionStats, Sim};
 use crate::netsim::fabric::Fabric;
 use crate::netsim::topology::Topology;
@@ -97,6 +98,10 @@ pub struct ScenarioOutput {
     /// entries 1.. the leaf partitions); empty on sequential engines.
     /// Surfaces parallel load imbalance from the CLI without a profiler.
     pub partitions: Vec<PartitionStats>,
+    /// invariant-audit report of an [`EngineKind::Checked`] run (engine
+    /// dispatch checks plus the post-quiescence conservation audit);
+    /// `None` on unchecked engines.
+    pub audit: Option<AuditReport>,
 }
 
 /// What a budget-capped run (see [`run_scenario_capped`]) produces: how
@@ -163,8 +168,60 @@ fn drive(sim: &mut ClusterSim, state: &mut ClusterState, engine: EngineKind) {
         EngineKind::Parallel { threads } => {
             sim.run_parallel(state, threads);
         }
+        // audited runs take the same executive their thread count selects
+        // (0 = the sequential dispatch loop), with the audit hooks armed
+        // by `Sim::with_engine`
+        EngineKind::Checked { threads } if threads > 0 => {
+            sim.run_parallel(state, threads);
+        }
         _ => {
             sim.run(state);
+        }
+    }
+}
+
+/// Post-quiescence half of the [`EngineKind::Checked`] audit
+/// (`docs/INVARIANTS.md`): every collective completed, each gradient
+/// element was folded exactly once per peer on the pool that owns it
+/// (node adders vs. switch aggregation engines), and no fabric server
+/// holds reserved capacity past the final event time beyond its own
+/// longest single drain (a cut-through reservation legitimately outlives
+/// its delivery event by at most that much).
+fn audit_conservation(state: &ClusterState, end: Time, report: &mut AuditReport) {
+    let mut adders = 0.0;
+    let mut engines = 0.0;
+    for c in &state.collectives {
+        if c.t_done.is_none() {
+            report.record(AuditViolation::UnfinishedCollective { cid: c.id });
+        }
+        let (a, e) = c.expected_reduce_served();
+        adders += a;
+        engines += e;
+    }
+    let tol = |expected: f64| 1e-6 * expected.max(1.0);
+    let served_adders = state.fabric.adders_served();
+    if (served_adders - adders).abs() > tol(adders) {
+        report.record(AuditViolation::ReduceConservation {
+            expected: adders,
+            actual: served_adders,
+            pool: 0,
+        });
+    }
+    let served_engines = state.fabric.reduce_engines_served();
+    if (served_engines - engines).abs() > tol(engines) {
+        report.record(AuditViolation::ReduceConservation {
+            expected: engines,
+            actual: served_engines,
+            pool: 1,
+        });
+    }
+    for s in state.fabric.servers() {
+        let slack = s.max_service() + 1e-9 * end.abs().max(1.0);
+        if s.busy_until() > end + slack {
+            report.record(AuditViolation::LeakedReservation {
+                busy_until: s.busy_until(),
+                end,
+            });
         }
     }
 }
@@ -180,6 +237,10 @@ pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput
     let nodes = spec.nodes();
     let (mut sim, mut state) = init(spec, engine);
     drive(&mut sim, &mut state, engine);
+    let audit = sim.take_audit_report().map(|mut report| {
+        audit_conservation(&state, sim.now(), &mut report);
+        report
+    });
 
     let makespan = state.trace.makespan();
     let jobs: Vec<JobResult> = state
@@ -220,6 +281,7 @@ pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput
         port_util,
         peak_queue_depth: sim.peak_pending(),
         partitions: sim.partition_stats().to_vec(),
+        audit,
         trace: state.trace,
     }
 }
@@ -242,6 +304,9 @@ pub fn run_scenario_capped(spec: &ClusterSpec, engine: EngineKind, max_events: u
 }
 
 #[cfg(test)]
+// exact float equalities are deliberate: determinism tests pin
+// bit-identical virtual times across engines
+#[allow(clippy::float_cmp)]
 mod tests {
     use super::*;
     use crate::analytic::model::{iteration, SystemKind};
@@ -414,6 +479,175 @@ mod tests {
         assert!(capped.events <= full.events);
         assert!(capped.events >= 20, "budget is a floor for stopping, not a skip");
         assert!(capped.virtual_s <= full.makespan);
+    }
+
+    #[test]
+    fn checked_engine_is_bit_identical_and_audit_clean() {
+        let sys = SystemParams::smartnic_40g();
+        let w = Workload {
+            layers: 2,
+            hidden: 256,
+            batch_per_node: 32,
+        };
+        let topo = Topology::leaf_spine(2, 4, 4.0);
+        let spec = ClusterSpec::new(sys, 8).with_topology(topo).with_job(JobSpec::new(
+            "chk",
+            SystemKind::SmartNic { bfp: true },
+            w,
+            topo.contiguous_ranks(8),
+        ));
+        let plain = run_scenario(&spec);
+        assert!(plain.audit.is_none(), "unchecked engines carry no audit report");
+        for threads in [0usize, 1, 2, 4] {
+            let checked = run_scenario_on(&spec, EngineKind::Checked { threads });
+            assert_eq!(plain.events, checked.events, "threads={threads}");
+            let err = rel_err(plain.makespan, checked.makespan);
+            assert!(
+                err < 1e-9,
+                "threads={threads}: checked {} vs typed {}",
+                checked.makespan,
+                plain.makespan
+            );
+            let report = checked.audit.expect("checked run must report");
+            assert!(report.is_clean(), "threads={threads}: {}", report.summary());
+            assert_eq!(report.events_checked(), plain.events);
+        }
+    }
+
+    #[test]
+    fn checked_ring_is_clean_when_segments_do_not_divide_nodes() {
+        // regression for the writeback countdown (`pending_writebacks` =
+        // n·n·segs): at a segment count that divides neither into nor by
+        // the node count, a missed final writeback would leave the
+        // collective unfinished and surface as a structured
+        // `UnfinishedCollective` — the audit must instead come back clean
+        // and bit-identical across executives
+        let sys = SystemParams::smartnic_40g();
+        let w = Workload {
+            layers: 1,
+            hidden: 1250,
+            batch_per_node: 8,
+        };
+        let n = 6;
+        let plan =
+            crate::nic::SegmentPlan::new(sys.nic.segment_bytes, n, w.grad_elems_per_layer());
+        let segs = plan.segs_per_chunk;
+        assert!(
+            segs % n != 0 && n % segs != 0,
+            "combo must be non-dividing (n={n}, segs={segs})"
+        );
+        let spec = ClusterSpec::new(sys, n).with_job(JobSpec::new(
+            "odd",
+            SystemKind::SmartNic { bfp: false },
+            w,
+            (0..n).collect(),
+        ));
+        let plain = run_scenario(&spec);
+        for threads in [0usize, 2] {
+            let checked = run_scenario_on(&spec, EngineKind::Checked { threads });
+            assert_eq!(plain.events, checked.events);
+            assert!(rel_err(plain.makespan, checked.makespan) < 1e-9);
+            let report = checked.audit.expect("checked run must report");
+            assert!(report.is_clean(), "threads={threads}: {}", report.summary());
+        }
+    }
+
+    /// Run `spec` on the plain typed engine and hand back the quiesced
+    /// sim + state for the negative conservation tests to tamper with.
+    fn run_state(spec: &ClusterSpec) -> (ClusterSim, ClusterState) {
+        let (mut sim, mut state) = init(spec, EngineKind::Typed);
+        drive(&mut sim, &mut state, EngineKind::Typed);
+        (sim, state)
+    }
+
+    fn small_ring_spec() -> ClusterSpec {
+        let sys = SystemParams::smartnic_40g();
+        let w = Workload {
+            layers: 1,
+            hidden: 128,
+            batch_per_node: 8,
+        };
+        ClusterSpec::new(sys, 3).with_job(JobSpec::new(
+            "neg",
+            SystemKind::SmartNic { bfp: false },
+            w,
+            vec![0, 1, 2],
+        ))
+    }
+
+    #[test]
+    fn conservation_audit_is_clean_at_quiescence() {
+        let (sim, state) = run_state(&small_ring_spec());
+        let mut report = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut report);
+        assert!(report.is_clean(), "{}", report.summary());
+    }
+
+    #[test]
+    fn unfinished_collective_yields_structured_violation() {
+        let (sim, mut state) = run_state(&small_ring_spec());
+        state.collectives[0].t_done = None;
+        let mut report = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut report);
+        assert!(report
+            .violations()
+            .iter()
+            .any(|v| matches!(v, AuditViolation::UnfinishedCollective { cid: 0 })));
+    }
+
+    #[test]
+    fn overfolded_adder_yields_structured_violation() {
+        let (sim, mut state) = run_state(&small_ring_spec());
+        // fold elements that no collective accounts for
+        let _ = state.fabric.nodes[0].adder.serve(0.0, 1e6);
+        let mut report = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut report);
+        let v = report
+            .violations()
+            .iter()
+            .find(|v| matches!(v, AuditViolation::ReduceConservation { pool: 0, .. }))
+            .expect("adder-pool conservation violation");
+        match v {
+            AuditViolation::ReduceConservation { expected, actual, .. } => {
+                assert!(actual > expected);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn unaccounted_switch_fold_yields_structured_violation() {
+        use crate::sysconfig::SwitchParams;
+        let mut spec = small_ring_spec();
+        spec.sys = spec.sys.with_switch_reduction(SwitchParams {
+            reduce_flops: 1e9,
+            reduce_table_bytes: 16.0 * 1024.0 * 1024.0,
+        });
+        let (sim, mut state) = run_state(&spec);
+        // the ring never touches the switch engines: any served elements
+        // there are unaccounted
+        let _ = state.fabric.reduce_fold_local(0, 0, 0.0, 1024.0, 256.0);
+        let mut report = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut report);
+        assert!(report
+            .violations()
+            .iter()
+            .any(|v| matches!(v, AuditViolation::ReduceConservation { pool: 1, .. })));
+    }
+
+    #[test]
+    fn leaked_reservation_yields_structured_violation() {
+        let (sim, mut state) = run_state(&small_ring_spec());
+        let end = sim.now();
+        // reserve capacity starting far past quiescence: more than one
+        // drain time beyond the final event
+        let _ = state.fabric.nodes[0].tx.server.serve(2.0 * end + 1.0, 1.0);
+        let mut report = AuditReport::new();
+        audit_conservation(&state, end, &mut report);
+        assert!(report
+            .violations()
+            .iter()
+            .any(|v| matches!(v, AuditViolation::LeakedReservation { .. })));
     }
 
     #[test]

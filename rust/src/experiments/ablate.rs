@@ -83,8 +83,8 @@ pub fn print_all() {
         ]);
     }
     t.print();
-    let best448 = s448.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
-    let best1792 = s1792.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
+    let best448 = s448.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0;
+    let best1792 = s1792.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0;
     println!("best k: {best448} (B=448), {best1792} (B=1792) — paper found 2 for their workload");
 
     println!("\n-- alpha sensitivity (smart NIC, B=448, 6 nodes) --");
@@ -122,7 +122,7 @@ mod tests {
         // monotone increasing from k=1
         let pts = comm_core_sweep(6, 448, 8);
         let t1 = pts[0].1;
-        let best = pts.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+        let best = pts.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
         assert!(best.1 <= t1, "{pts:?}");
         // and at some point stealing cores hurts again
         let t8 = pts.last().unwrap().1;

@@ -26,6 +26,14 @@
 //! on the [`PARALLEL_GATE_NODES`]-node ring; missing the target warns,
 //! and only dropping below [`PARALLEL_SPEEDUP_FLOOR`]x fails the run.
 //!
+//! NIC-ring points also re-run under the checked executive
+//! (`EngineKind::Checked` — the invariant auditor of
+//! docs/INVARIANTS.md) at every configured thread count: each audited
+//! run must report zero violations (a violation fails the bench), and
+//! its wall-clock overhead over the matching unchecked run is recorded
+//! against [`CHECKED_OVERHEAD_TOL`] (warn-only, like the parallel
+//! scaling target: wall-clock ratios are noisy on shared runners).
+//!
 //! `smartnic engine-bench` prints the tables and writes
 //! `BENCH_engine.json` (schema documented in `docs/BENCHMARKS.md`,
 //! pinned by `rust/tests/bench_schema.rs`).  The run fails (nonzero
@@ -80,6 +88,12 @@ pub const PARALLEL_SPEEDUP_GATE: f64 = 2.0;
 /// serialization bug), not scheduler jitter.
 pub const PARALLEL_SPEEDUP_FLOOR: f64 = 1.2;
 
+/// Wall-clock overhead budget of the checked executive over the
+/// matching unchecked engine (0.10 = 10%).  Tracked in
+/// `BENCH_engine.json` (`gates.checked_overhead_pass`) and surfaced as
+/// a warning when exceeded; audit *violations* fail the bench outright.
+pub const CHECKED_OVERHEAD_TOL: f64 = 0.10;
+
 /// Scaling-sweep node count the parallel speedup gate is pinned at.
 pub const PARALLEL_GATE_NODES: usize = 16384;
 
@@ -131,6 +145,22 @@ pub struct ParallelRow {
     pub imbalance: Option<f64>,
 }
 
+/// One checked-executive (audited) re-run of a NIC-ring point.
+#[derive(Clone, Debug)]
+pub struct CheckedRow {
+    /// audited worker threads (0 = sequential audited run)
+    pub threads: usize,
+    pub wall_s: f64,
+    pub events_per_sec: f64,
+    /// relative virtual-time deviation checked vs typed
+    pub virtual_err: f64,
+    /// checked wall-clock over the matching unchecked run, minus one
+    /// (0.07 = 7% audit overhead)
+    pub overhead: f64,
+    /// audit violations reported (must be zero on a healthy engine)
+    pub violations: usize,
+}
+
 /// One (node count, plan family) cell of the benchmark.
 #[derive(Clone, Debug)]
 pub struct EnginePoint {
@@ -155,6 +185,8 @@ pub struct EnginePoint {
     pub virtual_err: Option<f64>,
     /// parallel-executive re-runs (NIC-ring points only)
     pub parallel: Vec<ParallelRow>,
+    /// checked-executive (audited) re-runs (NIC-ring points only)
+    pub checked: Vec<CheckedRow>,
 }
 
 /// One row of the event-budget-capped ring scaling sweep.
@@ -243,6 +275,7 @@ pub fn run(cfg: &EngineBenchConfig) -> Vec<EnginePoint> {
                 speedup: None,
                 virtual_err: None,
                 parallel: Vec::new(),
+                checked: Vec::new(),
             };
             if cfg.baseline_nodes.contains(&n) {
                 if let Some((boxed, boxed_wall)) = baseline_run(&spec) {
@@ -270,6 +303,21 @@ pub fn run(cfg: &EngineBenchConfig) -> Vec<EnginePoint> {
                         events_per_sec: par.events as f64 / par_wall.max(1e-12),
                         virtual_err: rel_err(par.makespan, typed.makespan),
                         imbalance: imbalance(&par.partitions),
+                    });
+                    let (chk, chk_wall) = timed_run(&spec, EngineKind::Checked { threads: t });
+                    assert_eq!(
+                        chk.events, typed.events,
+                        "checked executive diverged in event count at n={n} threads={t}"
+                    );
+                    let violations =
+                        chk.audit.as_ref().map_or(0, |r| r.total()) as usize;
+                    point.checked.push(CheckedRow {
+                        threads: t,
+                        wall_s: chk_wall,
+                        events_per_sec: chk.events as f64 / chk_wall.max(1e-12),
+                        virtual_err: rel_err(chk.makespan, typed.makespan),
+                        overhead: chk_wall / par_wall.max(1e-12) - 1.0,
+                        violations,
                     });
                 }
             }
@@ -345,6 +393,36 @@ pub fn worst_parallel_virtual_err(points: &[EnginePoint]) -> Option<f64> {
         .fold(None, |acc: Option<f64>, e| Some(acc.map_or(e, |a| a.max(e))))
 }
 
+/// Worst checked-vs-typed virtual-time deviation across the audited
+/// re-runs of the full-completion sweep.
+pub fn worst_checked_virtual_err(points: &[EnginePoint]) -> Option<f64> {
+    points
+        .iter()
+        .flat_map(|p| p.checked.iter().map(|r| r.virtual_err))
+        .fold(None, |acc: Option<f64>, e| Some(acc.map_or(e, |a| a.max(e))))
+}
+
+/// Largest wall-clock overhead of a checked run over its matching
+/// unchecked run.  `None` when no audited rows exist — no vacuous PASS.
+pub fn worst_checked_overhead(points: &[EnginePoint]) -> Option<f64> {
+    points
+        .iter()
+        .flat_map(|p| p.checked.iter().map(|r| r.overhead))
+        .fold(None, |acc: Option<f64>, e| Some(acc.map_or(e, |a| a.max(e))))
+}
+
+/// Total audit violations across every checked run.  `None` when no
+/// audited rows exist; any nonzero total fails the bench.
+pub fn checked_violation_total(points: &[EnginePoint]) -> Option<usize> {
+    let rows: Vec<usize> =
+        points.iter().flat_map(|p| p.checked.iter().map(|r| r.violations)).collect();
+    if rows.is_empty() {
+        None
+    } else {
+        Some(rows.iter().sum())
+    }
+}
+
 /// The parallel scaling gate: events/sec of the
 /// [`PARALLEL_GATE_THREADS`]-thread run over the 1-thread run on the
 /// [`PARALLEL_GATE_NODES`]-node ring scaling point.  `None` when the
@@ -418,6 +496,25 @@ pub fn print(points: &[EnginePoint], scaling: &[ScalingPoint], cfg: &EngineBench
         }
         t.print();
     }
+    if points.iter().any(|p| !p.checked.is_empty()) {
+        let mut t =
+            Table::new(&["nodes", "threads", "wall (s)", "Mev/s", "virtual err", "overhead", "viol"])
+                .with_title("checked executive — audited NIC-ring re-runs vs unchecked");
+        for p in points {
+            for r in &p.checked {
+                t.row(&[
+                    p.nodes.to_string(),
+                    r.threads.to_string(),
+                    fnum(r.wall_s, 3),
+                    fnum(r.events_per_sec / 1e6, 2),
+                    format!("{:.1e}", r.virtual_err),
+                    format!("{:+.1}%", r.overhead * 100.0),
+                    r.violations.to_string(),
+                ]);
+            }
+        }
+        t.print();
+    }
     if !scaling.is_empty() {
         let mut t =
             Table::new(&["nodes", "engine", "events", "virtual (s)", "wall (s)", "Mev/s", "imbal"])
@@ -469,6 +566,17 @@ pub fn print(points: &[EnginePoint], scaling: &[ScalingPoint], cfg: &EngineBench
         ),
         None => println!("parallel parity: not validated (no parallel rows)"),
     }
+    match (checked_violation_total(points), worst_checked_overhead(points)) {
+        (Some(v), Some(o)) => println!(
+            "checked executive: {v} violation(s) — {}; worst overhead {:+.1}% \
+             (budget {:.0}%) — {}",
+            if v == 0 { "PASS" } else { "FAIL" },
+            o * 100.0,
+            CHECKED_OVERHEAD_TOL * 100.0,
+            if o <= CHECKED_OVERHEAD_TOL { "PASS" } else { "WARN (over budget)" }
+        ),
+        _ => println!("checked executive: not validated (no audited rows)"),
+    }
     match parallel_gate_speedup(scaling) {
         Some(s) => println!(
             "parallel x{PARALLEL_GATE_THREADS} vs x1 on the {PARALLEL_GATE_NODES}-node ring: \
@@ -517,6 +625,7 @@ pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint], scaling: &[Scali
                 ("parallel_speedup_floor", Json::Num(PARALLEL_SPEEDUP_FLOOR)),
                 ("parallel_gate_nodes", Json::Num(PARALLEL_GATE_NODES as f64)),
                 ("parallel_gate_threads", Json::Num(PARALLEL_GATE_THREADS as f64)),
+                ("checked_overhead_tol", Json::Num(CHECKED_OVERHEAD_TOL)),
             ]),
         ),
         (
@@ -548,6 +657,21 @@ pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint], scaling: &[Scali
                                 })
                                 .collect(),
                         );
+                        let checked = Json::Arr(
+                            p.checked
+                                .iter()
+                                .map(|r| {
+                                    Json::obj(vec![
+                                        ("threads", Json::Num(r.threads as f64)),
+                                        ("wall_s", Json::Num(r.wall_s)),
+                                        ("events_per_sec", Json::Num(r.events_per_sec)),
+                                        ("virtual_err", Json::Num(r.virtual_err)),
+                                        ("overhead", Json::Num(r.overhead)),
+                                        ("violations", Json::Num(r.violations as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        );
                         Json::obj(vec![
                             ("nodes", Json::Num(p.nodes as f64)),
                             ("algo", Json::Str(p.algo.to_string())),
@@ -558,6 +682,7 @@ pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint], scaling: &[Scali
                             ("events_per_sec", Json::Num(p.events_per_sec)),
                             ("baseline", baseline),
                             ("parallel", parallel),
+                            ("checked", checked),
                         ])
                     })
                     .collect(),
@@ -610,6 +735,34 @@ pub fn to_json(cfg: &EngineBenchConfig, points: &[EnginePoint], scaling: &[Scali
                     "parallel_worst_virtual_err",
                     match worst_parallel_virtual_err(points) {
                         Some(e) => Json::Num(e),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "checked_worst_virtual_err",
+                    match worst_checked_virtual_err(points) {
+                        Some(e) => Json::Num(e),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "checked_worst_overhead",
+                    match worst_checked_overhead(points) {
+                        Some(o) => Json::Num(o),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "checked_overhead_pass",
+                    match worst_checked_overhead(points) {
+                        Some(o) => Json::Bool(o <= CHECKED_OVERHEAD_TOL),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "checked_violations",
+                    match checked_violation_total(points) {
+                        Some(v) => Json::Num(v as f64),
                         None => Json::Null,
                     },
                 ),
@@ -700,6 +853,26 @@ mod tests {
         }
         let worst = worst_parallel_virtual_err(&points).expect("parallel rows exist");
         assert!(worst <= VIRTUAL_TIME_TOL, "parallel virtual-time drift {worst}");
+    }
+
+    #[test]
+    fn checked_rows_are_clean_and_record_overhead() {
+        let cfg = tiny_cfg();
+        let points = run(&cfg);
+        for p in &points {
+            if p.algo == "nic-ring" {
+                assert_eq!(p.checked.len(), cfg.threads.len());
+                for r in &p.checked {
+                    assert!(r.overhead.is_finite(), "overhead must be measured");
+                }
+            } else {
+                assert!(p.checked.is_empty(), "{}: unexpected checked rows", p.algo);
+            }
+        }
+        assert_eq!(checked_violation_total(&points), Some(0), "audited runs must be clean");
+        assert!(worst_checked_overhead(&points).is_some(), "overhead must be recorded");
+        let worst = worst_checked_virtual_err(&points).expect("checked rows exist");
+        assert!(worst <= VIRTUAL_TIME_TOL, "checked virtual-time drift {worst}");
     }
 
     #[test]

@@ -82,17 +82,42 @@
 //! assert!(out.events > 0 && out.peak_queue_depth > 0);
 //! ```
 
+// Lint policy (docs/INVARIANTS.md, "Correctness tooling"): any `unsafe`
+// an unsafe fn touches must be an explicit block, every unsafe block and
+// impl carries a `// SAFETY:` comment, and float (in-)equality is only
+// written where exactness is proven (and locally allowed).  The
+// project's own determinism lints live in `smartnic-lint`
+// (rust/src/bin/lint.rs).
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::float_cmp)]
+#![warn(clippy::undocumented_unsafe_blocks)]
+
+// `unsafe` is confined to two modules: `netsim` (the engine's
+// shared-state window executive) and `cluster` (its `PartitionedWorld`
+// impl).  Every other subtree forbids it outright.
+#[forbid(unsafe_code)]
 pub mod analytic;
+#[forbid(unsafe_code)]
 pub mod benchkit;
+#[forbid(unsafe_code)]
 pub mod bfp;
 pub mod cluster;
+#[forbid(unsafe_code)]
 pub mod collective;
+#[forbid(unsafe_code)]
 pub mod coordinator;
+#[forbid(unsafe_code)]
 pub mod experiments;
 pub mod netsim;
+#[forbid(unsafe_code)]
 pub mod nic;
+#[forbid(unsafe_code)]
 pub mod prop;
+#[forbid(unsafe_code)]
 pub mod runtime;
+#[forbid(unsafe_code)]
 pub mod sysconfig;
+#[forbid(unsafe_code)]
 pub mod trace;
+#[forbid(unsafe_code)]
 pub mod util;

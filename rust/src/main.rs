@@ -365,6 +365,7 @@ fn cmd_cluster(rest: &[String]) -> i32 {
         .opt("oversub", "1", "leaf uplink oversubscription factor")
         .opt("placement", "contiguous", "rank placement: contiguous | strided")
         .opt("threads", "0", "parallel-engine worker threads (0 = sequential typed engine)")
+        .flag("audit", "run the checked executive: audit engine invariants + the conservation ledger")
         .opt("degrade-link", "", "node:scale — degrade one link (Tx + egress toward it)")
         .opt("straggler", "", "node:scale — slow one node's PCIe + adder + comm cores")
         .opt("trace-out", "", "write chrome trace JSON to this path")
@@ -447,7 +448,9 @@ fn cmd_cluster(rest: &[String]) -> i32 {
         );
     }
     let threads = a.get_usize("threads", 0);
-    let engine = if threads == 0 {
+    let engine = if a.flag("audit") {
+        EngineKind::Checked { threads }
+    } else if threads == 0 {
         EngineKind::Typed
     } else {
         EngineKind::Parallel { threads }
@@ -514,6 +517,15 @@ fn cmd_cluster(rest: &[String]) -> i32 {
     if !path.is_empty() {
         std::fs::write(&path, out.trace.to_chrome_json()).unwrap();
         println!("trace written to {path} (open in chrome://tracing)");
+    }
+    if let Some(report) = &out.audit {
+        println!("audit: {}", report.summary());
+        if !report.is_clean() {
+            for v in report.violations() {
+                eprintln!("audit violation: {v}");
+            }
+            return 1;
+        }
     }
     0
 }
@@ -755,6 +767,35 @@ fn cmd_engine_bench(rest: &[String]) -> i32 {
                 engine_bench::VIRTUAL_TIME_TOL
             );
             return 1;
+        }
+    }
+    if let Some(violations) = engine_bench::checked_violation_total(&points) {
+        if violations > 0 {
+            eprintln!("checked executive FAILED: {violations} audit violation(s) — see the table");
+            return 1;
+        }
+    }
+    if let Some(worst) = engine_bench::worst_checked_virtual_err(&points) {
+        if worst > engine_bench::VIRTUAL_TIME_TOL {
+            eprintln!(
+                "engine parity FAILED: checked vs typed virtual time deviates by {worst:.2e} \
+                 (tol {:.0e})",
+                engine_bench::VIRTUAL_TIME_TOL
+            );
+            return 1;
+        }
+    }
+    if let Some(overhead) = engine_bench::worst_checked_overhead(&points) {
+        if overhead > engine_bench::CHECKED_OVERHEAD_TOL {
+            // wall-clock ratios are noisy on shared runners; the budget is
+            // tracked in BENCH_engine.json, a breach warns rather than fails.
+            let msg = format!(
+                "checked executive over its overhead budget: {:+.1}% (budget {:.0}%)",
+                overhead * 100.0,
+                engine_bench::CHECKED_OVERHEAD_TOL * 100.0
+            );
+            eprintln!("warning: {msg}");
+            println!("::warning title=engine-bench::{msg}");
         }
     }
     if let Some(speedup) = engine_bench::gate_speedup(&points) {

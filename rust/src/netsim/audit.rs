@@ -1,0 +1,503 @@
+//! Runtime invariant auditor for the event engine ([`EngineKind::Checked`]).
+//!
+//! PR 6's parallel executive rests on contracts that live in prose: the
+//! `# Safety` section of [`PartitionedWorld`], the scheduling
+//! preconditions (finite times, never into the past), and the calendar
+//! queue's `(time, seq)` total order.  This module turns those contracts
+//! into *executable checks*: under [`EngineKind::Checked`] the executive
+//! validates every schedule, every dispatch and every window barrier,
+//! and records breaches as structured [`AuditViolation`] values instead
+//! of panicking — so a violating run completes and reports *what* broke,
+//! and a clean run proves the contracts held for that workload.
+//!
+//! The auditor costs exactly one `Option` branch per operation when off
+//! (`Sim` holds `Option<Box<AuditState>>`, `None` for every unchecked
+//! engine kind), and the checked equivalence suite pins the audited
+//! engine bit-identical to the unchecked one — auditing observes, never
+//! perturbs.
+//!
+//! Every invariant checked here is enumerated, with its source-of-truth
+//! contract, in `docs/INVARIANTS.md`.
+//!
+//! [`EngineKind::Checked`]: super::engine::EngineKind::Checked
+//! [`PartitionedWorld`]: super::engine::PartitionedWorld
+
+use super::engine::{PartitionedWorld, GLOBAL_PARTITION};
+use super::Time;
+use std::fmt;
+
+/// One breach of an engine or PDES invariant, as primitives — no
+/// payloads borrowed from the run, so reports outlive the simulation
+/// and serialize trivially.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AuditViolation {
+    /// a schedule call carried a NaN or infinite time (the event was
+    /// dropped — a non-finite key would corrupt the queue order)
+    NonFiniteTime {
+        /// the offending virtual time
+        time: Time,
+    },
+    /// a schedule call targeted the scheduler's past (the event was
+    /// clamped to `now` and kept)
+    SchedulePast {
+        /// requested fire time
+        time: Time,
+        /// the scheduler's clock at the call
+        now: Time,
+    },
+    /// a popped event carried a time below the executing runner's clock
+    /// — the clock would have run backwards
+    DispatchRegression {
+        /// the popped event's time
+        time: Time,
+        /// the runner's clock before the pop
+        now: Time,
+    },
+    /// the calendar queue popped keys out of `(time, seq)` order — the
+    /// total order the determinism argument rests on
+    QueueOrderViolation {
+        /// the out-of-order key's time
+        time: Time,
+        /// the out-of-order key's insertion sequence
+        seq: u64,
+        /// the previously popped key's time
+        prev_time: Time,
+        /// the previously popped key's insertion sequence
+        prev_seq: u64,
+    },
+    /// the arena's free list handed out a slot that still held a pending
+    /// event (the older event was clobbered)
+    SlotAliased {
+        /// the doubly-allocated arena slot
+        slot: u32,
+    },
+    /// a cross-partition emission landed inside the emitting window —
+    /// the [`PartitionedWorld::lookahead`] contract (PR 6's merge-path
+    /// `debug_assert`, promoted so it fires in release audited runs too)
+    LookaheadViolation {
+        /// the emission's fire time
+        time: Time,
+        /// the window end it was required to reach
+        window_end: Time,
+    },
+    /// [`PartitionedWorld::route`] returned two different partitions for
+    /// the same event — routing must be a pure function of the event
+    UnstableRoute {
+        /// partition returned by the first call
+        first: u32,
+        /// partition returned by the second call
+        second: u32,
+    },
+    /// the lower bound on the next executed timestamp (LBTS) moved
+    /// backwards between scheduler iterations
+    LbtsRegression {
+        /// the regressed bound
+        lbts: Time,
+        /// the previous (higher) bound
+        prev: Time,
+    },
+    /// two same-time deferred emissions in one window batch compared
+    /// equal under [`PartitionedWorld::merge_key`] — the key must be a
+    /// total order over each batch or thread counts can reorder them
+    MergeKeyCollision {
+        /// the shared fire time
+        time: Time,
+        /// the colliding key
+        key: u128,
+    },
+    /// a collective never reached `t_done` although the run drained
+    UnfinishedCollective {
+        /// index into the cluster's collective table
+        cid: usize,
+    },
+    /// reduction work conservation: the elements actually folded by the
+    /// fabric's adders / switch engines differ from what the posted
+    /// collectives require (each gradient element reduced exactly once
+    /// per peer)
+    ReduceConservation {
+        /// elements the collectives' algorithms must fold
+        expected: f64,
+        /// elements the fabric's servers actually folded
+        actual: f64,
+        /// which reducer population: 0 = node adders, 1 = switch engines
+        pool: u8,
+    },
+    /// a server reservation extends past quiescence — capacity was
+    /// reserved but the releasing event chain never completed
+    LeakedReservation {
+        /// the server's busy-until horizon
+        busy_until: Time,
+        /// the run's final virtual time
+        end: Time,
+    },
+}
+
+impl AuditViolation {
+    /// Stable short name of the violated invariant (the `docs/INVARIANTS.md`
+    /// anchor).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AuditViolation::NonFiniteTime { .. } => "non-finite-time",
+            AuditViolation::SchedulePast { .. } => "schedule-past",
+            AuditViolation::DispatchRegression { .. } => "dispatch-regression",
+            AuditViolation::QueueOrderViolation { .. } => "queue-order",
+            AuditViolation::SlotAliased { .. } => "slot-aliased",
+            AuditViolation::LookaheadViolation { .. } => "lookahead",
+            AuditViolation::UnstableRoute { .. } => "unstable-route",
+            AuditViolation::LbtsRegression { .. } => "lbts-regression",
+            AuditViolation::MergeKeyCollision { .. } => "merge-key-collision",
+            AuditViolation::UnfinishedCollective { .. } => "unfinished-collective",
+            AuditViolation::ReduceConservation { .. } => "reduce-conservation",
+            AuditViolation::LeakedReservation { .. } => "leaked-reservation",
+        }
+    }
+}
+
+impl fmt::Display for AuditViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AuditViolation::NonFiniteTime { time } => {
+                write!(f, "non-finite event time {time} (event dropped)")
+            }
+            AuditViolation::SchedulePast { time, now } => {
+                write!(f, "schedule into the past: {time} < now {now} (clamped)")
+            }
+            AuditViolation::DispatchRegression { time, now } => {
+                write!(f, "dispatched event at {time} behind the clock {now}")
+            }
+            AuditViolation::QueueOrderViolation { time, seq, prev_time, prev_seq } => write!(
+                f,
+                "queue popped ({time}, seq {seq}) after ({prev_time}, seq {prev_seq})"
+            ),
+            AuditViolation::SlotAliased { slot } => {
+                write!(f, "arena slot {slot} handed out while still occupied")
+            }
+            AuditViolation::LookaheadViolation { time, window_end } => write!(
+                f,
+                "cross-partition emission at {time} inside the window ending at {window_end}"
+            ),
+            AuditViolation::UnstableRoute { first, second } => {
+                write!(f, "route() returned {first} then {second} for one event")
+            }
+            AuditViolation::LbtsRegression { lbts, prev } => {
+                write!(f, "LBTS regressed to {lbts} from {prev}")
+            }
+            AuditViolation::MergeKeyCollision { time, key } => write!(
+                f,
+                "two deferred emissions at {time} share merge key {key:#034x}"
+            ),
+            AuditViolation::UnfinishedCollective { cid } => {
+                write!(f, "collective {cid} never completed")
+            }
+            AuditViolation::ReduceConservation { expected, actual, pool } => {
+                let name = if *pool == 0 { "node adders" } else { "switch engines" };
+                write!(f, "{name} folded {actual} elements, collectives require {expected}")
+            }
+            AuditViolation::LeakedReservation { busy_until, end } => write!(
+                f,
+                "server reserved until {busy_until}, past quiescence at {end}"
+            ),
+        }
+    }
+}
+
+/// Recorded violations are capped here; the total count keeps counting.
+pub const MAX_RECORDED: usize = 64;
+
+/// The outcome of an audited run: every violation observed (the first
+/// [`MAX_RECORDED`], plus a total), and how many dispatches were
+/// checked.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AuditReport {
+    violations: Vec<AuditViolation>,
+    total: u64,
+    events_checked: u64,
+}
+
+impl AuditReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one violation (kept verbatim up to [`MAX_RECORDED`];
+    /// always counted).
+    pub fn record(&mut self, violation: AuditViolation) {
+        self.total += 1;
+        if self.violations.len() < MAX_RECORDED {
+            self.violations.push(violation);
+        }
+    }
+
+    /// True when no invariant was breached.
+    pub fn is_clean(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Total violations observed (may exceed `violations().len()`).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The recorded violations, in observation order.
+    pub fn violations(&self) -> &[AuditViolation] {
+        &self.violations
+    }
+
+    /// Dispatches the auditor checked.
+    pub fn events_checked(&self) -> u64 {
+        self.events_checked
+    }
+
+    pub(crate) fn count_event(&mut self) {
+        self.events_checked += 1;
+    }
+
+    /// Fold another runner's report into this one (parallel runs merge
+    /// every partition's report into the coordinator's).
+    pub fn merge(&mut self, other: AuditReport) {
+        self.total += other.total;
+        self.events_checked += other.events_checked;
+        for v in other.violations {
+            if self.violations.len() >= MAX_RECORDED {
+                break;
+            }
+            self.violations.push(v);
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        if self.is_clean() {
+            format!("audit clean: {} events checked, 0 violations", self.events_checked)
+        } else {
+            let first = self
+                .violations
+                .first()
+                .map_or_else(String::new, |v| format!(" (first: {v})"));
+            format!(
+                "audit FAILED: {} violation(s) over {} events checked{first}",
+                self.total, self.events_checked
+            )
+        }
+    }
+}
+
+/// Per-runner auditor state: the report plus the last popped key and
+/// LBTS watermark the order checks compare against.
+#[derive(Debug, Default)]
+pub struct AuditState {
+    /// violations and counters accumulated by this runner
+    pub report: AuditReport,
+    last_pop: Option<(Time, u64)>,
+    last_lbts: Option<Time>,
+}
+
+impl AuditState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Validate a schedule time: returns the (possibly clamped) time to
+    /// use, or `None` when the event must be dropped (non-finite key).
+    pub fn on_schedule(&mut self, time: Time, now: Time) -> Option<Time> {
+        if !time.is_finite() {
+            self.report.record(AuditViolation::NonFiniteTime { time });
+            return None;
+        }
+        if time < now {
+            self.report.record(AuditViolation::SchedulePast { time, now });
+            return Some(now);
+        }
+        Some(time)
+    }
+
+    /// Validate one dispatch: clock monotonicity against `now` and
+    /// `(time, seq)` total-order consistency against the previous pop.
+    pub fn on_pop(&mut self, time: Time, seq: u64, now: Time) {
+        self.report.count_event();
+        if !time.is_finite() {
+            self.report.record(AuditViolation::NonFiniteTime { time });
+        }
+        if time < now {
+            self.report.record(AuditViolation::DispatchRegression { time, now });
+        }
+        if let Some((prev_time, prev_seq)) = self.last_pop {
+            let ord = time.total_cmp(&prev_time).then(seq.cmp(&prev_seq));
+            if ord != std::cmp::Ordering::Greater {
+                self.report.record(AuditViolation::QueueOrderViolation {
+                    time,
+                    seq,
+                    prev_time,
+                    prev_seq,
+                });
+            }
+        }
+        self.last_pop = Some((time, seq));
+    }
+
+    /// Validate that the lower bound on the next executed timestamp
+    /// never regresses across scheduler iterations.
+    pub fn on_lbts(&mut self, lbts: Time) {
+        if let Some(prev) = self.last_lbts {
+            if lbts < prev {
+                self.report.record(AuditViolation::LbtsRegression { lbts, prev });
+                return; // keep the higher watermark
+            }
+        }
+        self.last_lbts = Some(lbts);
+    }
+}
+
+/// Contract-probing wrapper over a [`PartitionedWorld`]: a snapshot of
+/// the world's routing table plus the barrier-side checks of the PDES
+/// contract (route stability, lookahead, merge-key totality).  The
+/// parallel executive constructs one per audited run
+/// ([`EngineKind::Checked`]) and consults it at every window barrier;
+/// unchecked runs never build it.
+///
+/// [`EngineKind::Checked`]: super::engine::EngineKind::Checked
+pub struct CheckedWorld<W: PartitionedWorld> {
+    map: W::Map,
+    lookahead: Time,
+}
+
+impl<W: PartitionedWorld> CheckedWorld<W> {
+    /// Snapshot the world's routing table and lookahead.
+    pub fn new(state: &W) -> Self {
+        Self {
+            map: state.partition_map(),
+            lookahead: state.lookahead(),
+        }
+    }
+
+    /// The lookahead the contract promises.
+    pub fn lookahead(&self) -> Time {
+        self.lookahead
+    }
+
+    /// Route an event, calling [`PartitionedWorld::route`] twice: a
+    /// routing function that is not a pure function of the event value
+    /// would shard state differently than the barrier re-route assumes
+    /// (recorded as [`AuditViolation::UnstableRoute`]).
+    pub fn checked_route(&self, event: &W::Event, report: &mut AuditReport) -> u32 {
+        let first = W::route(&self.map, event);
+        let second = W::route(&self.map, event);
+        if first != second {
+            report.record(AuditViolation::UnstableRoute { first, second });
+        }
+        first
+    }
+
+    /// Check one merged emission against the lookahead contract: a
+    /// partition-bound event must land at or past the window's end (the
+    /// coordinator carve-out exempts [`GLOBAL_PARTITION`]).
+    pub fn check_emission(
+        &self,
+        partition: u32,
+        time: Time,
+        window_end: Time,
+        report: &mut AuditReport,
+    ) {
+        if partition != GLOBAL_PARTITION && time < window_end {
+            report.record(AuditViolation::LookaheadViolation { time, window_end });
+        }
+    }
+
+    /// Check that `merge_key` is a total order over one sorted barrier
+    /// batch: adjacent entries sharing `(time, key)` are not ordered by
+    /// anything thread-independent, so the run is not reproducible
+    /// across thread counts.
+    pub fn check_merge_batch(
+        &self,
+        batch: &[(Time, u128, W::Event)],
+        report: &mut AuditReport,
+    ) {
+        for pair in batch.windows(2) {
+            let (a, b) = (&pair[0], &pair[1]);
+            if a.0.to_bits() == b.0.to_bits() && a.1 == b.1 {
+                report.record(AuditViolation::MergeKeyCollision { time: a.0, key: a.1 });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+// exact float comparison is the point in these tests: the auditor must
+// hand times through unmodified
+#[allow(clippy::float_cmp)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_caps_recorded_but_counts_all() {
+        let mut r = AuditReport::new();
+        for slot in 0..(MAX_RECORDED as u32 + 10) {
+            r.record(AuditViolation::SlotAliased { slot });
+        }
+        assert_eq!(r.violations().len(), MAX_RECORDED);
+        assert_eq!(r.total(), MAX_RECORDED as u64 + 10);
+        assert!(!r.is_clean());
+    }
+
+    #[test]
+    fn on_pop_detects_queue_order_violation() {
+        let mut a = AuditState::new();
+        a.on_pop(1.0, 0, 0.0);
+        a.on_pop(1.0, 1, 1.0); // same time, later seq: fine
+        assert!(a.report.is_clean());
+        a.on_pop(1.0, 0, 1.0); // same time, earlier seq: out of order
+        assert_eq!(a.report.total(), 1);
+        assert!(matches!(
+            a.report.violations()[0],
+            AuditViolation::QueueOrderViolation { seq: 0, prev_seq: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn on_pop_detects_clock_regression() {
+        let mut a = AuditState::new();
+        a.on_pop(2.0, 0, 0.0);
+        a.on_pop(1.0, 1, 2.0); // behind the runner's clock
+        let kinds: Vec<_> = a.report.violations().iter().map(|v| v.kind()).collect();
+        assert!(kinds.contains(&"dispatch-regression"));
+        assert!(kinds.contains(&"queue-order"));
+    }
+
+    #[test]
+    fn on_lbts_detects_regression_and_keeps_watermark() {
+        let mut a = AuditState::new();
+        a.on_lbts(1.0);
+        a.on_lbts(2.0);
+        a.on_lbts(1.5); // regression
+        assert_eq!(a.report.total(), 1);
+        assert!(matches!(
+            a.report.violations()[0],
+            AuditViolation::LbtsRegression { prev, .. } if prev == 2.0
+        ));
+        a.on_lbts(2.0); // back at the watermark: not a second regression
+        assert_eq!(a.report.total(), 1);
+    }
+
+    #[test]
+    fn on_schedule_drops_non_finite_and_clamps_past() {
+        let mut a = AuditState::new();
+        assert_eq!(a.on_schedule(f64::NAN, 0.0), None);
+        assert_eq!(a.on_schedule(f64::INFINITY, 0.0), None);
+        assert_eq!(a.on_schedule(0.5, 1.0), Some(1.0));
+        assert_eq!(a.on_schedule(2.0, 1.0), Some(2.0));
+        assert_eq!(a.report.total(), 3);
+    }
+
+    #[test]
+    fn merged_reports_accumulate() {
+        let mut a = AuditReport::new();
+        a.count_event();
+        let mut b = AuditReport::new();
+        b.count_event();
+        b.record(AuditViolation::SlotAliased { slot: 7 });
+        a.merge(b);
+        assert_eq!(a.events_checked(), 2);
+        assert_eq!(a.total(), 1);
+        assert!(a.summary().contains("FAILED"));
+    }
+}

@@ -38,6 +38,14 @@
 //! `testing` cargo feature): the typed path is the only production entry
 //! point.
 //!
+//! [`EngineKind::Checked`] runs the same typed engine (sequential or
+//! parallel) with the [`audit`](super::audit) invariant auditor
+//! attached: scheduling preconditions, dispatch monotonicity, queue
+//! total order, arena slot integrity and the PDES contract are validated
+//! at run time and breaches reported as structured
+//! [`AuditViolation`](super::audit::AuditViolation)s — see
+//! `docs/INVARIANTS.md` for the full catalog.
+//!
 //! ```
 //! use ai_smartnic::netsim::engine::{Sim, World};
 //!
@@ -61,6 +69,7 @@
 //! assert_eq!(world.fired, vec![1, 2]);
 //! ```
 
+use super::audit::{AuditReport, AuditState, AuditViolation, CheckedWorld};
 use super::Time;
 use std::cell::UnsafeCell;
 use std::cmp::{Ordering, Reverse};
@@ -96,9 +105,13 @@ pub const GLOBAL_PARTITION: u32 = u32::MAX;
 /// the routing contract below — an implementation that breaks the
 /// contract causes a data race, not merely wrong numbers, which is why
 /// the trait is `unsafe` to implement.  The engine's
-/// schedule-into-the-past panic and the barrier's lookahead
-/// debug-assertion are runtime *detectors* for violations, not the
-/// proof.  Implementors must guarantee:
+/// schedule-into-the-past panic and the barrier's lookahead check are
+/// runtime *detectors* for violations, not the proof; under
+/// [`EngineKind::Checked`] the [`audit`](super::audit) module checks
+/// every clause below at run time and reports breaches as structured
+/// violations (the full invariant catalog, with each clause's
+/// source-of-truth contract, is `docs/INVARIANTS.md`).  Implementors
+/// must guarantee:
 ///
 /// * an event routed to partition `p` must, when handled, mutate only
 ///   state owned by `p` (plus state no other partition's events touch;
@@ -184,6 +197,16 @@ pub enum EngineKind {
         /// worker threads partitions are chunked across
         threads: usize,
     },
+    /// the typed engine with the runtime invariant auditor attached
+    /// ([`super::audit`]): sequential when `threads == 0`, the parallel
+    /// executive otherwise.  Contract breaches are recorded as
+    /// structured [`super::audit::AuditViolation`]s on
+    /// [`Sim::audit_report`] instead of panicking; results stay
+    /// bit-identical to the unchecked engine on contract-clean worlds.
+    Checked {
+        /// worker threads (0 = sequential audited run)
+        threads: usize,
+    },
     /// the PR-3 representation — one boxed closure per event on a
     /// `BinaryHeap` — kept as the benchmark and equivalence baseline
     /// (tests and the `testing` feature only)
@@ -237,11 +260,20 @@ impl<W: World> Arena<W> {
         }
     }
 
-    fn insert(&mut self, stored: Stored<W>) -> u32 {
+    /// Store an event; the `bool` reports whether the free list handed
+    /// out a slot that was still occupied (the old entry is clobbered —
+    /// an engine bug the audited executive records as
+    /// [`AuditViolation::SlotAliased`]).
+    fn insert(&mut self, stored: Stored<W>) -> (u32, bool) {
         match self.free.pop() {
             Some(slot) => {
-                self.slots[slot as usize] = Some(stored);
-                slot
+                let aliased = self
+                    .slots
+                    .get_mut(slot as usize)
+                    .expect("free-list slot outside the arena (engine bug)")
+                    .replace(stored)
+                    .is_some();
+                (slot, aliased)
             }
             None => {
                 assert!(
@@ -249,13 +281,16 @@ impl<W: World> Arena<W> {
                     "event arena exhausted (more than 2^32-1 pending events)"
                 );
                 self.slots.push(Some(stored));
-                (self.slots.len() - 1) as u32
+                ((self.slots.len() - 1) as u32, false)
             }
         }
     }
 
     fn take(&mut self, slot: u32) -> Stored<W> {
-        let stored = self.slots[slot as usize]
+        let stored = self
+            .slots
+            .get_mut(slot as usize)
+            .expect("popped key's slot outside the arena (engine bug)")
             .take()
             .expect("empty arena slot (engine bug)");
         self.free.push(slot);
@@ -323,8 +358,8 @@ impl Calendar {
         let idx = self.index_of(key.time);
         if idx < self.next_bucket {
             self.front.push(Reverse(key));
-        } else if idx < BUCKETS {
-            self.buckets[idx].push(key);
+        } else if let Some(bucket) = self.buckets.get_mut(idx) {
+            bucket.push(key);
         } else {
             self.overflow.push(Reverse(key));
         }
@@ -335,13 +370,16 @@ impl Calendar {
     /// the whole queue is empty).
     fn ensure_front(&mut self) {
         while self.front.is_empty() {
-            while self.next_bucket < BUCKETS && self.buckets[self.next_bucket].is_empty() {
+            while self
+                .buckets
+                .get(self.next_bucket)
+                .is_some_and(Vec::is_empty)
+            {
                 self.next_bucket += 1;
             }
-            if self.next_bucket < BUCKETS {
-                let idx = self.next_bucket;
+            if let Some(bucket) = self.buckets.get_mut(self.next_bucket) {
                 self.next_bucket += 1;
-                while let Some(key) = self.buckets[idx].pop() {
+                while let Some(key) = bucket.pop() {
                     self.front.push(Reverse(key));
                 }
             } else if !self.refill() {
@@ -367,7 +405,7 @@ impl Calendar {
         // Heap pops arrive in key order, so the batch is time-sorted:
         // size the wheel to its span.  A zero span (all ties) keeps the
         // previous width — everything lands in bucket 0.
-        let span = batch[batch.len() - 1].time - first.time;
+        let span = batch.last().expect("refill batch holds at least `first`").time - first.time;
         if span > 0.0 {
             self.width = span / BUCKETS as f64;
         }
@@ -375,8 +413,8 @@ impl Calendar {
         self.next_bucket = 0;
         for key in batch {
             let idx = self.index_of(key.time);
-            if idx < BUCKETS {
-                self.buckets[idx].push(key);
+            if let Some(bucket) = self.buckets.get_mut(idx) {
+                bucket.push(key);
             } else {
                 // float rounding at the horizon (or a degenerate width):
                 // spill back.  `first` always maps to bucket 0, so every
@@ -474,6 +512,9 @@ impl<W> Copy for SharedState<'_, W> {}
 // its own copy); `W: Send` bounds both, as handing the handle to
 // another thread hands it mutable access to `W`.
 unsafe impl<W: Send> Send for SharedState<'_, W> {}
+// SAFETY: as for `Send` above — a `&SharedState` grants nothing a copy
+// of the handle doesn't, and every dereference stays inside
+// `run_window_shared`.
 unsafe impl<W: Send> Sync for SharedState<'_, W> {}
 
 /// The simulation executive.  `W` is the simulation world: its state is
@@ -499,6 +540,9 @@ pub struct Sim<W: World> {
     part_stats: Vec<PartitionStats>,
     /// stop running once this many events executed (bench event cap)
     budget: Option<u64>,
+    /// the invariant auditor ([`EngineKind::Checked`] only) — `None`
+    /// costs one branch per operation, the zero-cost-when-off contract
+    audit: Option<Box<AuditState>>,
 }
 
 impl<W: World> Default for Sim<W> {
@@ -535,6 +579,8 @@ impl<W: World> Sim<W> {
             deferred: Vec::new(),
             part_stats: Vec::new(),
             budget: None,
+            audit: matches!(kind, EngineKind::Checked { .. })
+                .then(|| Box::new(AuditState::new())),
         }
     }
 
@@ -573,6 +619,36 @@ impl<W: World> Sim<W> {
         &self.part_stats
     }
 
+    /// Whether the invariant auditor is attached
+    /// ([`EngineKind::Checked`]).
+    pub fn audited(&self) -> bool {
+        self.audit.is_some()
+    }
+
+    /// The auditor's report so far (`None` unless
+    /// [`EngineKind::Checked`]).  After a parallel run, every
+    /// partition's findings are already merged in.
+    pub fn audit_report(&self) -> Option<&AuditReport> {
+        self.audit.as_deref().map(|a| &a.report)
+    }
+
+    /// Move the auditor's report out, leaving a fresh empty one
+    /// (`None` unless [`EngineKind::Checked`]).
+    pub fn take_audit_report(&mut self) -> Option<AuditReport> {
+        self.audit.as_deref_mut().map(|a| std::mem::take(&mut a.report))
+    }
+
+    /// Test hook: duplicate the top free-list entry so two subsequent
+    /// schedules land in one arena slot — seeds the `SlotAliased`
+    /// violation for the auditor's negative tests.
+    #[cfg(test)]
+    fn alias_free_slot_for_test(&mut self) {
+        if let QueueImpl::Typed { arena, .. } = &mut self.queue {
+            let slot = *arena.free.last().expect("free list empty; run an event first");
+            arena.free.push(slot);
+        }
+    }
+
     /// Cap the total number of events a subsequent run executes (`None`
     /// = unbounded).  The benchmark's big-N sweeps use this to measure
     /// steady-state throughput without draining quadratically many ring
@@ -584,14 +660,30 @@ impl<W: World> Sim<W> {
 
     /// Schedule a typed event `delay` seconds from now.
     pub fn schedule(&mut self, delay: Time, event: W::Event) {
-        self.assert_delay(delay);
+        if self.audit.is_none() {
+            self.assert_delay(delay);
+        }
+        // audited: `now + delay` funnels a bad delay into `schedule_at`'s
+        // checks (NaN/∞ → non-finite time, negative → past), so every
+        // violation is recorded at one choke point
         self.schedule_at(self.now + delay, event);
     }
 
     /// Schedule a typed event at an absolute time (>= now, finite — a
-    /// NaN or infinite time would corrupt the queue order).
+    /// NaN or infinite time would corrupt the queue order).  Unchecked
+    /// engines panic on a precondition breach; [`EngineKind::Checked`]
+    /// records a structured violation instead and keeps the run alive
+    /// (non-finite times drop the event, past times clamp to `now`).
     pub fn schedule_at(&mut self, time: Time, event: W::Event) {
-        self.check_time(time);
+        let time = if let Some(audit) = self.audit.as_deref_mut() {
+            match audit.on_schedule(time, self.now) {
+                Some(time) => time,
+                None => return, // recorded and dropped
+            }
+        } else {
+            self.check_time(time);
+            time
+        };
         if let Some(router) = &self.router {
             let p = router(&event);
             if p != self.my_partition {
@@ -651,7 +743,13 @@ impl<W: World> Sim<W> {
         self.seq += 1;
         match &mut self.queue {
             QueueImpl::Typed { calendar, arena } => {
-                let slot = arena.insert(stored);
+                let (slot, aliased) = arena.insert(stored);
+                if aliased {
+                    match self.audit.as_deref_mut() {
+                        Some(audit) => audit.report.record(AuditViolation::SlotAliased { slot }),
+                        None => debug_assert!(false, "arena slot {slot} aliased (engine bug)"),
+                    }
+                }
                 calendar.push(Key { time, seq, slot });
             }
             #[cfg(any(test, feature = "testing"))]
@@ -670,15 +768,15 @@ impl<W: World> Sim<W> {
         self.peak_pending = self.peak_pending.max(self.pending());
     }
 
-    fn pop_next(&mut self) -> Option<(Time, Stored<W>)> {
+    fn pop_next(&mut self) -> Option<(Time, u64, Stored<W>)> {
         match &mut self.queue {
             QueueImpl::Typed { calendar, arena } => {
                 let key = calendar.pop()?;
-                Some((key.time, arena.take(key.slot)))
+                Some((key.time, key.seq, arena.take(key.slot)))
             }
             #[cfg(any(test, feature = "testing"))]
             QueueImpl::Boxed(heap) => {
-                heap.pop().map(|s| (s.time, Stored::Closure(s.action)))
+                heap.pop().map(|s| (s.time, s.seq, Stored::Closure(s.action)))
             }
         }
     }
@@ -750,10 +848,13 @@ impl<W: World> Sim<W> {
             if past_end {
                 break;
             }
-            let Some((time, stored)) = self.pop_next() else {
+            let Some((time, seq, stored)) = self.pop_next() else {
                 break;
             };
-            debug_assert!(time >= self.now);
+            match self.audit.as_deref_mut() {
+                Some(audit) => audit.on_pop(time, seq, self.now),
+                None => debug_assert!(time >= self.now),
+            }
             self.now = time;
             self.events_run += 1;
             // SAFETY: exclusive for the span of this one handler call —
@@ -773,8 +874,11 @@ impl<W: World> Sim<W> {
     pub fn step(&mut self, state: &mut W) -> bool {
         match self.pop_next() {
             None => false,
-            Some((time, stored)) => {
-                debug_assert!(time >= self.now);
+            Some((time, seq, stored)) => {
+                match self.audit.as_deref_mut() {
+                    Some(audit) => audit.on_pop(time, seq, self.now),
+                    None => debug_assert!(time >= self.now),
+                }
                 self.now = time;
                 self.events_run += 1;
                 match stored {
@@ -798,7 +902,10 @@ impl<W: World> Sim<W> {
         for (time, event) in drained {
             let p = self.router.as_ref().map_or(GLOBAL_PARTITION, |r| r(&event));
             debug_assert_ne!(p, self.my_partition, "deferred event routed back to its source");
-            parts[p as usize].schedule_at(time, event);
+            parts
+                .get_mut(p as usize)
+                .expect("routed partition outside the partition table")
+                .schedule_at(time, event);
         }
     }
 
@@ -838,12 +945,20 @@ impl<W: World> Sim<W> {
             "lookahead must be finite and non-negative, got {lookahead}"
         );
 
+        // The checker snapshots the routing table for the barrier-side
+        // contract checks; partitions get their own auditors, merged
+        // back into this runner's report at the end of the run.
+        let checker: Option<CheckedWorld<W>> =
+            self.audit.is_some().then(|| CheckedWorld::new(&*state));
         let mut parts: Vec<Sim<W>> = (0..nparts)
             .map(|p| {
                 let pmap = map;
                 let mut part = Sim::with_engine(EngineKind::Typed);
                 part.my_partition = p as u32;
                 part.router = Some(Box::new(move |ev: &W::Event| W::route(&pmap, ev)));
+                if self.audit.is_some() {
+                    part.audit = Some(Box::new(AuditState::new()));
+                }
                 part
             })
             .collect();
@@ -853,7 +968,7 @@ impl<W: World> Sim<W> {
         // Re-route everything scheduled before the run (job seeds): pop
         // in (time, seq) order, push through the router.
         let mut seeds: Vec<(Time, W::Event)> = Vec::new();
-        while let Some((time, stored)) = self.pop_next() {
+        while let Some((time, _seq, stored)) = self.pop_next() {
             match stored {
                 Stored::Event(event) => seeds.push((time, event)),
                 #[cfg(any(test, feature = "testing"))]
@@ -878,6 +993,20 @@ impl<W: World> Sim<W> {
                 .iter_mut()
                 .filter_map(|p| p.peek_time())
                 .min_by(|a, b| a.total_cmp(b));
+            if let Some(audit) = self.audit.as_deref_mut() {
+                // LBTS — the lower bound on the next executed timestamp
+                // (min over every runner's head) — must never regress:
+                // window starts and global steps both consume it in
+                // non-decreasing order or the conservative argument is
+                // broken.
+                let lbts = match (t_global, t_local) {
+                    (Some(g), Some(l)) => Some(g.min(l)),
+                    (g, l) => g.or(l),
+                };
+                if let Some(lbts) = lbts {
+                    audit.on_lbts(lbts);
+                }
+            }
             let window_start = match (t_global, t_local) {
                 (None, None) => break,
                 (Some(_), None) => {
@@ -911,7 +1040,7 @@ impl<W: World> Sim<W> {
                 }
             } else {
                 let chunk = parts.len().div_ceil(workers);
-                // SAFETY of the cast: `UnsafeCell<W>` is
+                // SAFETY: `UnsafeCell<W>` is
                 // `repr(transparent)` over `W`, so reborrowing the
                 // exclusive reference as a shared cell reference is the
                 // standard `UnsafeCell::from_mut` construction.  It
@@ -953,21 +1082,44 @@ impl<W: World> Sim<W> {
                 }
             }
             moved.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            if let (Some(checker), Some(audit)) = (&checker, self.audit.as_deref_mut()) {
+                // merge_key must be a total order over the batch: two
+                // same-(time, key) emissions would be ordered by the
+                // sort's whims, not by anything thread-independent
+                checker.check_merge_batch(&moved, &mut audit.report);
+            }
             for (time, _key, event) in moved {
-                let p = W::route(&map, &event);
+                let p = match (&checker, self.audit.as_deref_mut()) {
+                    // audited: route twice, so a route() that is not a
+                    // pure function of the event is caught here
+                    (Some(checker), Some(audit)) => {
+                        let p = checker.checked_route(&event, &mut audit.report);
+                        checker.check_emission(p, time, end, &mut audit.report);
+                        p
+                    }
+                    _ => W::route(&map, &event),
+                };
                 if p == GLOBAL_PARTITION {
                     // coordinator carve-out: any delay >= 0 is legal
                     self.schedule_at(time, event);
                 } else {
                     // the PartitionedWorld lookahead contract: a
                     // partition-bound emission from inside the window
-                    // must land at or past the window's end
-                    debug_assert!(
-                        time >= end,
-                        "cross-partition event violates the lookahead contract: \
-                         scheduled at {time}, inside the window ending at {end}"
-                    );
-                    parts[p as usize].schedule_at(time, event);
+                    // must land at or past the window's end.  Audited
+                    // runs record the breach above (and in release
+                    // builds too — the PR 6 assert promoted); unchecked
+                    // ones keep the debug assertion.
+                    if self.audit.is_none() {
+                        debug_assert!(
+                            time >= end,
+                            "cross-partition event violates the lookahead contract: \
+                             scheduled at {time}, inside the window ending at {end}"
+                        );
+                    }
+                    parts
+                        .get_mut(p as usize)
+                        .expect("routed partition outside the partition table")
+                        .schedule_at(time, event);
                 }
             }
         }
@@ -978,7 +1130,7 @@ impl<W: World> Sim<W> {
             events: self.events_run,
             peak_queue_depth: self.peak_pending,
         });
-        for part in &parts {
+        for part in parts.iter_mut() {
             self.part_stats.push(PartitionStats {
                 events: part.events_run,
                 peak_queue_depth: part.peak_pending,
@@ -986,6 +1138,11 @@ impl<W: World> Sim<W> {
             self.events_run += part.events_run;
             self.now = self.now.max(part.now);
             self.peak_pending = self.peak_pending.max(part.peak_pending);
+            // audited: fold every partition's findings into the
+            // coordinator's report, so callers read one report
+            if let (Some(pa), Some(audit)) = (part.audit.take(), self.audit.as_deref_mut()) {
+                audit.report.merge(pa.report);
+            }
         }
         self.router = None;
         self.now
@@ -993,6 +1150,8 @@ impl<W: World> Sim<W> {
 }
 
 #[cfg(test)]
+// tests index fixed-size logs and pin exact float times by construction
+#[allow(clippy::indexing_slicing, clippy::float_cmp)]
 mod tests {
     use super::*;
 
@@ -1346,5 +1505,269 @@ mod tests {
         let total: u64 = stats.iter().map(|s| s.events).sum();
         assert_eq!(total, sim.events_run());
         assert!(stats.iter().skip(1).any(|s| s.events > 0), "no partition ran events");
+    }
+
+    // -----------------------------------------------------------------
+    // Checked executive (the invariant auditor)
+    // -----------------------------------------------------------------
+
+    use std::sync::atomic::{AtomicU32, Ordering as AtomicOrdering};
+
+    #[test]
+    fn checked_sequential_is_bit_identical_and_clean() {
+        let mut sim: Sim<Sharded> = Sim::with_engine(EngineKind::Checked { threads: 0 });
+        let mut world = Sharded::new();
+        for i in 1..40u32 {
+            sim.schedule_at(f64::from(i) * 1e-7, i);
+        }
+        let end = sim.run(&mut world);
+        let n = sim.events_run();
+        let report = sim.take_audit_report().expect("checked engine carries a report");
+        assert!(report.is_clean(), "{}", report.summary());
+        assert_eq!(report.events_checked(), n, "every dispatch must be checked");
+        let (seq, seq_end, seq_n) = run_sharded(None);
+        assert_eq!(end.to_bits(), seq_end.to_bits(), "audited clock diverged");
+        assert_eq!(n, seq_n);
+        assert_eq!(world.logs, seq.logs, "auditing must not perturb execution");
+        assert_eq!(world.glog, seq.glog);
+    }
+
+    #[test]
+    fn checked_parallel_is_thread_invariant_and_clean() {
+        let (w1, end1, n1) = run_sharded(Some(1));
+        for threads in [1, 2, 4] {
+            let mut sim: Sim<Sharded> = Sim::with_engine(EngineKind::Checked { threads });
+            let mut world = Sharded::new();
+            for i in 1..40u32 {
+                sim.schedule_at(f64::from(i) * 1e-7, i);
+            }
+            let end = sim.run_parallel(&mut world, threads);
+            let report = sim.take_audit_report().expect("checked engine carries a report");
+            assert!(report.is_clean(), "threads={threads}: {}", report.summary());
+            assert_eq!(world.logs, w1.logs, "threads={threads}");
+            assert_eq!(world.glog, w1.glog, "threads={threads}");
+            assert_eq!(end.to_bits(), end1.to_bits(), "threads={threads}");
+            assert_eq!(sim.events_run(), n1, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn audited_non_finite_schedule_reports_and_drops() {
+        let mut sim: Sim<Log> = Sim::with_engine(EngineKind::Checked { threads: 0 });
+        let mut log = Log::new();
+        sim.schedule_at(f64::NAN, 1);
+        sim.schedule(f64::INFINITY, 2);
+        sim.schedule(1.0, 3);
+        sim.run(&mut log);
+        assert_eq!(log.fired, vec![3], "non-finite events must be dropped");
+        let report = sim.audit_report().expect("checked engine carries a report");
+        assert_eq!(report.total(), 2);
+        assert!(report.violations().iter().all(|v| v.kind() == "non-finite-time"));
+    }
+
+    #[test]
+    fn audited_past_schedule_clamps_and_reports() {
+        let mut sim: Sim<Log> = Sim::with_engine(EngineKind::Checked { threads: 0 });
+        let mut log = Log::new();
+        sim.schedule_closure(1.0, |sim, _state| {
+            sim.schedule_at(0.25, 9); // into the scheduler's past
+        });
+        sim.run(&mut log);
+        assert_eq!(log.fired, vec![9], "the clamped event still runs");
+        assert_eq!(log.times, vec![1.0], "clamped to the scheduler's now");
+        let report = sim.audit_report().expect("checked engine carries a report");
+        assert!(matches!(
+            report.violations().first(),
+            Some(AuditViolation::SchedulePast { .. })
+        ));
+    }
+
+    #[test]
+    fn audited_slot_aliasing_is_reported() {
+        let mut sim: Sim<Log> = Sim::with_engine(EngineKind::Checked { threads: 0 });
+        sim.schedule(1.0, 1);
+        sim.run(&mut Log::new()); // the slot is now recycled via the free list
+        sim.alias_free_slot_for_test();
+        sim.schedule(1.0, 2);
+        sim.schedule(2.0, 3); // lands in the aliased slot, clobbering 2
+        let report = sim.audit_report().expect("checked engine carries a report");
+        assert!(matches!(
+            report.violations().first(),
+            Some(AuditViolation::SlotAliased { slot: 0 })
+        ));
+    }
+
+    /// A world that *claims* `LOOKAHEAD` but bounces events to the other
+    /// partition a tenth of it in the future — the lookahead-contract
+    /// breach the auditor must catch without killing the run.  Only ever
+    /// executed with `threads = 1` (no worker spawns), so the broken
+    /// contract cannot produce an actual data race.
+    struct ShortLookahead {
+        hops: u32,
+    }
+
+    impl World for ShortLookahead {
+        type Event = u32;
+        fn handle(sim: &mut Sim<Self>, state: &mut Self, event: u32) {
+            state.hops += 1;
+            if state.hops < 10 {
+                sim.schedule(LOOKAHEAD * 0.1, event ^ 1);
+            }
+        }
+    }
+
+    // SAFETY: deliberately violates the lookahead clause (that is the
+    // point of the negative test); sound only because the test drives it
+    // with a single worker thread, so no two handlers ever run
+    // concurrently.
+    unsafe impl PartitionedWorld for ShortLookahead {
+        type Map = ();
+        fn partition_map(&self) -> Self::Map {}
+        fn partition_count(_map: &Self::Map) -> usize {
+            2
+        }
+        fn route(_map: &Self::Map, event: &Self::Event) -> u32 {
+            event % 2
+        }
+        fn lookahead(&self) -> Time {
+            LOOKAHEAD // overclaimed: emissions use a tenth of this
+        }
+        fn merge_key(_map: &Self::Map, event: &Self::Event) -> u128 {
+            u128::from(*event)
+        }
+    }
+
+    #[test]
+    fn audited_lookahead_violation_is_reported_not_fatal() {
+        let mut sim: Sim<ShortLookahead> = Sim::with_engine(EngineKind::Checked { threads: 1 });
+        let mut world = ShortLookahead { hops: 0 };
+        sim.schedule_at(1e-7, 0);
+        sim.run_parallel(&mut world, 1);
+        assert_eq!(world.hops, 10, "the violating run must still complete");
+        let report = sim.take_audit_report().expect("checked engine carries a report");
+        assert!(
+            report
+                .violations()
+                .iter()
+                .any(|v| matches!(v, AuditViolation::LookaheadViolation { .. })),
+            "expected a lookahead violation, got: {}",
+            report.summary()
+        );
+    }
+
+    /// A world whose `route` consults a global counter for event 7 — not
+    /// a pure function of the event, which the audited barrier detects
+    /// by routing twice.  `threads = 1` only, as above.
+    struct FlakyRoute {
+        seen: u32,
+    }
+
+    static FLAKY_ROUTE_CALLS: AtomicU32 = AtomicU32::new(0);
+
+    impl World for FlakyRoute {
+        type Event = u32;
+        fn handle(sim: &mut Sim<Self>, state: &mut Self, _event: u32) {
+            state.seen += 1;
+            if state.seen < 6 {
+                sim.schedule(LOOKAHEAD, 7);
+            }
+        }
+    }
+
+    // SAFETY: deliberately violates route stability (the point of the
+    // negative test); sound only under a single worker thread.
+    unsafe impl PartitionedWorld for FlakyRoute {
+        type Map = ();
+        fn partition_map(&self) -> Self::Map {}
+        fn partition_count(_map: &Self::Map) -> usize {
+            2
+        }
+        fn route(_map: &Self::Map, event: &Self::Event) -> u32 {
+            if *event == 7 {
+                FLAKY_ROUTE_CALLS.fetch_add(1, AtomicOrdering::Relaxed) % 2
+            } else {
+                0
+            }
+        }
+        fn lookahead(&self) -> Time {
+            LOOKAHEAD
+        }
+        fn merge_key(_map: &Self::Map, event: &Self::Event) -> u128 {
+            u128::from(*event)
+        }
+    }
+
+    #[test]
+    fn audited_unstable_route_is_reported() {
+        let mut sim: Sim<FlakyRoute> = Sim::with_engine(EngineKind::Checked { threads: 1 });
+        let mut world = FlakyRoute { seen: 0 };
+        sim.schedule_at(1e-7, 0);
+        sim.run_parallel(&mut world, 1);
+        let report = sim.take_audit_report().expect("checked engine carries a report");
+        assert!(
+            report
+                .violations()
+                .iter()
+                .any(|v| matches!(v, AuditViolation::UnstableRoute { .. })),
+            "expected an unstable-route violation, got: {}",
+            report.summary()
+        );
+    }
+
+    /// A world emitting two *distinct* same-time cross-partition events
+    /// under one constant merge key — `merge_key` fails to totally order
+    /// the barrier batch.
+    struct KeyClash {
+        got: Vec<u32>,
+    }
+
+    impl World for KeyClash {
+        type Event = u32;
+        fn handle(sim: &mut Sim<Self>, state: &mut Self, event: u32) {
+            state.got.push(event);
+            if event == 0 {
+                sim.schedule(LOOKAHEAD, 100);
+                sim.schedule(LOOKAHEAD, 101);
+            }
+        }
+    }
+
+    // SAFETY: routing is partition-pure and emissions respect the
+    // lookahead; only the merge-key totality clause is (deliberately)
+    // broken, which risks cross-thread reordering, not a data race —
+    // and the test runs single-threaded anyway.
+    unsafe impl PartitionedWorld for KeyClash {
+        type Map = ();
+        fn partition_map(&self) -> Self::Map {}
+        fn partition_count(_map: &Self::Map) -> usize {
+            2
+        }
+        fn route(_map: &Self::Map, event: &Self::Event) -> u32 {
+            u32::from(*event != 0)
+        }
+        fn lookahead(&self) -> Time {
+            LOOKAHEAD
+        }
+        fn merge_key(_map: &Self::Map, _event: &Self::Event) -> u128 {
+            42 // constant: same-time emissions collide
+        }
+    }
+
+    #[test]
+    fn audited_merge_key_collision_is_reported() {
+        let mut sim: Sim<KeyClash> = Sim::with_engine(EngineKind::Checked { threads: 1 });
+        let mut world = KeyClash { got: Vec::new() };
+        sim.schedule_at(1e-7, 0);
+        sim.run_parallel(&mut world, 1);
+        assert_eq!(world.got, vec![0, 100, 101], "all three events still execute");
+        let report = sim.take_audit_report().expect("checked engine carries a report");
+        assert!(
+            report
+                .violations()
+                .iter()
+                .any(|v| matches!(v, AuditViolation::MergeKeyCollision { key: 42, .. })),
+            "expected a merge-key collision, got: {}",
+            report.summary()
+        );
     }
 }

@@ -381,9 +381,70 @@ impl Fabric {
         let n = self.nodes.len() as f64;
         self.nodes.iter().map(|nd| nd.adder.utilization(horizon)).sum::<f64>() / n
     }
+
+    /// Total f32 elements folded by the nodes' FPGA adders — the observed
+    /// side of the conservation audit's exactly-once ledger for
+    /// NIC-offloaded reductions.
+    #[must_use]
+    pub fn adders_served(&self) -> f64 {
+        self.nodes.iter().map(|nd| nd.adder.served()).sum()
+    }
+
+    /// Total f32 elements folded by the switching tier's aggregation
+    /// engines (0 without in-switch reduction capability) — the observed
+    /// side of the conservation audit's ledger for in-switch reductions.
+    #[must_use]
+    pub fn reduce_engines_served(&self) -> f64 {
+        match &self.interconnect {
+            Interconnect::Flat(sw) => sw.engines_served(),
+            Interconnect::LeafSpine { uplink_reducers, spine_reducers, .. } => uplink_reducers
+                .iter()
+                .chain(spine_reducers.iter())
+                .map(Server::served)
+                .sum(),
+        }
+    }
+
+    /// Every FIFO server in the fabric — each node's Tx, PCIe (both
+    /// directions), adder and comm servers, then the whole interconnect —
+    /// enumerated by the quiescence audit's leaked-reservation scan.
+    pub fn servers(&self) -> impl Iterator<Item = &Server> + '_ {
+        let node_servers = self.nodes.iter().flat_map(|nd| {
+            [
+                &nd.tx.server,
+                &nd.pcie.to_device.server,
+                &nd.pcie.to_host.server,
+                &nd.adder,
+                &nd.comm,
+            ]
+        });
+        let interconnect: Box<dyn Iterator<Item = &Server>> = match &self.interconnect {
+            Interconnect::Flat(sw) => Box::new(sw.servers()),
+            Interconnect::LeafSpine {
+                leaves,
+                uplinks,
+                downlinks,
+                uplink_reducers,
+                spine_reducers,
+                ..
+            } => Box::new(
+                leaves
+                    .iter()
+                    .flat_map(Switch::servers)
+                    .chain(uplinks)
+                    .chain(downlinks)
+                    .chain(uplink_reducers)
+                    .chain(spine_reducers),
+            ),
+        };
+        node_servers.chain(interconnect)
+    }
 }
 
 #[cfg(test)]
+// exact float equalities are deliberate here: the fabric model is pure
+// arithmetic and the tests pin bit-exact results
+#[allow(clippy::float_cmp)]
 mod tests {
     use super::*;
 
@@ -538,6 +599,23 @@ mod tests {
             HopOutcome::Delivered(t) => assert!((t - expect).abs() < 1e-12, "{t} vs {expect}"),
             HopOutcome::AtSpine(_) => panic!("flat crossbar has no spine"),
         }
+    }
+
+    #[test]
+    fn audit_accessors_enumerate_every_server() {
+        let sys = SystemParams::smartnic_40g();
+        let mut f = Fabric::new(&sys, 4, &ClusterFaults::none());
+        // flat crossbar, no in-switch reduction: 5 servers per node
+        // (tx, pcie x2, adder, comm) + one egress port per node
+        assert_eq!(f.servers().count(), 4 * 5 + 4);
+        assert_eq!(f.adders_served(), 0.0);
+        assert_eq!(f.reduce_engines_served(), 0.0);
+        let _ = f.nodes[0].adder.serve(0.0, 1e6);
+        assert_eq!(f.adders_served(), 1e6);
+        // leaf–spine: per-leaf down-ports plus uplink/downlink bundles
+        let topo = Topology::leaf_spine(2, 3, 3.0);
+        let ls = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        assert_eq!(ls.servers().count(), 6 * 5 + 2 * (3 + 1 + 1));
     }
 
     #[test]

@@ -22,6 +22,11 @@ pub struct Server {
     busy_until: Time,
     busy_time: f64,
     served: f64,
+    /// longest single service/reservation drain time — the slack the
+    /// quiescence audit grants `busy_until` past the final event time
+    /// (a cut-through reservation legitimately outlives its delivery
+    /// event by at most one drain time)
+    max_service: Time,
 }
 
 impl Server {
@@ -32,6 +37,7 @@ impl Server {
             busy_until: 0.0,
             busy_time: 0.0,
             served: 0.0,
+            max_service: 0.0,
         }
     }
 
@@ -43,6 +49,7 @@ impl Server {
         self.busy_until = start + dur;
         self.busy_time += dur;
         self.served += amount;
+        self.max_service = self.max_service.max(dur);
         self.busy_until
     }
 
@@ -60,12 +67,19 @@ impl Server {
         self.busy_until = start + dur;
         self.busy_time += dur;
         self.served += amount;
+        self.max_service = self.max_service.max(dur);
         start
     }
 
     #[must_use]
     pub fn busy_until(&self) -> Time {
         self.busy_until
+    }
+
+    /// Longest single service/reservation drain time seen so far.
+    #[must_use]
+    pub fn max_service(&self) -> Time {
+        self.max_service
     }
 
     /// Total units served.
@@ -90,6 +104,7 @@ impl Server {
         self.busy_until = 0.0;
         self.busy_time = 0.0;
         self.served = 0.0;
+        self.max_service = 0.0;
     }
 }
 
@@ -155,6 +170,9 @@ impl Pcie {
 }
 
 #[cfg(test)]
+// exact float equalities are deliberate here: servers are pure arithmetic
+// and the tests pin bit-exact results
+#[allow(clippy::float_cmp)]
 mod tests {
     use super::*;
     use crate::util::units::gbps;
@@ -215,6 +233,8 @@ mod tests {
         // capacity accounting still accrues
         assert_eq!(s.served(), 200.0);
         assert!((s.utilization(2.0) - 1.0).abs() < 1e-12);
+        // the audit slack tracks the longest single drain
+        assert_eq!(s.max_service(), 1.0);
     }
 
     #[test]
@@ -236,5 +256,6 @@ mod tests {
         s.reset();
         assert_eq!(s.busy_until(), 0.0);
         assert_eq!(s.served(), 0.0);
+        assert_eq!(s.max_service(), 0.0);
     }
 }

@@ -17,12 +17,25 @@
 //!   [`switch`], the shared world state of the unified cluster engine.
 //!
 //! All time is `f64` seconds of *virtual* time; everything is pure
-//! arithmetic, so simulations are exactly reproducible.
+//! arithmetic, so simulations are exactly reproducible.  The [`audit`]
+//! module machine-checks that claim: `EngineKind::Checked` validates the
+//! engine's scheduling and PDES invariants at dispatch time (see
+//! `docs/INVARIANTS.md`).
 
+#[forbid(unsafe_code)]
+pub mod audit;
+// `engine` is one of the two modules allowed to contain `unsafe`: the
+// parallel executive's shared-state machinery lives here, under
+// `clippy::indexing_slicing` so every hot-path index carries a message.
+#[warn(clippy::indexing_slicing)]
 pub mod engine;
+#[forbid(unsafe_code)]
 pub mod fabric;
+#[forbid(unsafe_code)]
 pub mod link;
+#[forbid(unsafe_code)]
 pub mod switch;
+#[forbid(unsafe_code)]
 pub mod topology;
 
 pub type Time = f64;

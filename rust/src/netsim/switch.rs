@@ -122,6 +122,21 @@ impl Switch {
         self.egress[port].utilization(horizon)
     }
 
+    /// Total f32 elements folded by this switch's aggregation engines
+    /// (0 on a plain forwarding switch) — the observed side of the
+    /// conservation auditor's exactly-once ledger.
+    #[must_use]
+    pub fn engines_served(&self) -> f64 {
+        self.reducers.iter().map(Server::served).sum()
+    }
+
+    /// Every FIFO server in the switch (egress ports, then aggregation
+    /// engines) — enumerated by the quiescence audit's leaked-reservation
+    /// scan.
+    pub fn servers(&self) -> impl Iterator<Item = &Server> + '_ {
+        self.egress.iter().chain(self.reducers.iter())
+    }
+
     pub fn reset(&mut self) {
         for p in &mut self.egress {
             p.reset();
@@ -133,6 +148,9 @@ impl Switch {
 }
 
 #[cfg(test)]
+// exact float equalities are deliberate here: the switch model is pure
+// arithmetic and the tests pin bit-exact results
+#[allow(clippy::float_cmp)]
 mod tests {
     use super::*;
     use crate::netsim::topology::Ring;

@@ -212,6 +212,9 @@ impl Ring {
 }
 
 #[cfg(test)]
+// exact float equalities are deliberate: the tests pin exact results of
+// pure arithmetic
+#[allow(clippy::float_cmp)]
 mod tests {
     use super::*;
 

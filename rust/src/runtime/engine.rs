@@ -142,7 +142,7 @@ impl Engine {
             .iter()
             .map(|(k, v)| (k.clone(), *v))
             .collect();
-        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
         v
     }
 

@@ -24,7 +24,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
         0.0
     };
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     Summary {
         n,
         mean,
@@ -52,7 +52,7 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     percentile_sorted(&sorted, p)
 }
 
@@ -102,6 +102,9 @@ pub fn geomean(xs: &[f64]) -> f64 {
 }
 
 #[cfg(test)]
+// exact float equalities are deliberate: the tests pin exact results of
+// pure arithmetic
+#[allow(clippy::float_cmp)]
 mod tests {
     use super::*;
 

@@ -55,6 +55,9 @@ pub fn fmt_rate(bytes_per_s: f64) -> String {
 }
 
 #[cfg(test)]
+// exact float equalities are deliberate: unit conversions are exact
+// power-of-ten scalings
+#[allow(clippy::float_cmp)]
 mod tests {
     use super::*;
 

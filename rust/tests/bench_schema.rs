@@ -149,10 +149,15 @@ fn bench_engine_schema_is_pinned() {
         "config/parallel_speedup_floor".to_string(),
         "config/parallel_gate_nodes".to_string(),
         "config/parallel_gate_threads".to_string(),
+        "config/checked_overhead_tol".to_string(),
         "gates/ring_gate_speedup".to_string(),
         "gates/speedup_pass".to_string(),
         "gates/worst_virtual_err".to_string(),
         "gates/parallel_worst_virtual_err".to_string(),
+        "gates/checked_worst_virtual_err".to_string(),
+        "gates/checked_worst_overhead".to_string(),
+        "gates/checked_overhead_pass".to_string(),
+        "gates/checked_violations".to_string(),
         "gates/parallel_scaling_speedup".to_string(),
         "gates/parallel_scaling_pass".to_string(),
         "gates/parallel_scaling_floor_pass".to_string(),
@@ -170,6 +175,7 @@ fn bench_engine_schema_is_pinned() {
             "events_per_sec",
             "baseline",
             "parallel",
+            "checked",
         ] {
             paths.push(format!("points/{i}/{key}"));
         }
@@ -184,6 +190,11 @@ fn bench_engine_schema_is_pinned() {
     for i in 0..cfg.threads.len() {
         for key in ["threads", "wall_s", "events_per_sec", "virtual_err", "imbalance"] {
             paths.push(format!("points/0/parallel/{i}/{key}"));
+        }
+        // ... and one audited (checked-executive) row per thread count
+        for key in ["threads", "wall_s", "events_per_sec", "virtual_err", "overhead", "violations"]
+        {
+            paths.push(format!("points/0/checked/{i}/{key}"));
         }
     }
     for i in 0..scaling.len() {
@@ -209,6 +220,11 @@ fn bench_engine_schema_is_pinned() {
     assert_eq!(gates.get("parallel_scaling_floor_pass"), Some(&Json::Null));
     assert!(gates.get("worst_virtual_err").unwrap().as_f64().unwrap() <= 1e-9);
     assert!(gates.get("parallel_worst_virtual_err").unwrap().as_f64().unwrap() <= 1e-9);
+    // the audited rows exist at any sweep size: violations must be zero
+    // and the overhead gate must carry a boolean verdict, not Null
+    assert!(gates.get("checked_worst_virtual_err").unwrap().as_f64().unwrap() <= 1e-9);
+    assert_eq!(gates.get("checked_violations").unwrap().as_usize(), Some(0));
+    assert!(gates.get("checked_overhead_pass").unwrap().as_bool().is_some());
     assert_eq!(gates.get("max_nodes_completed").unwrap().as_usize(), Some(8));
     assert_eq!(gates.get("scaling_max_nodes_completed").unwrap().as_usize(), Some(8));
 }

@@ -14,6 +14,12 @@
 // 1e-9, the multi-tenant faulty scenario included, and results must be
 // bit-identical across thread counts (ties are resolved by partition
 // index at the window barrier, never by scheduling races).
+//
+// The checked executive (`EngineKind::Checked` — the invariant auditor
+// of docs/INVARIANTS.md) is held to the same bar again: auditing must
+// not perturb execution (same matrix, same 1e-9, bit-identical across
+// audited thread counts), every dispatch must be checked, and every
+// report must come back clean — the conservation ledger included.
 
 use ai_smartnic::analytic::model::SystemKind;
 use ai_smartnic::cluster::{
@@ -211,6 +217,61 @@ fn assert_parallel_equiv(spec: &ClusterSpec, label: &str) {
     }
 }
 
+/// The checked executive must reproduce the typed engine within [`TOL`]
+/// at every audited thread count, stay bit-identical across those thread
+/// counts, check every dispatch, and report zero violations (engine
+/// invariants and the cluster conservation ledger both).
+fn assert_checked_equiv(spec: &ClusterSpec, label: &str) {
+    let typed = run_scenario_on(spec, EngineKind::Typed);
+    assert!(typed.audit.is_none(), "{label}: unchecked engines must not carry a report");
+    let mut first: Option<ScenarioOutput> = None;
+    for t in PAR_THREADS {
+        let out = run_scenario_on(spec, EngineKind::Checked { threads: t });
+        let report = out.audit.as_ref().expect("checked engine carries a report");
+        assert!(report.is_clean(), "{label}/t={t}: {}", report.summary());
+        assert_eq!(
+            report.events_checked(),
+            out.events,
+            "{label}/t={t}: every dispatch must be checked"
+        );
+        assert_eq!(out.events, typed.events, "{label}/t={t}: event counts diverged");
+        assert!(
+            rel_err(typed.makespan, out.makespan) <= TOL,
+            "{label}/t={t}: makespan checked {} vs typed {}",
+            out.makespan,
+            typed.makespan
+        );
+        for (c, s) in out.jobs.iter().zip(&typed.jobs) {
+            assert_eq!(c.ar_count, s.ar_count, "{label}/t={t}/{}", c.name);
+            assert!(
+                rel_err(s.duration, c.duration) <= TOL,
+                "{label}/t={t}/{}: checked {} vs typed {}",
+                c.name,
+                c.duration,
+                s.duration
+            );
+        }
+        match &first {
+            None => first = Some(out),
+            Some(f) => {
+                assert_eq!(
+                    f.makespan.to_bits(),
+                    out.makespan.to_bits(),
+                    "{label}/t={t}: thread count changed the audited makespan"
+                );
+                for (a, b) in f.jobs.iter().zip(&out.jobs) {
+                    assert_eq!(
+                        a.duration.to_bits(),
+                        b.duration.to_bits(),
+                        "{label}/t={t}/{}: thread count changed the audited duration",
+                        a.name
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn parallel_ring_matches_typed_at_pinned_sizes() {
     for n in PAR_PINNED {
@@ -289,6 +350,85 @@ fn parallel_multi_tenant_faulty_scenario_matches_typed() {
             .starting_at(2e-4),
         );
     assert_parallel_equiv(&spec, "parallel-multi-tenant");
+}
+
+#[test]
+fn checked_ring_is_bit_identical_and_clean_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_checked_equiv(&par_family_spec(n, CollectiveAlgo::NicRing), &format!("ring/n={n}"));
+    }
+}
+
+#[test]
+fn checked_binomial_is_bit_identical_and_clean_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_checked_equiv(
+            &par_family_spec(n, CollectiveAlgo::NicBinomial),
+            &format!("binomial/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn checked_rabenseifner_is_bit_identical_and_clean_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_checked_equiv(
+            &par_family_spec(n, CollectiveAlgo::NicRabenseifner),
+            &format!("rabenseifner/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn checked_hierarchical_is_bit_identical_and_clean_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_checked_equiv(
+            &par_family_spec(n, CollectiveAlgo::NicHierarchical),
+            &format!("hierarchical/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn checked_inswitch_is_bit_identical_and_clean_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_checked_equiv(
+            &par_family_spec(n, CollectiveAlgo::SwitchReduce),
+            &format!("in-switch/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn checked_multi_tenant_faulty_scenario_is_clean() {
+    // the hardest determinism surface (shared servers, fault injection,
+    // host rounds on the coordinator) must also audit clean
+    let sys = SystemParams::smartnic_40g();
+    let w = Workload {
+        layers: 3,
+        hidden: 256,
+        batch_per_node: 32,
+    };
+    let topo = Topology::leaf_spine(2, 4, 4.0);
+    let spec = ClusterSpec::new(sys, 8)
+        .with_topology(topo)
+        .with_faults(ClusterFaults::none().with_straggler(2, 0.5).with_degraded_link(5, 0.25))
+        .with_job(JobSpec::new(
+            "nic",
+            SystemKind::SmartNic { bfp: true },
+            w,
+            topo.contiguous_ranks(8),
+        ))
+        .with_job(
+            JobSpec::new(
+                "host",
+                SystemKind::BaselineOverlapped { scheme: Scheme::Ring, comm_cores: 2 },
+                w,
+                vec![1, 3, 5, 7],
+            )
+            .starting_at(2e-4),
+        );
+    assert_checked_equiv(&spec, "checked-multi-tenant");
 }
 
 #[test]
