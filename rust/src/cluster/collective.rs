@@ -226,6 +226,16 @@ pub struct Collective {
     pub t_done: Option<Time>,
     /// analytic wire-byte accounting per rank
     pub wire_bytes_per_rank: f64,
+    /// the executor has begun (reserved fabric resources).  NIC-path
+    /// collectives flip this when [`Event::CollectiveStart`] fires; host
+    /// and no-op collectives begin at post.  A *started* collective of a
+    /// preempted job drains to completion on the fabric.
+    pub started: bool,
+    /// the owning job was preempted inside the driver-request window
+    /// (posted, not yet started): the descriptor never reaches the
+    /// datapath, nothing was reserved, and the conservation ledger
+    /// excludes it ([`scenario`]'s audit, `docs/INVARIANTS.md`)
+    pub aborted: bool,
     state: AlgoState,
 }
 
@@ -416,6 +426,13 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
         }
     };
 
+    // classify before dispatching so no borrow of the collective is held
+    // across the &mut state calls below
+    let kind: u8 = match &state {
+        AlgoState::Noop => 0,
+        AlgoState::Ring(_) | AlgoState::Planned(_) => 1,
+        AlgoState::Host(_) => 2,
+    };
     st.collectives.push(Collective {
         id: cid,
         job,
@@ -426,16 +443,12 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
         t_post: now,
         t_done: None,
         wire_bytes_per_rank,
+        // NIC-path executors start when CollectiveStart fires; no-op and
+        // host collectives begin right here at post
+        started: kind != 1,
+        aborted: false,
         state,
     });
-
-    // classify before dispatching so no borrow of the collective is held
-    // across the &mut state calls below
-    let kind: u8 = match &st.collectives[cid].state {
-        AlgoState::Noop => 0,
-        AlgoState::Ring(_) | AlgoState::Planned(_) => 1,
-        AlgoState::Host(_) => 2,
-    };
     match kind {
         0 => complete(sim, st, cid),
         1 => {
@@ -451,6 +464,12 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
 /// [`Event::CollectiveStart`]: the NIC driver's request overhead elapsed —
 /// enter the executor matching the collective's algorithm state.
 pub(super) fn on_start(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    if st.collectives[cid].aborted {
+        // the owning job was preempted inside the driver-request window:
+        // the descriptor never reaches the datapath
+        return;
+    }
+    st.collectives[cid].started = true;
     // classify first so no borrow of the collective is held across the
     // &mut state calls below
     let is_ring = matches!(&st.collectives[cid].state, AlgoState::Ring(_));

@@ -111,6 +111,15 @@ pub struct JobRuntime {
     pub t_done: Option<Time>,
     pub worker_lane: String,
     pub comm_lane: String,
+    /// placement generation: bumped by every preempt/restart so wakes
+    /// scheduled against an older placement are dropped on dispatch
+    pub epoch: u32,
+    /// training iterations this job runs before it departs (1 on the
+    /// static scenario paths; the arrival trace sets more)
+    pub iters_total: usize,
+    /// iterations completed so far — a restart replays the current
+    /// iteration from this checkpoint, never re-counting finished ones
+    pub iters_done: usize,
 }
 
 impl JobRuntime {
@@ -154,7 +163,28 @@ impl JobRuntime {
             t_done: None,
             worker_lane,
             comm_lane,
+            epoch: 0,
+            iters_total: 1,
+            iters_done: 0,
         }
+    }
+
+    /// Rebuild this runtime for a new placement (gang scheduling or an
+    /// elastic resize): recompute the layer times, wire ratio, host
+    /// environment and task list for `ranks`, resetting the worker to the
+    /// top of the iteration.  The placement generation and iteration
+    /// checkpoint survive — a restarted job replays only its current
+    /// iteration.
+    pub fn reconfigure(&mut self, ranks: Vec<NodeId>, sys: &SystemParams) {
+        let mut spec = self.spec.clone();
+        spec.ranks = ranks;
+        let epoch = self.epoch;
+        let iters_total = self.iters_total;
+        let iters_done = self.iters_done;
+        *self = JobRuntime::new(spec, sys);
+        self.epoch = epoch;
+        self.iters_total = iters_total;
+        self.iters_done = iters_done;
     }
 }
 
@@ -203,11 +233,30 @@ fn compile_tasks(lt: &LayerTimes, layers: usize, overlap: bool) -> Vec<WorkerTas
 /// time and again at every event that frees the worker.
 pub fn run_worker(sim: &mut ClusterSim, st: &mut ClusterState, jid: JobId) {
     let now = sim.now();
+    if st.jobs[jid].t_done.is_some() {
+        return;
+    }
     loop {
         let idx = st.jobs[jid].next_task;
         if idx >= st.jobs[jid].tasks.len() {
-            if st.jobs[jid].t_done.is_none() {
-                st.jobs[jid].t_done = Some(now);
+            st.jobs[jid].iters_done += 1;
+            if st.jobs[jid].iters_done < st.jobs[jid].iters_total {
+                // iteration boundary = the checkpoint: restart the task
+                // list and let the scheduler apply any pending elastic
+                // resize (no collectives are in flight here — the Fig. 3b
+                // schedule waits on every posted AR before its last update)
+                st.jobs[jid].next_task = 0;
+                for slot in st.jobs[jid].ar_of_layer.iter_mut() {
+                    *slot = None;
+                }
+                if st.sched.is_some() {
+                    super::sched::on_iteration_boundary(sim, st, jid);
+                }
+                continue;
+            }
+            st.jobs[jid].t_done = Some(now);
+            if st.sched.is_some() {
+                sim.schedule_at(now, Event::JobDepart { job: jid as u32 });
             }
             return;
         }
@@ -217,7 +266,8 @@ pub fn run_worker(sim: &mut ClusterSim, st: &mut ClusterState, jid: JobId) {
                 st.jobs[jid].next_task = idx + 1;
                 let lane = st.jobs[jid].worker_lane.clone();
                 st.trace.add(&lane, &label, now, now + dur);
-                sim.schedule_at(now + dur, Event::JobWake { job: jid as u32 });
+                let epoch = st.jobs[jid].epoch;
+                sim.schedule_at(now + dur, Event::JobWake { job: jid as u32, epoch });
                 return;
             }
             WorkerTask::PostAr { layer } => {

@@ -37,6 +37,8 @@ pub mod job;
 pub mod planner;
 #[forbid(unsafe_code)]
 pub mod scenario;
+#[forbid(unsafe_code)]
+pub mod sched;
 
 use crate::collective::Scheme;
 use crate::netsim::engine::{PartitionedWorld, Sim, World, GLOBAL_PARTITION};
@@ -51,6 +53,10 @@ pub use job::{JobSpec, WorkerTask};
 pub use scenario::{
     run_scenario, run_scenario_capped, run_scenario_on, CappedRun, ClusterSpec, JobResult,
     ScenarioOutput,
+};
+pub use sched::{
+    run_trace, synth_trace, AllocEvent, AllocKind, ElasticOp, Failure, Policy, TraceGenConfig,
+    TraceJob, TraceJobResult, TraceOutput, TraceSpec,
 };
 
 /// Physical node index into the fabric.
@@ -108,6 +114,10 @@ pub struct ClusterState {
     pub trace: Trace,
     pub jobs: Vec<job::JobRuntime>,
     pub collectives: Vec<collective::Collective>,
+    /// the gang scheduler of a trace-driven run ([`sched::run_trace`]);
+    /// `None` on the static scenario paths, whose placements are fixed
+    /// up front
+    pub sched: Option<Box<sched::SchedState>>,
 }
 
 /// The executive type of the unified engine.
@@ -134,8 +144,34 @@ pub type ClusterSim = Sim<ClusterState>;
 /// [`cluster::collective`]: crate::cluster::collective
 #[derive(Clone, Copy, Debug)]
 pub enum Event {
-    /// (re)enter a job's worker loop (job start, or a compute span ended)
-    JobWake { job: u32 },
+    /// (re)enter a job's worker loop (job start, or a compute span
+    /// ended).  `epoch` is the job's placement generation: a wake whose
+    /// epoch no longer matches the runtime's was scheduled before a
+    /// preempt/restart and is dropped, so a stale compute continuation
+    /// cannot advance a restarted task list
+    JobWake { job: u32, epoch: u32 },
+    /// scheduler: a job enters the cluster from the arrival trace
+    JobArrive { job: u32 },
+    /// scheduler: a job completed its final iteration — release its gang
+    /// and try the queue
+    JobDepart { job: u32 },
+    /// scheduler: an elastic job asks for `nodes` more ranks (applied at
+    /// its next iteration boundary — the checkpoint)
+    JobGrow { job: u32, nodes: u32 },
+    /// scheduler: an elastic job gives up `nodes` ranks (applied at its
+    /// next iteration boundary)
+    JobShrink { job: u32, nodes: u32 },
+    /// scheduler: evict a running job (in-flight collectives drain; the
+    /// current iteration is lost back to the checkpoint)
+    JobPreempt { job: u32 },
+    /// scheduler: a preempted job's checkpoint is reloaded — re-enter the
+    /// ready queue
+    JobRestart { job: u32 },
+    /// scheduler: a fabric node fails — preempt its occupant and start
+    /// the repair timer
+    NodeFail { node: u32 },
+    /// scheduler: a failed node is serviceable again
+    NodeRepair { node: u32 },
     /// the NIC driver hands `cid`'s descriptor to the datapath (the
     /// fixed request overhead elapsed)
     CollectiveStart { cid: u32 },
@@ -195,7 +231,23 @@ impl World for ClusterState {
 
     fn handle(sim: &mut ClusterSim, st: &mut ClusterState, event: Event) {
         match event {
-            Event::JobWake { job } => job::run_worker(sim, st, ix(job)),
+            Event::JobWake { job, epoch } => {
+                // placement-generation guard: drop wakes scheduled before
+                // a preempt/restart invalidated this job's task list
+                if st.jobs[ix(job)].epoch == epoch {
+                    job::run_worker(sim, st, ix(job));
+                }
+            }
+            Event::JobArrive { job } => sched::on_job_arrive(sim, st, ix(job)),
+            Event::JobDepart { job } => sched::on_job_depart(sim, st, ix(job)),
+            Event::JobGrow { job, nodes } => sched::on_job_resize(sim, st, ix(job), true, ix(nodes)),
+            Event::JobShrink { job, nodes } => {
+                sched::on_job_resize(sim, st, ix(job), false, ix(nodes));
+            }
+            Event::JobPreempt { job } => sched::on_job_preempt(sim, st, ix(job)),
+            Event::JobRestart { job } => sched::on_job_restart(sim, st, ix(job)),
+            Event::NodeFail { node } => sched::on_node_fail(sim, st, ix(node)),
+            Event::NodeRepair { node } => sched::on_node_repair(sim, st, ix(node)),
             Event::CollectiveStart { cid } => collective::on_start(sim, st, ix(cid)),
             Event::CollectiveComplete { cid } => collective::on_complete(sim, st, ix(cid)),
             Event::RingSend { cid, step, rank, seg, .. } => {
@@ -270,6 +322,16 @@ pub struct PartitionMap {
 // * All remaining variants route to the coordinator; their zero-delay
 //   emissions (`RingWritebackDone` completion, zero-reduce
 //   `PlannedOpDone`) are the documented coordinator carve-out.
+// * The scheduler's churn vocabulary (`JobArrive`/`JobDepart`/
+//   `JobGrow`/`JobShrink`/`JobPreempt`/`JobRestart`/`NodeFail`/
+//   `NodeRepair`) is coordinator-only on both ends: the events route to
+//   `GLOBAL_PARTITION`, they are emitted exclusively by other
+//   coordinator events (the trace seed and the scheduler's own
+//   handlers), and every per-node table they mutate (`SchedState`) is
+//   read by coordinator events alone.  Partition handlers never observe
+//   scheduler state — a preempted job's in-flight collectives *drain to
+//   completion* rather than being cancelled, precisely so no partition
+//   handler's behavior can depend on when a same-time preempt executed.
 unsafe impl PartitionedWorld for ClusterState {
     type Map = PartitionMap;
 
@@ -341,7 +403,7 @@ unsafe impl PartitionedWorld for ClusterState {
                 | (f3 as u128)
         }
         match *event {
-            Event::JobWake { job } => pack(0, 0, job, 0, 0),
+            Event::JobWake { job, epoch } => pack(0, 0, job, epoch, 0),
             Event::CollectiveStart { cid } => pack(1, cid, 0, 0, 0),
             Event::CollectiveComplete { cid } => pack(2, cid, 0, 0, 0),
             Event::RingSend { cid, step, rank, seg, .. } => pack(3, cid, step, rank, seg),
@@ -364,6 +426,14 @@ unsafe impl PartitionedWorld for ClusterState {
             Event::SwitchDelivered { cid, seg, rank } => pack(17, cid, seg, rank, 0),
             Event::SwitchRankDone { cid, seg } => pack(18, cid, seg, 0, 0),
             Event::HostRoundDone { cid } => pack(19, cid, 0, 0, 0),
+            Event::JobArrive { job } => pack(20, 0, job, 0, 0),
+            Event::JobDepart { job } => pack(21, 0, job, 0, 0),
+            Event::JobGrow { job, nodes } => pack(22, 0, job, nodes, 0),
+            Event::JobShrink { job, nodes } => pack(23, 0, job, nodes, 0),
+            Event::JobPreempt { job } => pack(24, 0, job, 0, 0),
+            Event::JobRestart { job } => pack(25, 0, job, 0, 0),
+            Event::NodeFail { node } => pack(26, 0, node, 0, 0),
+            Event::NodeRepair { node } => pack(27, 0, node, 0, 0),
         }
     }
 }

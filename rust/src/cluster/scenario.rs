@@ -152,10 +152,11 @@ fn init(spec: &ClusterSpec, engine: EngineKind) -> (ClusterSim, ClusterState) {
             .map(|j| JobRuntime::new(j.clone(), &spec.sys))
             .collect(),
         collectives: Vec::new(),
+        sched: None,
     };
     let mut sim: ClusterSim = Sim::with_engine(engine);
     for (jid, j) in spec.jobs.iter().enumerate() {
-        sim.schedule_at(j.start_at, Event::JobWake { job: jid as u32 });
+        sim.schedule_at(j.start_at, Event::JobWake { job: jid as u32, epoch: 0 });
     }
     (sim, state)
 }
@@ -163,7 +164,7 @@ fn init(spec: &ClusterSpec, engine: EngineKind) -> (ClusterSim, ClusterState) {
 /// Drain the calendar on the backend `engine` selects: the parallel
 /// executive fans a leaf-partitioned copy of the queue across worker
 /// threads, every other kind drains sequentially.
-fn drive(sim: &mut ClusterSim, state: &mut ClusterState, engine: EngineKind) {
+pub(super) fn drive(sim: &mut ClusterSim, state: &mut ClusterState, engine: EngineKind) {
     match engine {
         EngineKind::Parallel { threads } => {
             sim.run_parallel(state, threads);
@@ -187,10 +188,20 @@ fn drive(sim: &mut ClusterSim, state: &mut ClusterState, engine: EngineKind) {
 /// holds reserved capacity past the final event time beyond its own
 /// longest single drain (a cut-through reservation legitimately outlives
 /// its delivery event by at most that much).
-fn audit_conservation(state: &ClusterState, end: Time, report: &mut AuditReport) {
+///
+/// Churn carve-out: a collective whose job was preempted inside the
+/// driver-request window is marked `aborted` — it never started, never
+/// reserved fabric resources and folds nothing, so it is excluded from
+/// both the completion check and the expected-fold sums.  *Started*
+/// collectives of preempted jobs drain to completion and are accounted
+/// in full.
+pub(super) fn audit_conservation(state: &ClusterState, end: Time, report: &mut AuditReport) {
     let mut adders = 0.0;
     let mut engines = 0.0;
     for c in &state.collectives {
+        if c.aborted {
+            continue;
+        }
         if c.t_done.is_none() {
             report.record(AuditViolation::UnfinishedCollective { cid: c.id });
         }

@@ -1,0 +1,556 @@
+//! E10 — cluster-scheduler trace study: gang placement policies under
+//! churn.
+//!
+//! One seeded synthetic arrival trace (Poisson arrivals, heavy-tailed
+//! gang sizes and iteration counts, elastic resizes, node failures) runs
+//! to completion once per [`Policy`] on the same leaf–spine fabric, so
+//! every policy sees the identical offered load and the only varying
+//! factor is where gangs land.  Per policy the study reports p50/p99 job
+//! completion time and queue wait, makespan, allocated-node utilization,
+//! fabric Ethernet utilization, and how many jobs ever ran fragmented.
+//!
+//! The headline number is the *fragmentation penalty*: mean JCT of the
+//! always-scatter policy over contiguous first-fit.  Scatter forces
+//! every collective across the oversubscribed spine, so on a healthy
+//! model the ratio is strictly above 1 — the bench fails if it is not
+//! ([`FRAG_GAP_MIN`]), and warns below the [`FRAG_GAP_TARGET`] trend
+//! level.
+//!
+//! Two more gates ride along: an audited churn run
+//! ([`EngineKind::Checked`]) must report zero violations — the runtime
+//! invariant auditor plus the conservation ledger, including the
+//! scheduler's own `leaked-allocation` / `job-conservation` checks — and
+//! a same-seed re-run must reproduce p50/p99 JCT bit-for-bit
+//! (`gates.determinism_pass`).
+//!
+//! `smartnic cluster-trace` prints the table and writes
+//! `BENCH_cluster.json` (schema documented in `docs/BENCHMARKS.md`,
+//! pinned by `rust/tests/bench_schema.rs`).
+
+use crate::cluster::{run_trace, synth_trace, EngineKind, Policy, Topology, TraceGenConfig};
+use crate::experiments::planner::planner_system;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use crate::util::table::{fnum, Table};
+use std::time::Instant;
+
+/// Hard floor of the fragmentation-penalty gate: scatter placement must
+/// cost strictly more mean JCT than contiguous first-fit.  The sim is
+/// deterministic, so any ratio at or below 1.0 means spine crossings
+/// have stopped costing anything — a modeling regression, not noise.
+pub const FRAG_GAP_MIN: f64 = 1.0;
+
+/// Trend target for the fragmentation penalty (warn-only below): the
+/// level a 4:1-oversubscribed spine is expected to extract from
+/// all-scatter placement on the default trace.
+pub const FRAG_GAP_TARGET: f64 = 1.05;
+
+/// Policy whose trace is re-run for the audit and determinism gates —
+/// the fragmented-fallback scheduler exercises every churn path
+/// (contiguous placement, scatter fallback, preempt, restart, elastic).
+pub const GATE_POLICY: Policy = Policy::FragAllowed;
+
+/// Sweep parameters: fabric shape plus the synthetic-trace knobs
+/// forwarded to [`synth_trace`].
+#[derive(Clone, Debug)]
+pub struct ClusterTraceConfig {
+    pub nodes: usize,
+    pub leaves: usize,
+    pub oversubscription: f64,
+    pub jobs: usize,
+    pub seed: u64,
+    pub mean_interarrival: f64,
+    pub min_gang: usize,
+    pub max_gang: usize,
+    pub max_iters: usize,
+    pub layers: usize,
+    pub hidden: usize,
+    pub batch_per_node: usize,
+    pub elastic_fraction: f64,
+    pub failures: usize,
+    pub restart_delay: f64,
+    pub repair_delay: f64,
+    /// parallel worker threads for the sweep runs (0 = sequential typed)
+    pub threads: usize,
+}
+
+impl Default for ClusterTraceConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 64,
+            leaves: 8,
+            oversubscription: 4.0,
+            jobs: 80,
+            seed: 7,
+            mean_interarrival: 0.02,
+            min_gang: 2,
+            max_gang: 16,
+            max_iters: 6,
+            layers: 2,
+            hidden: 256,
+            batch_per_node: 32,
+            elastic_fraction: 0.25,
+            failures: 3,
+            restart_delay: 0.05,
+            repair_delay: 0.2,
+            threads: 0,
+        }
+    }
+}
+
+/// One policy's run over the shared trace.
+#[derive(Clone, Debug)]
+pub struct TracePolicyPoint {
+    pub policy: &'static str,
+    pub jobs: usize,
+    pub p50_jct: f64,
+    pub p99_jct: f64,
+    pub mean_jct: f64,
+    pub p50_wait: f64,
+    pub p99_wait: f64,
+    pub makespan: f64,
+    /// allocated node-seconds over `nodes * makespan`
+    pub node_util: f64,
+    /// fabric Ethernet utilization over the makespan
+    pub eth_util: f64,
+    /// jobs that ever ran on a fragmented placement
+    pub frag_jobs: usize,
+    pub preemptions: u64,
+    pub restarts: u64,
+    /// collectives aborted in the driver-request window by preempts
+    pub aborted_collectives: usize,
+    pub events: u64,
+    pub peak_queue_depth: usize,
+    pub wall_s: f64,
+}
+
+/// Result of the audited ([`EngineKind::Checked`]) churn run.
+#[derive(Clone, Debug)]
+pub struct AuditInfo {
+    pub policy: &'static str,
+    /// audited worker threads (0 = sequential audited run)
+    pub threads: usize,
+    pub violations: usize,
+    pub events_checked: u64,
+    pub events: u64,
+    pub wall_s: f64,
+}
+
+fn topology(cfg: &ClusterTraceConfig) -> Topology {
+    assert!(cfg.leaves >= 1, "need at least one leaf");
+    assert!(
+        cfg.nodes % cfg.leaves == 0,
+        "nodes {} must divide evenly across {} leaves",
+        cfg.nodes,
+        cfg.leaves
+    );
+    if cfg.leaves == 1 {
+        Topology::flat(cfg.nodes)
+    } else {
+        Topology::leaf_spine(cfg.leaves, cfg.nodes / cfg.leaves, cfg.oversubscription)
+    }
+}
+
+fn gen_config(cfg: &ClusterTraceConfig) -> TraceGenConfig {
+    TraceGenConfig {
+        jobs: cfg.jobs,
+        seed: cfg.seed,
+        mean_interarrival: cfg.mean_interarrival,
+        min_gang: cfg.min_gang,
+        max_gang: cfg.max_gang,
+        max_iters: cfg.max_iters,
+        layers: cfg.layers,
+        hidden: cfg.hidden,
+        batch_per_node: cfg.batch_per_node,
+        elastic_fraction: cfg.elastic_fraction,
+        failures: cfg.failures,
+        restart_delay: cfg.restart_delay,
+        repair_delay: cfg.repair_delay,
+    }
+}
+
+fn sweep_engine(cfg: &ClusterTraceConfig) -> EngineKind {
+    if cfg.threads == 0 {
+        EngineKind::Typed
+    } else {
+        EngineKind::Parallel { threads: cfg.threads }
+    }
+}
+
+fn run_policy(cfg: &ClusterTraceConfig, policy: Policy, engine: EngineKind) -> TracePolicyPoint {
+    let topo = topology(cfg);
+    let sys = planner_system(cfg.leaves, cfg.nodes / cfg.leaves);
+    let spec = synth_trace(sys, topo, policy, &gen_config(cfg));
+    let t0 = Instant::now();
+    let out = run_trace(&spec, engine);
+    let wall = t0.elapsed().as_secs_f64();
+    let jcts: Vec<f64> = out.jobs.iter().map(|j| j.jct).collect();
+    let waits: Vec<f64> = out.jobs.iter().map(|j| j.queue_wait).collect();
+    TracePolicyPoint {
+        policy: policy.name(),
+        jobs: out.jobs.len(),
+        p50_jct: percentile(&jcts, 50.0),
+        p99_jct: percentile(&jcts, 99.0),
+        mean_jct: jcts.iter().sum::<f64>() / jcts.len().max(1) as f64,
+        p50_wait: percentile(&waits, 50.0),
+        p99_wait: percentile(&waits, 99.0),
+        makespan: out.makespan,
+        node_util: out.node_util,
+        eth_util: out.eth_util,
+        frag_jobs: out.jobs.iter().filter(|j| j.frag).count(),
+        preemptions: out.jobs.iter().map(|j| j.preemptions as u64).sum(),
+        restarts: out.jobs.iter().map(|j| j.restarts as u64).sum(),
+        aborted_collectives: out.aborted_collectives,
+        events: out.events,
+        peak_queue_depth: out.peak_queue_depth,
+        wall_s: wall,
+    }
+}
+
+/// Run the shared trace once per [`Policy`] on the sweep engine.
+pub fn run(cfg: &ClusterTraceConfig) -> Vec<TracePolicyPoint> {
+    Policy::ALL.iter().map(|&p| run_policy(cfg, p, sweep_engine(cfg))).collect()
+}
+
+/// Re-run the [`GATE_POLICY`] trace under the checked executive: the
+/// runtime invariant auditor plus the post-quiescence conservation
+/// ledger (including the scheduler's churn invariants).  Any violation
+/// fails the bench.
+pub fn run_audited(cfg: &ClusterTraceConfig) -> AuditInfo {
+    let topo = topology(cfg);
+    let sys = planner_system(cfg.leaves, cfg.nodes / cfg.leaves);
+    let spec = synth_trace(sys, topo, GATE_POLICY, &gen_config(cfg));
+    let t0 = Instant::now();
+    let out = run_trace(&spec, EngineKind::Checked { threads: cfg.threads });
+    let wall = t0.elapsed().as_secs_f64();
+    let report = out.audit.expect("checked run carries an audit report");
+    AuditInfo {
+        policy: GATE_POLICY.name(),
+        threads: cfg.threads,
+        violations: report.total() as usize,
+        events_checked: report.events_checked(),
+        events: out.events,
+        wall_s: wall,
+    }
+}
+
+/// Same-seed reproducibility gate: re-run the [`GATE_POLICY`] trace on
+/// the sweep engine and bit-compare p50/p99 JCT and makespan against the
+/// sweep's own point.  `None` when the sweep holds no such point — no
+/// vacuous PASS.
+pub fn check_determinism(cfg: &ClusterTraceConfig, points: &[TracePolicyPoint]) -> Option<bool> {
+    let reference = points.iter().find(|p| p.policy == GATE_POLICY.name())?;
+    let rerun = run_policy(cfg, GATE_POLICY, sweep_engine(cfg));
+    Some(
+        rerun.p50_jct.to_bits() == reference.p50_jct.to_bits()
+            && rerun.p99_jct.to_bits() == reference.p99_jct.to_bits()
+            && rerun.makespan.to_bits() == reference.makespan.to_bits()
+            && rerun.events == reference.events,
+    )
+}
+
+/// The fragmentation penalty: scatter mean JCT over first-fit mean JCT.
+/// `None` when either policy is missing from the sweep — no vacuous
+/// PASS.
+pub fn frag_jct_gap(points: &[TracePolicyPoint]) -> Option<f64> {
+    let mean = |name: &str| points.iter().find(|p| p.policy == name).map(|p| p.mean_jct);
+    match (mean("scatter"), mean("first-fit")) {
+        (Some(sc), Some(ff)) if ff > 0.0 => Some(sc / ff),
+        _ => None,
+    }
+}
+
+pub fn print(
+    cfg: &ClusterTraceConfig,
+    points: &[TracePolicyPoint],
+    audit: Option<&AuditInfo>,
+    determinism: Option<bool>,
+) {
+    let mut t = Table::new(&[
+        "policy",
+        "p50 jct",
+        "p99 jct",
+        "mean jct",
+        "p50 wait",
+        "makespan",
+        "util",
+        "eth util",
+        "frag",
+        "preempt",
+        "events",
+    ])
+    .with_title(&format!(
+        "cluster trace — {} jobs on {} nodes ({} leaves, {}:1), seed {}",
+        cfg.jobs, cfg.nodes, cfg.leaves, cfg.oversubscription, cfg.seed
+    ));
+    for p in points {
+        t.row(&[
+            p.policy.to_string(),
+            fnum(p.p50_jct, 4),
+            fnum(p.p99_jct, 4),
+            fnum(p.mean_jct, 4),
+            fnum(p.p50_wait, 4),
+            fnum(p.makespan, 4),
+            format!("{:.1}%", p.node_util * 100.0),
+            format!("{:.1}%", p.eth_util * 100.0),
+            format!("{}/{}", p.frag_jobs, p.jobs),
+            format!("{}", p.preemptions),
+            p.events.to_string(),
+        ]);
+    }
+    t.print();
+    match frag_jct_gap(points) {
+        Some(g) => println!(
+            "fragmentation penalty (scatter/first-fit mean JCT): x{:.3} \
+             (hard floor x{FRAG_GAP_MIN}, target x{FRAG_GAP_TARGET}) — {}",
+            g,
+            if g > FRAG_GAP_MIN && g >= FRAG_GAP_TARGET {
+                "PASS"
+            } else if g > FRAG_GAP_MIN {
+                "WARN (below target, above floor)"
+            } else {
+                "FAIL"
+            }
+        ),
+        None => println!("fragmentation penalty: not validated (scatter or first-fit missing)"),
+    }
+    match audit {
+        Some(a) => println!(
+            "audited churn run ({}, {} thread(s)): {} violation(s) over {} checked events — {}",
+            a.policy,
+            a.threads,
+            a.violations,
+            a.events_checked,
+            if a.violations == 0 { "PASS" } else { "FAIL" }
+        ),
+        None => println!("audited churn run: not validated (skipped)"),
+    }
+    match determinism {
+        Some(pass) => println!(
+            "same-seed determinism ({}): p50/p99 JCT bit-identical — {}",
+            GATE_POLICY.name(),
+            if pass { "PASS" } else { "FAIL" }
+        ),
+        None => println!("same-seed determinism: not validated (no gate-policy point)"),
+    }
+}
+
+/// Serialize the study to the `BENCH_cluster.json` schema (documented in
+/// `docs/BENCHMARKS.md`, pinned by `rust/tests/bench_schema.rs`).
+pub fn to_json(
+    cfg: &ClusterTraceConfig,
+    points: &[TracePolicyPoint],
+    audit: Option<&AuditInfo>,
+    determinism: Option<bool>,
+) -> Json {
+    Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("nodes", Json::Num(cfg.nodes as f64)),
+                ("leaves", Json::Num(cfg.leaves as f64)),
+                ("oversubscription", Json::Num(cfg.oversubscription)),
+                ("jobs", Json::Num(cfg.jobs as f64)),
+                ("seed", Json::Num(cfg.seed as f64)),
+                ("mean_interarrival", Json::Num(cfg.mean_interarrival)),
+                ("min_gang", Json::Num(cfg.min_gang as f64)),
+                ("max_gang", Json::Num(cfg.max_gang as f64)),
+                ("max_iters", Json::Num(cfg.max_iters as f64)),
+                ("layers", Json::Num(cfg.layers as f64)),
+                ("hidden", Json::Num(cfg.hidden as f64)),
+                ("elastic_fraction", Json::Num(cfg.elastic_fraction)),
+                ("failures", Json::Num(cfg.failures as f64)),
+                ("threads", Json::Num(cfg.threads as f64)),
+                ("frag_gap_min", Json::Num(FRAG_GAP_MIN)),
+                ("frag_gap_target", Json::Num(FRAG_GAP_TARGET)),
+            ]),
+        ),
+        (
+            "policies",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("policy", Json::Str(p.policy.to_string())),
+                            ("jobs", Json::Num(p.jobs as f64)),
+                            ("p50_jct", Json::Num(p.p50_jct)),
+                            ("p99_jct", Json::Num(p.p99_jct)),
+                            ("mean_jct", Json::Num(p.mean_jct)),
+                            ("p50_wait", Json::Num(p.p50_wait)),
+                            ("p99_wait", Json::Num(p.p99_wait)),
+                            ("makespan", Json::Num(p.makespan)),
+                            ("node_util", Json::Num(p.node_util)),
+                            ("eth_util", Json::Num(p.eth_util)),
+                            ("frag_jobs", Json::Num(p.frag_jobs as f64)),
+                            ("preemptions", Json::Num(p.preemptions as f64)),
+                            ("restarts", Json::Num(p.restarts as f64)),
+                            ("aborted_collectives", Json::Num(p.aborted_collectives as f64)),
+                            ("events", Json::Num(p.events as f64)),
+                            ("peak_queue_depth", Json::Num(p.peak_queue_depth as f64)),
+                            ("wall_s", Json::Num(p.wall_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gates",
+            Json::obj(vec![
+                (
+                    "frag_jct_gap",
+                    match frag_jct_gap(points) {
+                        Some(g) => Json::Num(g),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "frag_gap_pass",
+                    match frag_jct_gap(points) {
+                        Some(g) => Json::Bool(g > FRAG_GAP_MIN),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "frag_gap_target_pass",
+                    match frag_jct_gap(points) {
+                        Some(g) => Json::Bool(g >= FRAG_GAP_TARGET),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "audit_violations",
+                    match audit {
+                        Some(a) => Json::Num(a.violations as f64),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "audit_events_checked",
+                    match audit {
+                        Some(a) => Json::Num(a.events_checked as f64),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "audit_pass",
+                    match audit {
+                        Some(a) => Json::Bool(a.violations == 0),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "determinism_pass",
+                    match determinism {
+                        Some(pass) => Json::Bool(pass),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "total_preemptions",
+                    Json::Num(points.iter().map(|p| p.preemptions).sum::<u64>() as f64),
+                ),
+                (
+                    "all_jobs_completed",
+                    Json::Bool(points.iter().all(|p| p.jobs > 0)),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Write the study to `path` (repo convention: `BENCH_cluster.json`,
+/// uploaded as a CI artifact).
+pub fn write_bench(
+    path: &str,
+    cfg: &ClusterTraceConfig,
+    points: &[TracePolicyPoint],
+    audit: Option<&AuditInfo>,
+    determinism: Option<bool>,
+) -> std::io::Result<()> {
+    std::fs::write(path, to_json(cfg, points, audit, determinism).to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ClusterTraceConfig {
+        ClusterTraceConfig {
+            nodes: 16,
+            leaves: 4,
+            jobs: 10,
+            max_gang: 8,
+            max_iters: 3,
+            hidden: 64,
+            batch_per_node: 8,
+            mean_interarrival: 0.01,
+            failures: 1,
+            restart_delay: 0.01,
+            repair_delay: 0.05,
+            ..ClusterTraceConfig::default()
+        }
+    }
+
+    #[test]
+    fn sweep_covers_every_policy() {
+        let points = run(&tiny_cfg());
+        assert_eq!(points.len(), Policy::ALL.len());
+        for p in &points {
+            assert_eq!(p.jobs, 10, "{}: lost jobs", p.policy);
+            assert!(p.p50_jct > 0.0 && p.p99_jct >= p.p50_jct, "{}", p.policy);
+            assert!(p.makespan > 0.0 && p.events > 0, "{}", p.policy);
+            assert!(p.node_util > 0.0 && p.node_util <= 1.0 + 1e-9, "{}", p.policy);
+        }
+    }
+
+    #[test]
+    fn frag_gap_is_strictly_positive() {
+        let points = run(&tiny_cfg());
+        let gap = frag_jct_gap(&points).expect("both gate policies in the sweep");
+        assert!(gap > FRAG_GAP_MIN, "scatter must cost JCT, got x{gap:.4}");
+    }
+
+    #[test]
+    fn audited_run_is_clean() {
+        let a = run_audited(&tiny_cfg());
+        assert_eq!(a.violations, 0, "audited churn run must be clean");
+        assert!(a.events_checked > 0, "auditor must have checked events");
+    }
+
+    #[test]
+    fn determinism_gate_passes_on_same_seed() {
+        let cfg = tiny_cfg();
+        let points = run(&cfg);
+        assert_eq!(check_determinism(&cfg, &points), Some(true));
+        // no gate-policy point → the gate must refuse to report
+        let rest: Vec<TracePolicyPoint> =
+            points.iter().filter(|p| p.policy != GATE_POLICY.name()).cloned().collect();
+        assert_eq!(check_determinism(&cfg, &rest), None);
+    }
+
+    #[test]
+    fn gates_are_not_vacuous_on_partial_sweeps() {
+        let points = run(&tiny_cfg());
+        let no_scatter: Vec<TracePolicyPoint> =
+            points.iter().filter(|p| p.policy != "scatter").cloned().collect();
+        assert!(frag_jct_gap(&no_scatter).is_none());
+        let j = to_json(&tiny_cfg(), &no_scatter, None, None);
+        let gates = j.get("gates").unwrap();
+        assert_eq!(gates.get("frag_jct_gap"), Some(&Json::Null));
+        assert_eq!(gates.get("frag_gap_pass"), Some(&Json::Null));
+        assert_eq!(gates.get("audit_pass"), Some(&Json::Null));
+        assert_eq!(gates.get("determinism_pass"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let cfg = tiny_cfg();
+        let points = run(&cfg);
+        let audit = run_audited(&cfg);
+        let determinism = check_determinism(&cfg, &points);
+        let j = to_json(&cfg, &points, Some(&audit), determinism);
+        let parsed = Json::parse(&j.to_string_pretty()).expect("self-emitted JSON parses");
+        assert_eq!(parsed, j);
+    }
+}

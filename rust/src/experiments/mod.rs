@@ -5,6 +5,7 @@
 //! `results/*.json` dumps.
 
 pub mod ablate;
+pub mod cluster_trace;
 pub mod engine_bench;
 pub mod fig2a;
 pub mod fig2b;

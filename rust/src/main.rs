@@ -14,6 +14,7 @@
 //!   train     real data-parallel training through PJRT artifacts
 //!   sim       one simulated iteration with full trace output
 //!   cluster   multi-job scenarios on the unified event engine
+//!   cluster-trace  gang-scheduler policy study under churn, BENCH_cluster.json
 //!   scale     hierarchical scaling sweep (6..512 nodes), BENCH_scaling.json
 //!   plan      topology-aware planner study (NIC vs switch offload), BENCH_planner.json
 //!   engine-bench  typed engine vs boxed baseline + parallel scaling, BENCH_engine.json
@@ -32,8 +33,8 @@ use ai_smartnic::coordinator::{
 };
 use ai_smartnic::sysconfig::ClusterFaults;
 use ai_smartnic::experiments::{
-    ablate, engine_bench, fig2a, fig2b, fig4a, fig4b, planner, scaling, table1, validate,
-    write_result,
+    ablate, cluster_trace, engine_bench, fig2a, fig2b, fig4a, fig4b, planner, scaling, table1,
+    validate, write_result,
 };
 use ai_smartnic::log_info;
 use ai_smartnic::sysconfig::{SystemParams, Workload};
@@ -42,7 +43,7 @@ use ai_smartnic::util::logger::{set_level, Level};
 use ai_smartnic::util::rng::Rng;
 use ai_smartnic::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|scale|plan|engine-bench|bfp|ablate|all> [--help]";
+const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|cluster-trace|scale|plan|engine-bench|bfp|ablate|all> [--help]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -61,6 +62,7 @@ fn main() {
         "train" => cmd_train(&rest),
         "sim" => cmd_sim(&rest),
         "cluster" => cmd_cluster(&rest),
+        "cluster-trace" => cmd_cluster_trace(&rest),
         "scale" => cmd_scale(&rest),
         "plan" => cmd_plan(&rest),
         "engine-bench" => cmd_engine_bench(&rest),
@@ -833,6 +835,140 @@ fn cmd_engine_bench(rest: &[String]) -> i32 {
             );
             eprintln!("warning: {msg}");
             println!("::warning title=engine-bench::{msg}");
+        }
+    }
+    0
+}
+
+fn cmd_cluster_trace(rest: &[String]) -> i32 {
+    let c = Command::new(
+        "cluster-trace",
+        "trace-driven gang-scheduler policy study under churn (BENCH_cluster.json)",
+    )
+    .opt("nodes", "64", "fabric nodes")
+    .opt("leaves", "8", "leaf switches (1 = flat crossbar)")
+    .opt("oversub", "4", "leaf uplink oversubscription factor")
+    .opt("jobs", "80", "jobs in the arrival trace")
+    .opt("seed", "7", "trace seed")
+    .opt("interarrival", "0.02", "mean job inter-arrival gap (s)")
+    .opt("min-gang", "2", "smallest gang size")
+    .opt("max-gang", "16", "largest gang size (heavy-tailed in between)")
+    .opt("max-iters", "6", "largest per-job iteration count")
+    .opt("layers", "2", "model layers per job")
+    .opt("hidden", "256", "gradient width (hidden^2 elements per all-reduce)")
+    .opt("batch", "32", "mini-batch per node")
+    .opt("elastic", "0.25", "fraction of jobs filing one elastic resize")
+    .opt("failures", "3", "node failures injected over the trace")
+    .opt("restart-delay", "0.05", "checkpoint-reload delay after a preempt (s)")
+    .opt("repair-delay", "0.2", "node repair delay after a failure (s)")
+    .opt("threads", "0", "parallel worker threads (0 = sequential typed engine)")
+    .opt("out", "BENCH_cluster.json", "machine-readable output path")
+    .flag("no-audit", "skip the audited (checked-engine) churn gate run")
+    .flag("no-json", "skip writing the benchmark file");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let cfg = cluster_trace::ClusterTraceConfig {
+        nodes: a.get_usize("nodes", 64),
+        leaves: a.get_usize("leaves", 8),
+        oversubscription: a.get_f64("oversub", 4.0),
+        jobs: a.get_usize("jobs", 80),
+        seed: a.get_u64("seed", 7),
+        mean_interarrival: a.get_f64("interarrival", 0.02),
+        min_gang: a.get_usize("min-gang", 2),
+        max_gang: a.get_usize("max-gang", 16),
+        max_iters: a.get_usize("max-iters", 6),
+        layers: a.get_usize("layers", 2),
+        hidden: a.get_usize("hidden", 256),
+        batch_per_node: a.get_usize("batch", 32),
+        elastic_fraction: a.get_f64("elastic", 0.25),
+        failures: a.get_usize("failures", 3),
+        restart_delay: a.get_f64("restart-delay", 0.05),
+        repair_delay: a.get_f64("repair-delay", 0.2),
+        threads: a.get_usize("threads", 0),
+    };
+    if cfg.leaves == 0 || cfg.nodes == 0 || cfg.nodes % cfg.leaves != 0 {
+        eprintln!("--nodes must be a positive multiple of --leaves");
+        return 2;
+    }
+    if cfg.jobs == 0 {
+        eprintln!("--jobs must be positive");
+        return 2;
+    }
+    if cfg.min_gang == 0 || cfg.min_gang > cfg.max_gang || cfg.max_gang > cfg.nodes {
+        eprintln!(
+            "gang range [{}, {}] must satisfy 1 <= min <= max <= nodes ({})",
+            cfg.min_gang, cfg.max_gang, cfg.nodes
+        );
+        return 2;
+    }
+    if cfg.max_iters == 0 || cfg.layers == 0 || cfg.hidden == 0 || cfg.batch_per_node == 0 {
+        eprintln!("--max-iters, --layers, --hidden and --batch must all be positive");
+        return 2;
+    }
+    if !(cfg.mean_interarrival > 0.0 && cfg.mean_interarrival.is_finite()) {
+        eprintln!("--interarrival must be a positive finite gap");
+        return 2;
+    }
+    if !(0.0..=1.0).contains(&cfg.elastic_fraction) {
+        eprintln!("--elastic must be a fraction in [0, 1]");
+        return 2;
+    }
+    if !(cfg.restart_delay >= 0.0 && cfg.restart_delay.is_finite())
+        || !(cfg.repair_delay >= 0.0 && cfg.repair_delay.is_finite())
+    {
+        eprintln!("--restart-delay and --repair-delay must be non-negative and finite");
+        return 2;
+    }
+    if !(cfg.oversubscription > 0.0 && cfg.oversubscription.is_finite()) {
+        eprintln!("--oversub must be a positive finite factor");
+        return 2;
+    }
+    let points = cluster_trace::run(&cfg);
+    let audit = if a.flag("no-audit") { None } else { Some(cluster_trace::run_audited(&cfg)) };
+    let determinism = cluster_trace::check_determinism(&cfg, &points);
+    cluster_trace::print(&cfg, &points, audit.as_ref(), determinism);
+    if !a.flag("no-json") {
+        let path = a.get_str("out", "BENCH_cluster.json");
+        match cluster_trace::write_bench(&path, &cfg, &points, audit.as_ref(), determinism) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Some(ref audit) = audit {
+        if audit.violations > 0 {
+            eprintln!(
+                "audited churn run FAILED: {} violation(s) on the {} policy — see the report",
+                audit.violations, audit.policy
+            );
+            return 1;
+        }
+    }
+    if determinism == Some(false) {
+        eprintln!("determinism FAILED: same-seed re-run diverged in p50/p99 JCT or event count");
+        return 1;
+    }
+    if let Some(gap) = cluster_trace::frag_jct_gap(&points) {
+        if gap <= cluster_trace::FRAG_GAP_MIN {
+            eprintln!(
+                "fragmentation penalty FAILED: scatter/first-fit mean JCT x{gap:.4} \
+                 (hard floor x{})",
+                cluster_trace::FRAG_GAP_MIN
+            );
+            return 1;
+        }
+        if gap < cluster_trace::FRAG_GAP_TARGET {
+            // the gap's magnitude depends on the trace mix; only its sign
+            // is load-independent, so the trend level warns rather than
+            // fails.
+            let msg = format!(
+                "fragmentation penalty below target: x{gap:.3} (target x{}, floor x{})",
+                cluster_trace::FRAG_GAP_TARGET,
+                cluster_trace::FRAG_GAP_MIN
+            );
+            eprintln!("warning: {msg}");
+            println!("::warning title=cluster-trace::{msg}");
         }
     }
     0

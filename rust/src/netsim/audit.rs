@@ -130,6 +130,26 @@ pub enum AuditViolation {
         /// the run's final virtual time
         end: Time,
     },
+    /// the gang scheduler's per-node table still assigns a node to a job
+    /// after quiescence — the job left the cluster without releasing it
+    LeakedAllocation {
+        /// the fabric node still marked busy
+        node: usize,
+        /// the job the table says holds it
+        job: usize,
+    },
+    /// a job's scheduler ledger does not balance: every arrived job must
+    /// terminate with exactly its demanded iterations completed (a
+    /// checkpoint-restart that double-counted an iteration, or a job
+    /// that vanished without completing, both land here)
+    JobConservation {
+        /// index into the trace's job table
+        job: usize,
+        /// iterations the runtime recorded as completed
+        done: usize,
+        /// iterations the trace demanded
+        demand: usize,
+    },
 }
 
 impl AuditViolation {
@@ -149,6 +169,8 @@ impl AuditViolation {
             AuditViolation::UnfinishedCollective { .. } => "unfinished-collective",
             AuditViolation::ReduceConservation { .. } => "reduce-conservation",
             AuditViolation::LeakedReservation { .. } => "leaked-reservation",
+            AuditViolation::LeakedAllocation { .. } => "leaked-allocation",
+            AuditViolation::JobConservation { .. } => "job-conservation",
         }
     }
 }
@@ -196,6 +218,14 @@ impl fmt::Display for AuditViolation {
             AuditViolation::LeakedReservation { busy_until, end } => write!(
                 f,
                 "server reserved until {busy_until}, past quiescence at {end}"
+            ),
+            AuditViolation::LeakedAllocation { node, job } => write!(
+                f,
+                "node {node} still allocated to job {job} after quiescence"
+            ),
+            AuditViolation::JobConservation { job, done, demand } => write!(
+                f,
+                "job {job} finished {done} iterations but the trace demanded {demand}"
             ),
         }
     }

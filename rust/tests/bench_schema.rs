@@ -1,9 +1,9 @@
 // Golden-schema tests for the CI benchmark artifacts
 // (`BENCH_scaling.json` from `smartnic scale`, `BENCH_planner.json` from
-// `smartnic plan`, `BENCH_engine.json` from `smartnic engine-bench`):
-// the exact key structure is pinned here and every document must survive
-// a parse round-trip, so the artifact shape cannot drift without a test
-// failure.
+// `smartnic plan`, `BENCH_engine.json` from `smartnic engine-bench`,
+// `BENCH_cluster.json` from `smartnic cluster-trace`): the exact key
+// structure is pinned here and every document must survive a parse
+// round-trip, so the artifact shape cannot drift without a test failure.
 //
 // The schemas themselves (field meanings, units, pass/fail gates) are
 // documented in `docs/BENCHMARKS.md`; every key path asserted below must
@@ -11,7 +11,7 @@
 // that document — the cross-reference is deliberate so docs and tests
 // cannot drift silently.
 
-use ai_smartnic::experiments::{engine_bench, planner, scaling};
+use ai_smartnic::experiments::{cluster_trace, engine_bench, planner, scaling};
 use ai_smartnic::util::json::Json;
 
 /// Assert that every `/`-separated key path resolves in `doc`; a leading
@@ -227,4 +227,106 @@ fn bench_engine_schema_is_pinned() {
     assert!(gates.get("checked_overhead_pass").unwrap().as_bool().is_some());
     assert_eq!(gates.get("max_nodes_completed").unwrap().as_usize(), Some(8));
     assert_eq!(gates.get("scaling_max_nodes_completed").unwrap().as_usize(), Some(8));
+}
+
+#[test]
+fn bench_cluster_schema_is_pinned() {
+    let cfg = cluster_trace::ClusterTraceConfig {
+        nodes: 16,
+        leaves: 4,
+        jobs: 10,
+        max_gang: 8,
+        max_iters: 3,
+        hidden: 64,
+        batch_per_node: 8,
+        mean_interarrival: 0.01,
+        failures: 1,
+        restart_delay: 0.01,
+        repair_delay: 0.05,
+        ..cluster_trace::ClusterTraceConfig::default()
+    };
+    let points = cluster_trace::run(&cfg);
+    assert_eq!(points.len(), 4, "one row per placement policy");
+    let audit = cluster_trace::run_audited(&cfg);
+    let determinism = cluster_trace::check_determinism(&cfg, &points);
+    let j = cluster_trace::to_json(&cfg, &points, Some(&audit), determinism);
+    let mut paths = vec![
+        "config/nodes".to_string(),
+        "config/leaves".to_string(),
+        "config/oversubscription".to_string(),
+        "config/jobs".to_string(),
+        "config/seed".to_string(),
+        "config/mean_interarrival".to_string(),
+        "config/min_gang".to_string(),
+        "config/max_gang".to_string(),
+        "config/max_iters".to_string(),
+        "config/layers".to_string(),
+        "config/hidden".to_string(),
+        "config/elastic_fraction".to_string(),
+        "config/failures".to_string(),
+        "config/threads".to_string(),
+        "config/frag_gap_min".to_string(),
+        "config/frag_gap_target".to_string(),
+        "gates/frag_jct_gap".to_string(),
+        "gates/frag_gap_pass".to_string(),
+        "gates/frag_gap_target_pass".to_string(),
+        "gates/audit_violations".to_string(),
+        "gates/audit_events_checked".to_string(),
+        "gates/audit_pass".to_string(),
+        "gates/determinism_pass".to_string(),
+        "gates/total_preemptions".to_string(),
+        "gates/all_jobs_completed".to_string(),
+    ];
+    for i in 0..points.len() {
+        for key in [
+            "policy",
+            "jobs",
+            "p50_jct",
+            "p99_jct",
+            "mean_jct",
+            "p50_wait",
+            "p99_wait",
+            "makespan",
+            "node_util",
+            "eth_util",
+            "frag_jobs",
+            "preemptions",
+            "restarts",
+            "aborted_collectives",
+            "events",
+            "peak_queue_depth",
+            "wall_s",
+        ] {
+            paths.push(format!("policies/{i}/{key}"));
+        }
+    }
+    let path_refs: Vec<&str> = paths.iter().map(String::as_str).collect();
+    assert_paths(&j, &path_refs);
+    let parsed = Json::parse(&j.to_string_pretty()).expect("BENCH_cluster must parse");
+    assert_eq!(parsed, j);
+    // the gate fields carry the types the CI gate reads
+    let gates = j.get("gates").unwrap();
+    assert_eq!(gates.get("audit_violations").unwrap().as_usize(), Some(0));
+    assert_eq!(gates.get("audit_pass").unwrap().as_bool(), Some(true));
+    assert_eq!(gates.get("determinism_pass").unwrap().as_bool(), Some(true));
+    assert!(gates.get("frag_jct_gap").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(gates.get("all_jobs_completed").unwrap().as_bool(), Some(true));
+    // null-not-vacuous: a sweep missing the scatter point cannot compute
+    // the fragmentation gap, and a run without the audited / determinism
+    // passes must emit Null, never a vacuous PASS
+    let sliced: Vec<_> =
+        points.iter().filter(|p| p.policy != "scatter").cloned().collect();
+    let j2 = cluster_trace::to_json(&cfg, &sliced, None, None);
+    let gates2 = j2.get("gates").unwrap();
+    for key in [
+        "frag_jct_gap",
+        "frag_gap_pass",
+        "frag_gap_target_pass",
+        "audit_violations",
+        "audit_events_checked",
+        "audit_pass",
+        "determinism_pass",
+    ] {
+        assert_eq!(gates2.get(key), Some(&Json::Null), "gate '{key}' must be Null, not vacuous");
+    }
 }

@@ -23,14 +23,15 @@
 
 use ai_smartnic::analytic::model::SystemKind;
 use ai_smartnic::cluster::{
-    run_scenario_on, ClusterSpec, CollectiveAlgo, EngineKind, JobSpec, ScenarioOutput, Topology,
+    run_scenario_on, run_trace, synth_trace, ClusterSpec, CollectiveAlgo, EngineKind, JobSpec,
+    Policy, ScenarioOutput, Topology, TraceGenConfig, TraceOutput, TraceSpec,
 };
 use ai_smartnic::collective::Scheme;
 use ai_smartnic::coordinator::simulate_iteration_unified_on;
 use ai_smartnic::experiments::planner::{leaf_shape, planner_system};
 use ai_smartnic::netsim::engine::{Sim, World};
 use ai_smartnic::sysconfig::{ClusterFaults, SystemParams, Workload};
-use ai_smartnic::util::stats::rel_err;
+use ai_smartnic::util::stats::{percentile, rel_err};
 
 /// Node counts every plan family is pinned at.
 const PINNED: [usize; 3] = [6, 32, 128];
@@ -564,4 +565,115 @@ fn scheduling_into_the_past_still_panics() {
 fn scheduling_non_finite_times_still_panics() {
     let mut sim: Sim<TieLog> = Sim::new();
     sim.schedule_at(f64::INFINITY, 0);
+}
+
+// ---------------------- churn-trace equivalence -----------------------
+//
+// The gang scheduler (PR 8) folds job arrival, preemption,
+// checkpoint-restart, elastic resize and node repair into the same event
+// loop.  All scheduler events route to the coordinator partition and are
+// only emitted by coordinator events, so a churn-heavy trace is held to
+// the exact same bar as the static scenarios: bit-identical across
+// `Typed` and `Parallel {1, 2, 4}`, clean and bit-identical under
+// `Checked`, and run-to-run deterministic down to the JCT percentiles.
+
+/// A deliberately churny 32-node trace: heavy-tailed gangs, elastic
+/// resizes on ~40% of jobs, two node failures mid-trace.
+fn churn_spec(seed: u64) -> TraceSpec {
+    let (leaves, npl) = leaf_shape(32);
+    synth_trace(
+        planner_system(leaves, npl),
+        Topology::leaf_spine(leaves, npl, 4.0),
+        Policy::FragAllowed,
+        &TraceGenConfig {
+            jobs: 16,
+            seed,
+            mean_interarrival: 0.01,
+            min_gang: 2,
+            max_gang: 12,
+            max_iters: 3,
+            layers: 2,
+            hidden: 64,
+            batch_per_node: 8,
+            elastic_fraction: 0.4,
+            failures: 2,
+            restart_delay: 0.01,
+            repair_delay: 0.05,
+        },
+    )
+}
+
+fn assert_trace_bits_equal(a: &TraceOutput, b: &TraceOutput, label: &str) {
+    assert_eq!(a.events, b.events, "{label}: event counts diverged");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{label}: makespan diverged");
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{label}: job counts diverged");
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.name, y.name, "{label}: job order diverged");
+        assert_eq!(
+            x.first_placed.to_bits(),
+            y.first_placed.to_bits(),
+            "{label}/{}: first placement diverged",
+            x.name
+        );
+        assert_eq!(
+            x.completed.to_bits(),
+            y.completed.to_bits(),
+            "{label}/{}: completion diverged",
+            x.name
+        );
+        assert_eq!(x.preemptions, y.preemptions, "{label}/{}: preemptions", x.name);
+        assert_eq!(x.restarts, y.restarts, "{label}/{}: restarts", x.name);
+        assert_eq!(x.iters, y.iters, "{label}/{}: iteration counts", x.name);
+    }
+}
+
+#[test]
+fn churn_trace_is_bit_identical_across_engines_and_threads() {
+    let spec = churn_spec(7);
+    let typed = run_trace(&spec, EngineKind::Typed);
+    assert!(typed.audit.is_none(), "unchecked engines must not carry a report");
+    for t in PAR_THREADS {
+        let par = run_trace(&spec, EngineKind::Parallel { threads: t });
+        assert_trace_bits_equal(&typed, &par, &format!("churn/parallel-t{t}"));
+        // bit-identity subsumes the 1e-9 virtual-time bar, but pin the
+        // tolerance form too so a future weakening of the bit gate still
+        // has a floor
+        assert!(rel_err(typed.makespan, par.makespan) <= TOL, "churn/parallel-t{t}");
+    }
+}
+
+#[test]
+fn churn_trace_checked_is_clean_and_bit_identical() {
+    let spec = churn_spec(7);
+    let typed = run_trace(&spec, EngineKind::Typed);
+    for t in PAR_THREADS {
+        let out = run_trace(&spec, EngineKind::Checked { threads: t });
+        let report = out.audit.as_ref().expect("checked engine carries a report");
+        assert!(report.is_clean(), "churn/checked-t{t}: {}", report.summary());
+        assert_eq!(
+            report.events_checked(),
+            out.events,
+            "churn/checked-t{t}: every dispatch must be checked"
+        );
+        assert_trace_bits_equal(&typed, &out, &format!("churn/checked-t{t}"));
+    }
+}
+
+#[test]
+fn churn_trace_percentiles_are_run_to_run_deterministic() {
+    // same seed => same trace => identical p50/p99 JCT, bit for bit
+    for seed in [7, 23] {
+        let a = run_trace(&churn_spec(seed), EngineKind::Typed);
+        let b = run_trace(&churn_spec(seed), EngineKind::Typed);
+        let jcts = |o: &TraceOutput| o.jobs.iter().map(|j| j.jct).collect::<Vec<_>>();
+        let (ja, jb) = (jcts(&a), jcts(&b));
+        for p in [50.0, 99.0] {
+            assert_eq!(
+                percentile(&ja, p).to_bits(),
+                percentile(&jb, p).to_bits(),
+                "seed {seed}: p{p} JCT diverged run-to-run"
+            );
+        }
+        assert_eq!(a.events, b.events, "seed {seed}: event counts diverged run-to-run");
+    }
 }
