@@ -287,6 +287,146 @@ pub fn inswitch_ar_time_elems(
     sys.nic_request_overhead + fill + (segs - 1.0) * b
 }
 
+/// Closed form for switch-resident *multicast* — the replication dual of
+/// [`inswitch_ar_time_elems`] with every fold stage removed: the root
+/// streams the payload up in segments and the switch tier's egress
+/// engines replicate each segment to every other member.  Same segment
+/// pipeline (total = fill + (segs−1)·bottleneck, throttled to
+/// fill/window by the finite replication table), same fallback signal
+/// (infinity when the switch has no engines or the table cannot hold a
+/// segment — the planner then uses the host binomial tree), but the
+/// pipeline stages are pure wire: PCIe fetch at the root → Tx → (spine
+/// crossing when the members span leaves) → per-leaf downlink → final
+/// egress → PCIe writeback at each non-root.
+pub fn switch_multicast_time_elems(
+    sys: &SystemParams,
+    elems: usize,
+    m: usize,
+    l: usize,
+    oversub: f64,
+    wire_ratio: f64,
+) -> f64 {
+    let n = m * l;
+    if n <= 1 {
+        return 0.0;
+    }
+    if !sys.switch.enabled() {
+        return f64::INFINITY;
+    }
+    let s = elems as f64 * 4.0;
+    let segs = (s / sys.nic.segment_bytes).ceil().max(1.0);
+    let seg = s / segs;
+    let wire = seg / wire_ratio;
+    let bw = sys.net.effective_bw();
+    let lat = sys.net.hop_latency;
+    let window = (sys.switch.reduce_table_bytes / seg).floor();
+    if window < 1.0 {
+        return f64::INFINITY; // table cannot hold one segment: fall back
+    }
+    let d_f = seg / sys.nic.pcie_bw;
+    let d_t = wire / bw;
+    let d_e = wire / bw;
+    let d_wb = seg / sys.nic.pcie_bw;
+    let (fill, bottleneck) = if l <= 1 {
+        (
+            d_f + d_t + lat + d_wb + 2.0 * sys.nic.pcie_latency,
+            d_f.max(d_t).max(d_e).max(d_wb),
+        )
+    } else {
+        let up_bw = m as f64 * bw / oversub;
+        let d_u = wire / up_bw;
+        let d_d = wire / up_bw;
+        (
+            d_f + d_t + 3.0 * lat + d_wb + 2.0 * sys.nic.pcie_latency,
+            d_f.max(d_t).max(d_u).max(d_d).max(d_e).max(d_wb),
+        )
+    };
+    let b = bottleneck.max(fill / window);
+    sys.nic_request_overhead + fill + (segs - 1.0) * b
+}
+
+/// Closed form for the binomial-tree broadcast on an uncontended flat
+/// crossbar: the root DMA-fetches the payload, ⌈log₂ n⌉ rounds each
+/// forward one full payload per holder, every non-root writes it back.
+/// Equal to `planner::rounds_cost` over `broadcast_binomial_rounds` on a
+/// flat topology (the planner form adds the leaf/spine terms).
+pub fn broadcast_tree_time_elems(sys: &SystemParams, elems: usize, n: usize, wire_ratio: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let s = elems as f64 * 4.0;
+    let rounds = (n as f64).log2().ceil();
+    let per_round = s / wire_ratio / sys.net.effective_bw() + sys.net.hop_latency;
+    sys.nic_request_overhead
+        + 2.0 * (s / sys.nic.pcie_bw + sys.nic.pcie_latency)
+        + rounds * per_round
+}
+
+/// Closed form for the ring allgather on an uncontended flat crossbar:
+/// each rank DMA-fetches its shard (S/n), n−1 rounds walk every shard
+/// around the ring, the full vector writes back.  S is padded to n·⌈E/n⌉
+/// elements like the ring all-reduce.
+pub fn allgather_ring_time_elems(
+    sys: &SystemParams,
+    elems: usize,
+    n: usize,
+    wire_ratio: f64,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let s = elems.div_ceil(n).max(1) as f64 * 4.0 * n as f64;
+    let shard = s / n as f64;
+    let per_round = shard / wire_ratio / sys.net.effective_bw() + sys.net.hop_latency;
+    sys.nic_request_overhead
+        + (shard / sys.nic.pcie_bw + sys.nic.pcie_latency)
+        + (s / sys.nic.pcie_bw + sys.nic.pcie_latency)
+        + (n as f64 - 1.0) * per_round
+}
+
+/// Closed form for the ring reduce-scatter on an uncontended flat
+/// crossbar: the full (padded) vector comes down over PCIe, n−1 rounds
+/// each forward a shard and fold E/n elements at the receiver's adder,
+/// and only the owned shard writes back.
+pub fn reduce_scatter_ring_time_elems(
+    sys: &SystemParams,
+    elems: usize,
+    n: usize,
+    wire_ratio: f64,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let s = elems.div_ceil(n).max(1) as f64 * 4.0 * n as f64;
+    let shard = s / n as f64;
+    let per_round = shard / wire_ratio / sys.net.effective_bw()
+        + sys.net.hop_latency
+        + elems as f64 / n as f64 / sys.nic.add_flops;
+    sys.nic_request_overhead
+        + (s / sys.nic.pcie_bw + sys.nic.pcie_latency)
+        + (shard / sys.nic.pcie_bw + sys.nic.pcie_latency)
+        + (n as f64 - 1.0) * per_round
+}
+
+/// Closed form for the pairwise-exchange all-to-all on an uncontended
+/// flat crossbar: full vector down, n−1 rounds each exchanging one S/n
+/// block per ordered pair, full (permuted) vector back up.
+pub fn alltoall_pairwise_time_elems(
+    sys: &SystemParams,
+    elems: usize,
+    n: usize,
+    wire_ratio: f64,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let s = elems.div_ceil(n).max(1) as f64 * 4.0 * n as f64;
+    let per_round = s / n as f64 / wire_ratio / sys.net.effective_bw() + sys.net.hop_latency;
+    sys.nic_request_overhead
+        + 2.0 * (s / sys.nic.pcie_bw + sys.nic.pcie_latency)
+        + (n as f64 - 1.0) * per_round
+}
+
 /// Smart-NIC all-reduce time for one layer (the Sec. IV-C max of three).
 pub fn smartnic_ar_time(sys: &SystemParams, w: &Workload, n: usize, bfp: bool) -> f64 {
     smartnic_ar_time_elems(sys, w.grad_elems_per_layer(), n, bfp)
@@ -553,6 +693,78 @@ mod tests {
         // and it undercuts the 4:1-strided NIC ring by a wide margin
         let ring = nic_ring_ar_time_elems(&plain, elems, 32, 1.0, 4.0);
         assert!(t < ring * 0.5, "in-switch {t} vs strided ring {ring}");
+    }
+
+    #[test]
+    fn switch_multicast_closed_form_limits() {
+        use crate::sysconfig::SwitchParams;
+        let plain = SystemParams::smartnic_40g();
+        let elems = 2048 * 2048;
+        // no capability / undersized table: infinite (host-tree fallback)
+        assert!(switch_multicast_time_elems(&plain, elems, 8, 4, 4.0, 1.0).is_infinite());
+        let tiny = plain.with_switch_reduction(SwitchParams {
+            reduce_flops: 1e12,
+            reduce_table_bytes: 1024.0,
+        });
+        assert!(switch_multicast_time_elems(&tiny, elems, 8, 4, 4.0, 1.0).is_infinite());
+        // with an ample table the pipeline converges to the wire lower
+        // bound: one full payload through the root's Tx link
+        let ideal = plain.with_switch_reduction(SwitchParams {
+            reduce_flops: 1e12,
+            reduce_table_bytes: 1e18,
+        });
+        let t = switch_multicast_time_elems(&ideal, elems, 8, 4, 4.0, 1.0);
+        let s = elems as f64 * 4.0;
+        let wire_bound = s / plain.net.effective_bw();
+        assert!(t > wire_bound, "{t} vs {wire_bound}");
+        assert!(t < wire_bound * 1.25, "{t} vs {wire_bound}");
+        // replication never folds, so the engine rate cannot matter
+        let slow = plain.with_switch_reduction(SwitchParams {
+            reduce_flops: 1.0,
+            reduce_table_bytes: 1e18,
+        });
+        assert_eq!(switch_multicast_time_elems(&slow, elems, 8, 4, 4.0, 1.0), t);
+        // and it beats the host binomial tree well before N = 32: the
+        // tree pays log2(n) serial full-payload hops, the switch one
+        assert!(
+            t < broadcast_tree_time_elems(&plain, elems, 32, 1.0) / 2.0,
+            "multicast {t} vs tree {}",
+            broadcast_tree_time_elems(&plain, elems, 32, 1.0)
+        );
+        // degenerate group is free
+        assert_eq!(switch_multicast_time_elems(&ideal, elems, 1, 1, 1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn collective_closed_forms_scale_sanely() {
+        let sys = SystemParams::smartnic_40g();
+        let elems = 2048 * 2048;
+        for n in [2usize, 6, 32, 128] {
+            let bc = broadcast_tree_time_elems(&sys, elems, n, 1.0);
+            let ag = allgather_ring_time_elems(&sys, elems, n, 1.0);
+            let rs = reduce_scatter_ring_time_elems(&sys, elems, n, 1.0);
+            let a2a = alltoall_pairwise_time_elems(&sys, elems, n, 1.0);
+            for t in [bc, ag, rs, a2a] {
+                assert!(t.is_finite() && t > 0.0, "n={n}");
+            }
+            // ring reduce-scatter = ring allgather + the fold time (the
+            // DMA legs mirror each other exactly)
+            assert!(rs > ag, "n={n}: rs {rs} vs ag {ag}");
+            // allgather/reduce-scatter move (n-1)/n of the payload per
+            // rank; the tree broadcast pays log2(n) full payloads
+            if n >= 8 {
+                assert!(bc > ag, "n={n}: tree {bc} vs ring allgather {ag}");
+            }
+        }
+        // single rank: every collective is a no-op
+        for t in [
+            broadcast_tree_time_elems(&sys, elems, 1, 1.0),
+            allgather_ring_time_elems(&sys, elems, 1, 1.0),
+            reduce_scatter_ring_time_elems(&sys, elems, 1, 1.0),
+            alltoall_pairwise_time_elems(&sys, elems, 1, 1.0),
+        ] {
+            assert_eq!(t, 0.0);
+        }
     }
 
     #[test]

@@ -29,7 +29,10 @@
 //!   closed-form `allreduce_time` exactly.
 
 use super::planner::{self, PlanKind};
-use super::{job, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, Event, JobId, NodeId};
+use super::{
+    job, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, CollectiveKind, Event, JobId,
+    NodeId,
+};
 use crate::collective::timing::{scheme_rounds, HostRoundPlan};
 use crate::netsim::fabric::HopOutcome;
 use crate::netsim::topology::Ring;
@@ -70,6 +73,14 @@ pub enum Phase {
         elems: f64,
         groups: Vec<Vec<usize>>,
     },
+    /// Switch-multicast replication of the whole payload from a single
+    /// root — the dual of `SwitchReduce` with the folds removed: the
+    /// root (local rank `groups[0][0]`) streams `bytes` up in segments
+    /// and the switch tier replicates each segment to every *other*
+    /// member (finite-table windowed flow control, one up leg, fan-out
+    /// on the egress ports).  `groups` holds local rank indices grouped
+    /// by leaf, every member exactly once.
+    SwitchMulticast { bytes: f64, groups: Vec<Vec<usize>> },
 }
 
 impl Phase {
@@ -78,12 +89,14 @@ impl Phase {
     pub fn is_empty(&self) -> bool {
         match self {
             Phase::Rounds(rounds) => rounds.iter().all(|ops| ops.is_empty()),
-            Phase::SwitchReduce { .. } => false,
+            Phase::SwitchReduce { .. } | Phase::SwitchMulticast { .. } => false,
         }
     }
 
     /// Total wire bytes this phase moves (Tx sends, plus the up+down legs
-    /// of an in-switch pass), after compression by `wire_ratio`.
+    /// of an in-switch pass; one up leg plus `members − 1` replicated
+    /// egress copies for a multicast pass), after compression by
+    /// `wire_ratio`.
     pub fn wire_bytes(&self, wire_ratio: f64) -> f64 {
         match self {
             Phase::Rounds(rounds) => {
@@ -93,12 +106,17 @@ impl Phase {
                 let members: usize = groups.iter().map(Vec::len).sum();
                 2.0 * members as f64 * bytes / wire_ratio
             }
+            Phase::SwitchMulticast { bytes, groups } => {
+                let members: usize = groups.iter().map(Vec::len).sum();
+                members as f64 * bytes / wire_ratio
+            }
         }
     }
 
     /// Genuine f32 adds the phase performs — NIC adders for rounds; for
     /// an in-switch pass, (mᵍ−1)·E per leaf group plus (G−1)·E across
     /// groups (the engines' table write-ins are bandwidth, not adds).
+    /// A multicast pass replicates and folds nothing.
     pub fn reduced_elems(&self) -> f64 {
         match self {
             Phase::Rounds(rounds) => {
@@ -108,6 +126,7 @@ impl Phase {
                 let local: f64 = groups.iter().map(|g| g.len() as f64 - 1.0).sum();
                 (local + groups.len() as f64 - 1.0) * elems
             }
+            Phase::SwitchMulticast { .. } => 0.0,
         }
     }
 }
@@ -160,9 +179,15 @@ impl RingState {
 /// Progress of a planned (phase-list) collective.
 struct PlannedState {
     phases: Vec<Phase>,
-    /// host-side DMA payload per rank (fetched before the first `Rounds`
-    /// phase, written back after the last phase)
-    bytes: f64,
+    /// host-side DMA fetch per local rank before the first `Rounds` phase
+    /// (uniform for all-reduce; a broadcast fetches at the root only, an
+    /// allgather fetches each rank's shard, …).  Zero entries skip the
+    /// transfer entirely.
+    fetch_bytes: Vec<f64>,
+    /// host-side DMA writeback per local rank after the last phase (a
+    /// broadcast writes back at the non-roots, a reduce-scatter writes
+    /// back each owner's shard, …)
+    wb_bytes: Vec<f64>,
     phase_idx: usize,
     fetch_pending: usize,
     wb_pending: usize,
@@ -173,8 +198,14 @@ struct PlannedState {
     sw: Option<SwitchProgress>,
 }
 
-/// Live state of one in-switch reduction pass (segment pipeline).
+/// Live state of one in-switch pass (segment pipeline): reduction mode
+/// folds every member's stream toward the root's engine and multicasts
+/// the result; multicast mode replicates the root's stream to every
+/// other member without folding.
 struct SwitchProgress {
+    /// replication (multicast) mode: the fold stages are skipped and the
+    /// root is the only sender
+    mcast: bool,
     seg_bytes: f64,
     wire_seg: f64,
     seg_elems: f64,
@@ -218,6 +249,9 @@ pub struct Collective {
     pub job: JobId,
     pub layer: usize,
     pub algo: CollectiveAlgo,
+    /// which collective pattern this operation implements (all-reduce,
+    /// broadcast, allgather, reduce-scatter, all-to-all)
+    pub kind: CollectiveKind,
     pub ranks: Vec<NodeId>,
     pub elems: usize,
     /// when the worker posted the (non-blocking) request
@@ -279,10 +313,40 @@ impl Collective {
                                 engines += groups.len() as f64 * elems;
                             }
                         }
+                        // replication moves bytes, folds nothing: its
+                        // ledger is expected_mcast_deliveries
+                        Phase::SwitchMulticast { .. } => {}
                     }
                 }
                 (adders, engines)
             }
+        }
+    }
+
+    /// The replication ledger (`docs/INVARIANTS.md`,
+    /// `multicast-conservation`): member-segment copies the switch tier
+    /// must egress in multicast mode by completion — `(members − 1)` per
+    /// segment for every [`Phase::SwitchMulticast`] (the root already
+    /// holds the payload), zero for every other executor.  Replication is
+    /// *not* reduction, so neither reduce ledger can see these copies;
+    /// `segment_bytes` must be the NIC segment size the executor
+    /// segmented the phase with.
+    #[must_use]
+    pub fn expected_mcast_deliveries(&self, segment_bytes: f64) -> f64 {
+        match &self.state {
+            AlgoState::Planned(p) => p
+                .phases
+                .iter()
+                .map(|ph| match ph {
+                    Phase::SwitchMulticast { bytes, groups } => {
+                        let members: usize = groups.iter().map(Vec::len).sum();
+                        let segs = (bytes / segment_bytes).ceil().max(1.0);
+                        (members as f64 - 1.0) * segs
+                    }
+                    _ => 0.0,
+                })
+                .sum(),
+            _ => 0.0,
         }
     }
 
@@ -338,14 +402,25 @@ fn ring_state(sys: &SystemParams, n: usize, elems: usize, wire_ratio: f64) -> (A
 }
 
 /// Build the planned-executor state from a phase list (empty phases are
-/// dropped so phase barriers never stall on nothing).
-fn planned_state(phases: Vec<Phase>, bytes: f64, n: usize, wire_ratio: f64) -> (AlgoState, f64) {
+/// dropped so phase barriers never stall on nothing).  `fetch_bytes` /
+/// `wb_bytes` are the per-local-rank DMA volumes around the plan — see
+/// [`dma_profile`] for the per-kind shapes.
+fn planned_state(
+    phases: Vec<Phase>,
+    n: usize,
+    wire_ratio: f64,
+    fetch_bytes: Vec<f64>,
+    wb_bytes: Vec<f64>,
+) -> (AlgoState, f64) {
+    assert_eq!(fetch_bytes.len(), n, "one fetch volume per rank");
+    assert_eq!(wb_bytes.len(), n, "one writeback volume per rank");
     let phases: Vec<Phase> = phases.into_iter().filter(|p| !p.is_empty()).collect();
     let wire_total: f64 = phases.iter().map(|p| p.wire_bytes(wire_ratio)).sum();
     (
         AlgoState::Planned(PlannedState {
             phases,
-            bytes,
+            fetch_bytes,
+            wb_bytes,
             phase_idx: 0,
             fetch_pending: 0,
             wb_pending: 0,
@@ -357,7 +432,34 @@ fn planned_state(phases: Vec<Phase>, bytes: f64, n: usize, wire_ratio: f64) -> (
     )
 }
 
-/// Post layer `layer`'s all-reduce for `job` at the current virtual time.
+/// Per-local-rank DMA volumes around a planned collective of payload
+/// `bytes`: what each rank's host must push to the NIC before the plan
+/// and pull back after it.  All-reduce moves the full payload both ways
+/// on every rank; the other kinds are asymmetric — exactly the per-kind
+/// accounting [`crate::cluster::planner::rounds_cost`] prices.
+fn dma_profile(kind: CollectiveKind, n: usize, bytes: f64) -> (Vec<f64>, Vec<f64>) {
+    let shard = bytes / n as f64;
+    match kind {
+        CollectiveKind::AllReduce | CollectiveKind::AllToAll => {
+            (vec![bytes; n], vec![bytes; n])
+        }
+        CollectiveKind::Broadcast => {
+            // the root (local rank 0) sources the payload; every other
+            // rank only receives it
+            let mut fetch = vec![0.0; n];
+            fetch[0] = bytes;
+            let mut wb = vec![bytes; n];
+            wb[0] = 0.0;
+            (fetch, wb)
+        }
+        CollectiveKind::Allgather => (vec![shard; n], vec![bytes; n]),
+        CollectiveKind::ReduceScatter => (vec![bytes; n], vec![shard; n]),
+    }
+}
+
+/// Post layer `layer`'s collective for `job` at the current virtual time
+/// (the layer's [`CollectiveKind`] — all-reduce unless the spec says
+/// otherwise — executed by the layer's algorithm preference).
 /// Non-blocking: the executor's events interleave with everything else on
 /// the clock.  Returns the collective id the worker can wait on.
 pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usize) -> CollectiveId {
@@ -366,6 +468,7 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
     let ranks = spec.ranks.clone();
     let elems = spec.workload.grad_elems_per_layer();
     let algo = spec.layer_algos[layer];
+    let kind = spec.layer_kinds[layer];
     let wire_ratio = st.jobs[job].wire_ratio;
     let n = ranks.len();
     // the NIC datapath pads to whole ring chunks (Sec. IV-C); the host
@@ -376,20 +479,42 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
     let cid = st.collectives.len();
     let (state, wire_bytes_per_rank) = if n <= 1 {
         (AlgoState::Noop, 0.0)
+    } else if kind != CollectiveKind::AllReduce {
+        // every non-all-reduce kind runs on the planned executor; the
+        // algorithm is a plan-family preference the kind-aware planner
+        // resolves (with the documented fallbacks)
+        assert!(
+            !matches!(algo, CollectiveAlgo::Host(_)),
+            "the host executor implements only all-reduce (layer {layer} asked for {})",
+            kind.name()
+        );
+        let plan = planner::plan_collective_for_algo(
+            &st.sys,
+            &st.fabric.topology,
+            &ranks,
+            elems,
+            wire_ratio,
+            kind,
+            algo,
+        );
+        let (fetch, wb) = dma_profile(kind, n, plan.payload_bytes);
+        planned_state(plan.phases, n, wire_ratio, fetch, wb)
     } else {
         match algo {
             CollectiveAlgo::NicRing => ring_state(&st.sys, n, elems, wire_ratio),
             CollectiveAlgo::NicBinomial => planned_state(
                 vec![Phase::Rounds(binomial_rounds(n, padded_bytes, elems as f64))],
-                padded_bytes,
                 n,
                 wire_ratio,
+                vec![padded_bytes; n],
+                vec![padded_bytes; n],
             ),
             CollectiveAlgo::NicRabenseifner => planned_state(
                 vec![Phase::Rounds(rabenseifner_rounds(n, padded_bytes, elems as f64))],
-                padded_bytes,
                 n,
                 wire_ratio,
+                vec![padded_bytes; n],
+                vec![padded_bytes; n],
             ),
             CollectiveAlgo::NicHierarchical
             | CollectiveAlgo::SwitchReduce
@@ -406,7 +531,14 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
                     // degenerate or fallback plan: the exact native ring
                     ring_state(&st.sys, n, elems, wire_ratio)
                 } else {
-                    planned_state(plan.phases, plan.payload_bytes, n, wire_ratio)
+                    let payload = plan.payload_bytes;
+                    planned_state(
+                        plan.phases,
+                        n,
+                        wire_ratio,
+                        vec![payload; n],
+                        vec![payload; n],
+                    )
                 }
             }
             CollectiveAlgo::Host(scheme) => {
@@ -428,7 +560,7 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
 
     // classify before dispatching so no borrow of the collective is held
     // across the &mut state calls below
-    let kind: u8 = match &state {
+    let class: u8 = match &state {
         AlgoState::Noop => 0,
         AlgoState::Ring(_) | AlgoState::Planned(_) => 1,
         AlgoState::Host(_) => 2,
@@ -438,6 +570,7 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
         job,
         layer,
         algo,
+        kind,
         ranks,
         elems,
         t_post: now,
@@ -445,11 +578,11 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
         wire_bytes_per_rank,
         // NIC-path executors start when CollectiveStart fires; no-op and
         // host collectives begin right here at post
-        started: kind != 1,
+        started: class != 1,
         aborted: false,
         state,
     });
-    match kind {
+    match class {
         0 => complete(sim, st, cid),
         1 => {
             // driver hands the descriptor to the NIC after a fixed overhead
@@ -802,13 +935,16 @@ pub(super) fn ring_writeback_done(sim: &mut ClusterSim, st: &mut ClusterState, c
 
 fn start_planned(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     let now = sim.now();
-    let (ranks, bytes, first_is_switch) = {
+    let (ranks, fetches, first_is_switch) = {
         let c = &st.collectives[cid];
         let p = c.planned_ref();
         (
             c.ranks.clone(),
-            p.bytes,
-            matches!(p.phases.first(), Some(Phase::SwitchReduce { .. })),
+            p.fetch_bytes.clone(),
+            matches!(
+                p.phases.first(),
+                Some(Phase::SwitchReduce { .. } | Phase::SwitchMulticast { .. })
+            ),
         )
     };
     if first_is_switch {
@@ -816,11 +952,19 @@ fn start_planned(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId)
         begin_phase(sim, st, cid);
         return;
     }
-    // whole-payload DMA fetch on every rank before the first rounds phase
-    st.collectives[cid].planned_mut().fetch_pending = ranks.len();
-    for &node in &ranks {
-        let done = st.fabric.nodes[node].pcie.to_device.transmit(now, bytes);
-        sim.schedule_at(done, Event::PlannedFetchDone { cid: cid as u32 });
+    // per-rank DMA fetch before the first rounds phase (zero-volume ranks
+    // — e.g. a broadcast's receivers — have nothing to move)
+    let pending = fetches.iter().filter(|b| **b > 0.0).count();
+    if pending == 0 {
+        begin_phase(sim, st, cid);
+        return;
+    }
+    st.collectives[cid].planned_mut().fetch_pending = pending;
+    for (local, &node) in ranks.iter().enumerate() {
+        if fetches[local] > 0.0 {
+            let done = st.fabric.nodes[node].pcie.to_device.transmit(now, fetches[local]);
+            sim.schedule_at(done, Event::PlannedFetchDone { cid: cid as u32 });
+        }
     }
 }
 
@@ -834,17 +978,28 @@ pub(super) fn planned_fetch_done(sim: &mut ClusterSim, st: &mut ClusterState, ci
 
 /// Enter the current phase (or finish the plan when none are left).
 fn begin_phase(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    #[derive(PartialEq)]
+    enum Entry {
+        Rounds,
+        Reduce,
+        Multicast,
+    }
     let entry = {
         let p = st.collectives[cid].planned_ref();
-        p.phases.get(p.phase_idx).map(|ph| matches!(ph, Phase::Rounds(_)))
+        p.phases.get(p.phase_idx).map(|ph| match ph {
+            Phase::Rounds(_) => Entry::Rounds,
+            Phase::SwitchReduce { .. } => Entry::Reduce,
+            Phase::SwitchMulticast { .. } => Entry::Multicast,
+        })
     };
     match entry {
         None => finish_planned(sim, st, cid),
-        Some(true) => {
+        Some(Entry::Rounds) => {
             st.collectives[cid].planned_mut().round = 0;
             begin_planned_round(sim, st, cid, 0);
         }
-        Some(false) => start_switch_phase(sim, st, cid),
+        Some(Entry::Reduce) => start_switch_phase(sim, st, cid),
+        Some(Entry::Multicast) => start_mcast_phase(sim, st, cid),
     }
 }
 
@@ -857,23 +1012,33 @@ fn advance_phase(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId)
 /// in-switch pass (which delivered per segment).
 fn finish_planned(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     let now = sim.now();
-    let (ranks, bytes, switch_tail) = {
+    let (ranks, wbs, switch_tail) = {
         let c = &st.collectives[cid];
         let p = c.planned_ref();
         (
             c.ranks.clone(),
-            p.bytes,
-            matches!(p.phases.last(), Some(Phase::SwitchReduce { .. })),
+            p.wb_bytes.clone(),
+            matches!(
+                p.phases.last(),
+                Some(Phase::SwitchReduce { .. } | Phase::SwitchMulticast { .. })
+            ),
         )
     };
     if switch_tail {
         complete(sim, st, cid);
         return;
     }
-    st.collectives[cid].planned_mut().wb_pending = ranks.len();
-    for &node in &ranks {
-        let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, bytes);
-        sim.schedule_at(wb, Event::PlannedWbDone { cid: cid as u32 });
+    let pending = wbs.iter().filter(|b| **b > 0.0).count();
+    if pending == 0 {
+        complete(sim, st, cid);
+        return;
+    }
+    st.collectives[cid].planned_mut().wb_pending = pending;
+    for (local, &node) in ranks.iter().enumerate() {
+        if wbs[local] > 0.0 {
+            let wb = st.fabric.nodes[node].pcie.to_host.transmit(now, wbs[local]);
+            sim.schedule_at(wb, Event::PlannedWbDone { cid: cid as u32 });
+        }
     }
 }
 
@@ -1019,6 +1184,7 @@ fn start_switch_phase(sim: &mut ClusterSim, st: &mut ClusterState, cid: Collecti
     let per_group: Vec<usize> = groups.iter().map(Vec::len).collect();
     let n_groups = groups.len();
     st.collectives[cid].planned_mut().sw = Some(SwitchProgress {
+        mcast: false,
         seg_bytes,
         wire_seg,
         seg_elems,
@@ -1232,8 +1398,9 @@ pub(super) fn switch_delivered(
     }
 }
 
-/// Segment bookkeeping: free the table slot when every member is served,
-/// then launch the next queued segment or finish the phase.
+/// Segment bookkeeping (both switch modes): free the table slot when
+/// every member is served, then launch the next queued segment or finish
+/// the phase.
 pub(super) fn switch_rank_done(
     sim: &mut ClusterSim,
     st: &mut ClusterState,
@@ -1248,13 +1415,203 @@ pub(super) fn switch_rank_done(
         } else {
             sw.inflight -= 1;
             sw.done += 1;
-            Some(sw.done == sw.segs)
+            Some((sw.done == sw.segs, sw.mcast))
         }
     };
     match outcome {
         None => {}
-        Some(false) => switch_launch_next(sim, st, cid),
-        Some(true) => advance_phase(sim, st, cid),
+        Some((false, false)) => switch_launch_next(sim, st, cid),
+        Some((false, true)) => mcast_launch_next(sim, st, cid),
+        Some((true, _)) => advance_phase(sim, st, cid),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Switch-multicast executor (replication mode: the dual of the
+// reduction pipeline with the folds removed — root streams up, the
+// switch tier fans each segment out to every other member)
+// ---------------------------------------------------------------------
+
+fn start_mcast_phase(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let (bytes, groups, idx, n_phases, wire_ratio, n) = {
+        let c = &st.collectives[cid];
+        let p = c.planned_ref();
+        let (bytes, groups) = match &p.phases[p.phase_idx] {
+            Phase::SwitchMulticast { bytes, groups } => (*bytes, groups.clone()),
+            _ => unreachable!("multicast start in a non-multicast phase"),
+        };
+        (
+            bytes,
+            groups,
+            p.phase_idx,
+            p.phases.len(),
+            st.jobs[c.job].wire_ratio,
+            c.ranks.len(),
+        )
+    };
+    assert!(
+        st.fabric.switch_reduce_capable(),
+        "switch-multicast plan on a fabric without replication engines (planner fallback bug)"
+    );
+    let segs = (bytes / st.sys.nic.segment_bytes).ceil().max(1.0) as usize;
+    let seg_bytes = bytes / segs as f64;
+    let wire_seg = seg_bytes / wire_ratio;
+    let window = (st.sys.switch.reduce_table_bytes / seg_bytes).floor() as usize;
+    assert!(window >= 1, "replication table smaller than one segment (planner fallback bug)");
+    let window = window.min(segs);
+    let mut group_of = vec![usize::MAX; n];
+    for (g, grp) in groups.iter().enumerate() {
+        for &local in grp {
+            group_of[local] = g;
+        }
+    }
+    let ranks = &st.collectives[cid].ranks;
+    let group_leaves: Vec<usize> = groups
+        .iter()
+        .map(|grp| st.fabric.topology.leaf_of(ranks[grp[0]]))
+        .collect();
+    let root = ranks[groups[0][0]];
+    let members: Vec<usize> = groups.iter().flatten().copied().collect();
+    // the root already holds the payload: every segment is delivered to
+    // the other members only
+    let fanout = members.len() - 1;
+    st.collectives[cid].planned_mut().sw = Some(SwitchProgress {
+        mcast: true,
+        seg_bytes,
+        wire_seg,
+        seg_elems: 0.0,
+        segs,
+        window,
+        fetch: idx == 0,
+        writeback: idx + 1 == n_phases,
+        root,
+        group_of,
+        group_leaves,
+        members,
+        next_seg: 0,
+        inflight: 0,
+        done: 0,
+        // replication folds nothing: the reduction countdowns stay empty
+        group_pending: Vec::new(),
+        spine_pending: Vec::new(),
+        rank_pending: vec![fanout; segs],
+    });
+    for _ in 0..window {
+        mcast_launch_next(sim, st, cid);
+    }
+}
+
+/// Launch the next segment if a table slot is free: DMA-fetch it at the
+/// root (or send directly when a preceding phase left it on the NIC).
+fn mcast_launch_next(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    let now = sim.now();
+    let launch = {
+        let p = st.collectives[cid].planned_mut();
+        let sw = p.sw.as_mut().expect("no multicast pass active");
+        if sw.next_seg >= sw.segs || sw.inflight >= sw.window {
+            None
+        } else {
+            let seg = sw.next_seg;
+            sw.next_seg += 1;
+            sw.inflight += 1;
+            Some((seg, sw.fetch, sw.seg_bytes, sw.root))
+        }
+    };
+    let Some((seg, fetch, seg_bytes, root)) = launch else {
+        return;
+    };
+    if fetch {
+        let done = st.fabric.nodes[root].pcie.to_device.transmit(now, seg_bytes);
+        sim.schedule_at(done, Event::McastUp { cid: cid as u32, seg: seg as u32 });
+    } else {
+        mcast_up(sim, st, cid, seg);
+    }
+}
+
+/// [`Event::McastUp`]: the root's copy of `seg` is on its NIC — Tx-
+/// serialize it toward the switch tier, then cross the spine when the
+/// members span leaves (or go straight to leaf delivery when they don't).
+pub(super) fn mcast_up(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId, seg: usize) {
+    let now = sim.now();
+    let (root, wire_seg, spanning, root_leaf) = {
+        let c = &st.collectives[cid];
+        let sw = c.planned_ref().sw.as_ref().expect("no multicast pass active");
+        (sw.root, sw.wire_seg, sw.group_leaves.len() > 1, sw.group_leaves[0])
+    };
+    let at_switch = st.fabric.nodes[root].tx.transmit(now, wire_seg);
+    if spanning {
+        let at_spine = st.fabric.mcast_to_spine(root_leaf, at_switch, wire_seg);
+        sim.schedule_at(at_spine, Event::McastSpine { cid: cid as u32, seg: seg as u32 });
+    } else {
+        sim.schedule_at(
+            at_switch,
+            Event::McastLeaf { cid: cid as u32, seg: seg as u32, group: 0 },
+        );
+    }
+}
+
+/// [`Event::McastSpine`]: the segment reached the spine replication
+/// point — one copy down every member leaf's bundle.
+pub(super) fn mcast_spine(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    seg: usize,
+) {
+    let now = sim.now();
+    let (leaves, wire_seg) = {
+        let sw = st.collectives[cid].planned_ref().sw.as_ref().unwrap();
+        (sw.group_leaves.clone(), sw.wire_seg)
+    };
+    for (g, leaf) in leaves.into_iter().enumerate() {
+        let at_leaf = st.fabric.reduce_downlink(leaf, now, wire_seg);
+        sim.schedule_at(
+            at_leaf,
+            Event::McastLeaf {
+                cid: cid as u32,
+                seg: seg as u32,
+                group: g as u32,
+            },
+        );
+    }
+}
+
+/// [`Event::McastLeaf`]: the segment reached group `g`'s leaf switch —
+/// replicated final egress to every member of the group except the root
+/// (which already holds the payload), each copy counted into the
+/// multicast conservation ledger.
+pub(super) fn mcast_leaf(
+    sim: &mut ClusterSim,
+    st: &mut ClusterState,
+    cid: CollectiveId,
+    seg: usize,
+    g: usize,
+) {
+    let now = sim.now();
+    let (members, wire_seg, root) = {
+        let c = &st.collectives[cid];
+        let p = c.planned_ref();
+        let groups = match &p.phases[p.phase_idx] {
+            Phase::SwitchMulticast { groups, .. } => groups,
+            _ => unreachable!("multicast delivery in a non-multicast phase"),
+        };
+        let sw = p.sw.as_ref().unwrap();
+        (groups[g].clone(), sw.wire_seg, sw.root)
+    };
+    for local in members {
+        let dst = st.collectives[cid].ranks[local];
+        if dst == root {
+            continue;
+        }
+        let at_nic = st.fabric.mcast_deliver(dst, now, wire_seg);
+        sim.schedule_at(
+            at_nic,
+            Event::SwitchDelivered {
+                cid: cid as u32,
+                seg: seg as u32,
+                rank: local as u32,
+            },
+        );
     }
 }
 
@@ -1386,6 +1743,90 @@ pub fn rabenseifner_rounds(n: usize, bytes: f64, elems: f64) -> Vec<Vec<RoundOp>
         );
     }
     rounds
+}
+
+/// Binomial-tree broadcast as rounds: the reverse of the binomial gather
+/// tree, so round `r` doubles the set of ranks holding the payload.  The
+/// root is local rank 0; `n - 1` full-payload transfers over
+/// `ceil(log2 n)` rounds.
+pub fn broadcast_binomial_rounds(n: usize, bytes: f64) -> Vec<Vec<RoundOp>> {
+    let mut gather: Vec<Vec<RoundOp>> = Vec::new();
+    let mut k = 1usize;
+    while k < n {
+        let mut ops = Vec::new();
+        let mut dst = 0usize;
+        while dst + k < n {
+            ops.push(RoundOp {
+                src: dst,
+                dst: dst + k,
+                bytes,
+                reduce_elems: 0.0,
+            });
+            dst += 2 * k;
+        }
+        gather.push(ops);
+        k *= 2;
+    }
+    gather.reverse();
+    gather
+}
+
+/// Ring allgather as rounds: `n - 1` rounds in which every rank forwards
+/// a shard of `bytes / n` to its successor, so each rank's shard walks
+/// the whole ring.
+pub fn allgather_ring_rounds(n: usize, bytes: f64) -> Vec<Vec<RoundOp>> {
+    let shard = bytes / n as f64;
+    (0..n.saturating_sub(1))
+        .map(|_| {
+            (0..n)
+                .map(|i| RoundOp {
+                    src: i,
+                    dst: (i + 1) % n,
+                    bytes: shard,
+                    reduce_elems: 0.0,
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Ring reduce-scatter as rounds: `n - 1` rounds, each forwarding a
+/// partially-reduced shard of `bytes / n` to the successor, which folds
+/// `elems / n` elements into its accumulator.
+pub fn reduce_scatter_ring_rounds(n: usize, bytes: f64, elems: f64) -> Vec<Vec<RoundOp>> {
+    let shard = bytes / n as f64;
+    let shard_elems = elems / n as f64;
+    (0..n.saturating_sub(1))
+        .map(|_| {
+            (0..n)
+                .map(|i| RoundOp {
+                    src: i,
+                    dst: (i + 1) % n,
+                    bytes: shard,
+                    reduce_elems: shard_elems,
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Pairwise-exchange all-to-all as rounds: round `r ∈ 1..n` has every
+/// rank `i` send its `bytes / n` block for peer `(i + r) % n`, so every
+/// ordered pair exchanges exactly once.
+pub fn all_to_all_rounds(n: usize, bytes: f64) -> Vec<Vec<RoundOp>> {
+    let block = bytes / n as f64;
+    (1..n)
+        .map(|r| {
+            (0..n)
+                .map(|i| RoundOp {
+                    src: i,
+                    dst: (i + r) % n,
+                    bytes: block,
+                    reduce_elems: 0.0,
+                })
+                .collect()
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------
@@ -1526,9 +1967,96 @@ mod tests {
             for rounds in [
                 rabenseifner_rounds(n, 512.0, 128.0),
                 binomial_rounds(n, 512.0, 128.0),
+                broadcast_binomial_rounds(n, 512.0),
+                allgather_ring_rounds(n, 512.0),
+                reduce_scatter_ring_rounds(n, 512.0, 128.0),
+                all_to_all_rounds(n, 512.0),
             ] {
                 for op in rounds.iter().flatten() {
                     assert!(op.src < n && op.dst < n && op.src != op.dst, "n={n} {op:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_rounds_double_coverage() {
+        for n in [2usize, 3, 4, 5, 6, 7, 8, 13] {
+            let rounds = broadcast_binomial_rounds(n, 2048.0);
+            let lg = (n as f64).log2().ceil() as usize;
+            assert_eq!(rounds.len(), lg, "n={n}");
+            let transfers: usize = rounds.iter().map(|r| r.len()).sum();
+            assert_eq!(transfers, n - 1, "n={n}");
+            // simulate: a rank may only send once it holds the payload,
+            // and every rank ends up holding it exactly once
+            let mut holds = vec![false; n];
+            holds[0] = true;
+            for r in &rounds {
+                let snapshot = holds.clone();
+                for op in r {
+                    assert!(snapshot[op.src], "n={n}: rank {} sent before receiving", op.src);
+                    assert!(!holds[op.dst], "n={n}: rank {} received twice", op.dst);
+                    assert_eq!(op.bytes, 2048.0);
+                    assert_eq!(op.reduce_elems, 0.0);
+                    holds[op.dst] = true;
+                }
+            }
+            assert!(holds.iter().all(|&h| h), "n={n}");
+        }
+    }
+
+    #[test]
+    fn allgather_ring_walks_every_shard_everywhere() {
+        for n in [2usize, 3, 5, 8] {
+            let rounds = allgather_ring_rounds(n, 4096.0);
+            assert_eq!(rounds.len(), n - 1);
+            // track shard ownership: have[i] = set of shards rank i holds,
+            // ring forwarding passes the shard received last round
+            let mut have: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+            for r in &rounds {
+                assert_eq!(r.len(), n);
+                let latest: Vec<usize> = have.iter().map(|h| *h.last().unwrap()).collect();
+                for op in r {
+                    assert_eq!(op.dst, (op.src + 1) % n);
+                    assert!((op.bytes - 4096.0 / n as f64).abs() < 1e-12);
+                    have[op.dst].push(latest[op.src]);
+                }
+            }
+            for (i, h) in have.iter().enumerate() {
+                let mut s = h.clone();
+                s.sort_unstable();
+                s.dedup();
+                assert_eq!(s.len(), n, "rank {i} missing shards: {h:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_ring_reduces_each_shard_n_minus_1_times() {
+        for n in [2usize, 4, 6] {
+            let rounds = reduce_scatter_ring_rounds(n, 4096.0, 1024.0);
+            assert_eq!(rounds.len(), n - 1);
+            let adds: f64 = rounds.iter().flatten().map(|op| op.reduce_elems).sum();
+            // each of the n shards of elems/n is folded (n-1) times
+            let want = (n - 1) as f64 * 1024.0;
+            assert!((adds - want).abs() < 1e-9, "n={n}: {adds} vs {want}");
+        }
+    }
+
+    #[test]
+    fn all_to_all_covers_every_ordered_pair_once() {
+        for n in [2usize, 3, 5, 8] {
+            let rounds = all_to_all_rounds(n, 4096.0);
+            assert_eq!(rounds.len(), n - 1);
+            let mut seen = vec![vec![0usize; n]; n];
+            for op in rounds.iter().flatten() {
+                assert!((op.bytes - 4096.0 / n as f64).abs() < 1e-12);
+                assert_eq!(op.reduce_elems, 0.0);
+                seen[op.src][op.dst] += 1;
+            }
+            for (i, row) in seen.iter().enumerate() {
+                for (j, &c) in row.iter().enumerate() {
+                    assert_eq!(c, usize::from(i != j), "pair ({i},{j})");
                 }
             }
         }

@@ -15,7 +15,8 @@
 //! communication is executed.
 
 use super::{
-    collective, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, Event, JobId, NodeId,
+    collective, ClusterSim, ClusterState, CollectiveAlgo, CollectiveId, CollectiveKind, Event,
+    JobId, NodeId,
 };
 use crate::analytic::model::{layer_times, LayerTimes, SystemKind};
 use crate::bfp::BfpCodec;
@@ -36,6 +37,10 @@ pub struct JobSpec {
     pub start_at: Time,
     /// all-reduce algorithm per layer (index = layer)
     pub layer_algos: Vec<CollectiveAlgo>,
+    /// collective pattern per layer (index = layer); all-reduce for a
+    /// gradient exchange, but a layer may instead be an MoE all-to-all,
+    /// a weight broadcast, etc.
+    pub layer_kinds: Vec<CollectiveKind>,
 }
 
 impl JobSpec {
@@ -56,6 +61,7 @@ impl JobSpec {
             ranks,
             start_at: 0.0,
             layer_algos: vec![default_algo; workload.layers],
+            layer_kinds: vec![CollectiveKind::AllReduce; workload.layers],
         }
     }
 
@@ -80,6 +86,15 @@ impl JobSpec {
     /// the fabric shape, placement and message size.
     pub fn with_auto_planner(mut self) -> Self {
         self.layer_algos = vec![CollectiveAlgo::Auto; self.workload.layers];
+        self
+    }
+
+    /// Override the collective pattern layer by layer (e.g. an MoE
+    /// iteration interleaving all-to-all with all-reduce, or an
+    /// inference replica set broadcasting weights).
+    pub fn with_layer_kinds(mut self, kinds: Vec<CollectiveKind>) -> Self {
+        assert_eq!(kinds.len(), self.workload.layers, "need one kind per layer");
+        self.layer_kinds = kinds;
         self
     }
 }

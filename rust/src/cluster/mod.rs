@@ -106,6 +106,48 @@ impl CollectiveAlgo {
     }
 }
 
+/// Which collective *pattern* an operation implements.  The executors and
+/// the planner are kind-aware: all-reduce is the paper's original
+/// workload, the other four open the MoE (all-to-all) and inference
+/// weight-distribution (broadcast) workload families.  Reduction-style
+/// kinds fold elements on adders / switch engines; movement-style kinds
+/// (broadcast, allgather, all-to-all) only replicate or permute — the
+/// conservation audit prices the two families differently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// every rank ends with the sum of all ranks' payloads
+    AllReduce,
+    /// rank 0's payload is replicated to every other rank
+    Broadcast,
+    /// every rank's 1/n shard is delivered to all peers
+    Allgather,
+    /// each element is reduced exactly once, into its owning rank's shard
+    ReduceScatter,
+    /// every ordered (src, dst) pair exchanges its private 1/n block
+    AllToAll,
+}
+
+impl CollectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::AllReduce => "all-reduce",
+            CollectiveKind::Broadcast => "broadcast",
+            CollectiveKind::Allgather => "allgather",
+            CollectiveKind::ReduceScatter => "reduce-scatter",
+            CollectiveKind::AllToAll => "all-to-all",
+        }
+    }
+
+    /// All five kinds, in bench/report order.
+    pub const ALL: [CollectiveKind; 5] = [
+        CollectiveKind::AllReduce,
+        CollectiveKind::Broadcast,
+        CollectiveKind::Allgather,
+        CollectiveKind::ReduceScatter,
+        CollectiveKind::AllToAll,
+    ];
+}
+
 /// The world state threaded through every event: shared resources, job
 /// runtimes, collective bookkeeping, and the execution trace.
 pub struct ClusterState {
@@ -217,6 +259,16 @@ pub enum Event {
     SwitchDelivered { cid: u32, seg: u32, rank: u32 },
     /// in-switch: one member fully served for `seg` (incl. writeback)
     SwitchRankDone { cid: u32, seg: u32 },
+    /// switch-multicast: the root's copy of `seg` reached its leaf switch
+    /// — replicate it on the egress engines (and up the spine if the
+    /// group spans leaves)
+    McastUp { cid: u32, seg: u32 },
+    /// switch-multicast: `seg` crossed the spine — fan it out to every
+    /// member leaf's downlink
+    McastSpine { cid: u32, seg: u32 },
+    /// switch-multicast: `seg` reached `group`'s leaf switch — replicate
+    /// to that leaf's members
+    McastLeaf { cid: u32, seg: u32, group: u32 },
     /// host: one rank's software round drained on its comm-core server
     HostRoundDone { cid: u32 },
 }
@@ -292,6 +344,11 @@ impl World for ClusterState {
             Event::SwitchRankDone { cid, seg } => {
                 collective::switch_rank_done(sim, st, ix(cid), ix(seg));
             }
+            Event::McastUp { cid, seg } => collective::mcast_up(sim, st, ix(cid), ix(seg)),
+            Event::McastSpine { cid, seg } => collective::mcast_spine(sim, st, ix(cid), ix(seg)),
+            Event::McastLeaf { cid, seg, group } => {
+                collective::mcast_leaf(sim, st, ix(cid), ix(seg), ix(group));
+            }
             Event::HostRoundDone { cid } => collective::host_round_done(sim, st, ix(cid)),
         }
     }
@@ -354,8 +411,8 @@ unsafe impl PartitionedWorld for ClusterState {
 
     /// Node-local pipeline stages belong to the leaf owning their node;
     /// everything else (job control, collective barriers, host rounds,
-    /// the in-switch executor's spine-coupled stages) runs globally on
-    /// the coordinator.
+    /// the in-switch executor's spine-coupled stages — the multicast
+    /// replication pipeline included) runs globally on the coordinator.
     fn route(map: &PartitionMap, event: &Event) -> u32 {
         match event {
             Event::RingSend { node, .. }
@@ -434,6 +491,9 @@ unsafe impl PartitionedWorld for ClusterState {
             Event::JobRestart { job } => pack(25, 0, job, 0, 0),
             Event::NodeFail { node } => pack(26, 0, node, 0, 0),
             Event::NodeRepair { node } => pack(27, 0, node, 0, 0),
+            Event::McastUp { cid, seg } => pack(28, cid, seg, 0, 0),
+            Event::McastSpine { cid, seg } => pack(29, cid, seg, 0, 0),
+            Event::McastLeaf { cid, seg, group } => pack(30, cid, seg, group, 0),
         }
     }
 }

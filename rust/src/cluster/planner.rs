@@ -28,10 +28,14 @@
 //! plan, and every plan reduces each gradient element exactly once per
 //! peer ((n−1)·E genuine adds).
 
-use super::collective::{binomial_rounds, rabenseifner_rounds, Phase, RoundOp};
-use super::CollectiveAlgo;
+use super::collective::{
+    all_to_all_rounds, allgather_ring_rounds, binomial_rounds, broadcast_binomial_rounds,
+    rabenseifner_rounds, reduce_scatter_ring_rounds, Phase, RoundOp,
+};
+use super::{CollectiveAlgo, CollectiveKind};
 use crate::analytic::model::{
     hierarchical_ar_time_elems, inswitch_ar_time_elems, nic_ring_ar_time_elems,
+    switch_multicast_time_elems,
 };
 use crate::netsim::topology::Topology;
 use crate::sysconfig::SystemParams;
@@ -50,6 +54,11 @@ pub enum PlanKind {
     Hierarchical,
     /// NetReduce-style in-switch reduction
     InSwitch,
+    /// round-based pairwise exchange (all-to-all)
+    Pairwise,
+    /// switch-resident replication: the multicast dual of in-switch
+    /// reduction (broadcast)
+    SwitchMulticast,
 }
 
 impl PlanKind {
@@ -60,6 +69,8 @@ impl PlanKind {
             PlanKind::Rabenseifner => "rabenseifner",
             PlanKind::Hierarchical => "hierarchical",
             PlanKind::InSwitch => "in-switch",
+            PlanKind::Pairwise => "pairwise",
+            PlanKind::SwitchMulticast => "switch-multicast",
         }
     }
 }
@@ -84,8 +95,10 @@ impl Plan {
     /// must reduce every element exactly once per peer: (n−1)·E — the
     /// conservation invariant, and exactly what `scheme_rounds`' ring
     /// decomposition implies (n−1 reduce rounds × n ranks × E/n apiece).
+    /// A [`PlanKind::Ring`] with phases is a ring-structured *rounds*
+    /// plan (allgather / reduce-scatter) and is priced by its ops.
     pub fn reduced_elems(&self, n: usize, elems: usize) -> f64 {
-        if self.kind == PlanKind::Ring {
+        if self.kind == PlanKind::Ring && self.phases.is_empty() {
             // native ring: each rank reduces n−1 chunks of E/n
             return (n as f64 - 1.0) * elems as f64;
         }
@@ -145,13 +158,20 @@ pub fn ring_uplink_factor(topo: &Topology, ranks: &[usize]) -> f64 {
 /// downlink bundle, destination egress port) plus the route latency and
 /// the worst destination-adder time, plus the plan-level DMA fetch /
 /// writeback and the NIC request overhead.
+///
+/// The DMA term is split by direction because the collective family is
+/// no longer symmetric: an all-reduce fetches and writes back the whole
+/// payload, but an allgather fetches only each rank's shard (`S/n`)
+/// while writing back the full vector, and a reduce-scatter is the
+/// mirror image.  Pass the worst per-rank fetch and writeback volumes.
 pub fn rounds_cost(
     sys: &SystemParams,
     topo: &Topology,
     ranks: &[usize],
     rounds: &[Vec<RoundOp>],
     wire_ratio: f64,
-    payload_bytes: f64,
+    fetch_bytes: f64,
+    wb_bytes: f64,
 ) -> f64 {
     let bw = sys.net.effective_bw();
     let lat = sys.net.hop_latency;
@@ -160,8 +180,9 @@ pub fn rounds_cost(
     let up_bw = topo.uplink_bw(bw);
     let l = topo.leaves();
     let max = |v: &[f64]| v.iter().fold(0.0f64, |a, &b| a.max(b));
-    let mut t =
-        sys.nic_request_overhead + 2.0 * (payload_bytes / sys.nic.pcie_bw + sys.nic.pcie_latency);
+    let mut t = sys.nic_request_overhead
+        + (fetch_bytes / sys.nic.pcie_bw + sys.nic.pcie_latency)
+        + (wb_bytes / sys.nic.pcie_bw + sys.nic.pcie_latency);
     for round in rounds {
         if round.is_empty() {
             continue;
@@ -289,7 +310,7 @@ pub fn candidates(
     }];
     if n >= 2 {
         let b_rounds = binomial_rounds(n, padded, elems as f64);
-        let b_cost = rounds_cost(sys, topo, ranks, &b_rounds, wire_ratio, padded);
+        let b_cost = rounds_cost(sys, topo, ranks, &b_rounds, wire_ratio, padded, padded);
         out.push(Plan {
             kind: PlanKind::Binomial,
             phases: vec![Phase::Rounds(b_rounds)],
@@ -297,7 +318,7 @@ pub fn candidates(
             predicted: b_cost,
         });
         let r_rounds = rabenseifner_rounds(n, padded, elems as f64);
-        let r_cost = rounds_cost(sys, topo, ranks, &r_rounds, wire_ratio, padded);
+        let r_cost = rounds_cost(sys, topo, ranks, &r_rounds, wire_ratio, padded, padded);
         out.push(Plan {
             kind: PlanKind::Rabenseifner,
             phases: vec![Phase::Rounds(r_rounds)],
@@ -395,6 +416,145 @@ pub fn plan_for_algo(
     }
 }
 
+/// Every plan the planner can price for this collective *kind*.
+/// All-reduce keeps its five families ([`candidates`]); the other kinds
+/// get their canonical host/NIC rounds plan plus — for broadcast — the
+/// switch-multicast offload when the fabric's switch tier can replicate
+/// (finite predicted cost: engines present, table holds ≥ 1 segment).
+///
+/// The host plan is always first, so an incapable switch falls back to
+/// it bit-identically (mirroring the in-switch → ring fallback).
+pub fn candidates_for(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+    kind: CollectiveKind,
+) -> Vec<Plan> {
+    if kind == CollectiveKind::AllReduce {
+        return candidates(sys, topo, ranks, elems, wire_ratio);
+    }
+    let n = ranks.len();
+    let raw = elems as f64 * 4.0;
+    let padded = elems.div_ceil(n.max(1)).max(1) as f64 * 4.0 * n as f64;
+    let shard = padded / n.max(1) as f64;
+    let mut out = Vec::new();
+    match kind {
+        CollectiveKind::AllReduce => unreachable!(),
+        CollectiveKind::Broadcast => {
+            // root fetches the full payload once; every non-root writes
+            // it back — no sharding, so no padding either
+            let rounds = broadcast_binomial_rounds(n, raw);
+            let cost = rounds_cost(sys, topo, ranks, &rounds, wire_ratio, raw, raw);
+            out.push(Plan {
+                kind: PlanKind::Binomial,
+                phases: vec![Phase::Rounds(rounds)],
+                payload_bytes: raw,
+                predicted: cost,
+            });
+            if sys.switch.enabled() && n >= 2 {
+                let groups = leaf_groups(topo, ranks);
+                let l = groups.len();
+                let m_max = groups.iter().map(Vec::len).max().unwrap_or(1);
+                let bw = sys.net.effective_bw();
+                let oversub_eff = m_max as f64 * bw / topo.uplink_bw(bw);
+                let predicted =
+                    switch_multicast_time_elems(sys, elems, m_max, l, oversub_eff, wire_ratio);
+                if predicted.is_finite() {
+                    out.push(Plan {
+                        kind: PlanKind::SwitchMulticast,
+                        phases: vec![Phase::SwitchMulticast { bytes: raw, groups }],
+                        payload_bytes: raw,
+                        predicted,
+                    });
+                }
+            }
+        }
+        CollectiveKind::Allgather => {
+            let rounds = allgather_ring_rounds(n, padded);
+            let cost = rounds_cost(sys, topo, ranks, &rounds, wire_ratio, shard, padded);
+            out.push(Plan {
+                kind: PlanKind::Ring,
+                phases: vec![Phase::Rounds(rounds)],
+                payload_bytes: padded,
+                predicted: cost,
+            });
+        }
+        CollectiveKind::ReduceScatter => {
+            let rounds = reduce_scatter_ring_rounds(n, padded, elems as f64);
+            let cost = rounds_cost(sys, topo, ranks, &rounds, wire_ratio, padded, shard);
+            out.push(Plan {
+                kind: PlanKind::Ring,
+                phases: vec![Phase::Rounds(rounds)],
+                payload_bytes: padded,
+                predicted: cost,
+            });
+        }
+        CollectiveKind::AllToAll => {
+            let rounds = all_to_all_rounds(n, padded);
+            let cost = rounds_cost(sys, topo, ranks, &rounds, wire_ratio, padded, padded);
+            out.push(Plan {
+                kind: PlanKind::Pairwise,
+                phases: vec![Phase::Rounds(rounds)],
+                payload_bytes: padded,
+                predicted: cost,
+            });
+        }
+    }
+    out
+}
+
+/// Pick the cheapest plan for this collective kind.
+pub fn plan_collective(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+    kind: CollectiveKind,
+) -> Plan {
+    candidates_for(sys, topo, ranks, elems, wire_ratio, kind)
+        .into_iter()
+        .min_by(|a, b| a.predicted.total_cmp(&b.predicted))
+        .expect("every kind has a host-path candidate")
+}
+
+/// Resolve an algorithm request for an arbitrary collective kind.
+/// All-reduce routes through [`plan_for_algo`] unchanged; for the other
+/// kinds, `SwitchReduce` asks for the switch offload (falling back
+/// bit-identically to the host plan when the switch can't replicate or
+/// the kind has no switch variant), `Auto` takes the cheapest, and any
+/// NIC-path algorithm pins the canonical host/NIC rounds plan.
+pub fn plan_collective_for_algo(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+    kind: CollectiveKind,
+    algo: CollectiveAlgo,
+) -> Plan {
+    if kind == CollectiveKind::AllReduce {
+        return plan_for_algo(sys, topo, ranks, elems, wire_ratio, algo);
+    }
+    let mut cands = candidates_for(sys, topo, ranks, elems, wire_ratio, kind);
+    let idx = match algo {
+        CollectiveAlgo::Auto => cands
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.predicted.total_cmp(&b.predicted))
+            .map(|(i, _)| i)
+            .expect("every kind has a host-path candidate"),
+        CollectiveAlgo::SwitchReduce => cands
+            .iter()
+            .position(|c| c.kind == PlanKind::SwitchMulticast)
+            .unwrap_or(0),
+        _ => 0,
+    };
+    cands.swap_remove(idx)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -482,6 +642,90 @@ mod tests {
             .any(|c| c.kind == PlanKind::Hierarchical));
         let fb = plan_fixed(&sys, &topo, &ranks, ELEMS, 1.0, PlanKind::Hierarchical);
         assert_eq!(fb.kind, PlanKind::Ring);
+    }
+
+    #[test]
+    fn dma_split_keeps_rabenseifner_pinned_to_rs_plus_ag() {
+        // All-reduce is exactly reduce-scatter + allgather: stitching the
+        // ring reduce-scatter and ring allgather rounds into one plan
+        // must price identically to summing the two standalone plans
+        // minus the double-counted request overhead and the two
+        // shard-sized DMA legs at the seam (an all-reduce keeps the
+        // shards on the NIC between the halves).  This pins the
+        // per-direction DMA split: symmetric (padded, padded) arguments
+        // reproduce the pre-split all-reduce pricing bit-for-bit.
+        let sys = SystemParams::smartnic_40g();
+        for (topo, k) in [(Topology::flat(6), 6usize), (Topology::leaf_spine(2, 4, 4.0), 8)] {
+            let ranks = topo.contiguous_ranks(k);
+            let padded = ELEMS.div_ceil(k).max(1) as f64 * 4.0 * k as f64;
+            let shard = padded / k as f64;
+            let rs = reduce_scatter_ring_rounds(k, padded, ELEMS as f64);
+            let ag = allgather_ring_rounds(k, padded);
+            let rs_c = rounds_cost(&sys, &topo, &ranks, &rs, 1.0, padded, shard);
+            let ag_c = rounds_cost(&sys, &topo, &ranks, &ag, 1.0, shard, padded);
+            let mut both = rs.clone();
+            both.extend(ag.iter().cloned());
+            let ar_c = rounds_cost(&sys, &topo, &ranks, &both, 1.0, padded, padded);
+            let seam = sys.nic_request_overhead
+                + 2.0 * (shard / sys.nic.pcie_bw + sys.nic.pcie_latency);
+            assert!(
+                (rs_c + ag_c - seam - ar_c).abs() < 1e-12 * ar_c.abs().max(1.0),
+                "rs {rs_c} + ag {ag_c} - seam {seam} != ar {ar_c}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_kind_plans_on_every_topology() {
+        let sys = SystemParams::smartnic_40g()
+            .with_switch_reduction(SwitchParams::netreduce(8, &SystemParams::smartnic_40g().net));
+        for (topo, k) in [
+            (Topology::flat(6), 6usize),
+            (Topology::leaf_spine(3, 4, 4.0), 12),
+        ] {
+            let ranks = topo.contiguous_ranks(k);
+            for kind in CollectiveKind::ALL {
+                let p = plan_collective(&sys, &topo, &ranks, ELEMS, 1.0, kind);
+                assert!(
+                    p.predicted.is_finite() && p.predicted > 0.0,
+                    "{} on {topo:?}: {}",
+                    kind.name(),
+                    p.predicted
+                );
+                if kind != CollectiveKind::AllReduce {
+                    assert!(!p.phases.is_empty(), "{} plan has no phases", kind.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_prefers_the_switch_and_falls_back_to_the_tree() {
+        let topo = Topology::leaf_spine(4, 8, 4.0);
+        let ranks = topo.contiguous_ranks(32);
+        let plain = SystemParams::smartnic_40g();
+        let netred =
+            plain.with_switch_reduction(SwitchParams::netreduce(8, &plain.net));
+        // a capable switch replicates at line rate: one payload up, one
+        // down per member — cheaper than log2(n) full-payload tree hops
+        let chosen =
+            plan_collective(&netred, &topo, &ranks, ELEMS, 1.0, CollectiveKind::Broadcast);
+        assert_eq!(chosen.kind, PlanKind::SwitchMulticast);
+        // forcing the switch path on an incapable fabric falls back to
+        // exactly the host binomial tree
+        let forced = plan_collective_for_algo(
+            &plain,
+            &topo,
+            &ranks,
+            ELEMS,
+            1.0,
+            CollectiveKind::Broadcast,
+            CollectiveAlgo::SwitchReduce,
+        );
+        let tree =
+            plan_collective(&plain, &topo, &ranks, ELEMS, 1.0, CollectiveKind::Broadcast);
+        assert_eq!(forced.kind, PlanKind::Binomial);
+        assert_eq!(forced.predicted, tree.predicted);
     }
 
     #[test]

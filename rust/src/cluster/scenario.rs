@@ -184,7 +184,9 @@ pub(super) fn drive(sim: &mut ClusterSim, state: &mut ClusterState, engine: Engi
 /// Post-quiescence half of the [`EngineKind::Checked`] audit
 /// (`docs/INVARIANTS.md`): every collective completed, each gradient
 /// element was folded exactly once per peer on the pool that owns it
-/// (node adders vs. switch aggregation engines), and no fabric server
+/// (node adders vs. switch aggregation engines), every switch-multicast
+/// phase delivered exactly `members − 1` replicated copies per segment
+/// (replication is counted, never folded), and no fabric server
 /// holds reserved capacity past the final event time beyond its own
 /// longest single drain (a cut-through reservation legitimately outlives
 /// its delivery event by at most that much).
@@ -198,6 +200,7 @@ pub(super) fn drive(sim: &mut ClusterSim, state: &mut ClusterState, engine: Engi
 pub(super) fn audit_conservation(state: &ClusterState, end: Time, report: &mut AuditReport) {
     let mut adders = 0.0;
     let mut engines = 0.0;
+    let mut mcast = 0.0;
     for c in &state.collectives {
         if c.aborted {
             continue;
@@ -208,6 +211,7 @@ pub(super) fn audit_conservation(state: &ClusterState, end: Time, report: &mut A
         let (a, e) = c.expected_reduce_served();
         adders += a;
         engines += e;
+        mcast += c.expected_mcast_deliveries(state.sys.nic.segment_bytes);
     }
     let tol = |expected: f64| 1e-6 * expected.max(1.0);
     let served_adders = state.fabric.adders_served();
@@ -224,6 +228,15 @@ pub(super) fn audit_conservation(state: &ClusterState, end: Time, report: &mut A
             expected: engines,
             actual: served_engines,
             pool: 1,
+        });
+    }
+    // replication ledger: multicast copies are counted, not folded — a
+    // copy landing in either reduce ledger (or vanishing) surfaces here
+    let delivered_mcast = state.fabric.mcast_delivered();
+    if (delivered_mcast - mcast).abs() > tol(mcast) {
+        report.record(AuditViolation::MulticastConservation {
+            expected: mcast,
+            actual: delivered_mcast,
         });
     }
     for s in state.fabric.servers() {
@@ -653,6 +666,105 @@ mod tests {
         // reserve capacity starting far past quiescence: more than one
         // drain time beyond the final event
         let _ = state.fabric.nodes[0].tx.server.serve(2.0 * end + 1.0, 1.0);
+        let mut report = AuditReport::new();
+        audit_conservation(&state, end, &mut report);
+        assert!(report
+            .violations()
+            .iter()
+            .any(|v| matches!(v, AuditViolation::LeakedReservation { .. })));
+    }
+
+    /// One-layer job running collective pattern `kind` on `nodes` flat
+    /// nodes — scaffold for the per-kind forged-violation tests below.
+    fn kind_spec(kind: super::super::CollectiveKind, nodes: usize) -> ClusterSpec {
+        let sys = SystemParams::smartnic_40g();
+        let w = Workload {
+            layers: 1,
+            hidden: 128,
+            batch_per_node: 8,
+        };
+        ClusterSpec::new(sys, nodes).with_job(
+            JobSpec::new("kneg", SystemKind::SmartNic { bfp: false }, w, (0..nodes).collect())
+                .with_layer_kinds(vec![kind]),
+        )
+    }
+
+    #[test]
+    fn forged_multicast_delivery_yields_structured_violation() {
+        use super::super::{CollectiveAlgo, CollectiveKind};
+        use crate::sysconfig::SwitchParams;
+        // broadcast through the switch's replication engines: the run is
+        // clean, then one forged copy nobody posted breaks the ledger
+        let mut spec = kind_spec(CollectiveKind::Broadcast, 4);
+        spec.sys = spec.sys.with_switch_reduction(SwitchParams {
+            reduce_flops: 1e9,
+            reduce_table_bytes: 16.0 * 1024.0 * 1024.0,
+        });
+        spec.jobs[0] = spec.jobs[0]
+            .clone()
+            .with_layer_algos(vec![CollectiveAlgo::SwitchReduce]);
+        let (sim, mut state) = run_state(&spec);
+        assert!(
+            state.fabric.mcast_delivered() > 0.0,
+            "broadcast must exercise replication mode"
+        );
+        let mut clean = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut clean);
+        assert!(clean.is_clean(), "{}", clean.summary());
+        let _ = state.fabric.mcast_deliver(0, 0.0, 64.0);
+        let mut report = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut report);
+        assert!(report
+            .violations()
+            .iter()
+            .any(|v| matches!(v, AuditViolation::MulticastConservation { .. })));
+    }
+
+    #[test]
+    fn forged_allgather_fold_yields_structured_violation() {
+        use super::super::CollectiveKind;
+        // allgather moves shards without folding anything: any adder
+        // element at all is unaccounted
+        let (sim, mut state) = run_state(&kind_spec(CollectiveKind::Allgather, 3));
+        let mut clean = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut clean);
+        assert!(clean.is_clean(), "{}", clean.summary());
+        let _ = state.fabric.nodes[1].adder.serve(0.0, 1e6);
+        let mut report = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut report);
+        assert!(report
+            .violations()
+            .iter()
+            .any(|v| matches!(v, AuditViolation::ReduceConservation { pool: 0, .. })));
+    }
+
+    #[test]
+    fn vanished_reduce_scatter_yields_structured_violation() {
+        use super::super::CollectiveKind;
+        // the clean pass doubles as the reduce-scatter fold ledger check:
+        // (n−1)·elems adds, exactly once per element into its owner
+        let (sim, mut state) = run_state(&kind_spec(CollectiveKind::ReduceScatter, 3));
+        let mut clean = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut clean);
+        assert!(clean.is_clean(), "{}", clean.summary());
+        state.collectives[0].t_done = None;
+        let mut report = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut report);
+        assert!(report
+            .violations()
+            .iter()
+            .any(|v| matches!(v, AuditViolation::UnfinishedCollective { cid: 0 })));
+    }
+
+    #[test]
+    fn leaked_all_to_all_reservation_yields_structured_violation() {
+        use super::super::CollectiveKind;
+        let (sim, mut state) = run_state(&kind_spec(CollectiveKind::AllToAll, 4));
+        let end = sim.now();
+        let mut clean = AuditReport::new();
+        audit_conservation(&state, end, &mut clean);
+        assert!(clean.is_clean(), "{}", clean.summary());
+        let _ = state.fabric.nodes[2].tx.server.serve(2.0 * end + 1.0, 1.0);
         let mut report = AuditReport::new();
         audit_conservation(&state, end, &mut report);
         assert!(report

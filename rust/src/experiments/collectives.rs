@@ -1,0 +1,631 @@
+//! E9 — collective zoo: broadcast / allgather / reduce-scatter /
+//! all-to-all as first-class planned collectives, next to their closed
+//! forms.
+//!
+//! For every node count and both fabric shapes (flat crossbar and a
+//! tapered leaf–spine), each collective kind runs through the kind-aware
+//! planner on the unified engine — once per candidate plan the planner
+//! prices, so a broadcast appears both as the host binomial tree and as
+//! switch multicast (the replication dual of in-switch reduction).  Two
+//! workload scenarios ride along: an MoE-style iteration interleaving an
+//! all-to-all with an all-reduce, and an inference weight broadcast from
+//! one source to every replica over the spine.
+//!
+//! `smartnic collectives` prints the table and writes
+//! `BENCH_collectives.json`; the run fails (nonzero exit) when a gated
+//! cell's closed form drifts ≥ 5% from the engine at the pinned node
+//! counts, or switch multicast loses to the binomial tree at N ≥ 32 on
+//! the leaf–spine.  All-to-all on the leaf–spine is reported but *not*
+//! gated: its rounds put up to `nodes_per_leaf` concurrent flows on one
+//! uplink bundle, and the engine's FIFO cut-through queueing prices that
+//! convergence above the planner's fluid max-load bound (the documented
+//! gap — see `docs/BENCHMARKS.md`).
+
+use super::planner::{leaf_shape, planner_system};
+use crate::analytic::model::SystemKind;
+use crate::cluster::planner::{self, PlanKind};
+use crate::cluster::{
+    run_scenario_on, ClusterSpec, CollectiveAlgo, CollectiveKind, EngineKind, JobSpec, Topology,
+};
+use crate::netsim::audit::AuditReport;
+use crate::sysconfig::{SystemParams, Workload};
+use crate::util::json::Json;
+use crate::util::stats::rel_err;
+use crate::util::table::{fnum, Table};
+
+/// The four non-all-reduce collectives the zoo sweeps (all-reduce keeps
+/// its own study in `BENCH_planner.json`).
+pub const KINDS: [CollectiveKind; 4] = [
+    CollectiveKind::Broadcast,
+    CollectiveKind::Allgather,
+    CollectiveKind::ReduceScatter,
+    CollectiveKind::AllToAll,
+];
+
+/// Node counts whose closed forms are pinned to the engine.
+pub const PINNED_NODES: [usize; 3] = [6, 32, 128];
+
+/// Tolerance of a gated closed form vs the unified engine.
+pub const PARITY_TOL: f64 = 0.05;
+
+/// Sweep parameters.
+#[derive(Clone, Debug)]
+pub struct CollectivesConfig {
+    /// node counts (even, ≥ 4; racked by [`leaf_shape`])
+    pub nodes: Vec<usize>,
+    /// leaf uplink oversubscription factor.  The default of 2 keeps
+    /// `nodes_per_leaf / oversubscription ≥ 1` for every swept shape, so
+    /// a single-crossing round is paced by the sender's Tx link and the
+    /// planner's max-load bound is exact; all-to-all still converges
+    /// enough flows per bundle to expose the queueing gap.
+    pub oversubscription: f64,
+    /// payload width: hidden² elements per collective
+    pub hidden: usize,
+    /// engine backend every measurement runs on ([`EngineKind::Checked`]
+    /// arms the invariant auditor)
+    pub engine: EngineKind,
+}
+
+impl Default for CollectivesConfig {
+    fn default() -> Self {
+        Self {
+            nodes: vec![6, 32, 128],
+            oversubscription: 2.0,
+            hidden: 1024,
+            engine: EngineKind::Typed,
+        }
+    }
+}
+
+/// One (kind, plan, topology, node count) cell of the study.
+#[derive(Clone, Debug)]
+pub struct CollectivePoint {
+    /// collective pattern ([`CollectiveKind::name`])
+    pub kind: &'static str,
+    pub nodes: usize,
+    /// `"flat"` or `"leaf-spine"`
+    pub topology: &'static str,
+    /// plan family executed ([`PlanKind::name`])
+    pub plan: &'static str,
+    /// planner's closed-form prediction (s)
+    pub model_s: f64,
+    /// measured engine latency, post → completion (s)
+    pub measured_s: f64,
+    /// did `Auto` pick this plan for the cell?
+    pub chosen: bool,
+    /// hard 5%-parity cell (false only for all-to-all over the spine)
+    pub gated: bool,
+}
+
+/// One workload scenario (several collectives composed into a job).
+#[derive(Clone, Debug)]
+pub struct ScenarioPoint {
+    /// `"moe"` or `"weight-broadcast"`
+    pub name: &'static str,
+    pub nodes: usize,
+    /// job duration on the engine (s)
+    pub duration_s: f64,
+    /// mean collective latency inside the job (s)
+    pub mean_collective_s: f64,
+    /// collectives the job completed
+    pub collectives: usize,
+}
+
+/// Everything the study produces.
+pub struct CollectivesStudy {
+    pub points: Vec<CollectivePoint>,
+    pub scenarios: Vec<ScenarioPoint>,
+    /// `None` on unchecked engines, `Some(true)` when every audited run
+    /// came back clean
+    pub audit_clean: Option<bool>,
+    /// summaries of the audit reports that were not clean
+    pub audit_failures: Vec<String>,
+}
+
+/// Fold one run's audit report into the study-level verdict.
+fn fold_audit(
+    clean: &mut Option<bool>,
+    failures: &mut Vec<String>,
+    label: String,
+    report: Option<AuditReport>,
+) {
+    if let Some(report) = report {
+        let ok = report.is_clean();
+        *clean = Some(clean.unwrap_or(true) && ok);
+        if !ok {
+            failures.push(format!("{label}: {}", report.summary()));
+        }
+    }
+}
+
+/// Run one single-collective job of `kind` under `algo` and return its
+/// measured latency plus the engine's audit report (checked engines
+/// only).
+pub fn measure_collective(
+    sys: SystemParams,
+    topo: Topology,
+    ranks: Vec<usize>,
+    kind: CollectiveKind,
+    algo: CollectiveAlgo,
+    hidden: usize,
+    engine: EngineKind,
+) -> (f64, Option<AuditReport>) {
+    let w = Workload {
+        layers: 1,
+        hidden,
+        batch_per_node: 64,
+    };
+    let spec = ClusterSpec::new(sys, topo.nodes())
+        .with_topology(topo)
+        .with_job(
+            JobSpec::new("coll", SystemKind::SmartNic { bfp: false }, w, ranks)
+                .with_layer_algos(vec![algo])
+                .with_layer_kinds(vec![kind]),
+        );
+    let out = run_scenario_on(&spec, engine);
+    (out.jobs[0].mean_ar, out.audit)
+}
+
+/// The algorithm request that pins the planner to `plan` for a
+/// non-all-reduce kind: `SwitchReduce` selects the switch offload, any
+/// NIC-path algorithm the canonical host/NIC rounds plan.
+fn algo_for_plan(plan: PlanKind) -> CollectiveAlgo {
+    match plan {
+        PlanKind::SwitchMulticast => CollectiveAlgo::SwitchReduce,
+        _ => CollectiveAlgo::NicBinomial,
+    }
+}
+
+/// Run the full study.
+pub fn run(cfg: &CollectivesConfig) -> CollectivesStudy {
+    let elems = cfg.hidden * cfg.hidden;
+    let mut points = Vec::new();
+    let mut scenarios = Vec::new();
+    let mut audit_clean = None;
+    let mut audit_failures = Vec::new();
+    for &n in &cfg.nodes {
+        assert!(n >= 4 && n % 2 == 0, "collective sweep needs even node counts >= 4, got {n}");
+        let (leaves, m) = leaf_shape(n);
+        let sys = planner_system(leaves, m);
+        let spine = Topology::leaf_spine(leaves, m, cfg.oversubscription);
+        let cells: [(&'static str, Topology, Vec<usize>); 2] = [
+            ("flat", Topology::flat(n), (0..n).collect()),
+            ("leaf-spine", spine, spine.contiguous_ranks(n)),
+        ];
+        for (topo_name, topo, ranks) in cells {
+            for kind in KINDS {
+                let cands = planner::candidates_for(&sys, &topo, &ranks, elems, 1.0, kind);
+                let best = cands
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.predicted.total_cmp(&b.1.predicted))
+                    .map(|(i, _)| i)
+                    .expect("every kind has a host-path candidate");
+                for (ci, cand) in cands.iter().enumerate() {
+                    let (measured, report) = measure_collective(
+                        sys,
+                        topo,
+                        ranks.clone(),
+                        kind,
+                        algo_for_plan(cand.kind),
+                        cfg.hidden,
+                        cfg.engine,
+                    );
+                    fold_audit(
+                        &mut audit_clean,
+                        &mut audit_failures,
+                        format!("{} {} n={n} {}", kind.name(), cand.kind.name(), topo_name),
+                        report,
+                    );
+                    points.push(CollectivePoint {
+                        kind: kind.name(),
+                        nodes: n,
+                        topology: topo_name,
+                        plan: cand.kind.name(),
+                        model_s: cand.predicted,
+                        measured_s: measured,
+                        chosen: ci == best,
+                        gated: !(kind == CollectiveKind::AllToAll && topo_name == "leaf-spine"),
+                    });
+                }
+            }
+        }
+
+        // scenario 1 — MoE iteration: expert dispatch (all-to-all)
+        // interleaved with the dense gradient all-reduce, planner-routed
+        let moe_w = Workload {
+            layers: 2,
+            hidden: cfg.hidden,
+            batch_per_node: 64,
+        };
+        let moe = ClusterSpec::new(sys, n).with_topology(spine).with_job(
+            JobSpec::new("moe", SystemKind::SmartNic { bfp: false }, moe_w, spine.contiguous_ranks(n))
+                .with_layer_algos(vec![CollectiveAlgo::Auto; 2])
+                .with_layer_kinds(vec![CollectiveKind::AllToAll, CollectiveKind::AllReduce]),
+        );
+        let out = run_scenario_on(&moe, cfg.engine);
+        fold_audit(&mut audit_clean, &mut audit_failures, format!("moe n={n}"), out.audit);
+        scenarios.push(ScenarioPoint {
+            name: "moe",
+            nodes: n,
+            duration_s: out.jobs[0].duration,
+            mean_collective_s: out.jobs[0].mean_ar,
+            collectives: out.jobs[0].ar_count,
+        });
+
+        // scenario 2 — inference weight broadcast: one source replicates
+        // a weight shard to every replica over the spine, planner-routed
+        // (the switch-multicast path when the fabric can replicate)
+        let bc_w = Workload {
+            layers: 1,
+            hidden: cfg.hidden,
+            batch_per_node: 64,
+        };
+        let bc = ClusterSpec::new(sys, n).with_topology(spine).with_job(
+            JobSpec::new("wbcast", SystemKind::SmartNic { bfp: false }, bc_w, spine.contiguous_ranks(n))
+                .with_layer_algos(vec![CollectiveAlgo::Auto])
+                .with_layer_kinds(vec![CollectiveKind::Broadcast]),
+        );
+        let out = run_scenario_on(&bc, cfg.engine);
+        fold_audit(
+            &mut audit_clean,
+            &mut audit_failures,
+            format!("weight-broadcast n={n}"),
+            out.audit,
+        );
+        scenarios.push(ScenarioPoint {
+            name: "weight-broadcast",
+            nodes: n,
+            duration_s: out.jobs[0].duration,
+            mean_collective_s: out.jobs[0].mean_ar,
+            collectives: out.jobs[0].ar_count,
+        });
+    }
+    CollectivesStudy {
+        points,
+        scenarios,
+        audit_clean,
+        audit_failures,
+    }
+}
+
+/// Worst closed-form deviation over the gated cells at the pinned node
+/// counts — the CLI's parity gate (and the acceptance criterion's 5%).
+/// `None` when no gated pinned cell was swept: the gate then has nothing
+/// to say and must not report a vacuous PASS.
+pub fn worst_gated_parity(points: &[CollectivePoint]) -> Option<f64> {
+    points
+        .iter()
+        .filter(|p| p.gated && PINNED_NODES.contains(&p.nodes))
+        .map(|p| rel_err(p.model_s, p.measured_s))
+        .fold(None, |acc: Option<f64>, e| Some(acc.map_or(e, |a| a.max(e))))
+}
+
+/// Worst all-to-all deviation over the spine — reported, never gated
+/// (the fluid bound under-prices FIFO uplink convergence).
+pub fn worst_alltoall_spine_err(points: &[CollectivePoint]) -> Option<f64> {
+    points
+        .iter()
+        .filter(|p| p.kind == "all-to-all" && p.topology == "leaf-spine")
+        .map(|p| rel_err(p.model_s, p.measured_s))
+        .fold(None, |acc: Option<f64>, e| Some(acc.map_or(e, |a| a.max(e))))
+}
+
+/// Does measured switch multicast beat the measured binomial tree for
+/// every leaf–spine broadcast at N ≥ 32?  `None` when no such pair was
+/// swept (gate must not pass vacuously).
+pub fn mcast_beats_binomial(points: &[CollectivePoint]) -> Option<bool> {
+    let cell = |n: usize, plan: &str| {
+        points
+            .iter()
+            .find(|p| {
+                p.kind == "broadcast"
+                    && p.topology == "leaf-spine"
+                    && p.nodes == n
+                    && p.plan == plan
+            })
+            .map(|p| p.measured_s)
+    };
+    let mut verdict = None;
+    for n in points
+        .iter()
+        .filter(|p| p.kind == "broadcast" && p.topology == "leaf-spine" && p.nodes >= 32)
+        .map(|p| p.nodes)
+    {
+        if let (Some(mc), Some(tree)) = (cell(n, "switch-multicast"), cell(n, "binomial")) {
+            verdict = Some(verdict.unwrap_or(true) && mc < tree);
+        }
+    }
+    verdict
+}
+
+pub fn print(study: &CollectivesStudy, cfg: &CollectivesConfig) {
+    let mut t = Table::new(&[
+        "kind",
+        "nodes",
+        "topology",
+        "plan",
+        "model (ms)",
+        "engine (ms)",
+        "err",
+        "auto",
+        "gate",
+    ])
+    .with_title(&format!(
+        "collective zoo — planned collectives vs closed forms, {}:1 oversubscribed spine",
+        cfg.oversubscription
+    ));
+    for p in &study.points {
+        t.row(&[
+            p.kind.to_string(),
+            p.nodes.to_string(),
+            p.topology.to_string(),
+            p.plan.to_string(),
+            fnum(p.model_s * 1e3, 3),
+            fnum(p.measured_s * 1e3, 3),
+            format!("{:.1}%", rel_err(p.model_s, p.measured_s) * 100.0),
+            if p.chosen { "*".to_string() } else { String::new() },
+            if p.gated { "hard".to_string() } else { "warn".to_string() },
+        ]);
+    }
+    t.print();
+    let mut s = Table::new(&["scenario", "nodes", "duration (ms)", "mean coll (ms)", "collectives"])
+        .with_title("workload scenarios (planner-routed)");
+    for p in &study.scenarios {
+        s.row(&[
+            p.name.to_string(),
+            p.nodes.to_string(),
+            fnum(p.duration_s * 1e3, 3),
+            fnum(p.mean_collective_s * 1e3, 3),
+            p.collectives.to_string(),
+        ]);
+    }
+    s.print();
+    match worst_gated_parity(&study.points) {
+        Some(worst) => println!(
+            "closed form vs engine on gated cells at N in {:?}: worst {:.1}% — {}",
+            PINNED_NODES,
+            worst * 100.0,
+            if worst < PARITY_TOL { "PASS" } else { "FAIL" }
+        ),
+        None => println!(
+            "closed form vs engine: not validated (no gated pinned N in {:?} swept)",
+            PINNED_NODES
+        ),
+    }
+    if let Some(worst) = worst_alltoall_spine_err(&study.points) {
+        println!(
+            "all-to-all over the spine: {:.1}% off the fluid bound (reported, not gated)",
+            worst * 100.0
+        );
+    }
+    match mcast_beats_binomial(&study.points) {
+        Some(ok) => println!(
+            "switch multicast vs binomial broadcast at N >= 32 on the spine: {}",
+            if ok { "multicast wins — PASS" } else { "binomial wins somewhere — FAIL" }
+        ),
+        None => println!("switch multicast vs binomial: not compared (no N >= 32 swept)"),
+    }
+    match study.audit_clean {
+        Some(true) => println!("invariant audit: clean on every run"),
+        Some(false) => {
+            println!("invariant audit: FAILED");
+            for f in &study.audit_failures {
+                println!("  {f}");
+            }
+        }
+        None => {}
+    }
+}
+
+/// Did every gate that had data pass?
+pub fn gates_pass(study: &CollectivesStudy) -> bool {
+    let parity_ok = worst_gated_parity(&study.points).is_some_and(|w| w < PARITY_TOL);
+    let mcast_ok = mcast_beats_binomial(&study.points).unwrap_or(true);
+    let audit_ok = study.audit_clean.unwrap_or(true);
+    parity_ok && mcast_ok && audit_ok
+}
+
+/// Serialize the study to the `BENCH_collectives.json` schema.
+pub fn to_json(cfg: &CollectivesConfig, study: &CollectivesStudy) -> Json {
+    Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("oversubscription", Json::Num(cfg.oversubscription)),
+                ("hidden", Json::Num(cfg.hidden as f64)),
+                ("parity_tol", Json::Num(PARITY_TOL)),
+            ]),
+        ),
+        (
+            "points",
+            Json::Arr(
+                study
+                    .points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("kind", Json::Str(p.kind.to_string())),
+                            ("nodes", Json::Num(p.nodes as f64)),
+                            ("topology", Json::Str(p.topology.to_string())),
+                            ("plan", Json::Str(p.plan.to_string())),
+                            ("model_s", Json::Num(p.model_s)),
+                            ("measured_s", Json::Num(p.measured_s)),
+                            ("parity_err", Json::Num(rel_err(p.model_s, p.measured_s))),
+                            ("chosen", Json::Bool(p.chosen)),
+                            ("gated", Json::Bool(p.gated)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "scenarios",
+            Json::Arr(
+                study
+                    .scenarios
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("name", Json::Str(p.name.to_string())),
+                            ("nodes", Json::Num(p.nodes as f64)),
+                            ("duration_s", Json::Num(p.duration_s)),
+                            ("mean_collective_s", Json::Num(p.mean_collective_s)),
+                            ("collectives", Json::Num(p.collectives as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gates",
+            Json::obj(vec![
+                (
+                    "worst_gated_parity",
+                    match worst_gated_parity(&study.points) {
+                        Some(e) => Json::Num(e),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "worst_alltoall_spine_err",
+                    match worst_alltoall_spine_err(&study.points) {
+                        Some(e) => Json::Num(e),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "mcast_beats_binomial",
+                    match mcast_beats_binomial(&study.points) {
+                        Some(b) => Json::Bool(b),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "audit_clean",
+                    match study.audit_clean {
+                        Some(b) => Json::Bool(b),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Write the study to `path` (repo convention: `BENCH_collectives.json`,
+/// uploaded as a CI artifact).
+pub fn write_bench(
+    path: &str,
+    cfg: &CollectivesConfig,
+    study: &CollectivesStudy,
+) -> std::io::Result<()> {
+    std::fs::write(path, to_json(cfg, study).to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CollectivesConfig {
+        CollectivesConfig {
+            nodes: vec![6],
+            ..CollectivesConfig::default()
+        }
+    }
+
+    #[test]
+    fn six_node_sweep_covers_every_kind_and_passes_parity() {
+        let cfg = small_cfg();
+        let study = run(&cfg);
+        for kind in KINDS {
+            for topo in ["flat", "leaf-spine"] {
+                assert!(
+                    study.points.iter().any(|p| p.kind == kind.name() && p.topology == topo),
+                    "missing cell {} on {topo}",
+                    kind.name()
+                );
+            }
+        }
+        // broadcast prices both the tree and the switch offload
+        assert!(study
+            .points
+            .iter()
+            .any(|p| p.kind == "broadcast" && p.plan == "switch-multicast"));
+        let worst = worst_gated_parity(&study.points).expect("6 is a pinned node count");
+        assert!(worst < PARITY_TOL, "gated parity err {:.1}%", worst * 100.0);
+        assert!(study.audit_clean.is_none(), "typed engine runs unaudited");
+        // every cell got exactly one auto choice
+        for kind in KINDS {
+            let chosen = study
+                .points
+                .iter()
+                .filter(|p| p.kind == kind.name() && p.topology == "leaf-spine" && p.chosen)
+                .count();
+            assert_eq!(chosen, 1, "{} needs exactly one chosen plan", kind.name());
+        }
+    }
+
+    #[test]
+    fn parity_gate_refuses_to_pass_vacuously() {
+        let point = CollectivePoint {
+            kind: "broadcast",
+            nodes: 64, // not a pinned node count
+            topology: "flat",
+            plan: "binomial",
+            model_s: 2.0,
+            measured_s: 1.0, // 100% off — and still not a PASS signal
+            chosen: true,
+            gated: true,
+        };
+        assert!(worst_gated_parity(&[point.clone()]).is_none());
+        assert!(mcast_beats_binomial(&[point]).is_none());
+    }
+
+    #[test]
+    fn moe_and_broadcast_scenarios_complete() {
+        let cfg = small_cfg();
+        let study = run(&cfg);
+        let moe = study
+            .scenarios
+            .iter()
+            .find(|s| s.name == "moe")
+            .expect("moe scenario");
+        assert_eq!(moe.collectives, 2);
+        assert!(moe.duration_s > 0.0 && moe.duration_s.is_finite());
+        let bc = study
+            .scenarios
+            .iter()
+            .find(|s| s.name == "weight-broadcast")
+            .expect("broadcast scenario");
+        assert_eq!(bc.collectives, 1);
+        assert!(bc.mean_collective_s > 0.0);
+    }
+
+    #[test]
+    fn audited_run_is_clean() {
+        let cfg = CollectivesConfig {
+            nodes: vec![6],
+            engine: EngineKind::Checked { threads: 0 },
+            ..CollectivesConfig::default()
+        };
+        let study = run(&cfg);
+        assert_eq!(study.audit_clean, Some(true), "{:?}", study.audit_failures);
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let cfg = small_cfg();
+        let study = run(&cfg);
+        let j = to_json(&cfg, &study);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed, j);
+        let first = j.get("points").unwrap().idx(0).unwrap();
+        assert_eq!(first.get("nodes").unwrap().as_usize(), Some(6));
+        assert!(first.get("measured_s").unwrap().as_f64().unwrap() > 0.0);
+        // gates are present and non-vacuous for a pinned sweep
+        let gates = j.get("gates").unwrap();
+        assert!(gates.get("worst_gated_parity").unwrap().as_f64().is_some());
+        assert_eq!(gates.get("audit_clean").unwrap(), &Json::Null);
+    }
+}

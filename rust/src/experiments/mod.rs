@@ -6,6 +6,7 @@
 
 pub mod ablate;
 pub mod cluster_trace;
+pub mod collectives;
 pub mod engine_bench;
 pub mod fig2a;
 pub mod fig2b;

@@ -17,6 +17,7 @@
 //!   cluster-trace  gang-scheduler policy study under churn, BENCH_cluster.json
 //!   scale     hierarchical scaling sweep (6..512 nodes), BENCH_scaling.json
 //!   plan      topology-aware planner study (NIC vs switch offload), BENCH_planner.json
+//!   collectives  collective zoo (broadcast/allgather/reduce-scatter/all-to-all), BENCH_collectives.json
 //!   engine-bench  typed engine vs boxed baseline + parallel scaling, BENCH_engine.json
 //!   bfp       BFP design-space sweep (block size x mantissa bits)
 //!   all       fig2a+fig2b+table1+fig4a+fig4b+validate, write results/
@@ -33,8 +34,8 @@ use ai_smartnic::coordinator::{
 };
 use ai_smartnic::sysconfig::ClusterFaults;
 use ai_smartnic::experiments::{
-    ablate, cluster_trace, engine_bench, fig2a, fig2b, fig4a, fig4b, planner, scaling, table1,
-    validate, write_result,
+    ablate, cluster_trace, collectives, engine_bench, fig2a, fig2b, fig4a, fig4b, planner,
+    scaling, table1, validate, write_result,
 };
 use ai_smartnic::log_info;
 use ai_smartnic::sysconfig::{SystemParams, Workload};
@@ -43,7 +44,7 @@ use ai_smartnic::util::logger::{set_level, Level};
 use ai_smartnic::util::rng::Rng;
 use ai_smartnic::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|cluster-trace|scale|plan|engine-bench|bfp|ablate|all> [--help]";
+const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|cluster-trace|scale|plan|collectives|engine-bench|bfp|ablate|all> [--help]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -65,6 +66,7 @@ fn main() {
         "cluster-trace" => cmd_cluster_trace(&rest),
         "scale" => cmd_scale(&rest),
         "plan" => cmd_plan(&rest),
+        "collectives" => cmd_collectives(&rest),
         "engine-bench" => cmd_engine_bench(&rest),
         "bfp" => cmd_bfp(&rest),
         "ablate" => cmd_ablate(&rest),
@@ -652,6 +654,90 @@ fn cmd_plan(rest: &[String]) -> i32 {
     }
     if !planner::hierarchical_beats_strided_ring(&points) {
         eprintln!("planner FAILED: hierarchical plan slower than the strided NIC ring");
+        return 1;
+    }
+    0
+}
+
+fn cmd_collectives(rest: &[String]) -> i32 {
+    let c = Command::new(
+        "collectives",
+        "collective zoo: broadcast/allgather/reduce-scatter/all-to-all vs closed forms",
+    )
+    .opt("nodes", "6,32,128", "node counts (even, >= 4)")
+    .opt("oversub", "2", "leaf uplink oversubscription factor")
+    .opt("hidden", "1024", "payload width (hidden^2 elements per collective)")
+    .opt("threads", "0", "parallel-engine worker threads (0 = sequential typed engine)")
+    .flag("audit", "run the checked executive: engine invariants + conservation ledgers")
+    .opt("out", "BENCH_collectives.json", "machine-readable output path")
+    .flag("no-json", "skip writing the benchmark file");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let threads = a.get_usize("threads", 0);
+    let engine = if a.flag("audit") {
+        EngineKind::Checked { threads }
+    } else if threads == 0 {
+        EngineKind::Typed
+    } else {
+        EngineKind::Parallel { threads }
+    };
+    let cfg = collectives::CollectivesConfig {
+        nodes: a.get_list("nodes").unwrap_or_default(),
+        oversubscription: a.get_f64("oversub", 2.0),
+        hidden: a.get_usize("hidden", 1024),
+        engine,
+    };
+    // get_list silently drops unparsable entries; a typo must not shrink
+    // the sweep while still reporting PASS
+    let raw_nodes = a.get_str("nodes", "");
+    let wanted = raw_nodes.split(',').filter(|s| !s.trim().is_empty()).count();
+    if cfg.nodes.len() != wanted || cfg.nodes.is_empty() {
+        eprintln!("--nodes contains invalid entries: '{raw_nodes}'");
+        return 2;
+    }
+    if cfg.nodes.iter().any(|&n| n < 4 || n % 2 != 0) {
+        eprintln!("--nodes must all be even and >= 4, got '{raw_nodes}'");
+        return 2;
+    }
+    if !(cfg.oversubscription > 0.0 && cfg.oversubscription.is_finite()) {
+        eprintln!("--oversub must be a positive finite factor");
+        return 2;
+    }
+    if cfg.hidden == 0 {
+        eprintln!("--hidden must be positive");
+        return 2;
+    }
+    let study = collectives::run(&cfg);
+    collectives::print(&study, &cfg);
+    if !a.flag("no-json") {
+        let path = a.get_str("out", "BENCH_collectives.json");
+        match collectives::write_bench(&path, &cfg, &study) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    if let Some(worst) = collectives::worst_gated_parity(&study.points) {
+        if worst >= collectives::PARITY_TOL {
+            eprintln!(
+                "collective parity FAILED: worst gated closed-form deviation {:.1}% >= {:.0}%",
+                worst * 100.0,
+                collectives::PARITY_TOL * 100.0
+            );
+            return 1;
+        }
+    }
+    if collectives::mcast_beats_binomial(&study.points) == Some(false) {
+        eprintln!(
+            "multicast FAILED: switch multicast lost to the binomial tree at N >= 32 on the spine"
+        );
+        return 1;
+    }
+    if study.audit_clean == Some(false) {
+        for f in &study.audit_failures {
+            eprintln!("audit violation: {f}");
+        }
         return 1;
     }
     0

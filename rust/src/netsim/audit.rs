@@ -122,6 +122,17 @@ pub enum AuditViolation {
         /// which reducer population: 0 = node adders, 1 = switch engines
         pool: u8,
     },
+    /// replication work conservation: the member-segment copies the
+    /// switch tier egressed in multicast mode differ from what the
+    /// posted switch-multicast phases require (`members − 1` copies per
+    /// segment — replication is not reduction, so neither reduce ledger
+    /// can account for these)
+    MulticastConservation {
+        /// copies the collectives' multicast phases must deliver
+        expected: f64,
+        /// copies the fabric's replication engines actually delivered
+        actual: f64,
+    },
     /// a server reservation extends past quiescence — capacity was
     /// reserved but the releasing event chain never completed
     LeakedReservation {
@@ -168,6 +179,7 @@ impl AuditViolation {
             AuditViolation::MergeKeyCollision { .. } => "merge-key-collision",
             AuditViolation::UnfinishedCollective { .. } => "unfinished-collective",
             AuditViolation::ReduceConservation { .. } => "reduce-conservation",
+            AuditViolation::MulticastConservation { .. } => "multicast-conservation",
             AuditViolation::LeakedReservation { .. } => "leaked-reservation",
             AuditViolation::LeakedAllocation { .. } => "leaked-allocation",
             AuditViolation::JobConservation { .. } => "job-conservation",
@@ -215,6 +227,10 @@ impl fmt::Display for AuditViolation {
                 let name = if *pool == 0 { "node adders" } else { "switch engines" };
                 write!(f, "{name} folded {actual} elements, collectives require {expected}")
             }
+            AuditViolation::MulticastConservation { expected, actual } => write!(
+                f,
+                "multicast engines delivered {actual} copies, collectives require {expected}"
+            ),
             AuditViolation::LeakedReservation { busy_until, end } => write!(
                 f,
                 "server reserved until {busy_until}, past quiescence at {end}"

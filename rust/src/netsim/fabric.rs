@@ -79,6 +79,11 @@ pub struct Fabric {
     pub nodes: Vec<NodeDevices>,
     pub topology: Topology,
     pub interconnect: Interconnect,
+    /// count of member-segment replications egressed by the switch tier
+    /// in multicast (replication) mode — the observed side of the
+    /// conservation audit's ledger for switch multicast, which the
+    /// reduction ledgers cannot see (replication folds nothing)
+    mcast_delivered: f64,
 }
 
 /// Result of the source half of a wire path ([`Fabric::hop_split`]):
@@ -161,6 +166,7 @@ impl Fabric {
             nodes,
             topology,
             interconnect,
+            mcast_delivered: 0.0,
         }
     }
 
@@ -311,6 +317,38 @@ impl Fabric {
                 downlinks[leaf].reserve(ready, wire_bytes) + *latency
             }
         }
+    }
+
+    /// Switch-multicast uplink stage (spanning groups only): ship the
+    /// root's segment from its leaf through the uplink bundle toward the
+    /// spine replication point.  The dual of [`Fabric::reduce_fold_spine`]
+    /// with the fold removed — replication moves bytes but folds nothing.
+    /// Returns arrival at the spine.
+    #[must_use]
+    pub fn mcast_to_spine(&mut self, leaf: usize, ready: Time, wire_bytes: f64) -> Time {
+        match &mut self.interconnect {
+            Interconnect::Flat(_) => unreachable!("no spine on a flat crossbar"),
+            Interconnect::LeafSpine { uplinks, latency, .. } => {
+                uplinks[leaf].reserve(ready, wire_bytes) + *latency
+            }
+        }
+    }
+
+    /// Switch-multicast final egress: one replicated copy of the segment
+    /// toward member `dst` (same wire path as [`Fabric::reduce_deliver`]),
+    /// counted into the multicast conservation ledger.  Returns arrival
+    /// at `dst`'s NIC.
+    #[must_use]
+    pub fn mcast_deliver(&mut self, dst: usize, ready: Time, wire_bytes: f64) -> Time {
+        self.mcast_delivered += 1.0;
+        self.reduce_deliver(dst, ready, wire_bytes)
+    }
+
+    /// Total member-segment copies egressed in multicast mode — the
+    /// observed side of the audit's replication ledger.
+    #[must_use]
+    pub fn mcast_delivered(&self) -> f64 {
+        self.mcast_delivered
     }
 
     /// In-switch reduction stage 3b: final egress of the reduced segment
@@ -686,5 +724,41 @@ mod tests {
         assert!((down - (s0 + lat)).abs() < 1e-12);
         let at_nic = f.reduce_deliver(3, down, bytes);
         assert!((at_nic - (down + lat)).abs() < 1e-12);
+    }
+
+    #[test]
+    // the delivery counter increments by exactly 1.0 per copy, so the
+    // pinned values are exact
+    #[allow(clippy::float_cmp)]
+    fn multicast_path_replicates_without_folding_and_counts_deliveries() {
+        use crate::sysconfig::SwitchParams;
+        let sys = SystemParams::smartnic_40g().with_switch_reduction(SwitchParams {
+            reduce_flops: 1e9,
+            reduce_table_bytes: 16.0 * 1024.0 * 1024.0,
+        });
+        let topo = Topology::leaf_spine(2, 2, 2.0);
+        let mut f = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        let bytes = 1e6;
+        let ser = bytes / sys.net.effective_bw();
+        let lat = sys.net.hop_latency;
+        assert_eq!(f.mcast_delivered(), 0.0);
+        // root 0 serializes up: Tx + uplink cut-through + one latency,
+        // with no engine fold anywhere on the path
+        let at_sw = f.nodes[0].tx.transmit(0.0, bytes);
+        let at_spine = f.mcast_to_spine(0, at_sw, bytes);
+        assert!((at_spine - (ser + lat)).abs() < 1e-12);
+        // replication down both leaves reuses the reduction downlink stage
+        let d0 = f.reduce_downlink(0, at_spine, bytes);
+        let d1 = f.reduce_downlink(1, at_spine, bytes);
+        assert!((d0 - (at_spine + lat)).abs() < 1e-12);
+        assert!((d1 - (at_spine + lat)).abs() < 1e-12);
+        // final egress to three non-root members, each counted once
+        for (dst, down) in [(1usize, d0), (2, d1), (3, d1)] {
+            let _ = f.mcast_deliver(dst, down, bytes);
+        }
+        assert_eq!(f.mcast_delivered(), 3.0);
+        // replication folded exactly nothing
+        assert_eq!(f.reduce_engines_served(), 0.0);
+        assert_eq!(f.adders_served(), 0.0);
     }
 }

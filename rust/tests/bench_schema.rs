@@ -1,7 +1,8 @@
 // Golden-schema tests for the CI benchmark artifacts
 // (`BENCH_scaling.json` from `smartnic scale`, `BENCH_planner.json` from
 // `smartnic plan`, `BENCH_engine.json` from `smartnic engine-bench`,
-// `BENCH_cluster.json` from `smartnic cluster-trace`): the exact key
+// `BENCH_cluster.json` from `smartnic cluster-trace`,
+// `BENCH_collectives.json` from `smartnic collectives`): the exact key
 // structure is pinned here and every document must survive a parse
 // round-trip, so the artifact shape cannot drift without a test failure.
 //
@@ -11,7 +12,7 @@
 // that document — the cross-reference is deliberate so docs and tests
 // cannot drift silently.
 
-use ai_smartnic::experiments::{cluster_trace, engine_bench, planner, scaling};
+use ai_smartnic::experiments::{cluster_trace, collectives, engine_bench, planner, scaling};
 use ai_smartnic::util::json::Json;
 
 /// Assert that every `/`-separated key path resolves in `doc`; a leading
@@ -227,6 +228,68 @@ fn bench_engine_schema_is_pinned() {
     assert!(gates.get("checked_overhead_pass").unwrap().as_bool().is_some());
     assert_eq!(gates.get("max_nodes_completed").unwrap().as_usize(), Some(8));
     assert_eq!(gates.get("scaling_max_nodes_completed").unwrap().as_usize(), Some(8));
+}
+
+#[test]
+fn bench_collectives_schema_is_pinned() {
+    let cfg = collectives::CollectivesConfig {
+        nodes: vec![6],
+        hidden: 256,
+        ..collectives::CollectivesConfig::default()
+    };
+    let study = collectives::run(&cfg);
+    assert!(!study.points.is_empty(), "a 6-node sweep must produce cells");
+    assert_eq!(study.scenarios.len(), 2, "moe + weight-broadcast");
+    let j = collectives::to_json(&cfg, &study);
+    let mut paths = vec![
+        "config/oversubscription".to_string(),
+        "config/hidden".to_string(),
+        "config/parity_tol".to_string(),
+        "gates/worst_gated_parity".to_string(),
+        "gates/worst_alltoall_spine_err".to_string(),
+        "gates/mcast_beats_binomial".to_string(),
+        "gates/audit_clean".to_string(),
+    ];
+    for i in 0..study.points.len() {
+        for key in [
+            "kind",
+            "nodes",
+            "topology",
+            "plan",
+            "model_s",
+            "measured_s",
+            "parity_err",
+            "chosen",
+            "gated",
+        ] {
+            paths.push(format!("points/{i}/{key}"));
+        }
+    }
+    for i in 0..study.scenarios.len() {
+        for key in ["name", "nodes", "duration_s", "mean_collective_s", "collectives"] {
+            paths.push(format!("scenarios/{i}/{key}"));
+        }
+    }
+    let path_refs: Vec<&str> = paths.iter().map(String::as_str).collect();
+    assert_paths(&j, &path_refs);
+    let parsed = Json::parse(&j.to_string_pretty()).expect("BENCH_collectives must parse");
+    assert_eq!(parsed, j);
+    // the gate fields carry the types the CI gate reads: 6 is a pinned
+    // node count, so parity is populated (and the all-to-all spine
+    // deviation is reported alongside it) ...
+    let gates = j.get("gates").unwrap();
+    assert!(gates.get("worst_gated_parity").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(gates.get("worst_alltoall_spine_err").unwrap().as_f64().unwrap() >= 0.0);
+    // ... while null-not-vacuous holds for the gates this sweep cannot
+    // decide: no N >= 32 broadcast pair, no audit on the typed engine
+    assert_eq!(gates.get("mcast_beats_binomial"), Some(&Json::Null));
+    assert_eq!(gates.get("audit_clean"), Some(&Json::Null));
+    // every cell names a real plan family and carries a boolean gate flag
+    for i in 0..study.points.len() {
+        let p = j.get("points").unwrap().idx(i).unwrap();
+        assert!(p.get("measured_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(p.get("gated").unwrap().as_bool().is_some());
+    }
 }
 
 #[test]

@@ -1,0 +1,420 @@
+// Property suite locking down the collective zoo (ISSUE 9): broadcast,
+// allgather, reduce-scatter and all-to-all as first-class planned
+// collectives next to all-reduce.
+//
+//  * Movement conservation, per kind and per peer: the round generators
+//    and every candidate plan the kind-aware planner prices move each
+//    element exactly the required number of times — a broadcast delivers
+//    the payload to every non-root exactly once (and never to the root),
+//    an allgather hands every rank (n−1) foreign shards, a
+//    reduce-scatter folds each element exactly once into its owning
+//    rank's shard, and an all-to-all exchanges every ordered pair's
+//    private block exactly once.  Movement-style plans fold nothing.
+//  * With replication-rate → ∞ and no table pressure, the engine's
+//    switch-multicast broadcast converges to
+//    `switch_multicast_time_elems` exactly (the closed form's segment
+//    pipeline is the executor's), on a flat crossbar, a tapered spine
+//    and a partial-leaf placement.
+//  * A switch that cannot replicate (no engines, a zero-capacity table,
+//    or a table smaller than one segment) degrades to the *identical*
+//    host binomial tree — the multicast mirror of the in-switch → ring
+//    fallback guard in `rust/tests/planner.rs`.
+//  * Every executed kind audits clean under the checked engine: the
+//    conservation ledger's per-kind expected-fold counts and the
+//    multicast replication ledger both match what the fabric did.
+
+use ai_smartnic::analytic::model::switch_multicast_time_elems;
+use ai_smartnic::cluster::collective::{
+    all_to_all_rounds, allgather_ring_rounds, broadcast_binomial_rounds,
+    reduce_scatter_ring_rounds, Phase, RoundOp,
+};
+use ai_smartnic::cluster::planner::{self, PlanKind};
+use ai_smartnic::cluster::{CollectiveAlgo, CollectiveKind, EngineKind, Topology};
+use ai_smartnic::experiments::collectives::{measure_collective, KINDS};
+use ai_smartnic::prop::{forall, gens};
+use ai_smartnic::sysconfig::{SwitchParams, SystemParams};
+use ai_smartnic::util::stats::rel_err;
+
+/// Both placements for a random (leaves, nodes_per_leaf, oversub) shape.
+fn shapes(leaves: usize, m: usize, oversub: f64) -> Vec<(Topology, Vec<usize>)> {
+    let n = leaves * m;
+    let ls = Topology::leaf_spine(leaves, m, oversub);
+    vec![
+        (Topology::flat(n), (0..n).collect()),
+        (ls, ls.contiguous_ranks(n)),
+        (ls, ls.strided_ranks(n)),
+    ]
+}
+
+fn netreduce_sys(radix: usize) -> SystemParams {
+    let s = SystemParams::smartnic_40g();
+    s.with_switch_reduction(SwitchParams::netreduce(radix, &s.net))
+}
+
+/// Per-destination received bytes and op counts of a rounds schedule.
+fn receipts(rounds: &[Vec<RoundOp>], n: usize) -> (Vec<f64>, Vec<usize>) {
+    let mut bytes = vec![0.0f64; n];
+    let mut count = vec![0usize; n];
+    for op in rounds.iter().flatten() {
+        bytes[op.dst] += op.bytes;
+        count[op.dst] += 1;
+    }
+    (bytes, count)
+}
+
+#[test]
+fn prop_broadcast_tree_delivers_to_every_nonroot_exactly_once() {
+    // the binomial tree hands rank 0's payload to each of the other n−1
+    // ranks exactly once, never back to the root, in ⌈log₂ n⌉ rounds —
+    // and causally: nobody forwards a payload they do not yet hold
+    let s = 4096.0;
+    forall(&gens::usize_in(2..=40), 64, |&n| {
+        let rounds = broadcast_binomial_rounds(n, s);
+        if rounds.len() != (n as f64).log2().ceil() as usize {
+            return false;
+        }
+        if rounds.iter().flatten().any(|op| op.reduce_elems != 0.0) {
+            return false;
+        }
+        let mut holds = vec![false; n];
+        holds[0] = true;
+        for round in &rounds {
+            if round.iter().any(|op| !holds[op.src]) {
+                return false;
+            }
+            for op in round {
+                holds[op.dst] = true;
+            }
+        }
+        let (bytes, count) = receipts(&rounds, n);
+        holds.iter().all(|h| *h)
+            && count[0] == 0
+            && (1..n).all(|v| count[v] == 1 && bytes[v] == s)
+    });
+}
+
+#[test]
+fn prop_allgather_ring_hands_every_rank_its_missing_shards() {
+    // n−1 rounds; per round every rank forwards exactly one S/n shard to
+    // its successor (the full cycle), so each rank accumulates the n−1
+    // shards it is missing: (n−1)·S/n received per rank, (n−1)·S total,
+    // zero folds
+    let s = 4096.0;
+    forall(&gens::usize_in(2..=40), 64, |&n| {
+        let rounds = allgather_ring_rounds(n, s);
+        if rounds.len() != n - 1 {
+            return false;
+        }
+        let shard = s / n as f64;
+        for round in &rounds {
+            if round.len() != n {
+                return false;
+            }
+            let mut sent = vec![0usize; n];
+            for op in round {
+                if op.dst != (op.src + 1) % n || op.bytes != shard || op.reduce_elems != 0.0 {
+                    return false;
+                }
+                sent[op.src] += 1;
+            }
+            if sent.iter().any(|&c| c != 1) {
+                return false;
+            }
+        }
+        let want = (n as f64 - 1.0) * shard;
+        let (bytes, count) = receipts(&rounds, n);
+        (0..n).all(|v| count[v] == n - 1 && (bytes[v] - want).abs() <= want * 1e-12)
+    });
+}
+
+#[test]
+fn prop_reduce_scatter_ring_folds_each_element_once_into_its_owner() {
+    // n−1 rounds of S/n shards around the ring, each folding E/n at its
+    // destination: every rank performs (n−1)·E/n genuine adds and the
+    // schedule totals exactly (n−1)·E — each element reduced once per
+    // contributing peer, landing in its owner's shard
+    let s = 4096.0;
+    let elems = 1024.0;
+    forall(&gens::usize_in(2..=40), 64, |&n| {
+        let rounds = reduce_scatter_ring_rounds(n, s, elems);
+        if rounds.len() != n - 1 {
+            return false;
+        }
+        let shard = s / n as f64;
+        let fold = elems / n as f64;
+        let mut folded = vec![0.0f64; n];
+        for round in &rounds {
+            if round.len() != n {
+                return false;
+            }
+            for op in round {
+                if op.dst != (op.src + 1) % n || op.bytes != shard || op.reduce_elems != fold {
+                    return false;
+                }
+                folded[op.dst] += op.reduce_elems;
+            }
+        }
+        let want_rank = (n as f64 - 1.0) * fold;
+        let want_total = (n as f64 - 1.0) * elems;
+        let total: f64 = folded.iter().sum();
+        (total - want_total).abs() <= want_total * 1e-12
+            && folded.iter().all(|&f| (f - want_rank).abs() <= want_rank * 1e-12)
+    });
+}
+
+#[test]
+fn prop_all_to_all_exchanges_every_ordered_pair_exactly_once() {
+    // n−1 rounds, each a perfect permutation (every rank sends once and
+    // receives once), covering each ordered pair (i, j ≠ i) exactly once
+    // with its private S/n block — conservation by construction
+    let s = 4096.0;
+    forall(&gens::usize_in(2..=40), 64, |&n| {
+        let rounds = all_to_all_rounds(n, s);
+        if rounds.len() != n - 1 {
+            return false;
+        }
+        let block = s / n as f64;
+        let mut pair = vec![vec![0usize; n]; n];
+        for round in &rounds {
+            let mut sent = vec![0usize; n];
+            let mut recv = vec![0usize; n];
+            for op in round {
+                if op.src == op.dst || op.bytes != block || op.reduce_elems != 0.0 {
+                    return false;
+                }
+                sent[op.src] += 1;
+                recv[op.dst] += 1;
+                pair[op.src][op.dst] += 1;
+            }
+            if sent.iter().any(|&c| c != 1) || recv.iter().any(|&c| c != 1) {
+                return false;
+            }
+        }
+        (0..n).all(|i| (0..n).all(|j| pair[i][j] == usize::from(i != j)))
+    });
+}
+
+#[test]
+fn prop_candidate_plans_conserve_movement_per_kind() {
+    // every plan the kind-aware planner prices — across random shapes,
+    // placements and message sizes, with and without switch engines —
+    // delivers exactly the kind's required byte volume, folds exactly
+    // its required element count (zero for the movement kinds), and a
+    // switch-multicast phase covers every member exactly once
+    forall(
+        &gens::pair(
+            gens::pair(gens::usize_in(1..=4), gens::usize_in(2..=5)),
+            gens::pair(gens::usize_in(0..=2), gens::usize_in(1_000..=4_000_000)),
+        ),
+        24,
+        |&((leaves, m), (oversub_idx, elems))| {
+            let oversub = [1.0, 2.0, 4.0][oversub_idx];
+            for sys in [SystemParams::smartnic_40g(), netreduce_sys(m.max(leaves))] {
+                for (topo, ranks) in shapes(leaves, m, oversub) {
+                    let n = ranks.len();
+                    let raw = elems as f64 * 4.0;
+                    let padded = elems.div_ceil(n).max(1) as f64 * 4.0 * n as f64;
+                    for kind in KINDS {
+                        let cands = planner::candidates_for(&sys, &topo, &ranks, elems, 1.0, kind);
+                        // the host/NIC rounds plan is always present and
+                        // always first (the fallback target)
+                        let host_kind = match kind {
+                            CollectiveKind::AllReduce => unreachable!(),
+                            CollectiveKind::Broadcast => PlanKind::Binomial,
+                            CollectiveKind::Allgather | CollectiveKind::ReduceScatter => {
+                                PlanKind::Ring
+                            }
+                            CollectiveKind::AllToAll => PlanKind::Pairwise,
+                        };
+                        if cands.is_empty() || cands[0].kind != host_kind {
+                            return false;
+                        }
+                        if !sys.switch.enabled() && cands.len() != 1 {
+                            return false;
+                        }
+                        for cand in &cands {
+                            if !cand.predicted.is_finite() || cand.predicted <= 0.0 {
+                                return false;
+                            }
+                            // total bytes delivered to some rank's NIC
+                            let mut delivered = 0.0;
+                            for ph in &cand.phases {
+                                match ph {
+                                    Phase::Rounds(rounds) => {
+                                        delivered +=
+                                            rounds.iter().flatten().map(|op| op.bytes).sum::<f64>();
+                                    }
+                                    Phase::SwitchMulticast { bytes, groups } => {
+                                        let mut seen = vec![0usize; n];
+                                        for &local in groups.iter().flatten() {
+                                            seen[local] += 1;
+                                        }
+                                        if seen.iter().any(|&c| c != 1) {
+                                            return false;
+                                        }
+                                        delivered += (n as f64 - 1.0) * bytes;
+                                    }
+                                    Phase::SwitchReduce { .. } => return false,
+                                }
+                            }
+                            let payload = match kind {
+                                CollectiveKind::Broadcast => raw,
+                                _ => padded,
+                            };
+                            let want = (n as f64 - 1.0) * payload;
+                            if (delivered - want).abs() > want * 1e-9 {
+                                return false;
+                            }
+                            // reduction ledger: only reduce-scatter folds
+                            let want_folds = match kind {
+                                CollectiveKind::ReduceScatter => (n as f64 - 1.0) * elems as f64,
+                                _ => 0.0,
+                            };
+                            let folds = cand.reduced_elems(n, elems);
+                            if (folds - want_folds).abs() > want_folds * 1e-9 + 1e-9 {
+                                return false;
+                            }
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn mcast_infinite_rate_converges_to_the_closed_form() {
+    // replication-rate → ∞, table → ∞: the multicast segment pipeline's
+    // only costs are DMA, serialization and latency — the closed form is
+    // exact (the replication dual of planner.rs's in-switch convergence
+    // guard), and sits just above the one-payload-through-the-root-Tx
+    // wire bound
+    let ideal = SystemParams::smartnic_40g().with_switch_reduction(SwitchParams {
+        reduce_flops: f64::INFINITY,
+        reduce_table_bytes: 1e18,
+    });
+    let hidden = 2048;
+    let elems = hidden * hidden;
+    for (topo, ranks, m, l, eff_oversub) in [
+        (Topology::flat(8), (0..8).collect::<Vec<_>>(), 8usize, 1usize, 1.0),
+        (Topology::leaf_spine(2, 4, 4.0), (0..8).collect::<Vec<_>>(), 4, 2, 4.0),
+        // partial-leaf placement: 2 of 8 ranks per leaf, so the effective
+        // tapering is m·oversub/nodes_per_leaf = 2·4/8 = 1.0
+        (Topology::leaf_spine(2, 8, 4.0), vec![0, 1, 8, 9], 2, 2, 1.0),
+    ] {
+        let (measured, _) = measure_collective(
+            ideal,
+            topo,
+            ranks,
+            CollectiveKind::Broadcast,
+            CollectiveAlgo::SwitchReduce,
+            hidden,
+            EngineKind::Typed,
+        );
+        let model = switch_multicast_time_elems(&ideal, elems, m, l, eff_oversub, 1.0);
+        let err = rel_err(model, measured);
+        assert!(
+            err < 1e-9,
+            "{}: engine {measured} vs closed form {model} ({err:.2e})",
+            topo.describe()
+        );
+        let wire_bound = elems as f64 * 4.0 / ideal.net.effective_bw();
+        assert!(measured > wire_bound, "beats the wire bound: {measured}");
+        assert!(
+            measured < wire_bound * 1.1,
+            "not converged: {measured} vs bound {wire_bound}"
+        );
+    }
+}
+
+#[test]
+fn multicast_incapable_switch_degrades_to_the_exact_binomial_tree() {
+    // a switch with engines but a table that cannot hold one segment (or
+    // no engines at all) must execute the *identical* host binomial-tree
+    // broadcast — the replication mirror of the in-switch → ring
+    // fallback guard
+    let topo = Topology::leaf_spine(2, 3, 4.0);
+    let ranks: Vec<usize> = (0..6).collect();
+    for crippled in [
+        SystemParams::smartnic_40g(), // no engines
+        SystemParams::smartnic_40g().with_switch_reduction(SwitchParams {
+            reduce_flops: 1e12,
+            reduce_table_bytes: 0.0, // capacity 0: disabled outright
+        }),
+        SystemParams::smartnic_40g().with_switch_reduction(SwitchParams {
+            reduce_flops: 1e12,
+            reduce_table_bytes: 1024.0, // < one segment: planner must fall back
+        }),
+    ] {
+        let (tree, _) = measure_collective(
+            crippled,
+            topo,
+            ranks.clone(),
+            CollectiveKind::Broadcast,
+            CollectiveAlgo::NicBinomial,
+            2048,
+            EngineKind::Typed,
+        );
+        let (fallback, _) = measure_collective(
+            crippled,
+            topo,
+            ranks.clone(),
+            CollectiveKind::Broadcast,
+            CollectiveAlgo::SwitchReduce,
+            2048,
+            EngineKind::Typed,
+        );
+        assert!(
+            (tree - fallback).abs() <= tree * 1e-12,
+            "fallback differs from the binomial tree: {fallback} vs {tree}"
+        );
+    }
+}
+
+#[test]
+fn every_executed_kind_audits_clean_on_the_checked_engine() {
+    // the executed half of the conservation property: the checked
+    // engine's ledger (per-kind expected folds, multicast replication
+    // copies, no leaked reservations, no unfinished collectives) matches
+    // what the fabric actually did, for every kind on both fabric shapes
+    let sys = netreduce_sys(8);
+    let ls = Topology::leaf_spine(2, 3, 2.0);
+    for kind in KINDS {
+        for (topo, ranks) in [
+            (Topology::flat(6), (0..6).collect::<Vec<_>>()),
+            (ls, ls.contiguous_ranks(6)),
+        ] {
+            let (_, audit) = measure_collective(
+                sys,
+                topo,
+                ranks,
+                kind,
+                CollectiveAlgo::Auto,
+                256,
+                EngineKind::Checked { threads: 0 },
+            );
+            let report = audit.expect("checked engine carries a report");
+            assert!(
+                report.is_clean(),
+                "{}/{}: {}",
+                kind.name(),
+                topo.describe(),
+                report.summary()
+            );
+        }
+    }
+    // force the multicast offload explicitly so the replication ledger
+    // (not just the host paths) is exercised under audit
+    let (_, audit) = measure_collective(
+        sys,
+        ls,
+        ls.contiguous_ranks(6),
+        CollectiveKind::Broadcast,
+        CollectiveAlgo::SwitchReduce,
+        256,
+        EngineKind::Checked { threads: 0 },
+    );
+    let report = audit.expect("checked engine carries a report");
+    assert!(report.is_clean(), "forced multicast: {}", report.summary());
+}

@@ -23,8 +23,8 @@
 
 use ai_smartnic::analytic::model::SystemKind;
 use ai_smartnic::cluster::{
-    run_scenario_on, run_trace, synth_trace, ClusterSpec, CollectiveAlgo, EngineKind, JobSpec,
-    Policy, ScenarioOutput, Topology, TraceGenConfig, TraceOutput, TraceSpec,
+    run_scenario_on, run_trace, synth_trace, ClusterSpec, CollectiveAlgo, CollectiveKind,
+    EngineKind, JobSpec, Policy, ScenarioOutput, Topology, TraceGenConfig, TraceOutput, TraceSpec,
 };
 use ai_smartnic::collective::Scheme;
 use ai_smartnic::coordinator::simulate_iteration_unified_on;
@@ -430,6 +430,136 @@ fn checked_multi_tenant_faulty_scenario_is_clean() {
             .starting_at(2e-4),
         );
     assert_checked_equiv(&spec, "checked-multi-tenant");
+}
+
+/// The four non-all-reduce kinds of the collective zoo (ISSUE 9), each
+/// held to the full cross-engine bar below.
+const ZOO: [CollectiveKind; 4] = [
+    CollectiveKind::Broadcast,
+    CollectiveKind::Allgather,
+    CollectiveKind::ReduceScatter,
+    CollectiveKind::AllToAll,
+];
+
+/// Single-layer spec running one collective of `kind` under `algo` on
+/// the planner study's fabric (the [`par_family_spec`] shape, kind-aware).
+fn zoo_spec(n: usize, kind: CollectiveKind, algo: CollectiveAlgo) -> ClusterSpec {
+    let (leaves, m) = leaf_shape(n);
+    let sys = planner_system(leaves, m);
+    let topo = Topology::leaf_spine(leaves, m, 4.0);
+    let w = Workload {
+        layers: 1,
+        hidden: if n >= 2048 { 128 } else { 256 },
+        batch_per_node: 64,
+    };
+    ClusterSpec::new(sys, n).with_topology(topo).with_job(
+        JobSpec::new("j0", SystemKind::SmartNic { bfp: false }, w, topo.contiguous_ranks(n))
+            .with_layer_algos(vec![algo])
+            .with_layer_kinds(vec![kind]),
+    )
+}
+
+/// MoE-style trainer iteration: an all-to-all (expert dispatch)
+/// interleaved with an all-reduce (dense gradients) in one two-layer
+/// job, both planner-selected.
+fn moe_spec(n: usize) -> ClusterSpec {
+    let (leaves, m) = leaf_shape(n);
+    let sys = planner_system(leaves, m);
+    let topo = Topology::leaf_spine(leaves, m, 4.0);
+    let w = Workload {
+        layers: 2,
+        hidden: if n >= 2048 { 128 } else { 256 },
+        batch_per_node: 64,
+    };
+    ClusterSpec::new(sys, n).with_topology(topo).with_job(
+        JobSpec::new("moe", SystemKind::SmartNic { bfp: false }, w, topo.contiguous_ranks(n))
+            .with_layer_algos(vec![CollectiveAlgo::Auto; 2])
+            .with_layer_kinds(vec![CollectiveKind::AllToAll, CollectiveKind::AllReduce]),
+    )
+}
+
+#[test]
+fn parallel_collective_zoo_matches_typed_at_pinned_sizes() {
+    // every new kind through the planner (Auto), at both parallel pins
+    for kind in ZOO {
+        for n in PAR_PINNED {
+            assert_parallel_equiv(
+                &zoo_spec(n, kind, CollectiveAlgo::Auto),
+                &format!("{}/n={n}", kind.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_switch_multicast_broadcast_matches_typed_at_pinned_sizes() {
+    // the replication executor explicitly (SwitchReduce pins the
+    // switch-multicast plan for a broadcast), 2048 nodes included
+    for n in PAR_PINNED {
+        assert_parallel_equiv(
+            &zoo_spec(n, CollectiveKind::Broadcast, CollectiveAlgo::SwitchReduce),
+            &format!("switch-multicast/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn parallel_moe_interleaved_scenario_matches_typed() {
+    for n in PAR_PINNED {
+        assert_parallel_equiv(&moe_spec(n), &format!("moe/n={n}"));
+    }
+}
+
+#[test]
+fn checked_collective_zoo_is_bit_identical_and_clean_at_pinned_sizes() {
+    // the same matrix under the invariant auditor: clean reports (the
+    // per-kind conservation ledger included), every dispatch checked,
+    // bit-identical across audited thread counts
+    for kind in ZOO {
+        for n in PAR_PINNED {
+            assert_checked_equiv(
+                &zoo_spec(n, kind, CollectiveAlgo::Auto),
+                &format!("{}/n={n}", kind.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn checked_switch_multicast_broadcast_is_clean_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        assert_checked_equiv(
+            &zoo_spec(n, CollectiveKind::Broadcast, CollectiveAlgo::SwitchReduce),
+            &format!("switch-multicast/n={n}"),
+        );
+    }
+}
+
+#[test]
+fn checked_moe_interleaved_scenario_is_clean() {
+    for n in PAR_PINNED {
+        assert_checked_equiv(&moe_spec(n), &format!("moe/n={n}"));
+    }
+}
+
+#[test]
+fn collective_zoo_is_deterministic_run_to_run() {
+    // same spec, same thread count: bit-identical results for the
+    // interleaved MoE job and for a forced switch-multicast broadcast
+    for spec in [
+        moe_spec(128),
+        zoo_spec(128, CollectiveKind::Broadcast, CollectiveAlgo::SwitchReduce),
+    ] {
+        let a = run_scenario_on(&spec, EngineKind::Parallel { threads: 4 });
+        let b = run_scenario_on(&spec, EngineKind::Parallel { threads: 4 });
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "nondeterministic makespan");
+        assert_eq!(
+            a.jobs[0].duration.to_bits(),
+            b.jobs[0].duration.to_bits(),
+            "nondeterministic job duration"
+        );
+    }
 }
 
 #[test]
