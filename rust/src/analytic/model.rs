@@ -243,6 +243,42 @@ pub fn inswitch_ar_time_elems(
     oversub: f64,
     wire_ratio: f64,
 ) -> f64 {
+    inswitch_ar_time_contended(
+        sys,
+        elems,
+        m,
+        l,
+        oversub,
+        wire_ratio,
+        1,
+        sys.switch.reduce_table_bytes,
+        1.0,
+    )
+}
+
+/// [`inswitch_ar_time_elems`] under multi-tenant load: `tenants` identical
+/// jobs share the root engine (their `tenants·segs` segments drain the
+/// engine-occupancy server back to back, so the pipeline term scales to
+/// `(tenants·segs − 1)·b` — the *last* tenant's completion), the
+/// aggregation table holds `table_bytes` (the tenant's granted share, not
+/// the switch's full capacity), and PFC throttles the spine stages to
+/// `pause_duty` of their bandwidth.  With `(1, full table, duty 1.0)`
+/// this is exactly the solo closed form.  Returns infinity when the
+/// switch cannot reduce, the granted table cannot hold one segment, or a
+/// pause storm (`duty ≤ 0`) stalls the tree — the planner then prices the
+/// host/NIC plans instead.
+#[allow(clippy::too_many_arguments)]
+pub fn inswitch_ar_time_contended(
+    sys: &SystemParams,
+    elems: usize,
+    m: usize,
+    l: usize,
+    oversub: f64,
+    wire_ratio: f64,
+    tenants: usize,
+    table_bytes: f64,
+    pause_duty: f64,
+) -> f64 {
     let n = m * l;
     if n <= 1 {
         return 0.0;
@@ -250,6 +286,10 @@ pub fn inswitch_ar_time_elems(
     if !sys.switch.enabled() {
         return f64::INFINITY;
     }
+    if pause_duty <= 0.0 {
+        return f64::INFINITY; // pause storm: the reduction tree stalls
+    }
+    assert!(tenants >= 1, "contended form needs at least one tenant");
     let s = elems as f64 * 4.0;
     let segs = (s / sys.nic.segment_bytes).ceil().max(1.0);
     let seg = s / segs;
@@ -258,33 +298,35 @@ pub fn inswitch_ar_time_elems(
     let bw = sys.net.effective_bw();
     let lat = sys.net.hop_latency;
     let rho = sys.switch.reduce_flops;
-    let window = (sys.switch.reduce_table_bytes / seg).floor();
+    let window = (table_bytes / seg).floor();
     if window < 1.0 {
         return f64::INFINITY; // table cannot hold one segment: fall back
     }
     let d_f = seg / sys.nic.pcie_bw;
     let d_t = wire / bw;
+    // engine occupancy: the reduced segment drains the engine at port
+    // line rate before multicast — a serial pipeline stage of its own
     let d_e = wire / bw;
     let d_wb = seg / sys.nic.pcie_bw;
     let (fill, bottleneck) = if l <= 1 {
         let d_fold = n as f64 * seg_e / rho;
         (
-            d_f + d_t + d_fold + lat + d_wb + 2.0 * sys.nic.pcie_latency,
+            d_f + d_t + d_fold + lat + d_e + d_wb + 2.0 * sys.nic.pcie_latency,
             d_f.max(d_t).max(d_fold).max(d_e).max(d_wb),
         )
     } else {
-        let up_bw = m as f64 * bw / oversub;
+        let up_bw = m as f64 * bw / oversub * pause_duty;
         let d_lf = m as f64 * seg_e / rho;
         let d_u = wire / up_bw;
         let d_sf = l as f64 * seg_e / rho;
         let d_d = wire / up_bw;
         (
-            d_f + d_t + d_lf + lat + d_sf + 2.0 * lat + d_wb + 2.0 * sys.nic.pcie_latency,
+            d_f + d_t + d_lf + lat + d_sf + d_e + 2.0 * lat + d_wb + 2.0 * sys.nic.pcie_latency,
             d_f.max(d_t).max(d_lf).max(d_u).max(d_sf).max(d_d).max(d_e).max(d_wb),
         )
     };
     let b = bottleneck.max(fill / window);
-    sys.nic_request_overhead + fill + (segs - 1.0) * b
+    sys.nic_request_overhead + fill + (tenants as f64 * segs - 1.0) * b
 }
 
 /// Closed form for switch-resident *multicast* — the replication dual of
@@ -693,6 +735,41 @@ mod tests {
         // and it undercuts the 4:1-strided NIC ring by a wide margin
         let ring = nic_ring_ar_time_elems(&plain, elems, 32, 1.0, 4.0);
         assert!(t < ring * 0.5, "in-switch {t} vs strided ring {ring}");
+    }
+
+    #[test]
+    fn contended_inswitch_form_prices_tenancy_pressure() {
+        use crate::sysconfig::SwitchParams;
+        let sys = SystemParams::smartnic_40g().with_switch_reduction(SwitchParams {
+            reduce_flops: 1e12,
+            reduce_table_bytes: 4.0 * 1024.0 * 1024.0,
+        });
+        let elems = 2048 * 2048;
+        let table = sys.switch.reduce_table_bytes;
+        // one tenant on the full table at full duty IS the solo form,
+        // bit for bit
+        let solo = inswitch_ar_time_elems(&sys, elems, 8, 4, 4.0, 1.0);
+        let one = inswitch_ar_time_contended(&sys, elems, 8, 4, 4.0, 1.0, 1, table, 1.0);
+        assert_eq!(solo.to_bits(), one.to_bits());
+        // strictly monotone in tenant count: each extra tenant adds
+        // `segs` bottleneck drains
+        let two = inswitch_ar_time_contended(&sys, elems, 8, 4, 4.0, 1.0, 2, table, 1.0);
+        let four = inswitch_ar_time_contended(&sys, elems, 8, 4, 4.0, 1.0, 4, table, 1.0);
+        assert!(solo < two && two < four, "{solo} {two} {four}");
+        // PFC derating slows the spanning pipeline; a pause storm stalls it
+        let paused = inswitch_ar_time_contended(&sys, elems, 8, 4, 4.0, 1.0, 1, table, 0.5);
+        assert!(paused > solo, "{paused} vs {solo}");
+        assert!(
+            inswitch_ar_time_contended(&sys, elems, 8, 4, 4.0, 1.0, 1, table, 0.0).is_infinite()
+        );
+        // a granted share below one segment is the per-flow fallback signal
+        assert!(
+            inswitch_ar_time_contended(&sys, elems, 8, 4, 4.0, 1.0, 1, 1024.0, 1.0).is_infinite()
+        );
+        // a squeezed (but >= 1 segment) share throttles via fill/window
+        let seg = sys.nic.segment_bytes;
+        let squeezed = inswitch_ar_time_contended(&sys, elems, 8, 4, 4.0, 1.0, 1, seg, 1.0);
+        assert!(squeezed > solo, "{squeezed} vs {solo}");
     }
 
     #[test]

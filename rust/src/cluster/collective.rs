@@ -243,6 +243,31 @@ struct HostState {
     round_pending: usize,
 }
 
+/// How the switching tier's admission control classified one flow under
+/// multi-tenant aggregation-table pressure.  Admission is *per flow*: a
+/// denied flow runs its job's exact host/NIC plan while other flows — of
+/// this job or others — keep their in-switch slots.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TenancyOutcome {
+    /// the flow never asked for switch-tier state (NIC/host algorithms,
+    /// `n ≤ 1`, non-all-reduce kinds, incapable fabrics)
+    NotRequested,
+    /// admitted: the flow's job holds `granted_bytes` of aggregation
+    /// table (its pipeline window) until the flow completes
+    Admitted {
+        /// table bytes granted to the job's reservation (a whole number
+        /// of this flow's segments)
+        granted_bytes: f64,
+    },
+    /// denied after a competing tenant evicted this job's warm slot —
+    /// the flow fell back to the job's host/NIC plan
+    Evicted,
+    /// denied on first contact (table full of active tenants, or the
+    /// achievable share is below one segment) — per-flow fallback to the
+    /// job's host/NIC plan
+    Fallback,
+}
+
 /// One posted collective: public bookkeeping + private executor state.
 pub struct Collective {
     pub id: CollectiveId,
@@ -270,6 +295,9 @@ pub struct Collective {
     /// datapath, nothing was reserved, and the conservation ledger
     /// excludes it ([`scenario`]'s audit, `docs/INVARIANTS.md`)
     pub aborted: bool,
+    /// the switch tier's admission decision for this flow (decided at
+    /// post time against the live [`planner::TenancyLoad`])
+    pub tenancy: TenancyOutcome,
     state: AlgoState,
 }
 
@@ -477,6 +505,7 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
     let raw_bytes = elems as f64 * 4.0;
 
     let cid = st.collectives.len();
+    let mut tenancy = TenancyOutcome::NotRequested;
     let (state, wire_bytes_per_rank) = if n <= 1 {
         (AlgoState::Noop, 0.0)
     } else if kind != CollectiveKind::AllReduce {
@@ -519,26 +548,73 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
             CollectiveAlgo::NicHierarchical
             | CollectiveAlgo::SwitchReduce
             | CollectiveAlgo::Auto => {
-                let plan = planner::plan_for_algo(
+                // price the candidate families against the switch tier's
+                // *current* table/engine/PFC load, not the idle fabric
+                let load = planner::TenancyLoad::observed(&st.fabric, job as u32);
+                let plan = planner::plan_for_algo_with(
                     &st.sys,
                     &st.fabric.topology,
                     &ranks,
                     elems,
                     wire_ratio,
                     algo,
+                    load,
                 );
-                if plan.kind == PlanKind::Ring {
-                    // degenerate or fallback plan: the exact native ring
-                    ring_state(&st.sys, n, elems, wire_ratio)
+                if plan.kind == PlanKind::InSwitch {
+                    // in-switch won under load: claim table bytes for the
+                    // job's pipeline window before committing to the plan
+                    let bytes = plan.payload_bytes;
+                    let segs = (bytes / st.sys.nic.segment_bytes).ceil().max(1.0);
+                    let seg = bytes / segs;
+                    let cap = st.sys.switch.reduce_table_bytes;
+                    let want = seg * segs.min((cap / seg).floor()).max(1.0);
+                    let granted = st
+                        .fabric
+                        .table_mut()
+                        .expect("in-switch plan on a fabric without an aggregation table")
+                        .request(job as u32, want, seg);
+                    if granted >= seg {
+                        tenancy = TenancyOutcome::Admitted {
+                            granted_bytes: granted,
+                        };
+                        planned_state(
+                            plan.phases,
+                            n,
+                            wire_ratio,
+                            vec![bytes; n],
+                            vec![bytes; n],
+                        )
+                    } else {
+                        // a shared slot too small for this flow's segment
+                        // counts as a denial; drop the refcount we took
+                        if granted > 0.0 {
+                            st.fabric.table_mut().unwrap().release(job as u32);
+                        }
+                        tenancy = denial_outcome(st, job as u32);
+                        ring_state(&st.sys, n, elems, wire_ratio)
+                    }
                 } else {
-                    let payload = plan.payload_bytes;
-                    planned_state(
-                        plan.phases,
-                        n,
-                        wire_ratio,
-                        vec![payload; n],
-                        vec![payload; n],
-                    )
+                    if algo == CollectiveAlgo::SwitchReduce
+                        && st.fabric.switch_reduce_capable()
+                    {
+                        // the family was demanded on a capable fabric but
+                        // the planner priced it out under current load —
+                        // a per-flow denial, not a planning gap
+                        tenancy = denial_outcome(st, job as u32);
+                    }
+                    if plan.kind == PlanKind::Ring {
+                        // degenerate or fallback plan: the exact native ring
+                        ring_state(&st.sys, n, elems, wire_ratio)
+                    } else {
+                        let payload = plan.payload_bytes;
+                        planned_state(
+                            plan.phases,
+                            n,
+                            wire_ratio,
+                            vec![payload; n],
+                            vec![payload; n],
+                        )
+                    }
                 }
             }
             CollectiveAlgo::Host(scheme) => {
@@ -580,6 +656,7 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
         // host collectives begin right here at post
         started: class != 1,
         aborted: false,
+        tenancy,
         state,
     });
     match class {
@@ -594,12 +671,42 @@ pub fn post(sim: &mut ClusterSim, st: &mut ClusterState, job: JobId, layer: usiz
     cid
 }
 
+/// Classify a switch-tier denial: [`TenancyOutcome::Evicted`] when a
+/// competitor displaced this job's warm slot since its last flow,
+/// [`TenancyOutcome::Fallback`] for a plain full-table miss.
+fn denial_outcome(st: &mut ClusterState, job: u32) -> TenancyOutcome {
+    let evicted = st
+        .fabric
+        .table_mut()
+        .is_some_and(|t| t.take_eviction_debt(job));
+    if evicted {
+        TenancyOutcome::Evicted
+    } else {
+        TenancyOutcome::Fallback
+    }
+}
+
+/// Drop the aggregation-table refcount an [`TenancyOutcome::Admitted`]
+/// flow holds.  Idle slots stay resident (sticky) until a competitor
+/// evicts them, so a job's next flow re-admits for free.
+fn release_table(st: &mut ClusterState, cid: CollectiveId) {
+    if let TenancyOutcome::Admitted { .. } = st.collectives[cid].tenancy {
+        let job = st.collectives[cid].job as u32;
+        st.fabric
+            .table_mut()
+            .expect("admitted flow on a fabric without an aggregation table")
+            .release(job);
+    }
+}
+
 /// [`Event::CollectiveStart`]: the NIC driver's request overhead elapsed —
 /// enter the executor matching the collective's algorithm state.
 pub(super) fn on_start(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
     if st.collectives[cid].aborted {
         // the owning job was preempted inside the driver-request window:
-        // the descriptor never reaches the datapath
+        // the descriptor never reaches the datapath — but the table share
+        // claimed at post time must still come back
+        release_table(st, cid);
         return;
     }
     st.collectives[cid].started = true;
@@ -625,6 +732,7 @@ pub(super) fn on_complete(sim: &mut ClusterSim, st: &mut ClusterState, cid: Coll
 /// Mark `cid` complete at the current time, record its trace span, and
 /// wake its job's worker if it is blocked on this collective.
 fn complete(sim: &mut ClusterSim, st: &mut ClusterState, cid: CollectiveId) {
+    release_table(st, cid);
     let now = sim.now();
     st.collectives[cid].t_done = Some(now);
     let (jid, layer, t_post) = {
@@ -1164,8 +1272,24 @@ fn start_switch_phase(sim: &mut ClusterSim, st: &mut ClusterState, cid: Collecti
     let seg_bytes = bytes / segs as f64;
     let seg_elems = elems / segs as f64;
     let wire_seg = seg_bytes / wire_ratio;
-    let window = (st.sys.switch.reduce_table_bytes / seg_bytes).floor() as usize;
-    assert!(window >= 1, "aggregation table smaller than one segment (planner fallback bug)");
+    // the pipeline window is the flow's granted table share; flows that
+    // never went through admission (directly-constructed planned states)
+    // keep the legacy whole-table window
+    let window = match st.collectives[cid].tenancy {
+        TenancyOutcome::Admitted { granted_bytes } => {
+            let w = (granted_bytes / seg_bytes).floor() as usize;
+            assert!(w >= 1, "admitted flow's granted table share is below one segment");
+            w
+        }
+        TenancyOutcome::NotRequested => {
+            let w = (st.sys.switch.reduce_table_bytes / seg_bytes).floor() as usize;
+            assert!(w >= 1, "aggregation table smaller than one segment (planner fallback bug)");
+            w
+        }
+        TenancyOutcome::Evicted | TenancyOutcome::Fallback => {
+            unreachable!("denied flow {cid} reached the in-switch executor")
+        }
+    };
     let window = window.min(segs);
     let mut group_of = vec![usize::MAX; n];
     for (g, grp) in groups.iter().enumerate() {
@@ -1301,10 +1425,18 @@ pub(super) fn switch_fold_done(
         )
     };
     if !spanning {
-        switch_multicast(sim, st, cid, seg, g);
+        // the completed aggregate drains through the root engine's
+        // occupancy server — two tenants folding through one engine
+        // genuinely serialize here, one slot per segment
+        let drained = st.fabric.reduce_engine_occupancy(root, now, wire_seg);
+        sim.schedule_at(
+            drained,
+            Event::SwitchMulticast { cid: cid as u32, seg: seg as u32, group: g as u32 },
+        );
         return;
     }
-    let at_spine = st.fabric.reduce_fold_spine(leaf, root, now, wire_seg, seg_elems);
+    let at_spine =
+        st.fabric.reduce_fold_spine(cid as u32, leaf, root, now, wire_seg, seg_elems);
     sim.schedule_at(at_spine, Event::SwitchSpineDone { cid: cid as u32, seg: seg as u32 });
 }
 
@@ -1325,12 +1457,15 @@ pub(super) fn switch_spine_done(
     if remaining > 0 {
         return;
     }
-    let (leaves, wire_seg) = {
+    let (leaves, wire_seg, root) = {
         let sw = st.collectives[cid].planned_ref().sw.as_ref().unwrap();
-        (sw.group_leaves.clone(), sw.wire_seg)
+        (sw.group_leaves.clone(), sw.wire_seg, sw.root)
     };
+    // one occupancy-server slot per segment at the spine engine: tenants
+    // sharing the root egress serialize their drained aggregates
+    let drained = st.fabric.reduce_engine_occupancy(root, now, wire_seg);
     for (g, leaf) in leaves.into_iter().enumerate() {
-        let at_leaf = st.fabric.reduce_downlink(leaf, now, wire_seg);
+        let at_leaf = st.fabric.reduce_downlink(leaf, drained, wire_seg);
         sim.schedule_at(
             at_leaf,
             Event::SwitchMulticast {

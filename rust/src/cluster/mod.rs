@@ -49,10 +49,11 @@ use crate::trace::Trace;
 
 pub use crate::netsim::engine::{EngineKind, PartitionStats};
 pub use crate::netsim::topology::Topology;
+pub use collective::TenancyOutcome;
 pub use job::{JobSpec, WorkerTask};
 pub use scenario::{
     run_scenario, run_scenario_capped, run_scenario_on, CappedRun, ClusterSpec, JobResult,
-    ScenarioOutput,
+    ScenarioOutput, TenancyStats,
 };
 pub use sched::{
     run_trace, synth_trace, AllocEvent, AllocKind, ElasticOp, Failure, Policy, TraceGenConfig,

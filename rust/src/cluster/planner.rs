@@ -34,11 +34,61 @@ use super::collective::{
 };
 use super::{CollectiveAlgo, CollectiveKind};
 use crate::analytic::model::{
-    hierarchical_ar_time_elems, inswitch_ar_time_elems, nic_ring_ar_time_elems,
+    hierarchical_ar_time_elems, inswitch_ar_time_contended, nic_ring_ar_time_elems,
     switch_multicast_time_elems,
 };
+use crate::netsim::fabric::Fabric;
 use crate::netsim::topology::Topology;
 use crate::sysconfig::SystemParams;
+
+/// The tenancy conditions an in-switch plan is priced against: how many
+/// jobs currently hold aggregation-table slots, how many table bytes
+/// *this* job could actually obtain (its own slot, or free + evictable
+/// bytes), and the switching tier's PFC pause duty cycle.  [`idle`] is
+/// the no-contention load every legacy entry point prices with — one
+/// tenant, unlimited table, full duty — which reproduces the solo closed
+/// form bit-for-bit.
+///
+/// [`idle`]: TenancyLoad::idle
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenancyLoad {
+    /// concurrent tenants sharing the switch tier, this job included
+    pub tenants: usize,
+    /// table bytes obtainable by this job (clamped to the switch's
+    /// capacity at pricing time; `INFINITY` = the full table)
+    pub table_bytes: f64,
+    /// PFC pause duty cycle (1.0 = PFC off)
+    pub pause_duty: f64,
+}
+
+impl TenancyLoad {
+    /// No contention: one tenant, the whole table, PFC off.
+    #[must_use]
+    pub fn idle() -> Self {
+        Self { tenants: 1, table_bytes: f64::INFINITY, pause_duty: 1.0 }
+    }
+
+    /// Snapshot the *current* tenancy of `fabric` as seen by `job`: the
+    /// jobs holding table slots (plus this one, if it doesn't already),
+    /// the bytes this job could obtain right now, and the fabric's pause
+    /// duty.  This is what threads live contention into
+    /// [`candidates_with`] at admission time.
+    #[must_use]
+    pub fn observed(fabric: &Fabric, job: u32) -> Self {
+        let (tenants, table_bytes) = match fabric.table() {
+            Some(t) => {
+                let holds = t.slots().iter().any(|s| s.job == job);
+                (t.tenants() + usize::from(!holds), t.available_to(job))
+            }
+            None => (1, f64::INFINITY),
+        };
+        Self {
+            tenants: tenants.max(1),
+            table_bytes,
+            pause_duty: fabric.pfc_duty(),
+        }
+    }
+}
 
 /// The families of plans the planner can build.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -281,6 +331,23 @@ pub fn candidates(
     elems: usize,
     wire_ratio: f64,
 ) -> Vec<Plan> {
+    candidates_with(sys, topo, ranks, elems, wire_ratio, TenancyLoad::idle())
+}
+
+/// [`candidates`] priced against a live [`TenancyLoad`]: the in-switch
+/// plan's cost reflects the tenants already folding through the switch,
+/// the table bytes this job could actually obtain, and PFC derating —
+/// so the planner flips to NIC-ring / hierarchical past the occupancy
+/// knee instead of letting in-switch win unconditionally.  The host/NIC
+/// plans are load-independent (they use no switch-tier state).
+pub fn candidates_with(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+    load: TenancyLoad,
+) -> Vec<Plan> {
     let n = ranks.len();
     let raw = elems as f64 * 4.0;
     let padded = elems.div_ceil(n.max(1)).max(1) as f64 * 4.0 * n as f64;
@@ -339,8 +406,17 @@ pub fn candidates(
         // group's fold is the pipeline's leaf-engine stage time, which is
         // exactly what bounds the executor's per-segment rate
         let m_max = groups.iter().map(Vec::len).max().unwrap_or(1);
-        let predicted =
-            inswitch_ar_time_elems(sys, elems, m_max, l, oversub_eff(m_max), wire_ratio);
+        let predicted = inswitch_ar_time_contended(
+            sys,
+            elems,
+            m_max,
+            l,
+            oversub_eff(m_max),
+            wire_ratio,
+            load.tenants,
+            load.table_bytes.min(sys.switch.reduce_table_bytes),
+            load.pause_duty,
+        );
         if predicted.is_finite() {
             out.push(Plan {
                 kind: PlanKind::InSwitch,
@@ -365,7 +441,19 @@ pub fn plan(
     elems: usize,
     wire_ratio: f64,
 ) -> Plan {
-    candidates(sys, topo, ranks, elems, wire_ratio)
+    plan_with(sys, topo, ranks, elems, wire_ratio, TenancyLoad::idle())
+}
+
+/// [`plan`] priced against a live [`TenancyLoad`].
+pub fn plan_with(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+    load: TenancyLoad,
+) -> Plan {
+    candidates_with(sys, topo, ranks, elems, wire_ratio, load)
         .into_iter()
         .min_by(|a, b| a.predicted.total_cmp(&b.predicted))
         .expect("the ring candidate always exists")
@@ -382,7 +470,24 @@ pub fn plan_fixed(
     wire_ratio: f64,
     kind: PlanKind,
 ) -> Plan {
-    let mut cands = candidates(sys, topo, ranks, elems, wire_ratio);
+    plan_fixed_with(sys, topo, ranks, elems, wire_ratio, kind, TenancyLoad::idle())
+}
+
+/// [`plan_fixed`] priced against a live [`TenancyLoad`]: the requested
+/// family still falls back to the exact native ring when unavailable —
+/// which under load now includes an in-switch plan whose granted table
+/// share can't hold one segment (the per-flow fallback path).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_fixed_with(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+    kind: PlanKind,
+    load: TenancyLoad,
+) -> Plan {
+    let mut cands = candidates_with(sys, topo, ranks, elems, wire_ratio, load);
     let idx = cands
         .iter()
         .position(|c| c.kind == kind)
@@ -404,13 +509,31 @@ pub fn plan_for_algo(
     wire_ratio: f64,
     algo: CollectiveAlgo,
 ) -> Plan {
+    plan_for_algo_with(sys, topo, ranks, elems, wire_ratio, algo, TenancyLoad::idle())
+}
+
+/// [`plan_for_algo`] priced against a live [`TenancyLoad`] — the
+/// admission-time entry point: `cluster::collective::post` snapshots the
+/// fabric's tenancy ([`TenancyLoad::observed`]) and resolves the
+/// requested algorithm against it, so a late tenant is planned onto its
+/// host/NIC path *per flow* when the switch is oversubscribed.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_for_algo_with(
+    sys: &SystemParams,
+    topo: &Topology,
+    ranks: &[usize],
+    elems: usize,
+    wire_ratio: f64,
+    algo: CollectiveAlgo,
+    load: TenancyLoad,
+) -> Plan {
     match algo {
-        CollectiveAlgo::Auto => plan(sys, topo, ranks, elems, wire_ratio),
+        CollectiveAlgo::Auto => plan_with(sys, topo, ranks, elems, wire_ratio, load),
         CollectiveAlgo::NicHierarchical => {
-            plan_fixed(sys, topo, ranks, elems, wire_ratio, PlanKind::Hierarchical)
+            plan_fixed_with(sys, topo, ranks, elems, wire_ratio, PlanKind::Hierarchical, load)
         }
         CollectiveAlgo::SwitchReduce => {
-            plan_fixed(sys, topo, ranks, elems, wire_ratio, PlanKind::InSwitch)
+            plan_fixed_with(sys, topo, ranks, elems, wire_ratio, PlanKind::InSwitch, load)
         }
         other => unreachable!("planner invoked for fixed algorithm {other:?}"),
     }
@@ -629,6 +752,71 @@ mod tests {
             .with_switch_reduction(SwitchParams::netreduce(4, &plain.net));
         let cands = candidates(&netred, &topo, &ranks, ELEMS, 1.0);
         assert!(cands.iter().any(|c| c.kind == PlanKind::InSwitch));
+    }
+
+    #[test]
+    // delegation identity is the point: idle load must not perturb a
+    // single bit of the legacy pricing
+    #[allow(clippy::float_cmp)]
+    fn tenancy_load_prices_the_occupancy_knee() {
+        use crate::netsim::fabric::Fabric;
+        use crate::sysconfig::ClusterFaults;
+        let base = SystemParams::smartnic_40g();
+        let sys = base.with_switch_reduction(SwitchParams::netreduce(8, &base.net));
+        let topo = Topology::leaf_spine(2, 4, 4.0);
+        let ranks = topo.contiguous_ranks(8);
+        // idle load is the legacy pricing, bit for bit, for every family
+        let legacy = candidates(&sys, &topo, &ranks, ELEMS, 1.0);
+        let idle = candidates_with(&sys, &topo, &ranks, ELEMS, 1.0, TenancyLoad::idle());
+        assert_eq!(legacy.len(), idle.len());
+        for (a, b) in legacy.iter().zip(&idle) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.predicted.to_bits(), b.predicted.to_bits());
+        }
+        // uncontended, in-switch wins on this shape
+        let solo = plan_for_algo_with(
+            &sys, &topo, &ranks, ELEMS, 1.0, CollectiveAlgo::Auto, TenancyLoad::idle(),
+        );
+        assert_eq!(solo.kind, PlanKind::InSwitch);
+        // pile on tenants: past the knee the cheapest plan is not in-switch
+        let mut flipped = None;
+        for tenants in 2..=64 {
+            let load = TenancyLoad {
+                tenants,
+                table_bytes: sys.switch.reduce_table_bytes,
+                pause_duty: 1.0,
+            };
+            let p = plan_with(&sys, &topo, &ranks, ELEMS, 1.0, load);
+            if p.kind != PlanKind::InSwitch {
+                flipped = Some(tenants);
+                break;
+            }
+        }
+        let knee = flipped.expect("contention must eventually price in-switch out");
+        assert!(knee >= 2, "knee at {knee}");
+        // a granted share below one segment is a per-flow fallback even
+        // when the family is forced
+        let squeezed = TenancyLoad { tenants: 2, table_bytes: 1024.0, pause_duty: 1.0 };
+        let fb = plan_for_algo_with(
+            &sys, &topo, &ranks, ELEMS, 1.0, CollectiveAlgo::SwitchReduce, squeezed,
+        );
+        assert_eq!(fb.kind, PlanKind::Ring);
+        // observed() snapshots a live fabric: empty table -> just this job
+        let fabric = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        let seen = TenancyLoad::observed(&fabric, 0);
+        assert_eq!(seen.tenants, 1);
+        assert_eq!(seen.table_bytes, sys.switch.reduce_table_bytes);
+        assert_eq!(seen.pause_duty, 1.0);
+        // ... and counts a competing holder
+        let mut fabric = fabric;
+        let _ = fabric.table_mut().unwrap().request(9, 1024.0, 1024.0);
+        let seen = TenancyLoad::observed(&fabric, 0);
+        assert_eq!(seen.tenants, 2);
+        assert_eq!(seen.table_bytes, sys.switch.reduce_table_bytes - 1024.0);
+        // the holder itself sees its own slot and stays one tenant of two
+        let held = TenancyLoad::observed(&fabric, 9);
+        assert_eq!(held.tenants, 1);
+        assert_eq!(held.table_bytes, 1024.0);
     }
 
     #[test]

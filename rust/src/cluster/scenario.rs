@@ -11,6 +11,7 @@
 //! degrades every in-flight collective of every job that touches the
 //! faulty node — not just a single ring.
 
+use super::collective::TenancyOutcome;
 use super::job::{JobRuntime, JobSpec};
 use super::{ClusterSim, ClusterState, Event};
 use crate::netsim::audit::{AuditReport, AuditViolation};
@@ -79,6 +80,8 @@ pub struct JobResult {
     pub max_inflight: usize,
     /// worker time spent blocked on unfinished all-reduces
     pub exposed_wait: f64,
+    /// switch-tier admission tally over this job's collectives
+    pub tenancy: TenancyStats,
 }
 
 /// Everything a scenario run produces.
@@ -102,6 +105,27 @@ pub struct ScenarioOutput {
     /// dispatch checks plus the post-quiescence conservation audit);
     /// `None` on unchecked engines.
     pub audit: Option<AuditReport>,
+    /// switch-tier admission tally across every collective of the run
+    pub tenancy: TenancyStats,
+}
+
+/// How the switch tier's per-flow admission control classified the run's
+/// collectives.  `requested` counts flows that asked for in-switch state
+/// (`requested = admitted + evicted + fallback` — the partition the
+/// tenancy property suite pins); flows that never asked (NIC/host
+/// algorithms, incapable fabrics) are not counted.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TenancyStats {
+    /// flows that went through switch-tier admission
+    pub requested: usize,
+    /// flows granted an aggregation-table share
+    pub admitted: usize,
+    /// flows denied after a competitor displaced their job's warm slot
+    pub evicted: usize,
+    /// flows denied on first contact (per-flow host/NIC fallback)
+    pub fallback: usize,
+    /// sticky-idle slots displaced inside the allocator over the run
+    pub table_evictions: u64,
 }
 
 /// What a budget-capped run (see [`run_scenario_capped`]) produces: how
@@ -248,6 +272,82 @@ pub(super) fn audit_conservation(state: &ClusterState, end: Time, report: &mut A
             });
         }
     }
+    // tenancy ledger: the aggregation table may never hold more bytes
+    // than it has, and no two tenants may hold overlapping slot ranges
+    if let Some(table) = state.fabric.table() {
+        let capacity = table.capacity();
+        let reserved: f64 = table.slots().iter().map(|s| s.len).sum();
+        let mut spans: Vec<(f64, f64)> =
+            table.slots().iter().map(|s| (s.offset, s.offset + s.len)).collect();
+        spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let overlapping = spans.windows(2).any(|w| w[0].1 > w[1].0 + 1e-6);
+        if overlapping || reserved > capacity + tol(capacity) {
+            report.record(AuditViolation::TableOvercommit {
+                reserved,
+                capacity,
+                overlapping,
+            });
+        }
+    }
+    // PFC ledger: pause edges recorded within one priority class (one
+    // collective) must stay acyclic — a cycle is a deadlocked reduction
+    // tree — and the configured duty cycle must leave forward progress
+    if state.fabric.pfc_duty() <= 0.0 {
+        report.record(AuditViolation::PauseDeadlock { cid: u32::MAX, cycle_len: 0 });
+    }
+    let mut edges = state.fabric.pause_edges().to_vec();
+    edges.sort_unstable();
+    let mut i = 0;
+    while i < edges.len() {
+        let cid = edges[i].0;
+        let mut j = i;
+        while j < edges.len() && edges[j].0 == cid {
+            j += 1;
+        }
+        if let Some(cycle_len) = directed_cycle(&edges[i..j]) {
+            report.record(AuditViolation::PauseDeadlock { cid, cycle_len });
+        }
+        i = j;
+    }
+}
+
+/// Length (in edges) of some directed cycle among one priority class's
+/// pause edges, or `None` when the class is acyclic.  Edges are
+/// `(cid, from_leaf, to_leaf)` with a shared `cid`.
+fn directed_cycle(edges: &[(u32, usize, usize)]) -> Option<u32> {
+    let n = edges.iter().map(|&(_, a, b)| a.max(b) + 1).max().unwrap_or(0);
+    let mut adj = vec![Vec::new(); n];
+    for &(_, a, b) in edges {
+        adj[a].push(b);
+    }
+    // three-color DFS; `depth` sizes the back-edge cycle
+    fn dfs(u: usize, adj: &[Vec<usize>], color: &mut [u8], depth: &mut [u32]) -> Option<u32> {
+        color[u] = 1;
+        for &v in &adj[u] {
+            match color[v] {
+                0 => {
+                    depth[v] = depth[u] + 1;
+                    if let Some(len) = dfs(v, adj, color, depth) {
+                        return Some(len);
+                    }
+                }
+                1 => return Some(depth[u] + 1 - depth[v]),
+                _ => {}
+            }
+        }
+        color[u] = 2;
+        None
+    }
+    let mut color = vec![0u8; n];
+    let mut depth = vec![0u32; n];
+    (0..n).find_map(|s| {
+        if color[s] == 0 {
+            depth[s] = 0;
+            dfs(s, &adj, &mut color, &mut depth)
+        } else {
+            None
+        }
+    })
 }
 
 /// [`run_scenario`] on an explicit engine backend: the typed calendar
@@ -267,6 +367,19 @@ pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput
     });
 
     let makespan = state.trace.makespan();
+    let job_tenancy = |jid: usize| {
+        let mut t = TenancyStats::default();
+        for c in state.collectives.iter().filter(|c| c.job == jid) {
+            match c.tenancy {
+                TenancyOutcome::NotRequested => {}
+                TenancyOutcome::Admitted { .. } => t.admitted += 1,
+                TenancyOutcome::Evicted => t.evicted += 1,
+                TenancyOutcome::Fallback => t.fallback += 1,
+            }
+        }
+        t.requested = t.admitted + t.evicted + t.fallback;
+        t
+    };
     let jobs: Vec<JobResult> = state
         .jobs
         .iter()
@@ -289,12 +402,24 @@ pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput
                 mean_ar: state.mean_ar_duration(jid),
                 max_inflight: state.max_inflight(jid),
                 exposed_wait: state.trace.lane_time_in(&j.worker_lane, "wait-ar"),
+                tenancy: job_tenancy(jid),
             }
         })
         .collect();
     let port_util = (0..nodes)
         .map(|p| state.fabric.port_utilization(p, makespan))
         .collect();
+    let mut tenancy = TenancyStats::default();
+    for c in &state.collectives {
+        match c.tenancy {
+            TenancyOutcome::NotRequested => {}
+            TenancyOutcome::Admitted { .. } => tenancy.admitted += 1,
+            TenancyOutcome::Evicted => tenancy.evicted += 1,
+            TenancyOutcome::Fallback => tenancy.fallback += 1,
+        }
+    }
+    tenancy.requested = tenancy.admitted + tenancy.evicted + tenancy.fallback;
+    tenancy.table_evictions = state.fabric.table().map_or(0, |t| t.evictions());
     ScenarioOutput {
         jobs,
         makespan,
@@ -306,6 +431,7 @@ pub fn run_scenario_on(spec: &ClusterSpec, engine: EngineKind) -> ScenarioOutput
         peak_queue_depth: sim.peak_pending(),
         partitions: sim.partition_stats().to_vec(),
         audit,
+        tenancy,
         trace: state.trace,
     }
 }
@@ -771,6 +897,138 @@ mod tests {
             .violations()
             .iter()
             .any(|v| matches!(v, AuditViolation::LeakedReservation { .. })));
+    }
+
+    /// One-layer all-reduce forced through the switch tier on a
+    /// reduction-capable fabric — scaffold for the forged tenancy
+    /// negatives below.
+    fn inswitch_spec() -> ClusterSpec {
+        use super::super::CollectiveAlgo;
+        use crate::sysconfig::SwitchParams;
+        let sys = SystemParams::smartnic_40g().with_switch_reduction(SwitchParams {
+            reduce_flops: 1e9,
+            reduce_table_bytes: 16.0 * 1024.0 * 1024.0,
+        });
+        let w = Workload {
+            layers: 1,
+            hidden: 128,
+            batch_per_node: 8,
+        };
+        ClusterSpec::new(sys, 3).with_job(
+            JobSpec::new("tneg", SystemKind::SmartNic { bfp: false }, w, vec![0, 1, 2])
+                .with_layer_algos(vec![CollectiveAlgo::SwitchReduce]),
+        )
+    }
+
+    #[test]
+    fn forged_table_overcommit_yields_structured_violation() {
+        use crate::netsim::switch::TableReservation;
+        let (sim, mut state) = run_state(&inswitch_spec());
+        assert!(
+            matches!(state.collectives[0].tenancy, TenancyOutcome::Admitted { .. }),
+            "a solo tenant must be admitted"
+        );
+        let mut clean = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut clean);
+        assert!(clean.is_clean(), "{}", clean.summary());
+        // forge a second tenant squatting on the whole table: its slot
+        // overlaps the first job's sticky one and oversubscribes capacity
+        let capacity = state.fabric.table().unwrap().capacity();
+        state.fabric.table_mut().unwrap().force_reservation(TableReservation {
+            job: 99,
+            offset: 0.0,
+            len: capacity,
+            active_flows: 1,
+            idle_seq: 0,
+        });
+        let mut report = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut report);
+        let v = report
+            .violations()
+            .iter()
+            .find(|v| matches!(v, AuditViolation::TableOvercommit { .. }))
+            .expect("table-overcommit violation");
+        match v {
+            AuditViolation::TableOvercommit { reserved, capacity: cap, overlapping } => {
+                assert!(*overlapping, "forged slot must overlap the resident one");
+                assert!(reserved > cap);
+                assert_eq!(v.kind(), "table-overcommit");
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn forged_pause_cycle_yields_structured_violation() {
+        use super::super::CollectiveAlgo;
+        use crate::sysconfig::{PfcParams, SwitchParams};
+        let sys = SystemParams::smartnic_40g()
+            .with_switch_reduction(SwitchParams {
+                reduce_flops: 1e9,
+                reduce_table_bytes: 16.0 * 1024.0 * 1024.0,
+            })
+            .with_pfc(PfcParams {
+                pause_rate: 200.0,
+                pause_window: 1.0e-3,
+            });
+        let w = Workload {
+            layers: 1,
+            hidden: 256,
+            batch_per_node: 8,
+        };
+        let topo = Topology::leaf_spine(2, 4, 4.0);
+        let spec = ClusterSpec::new(sys, 8).with_topology(topo).with_job(
+            JobSpec::new("pfc", SystemKind::SmartNic { bfp: false }, w, topo.contiguous_ranks(8))
+                .with_layer_algos(vec![CollectiveAlgo::SwitchReduce]),
+        );
+        let (sim, mut state) = run_state(&spec);
+        // the genuine fold-spine edges form a star into the root leaf —
+        // acyclic by construction, so the audit is clean
+        assert!(
+            !state.fabric.pause_edges().is_empty(),
+            "a paused spanning fold must record pause edges"
+        );
+        let mut clean = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut clean);
+        assert!(clean.is_clean(), "{}", clean.summary());
+        // forge the reverse edge: a 2-cycle within one priority class
+        let &(cid, from, to) = &state.fabric.pause_edges()[0];
+        state.fabric.record_pause_edge(cid, to, from);
+        let mut report = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut report);
+        let v = report
+            .violations()
+            .iter()
+            .find(|v| matches!(v, AuditViolation::PauseDeadlock { .. }))
+            .expect("pause-deadlock violation");
+        match v {
+            AuditViolation::PauseDeadlock { cid: c, cycle_len } => {
+                assert_eq!(*c, cid);
+                assert_eq!(*cycle_len, 2);
+                assert_eq!(v.kind(), "pause-deadlock-free");
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn pause_storm_yields_structured_violation() {
+        use crate::sysconfig::PfcParams;
+        let mut spec = small_ring_spec();
+        // rate · window = 2 ⇒ duty = −1: a saturated pause storm
+        spec.sys = spec.sys.with_pfc(PfcParams {
+            pause_rate: 2000.0,
+            pause_window: 1.0e-3,
+        });
+        // don't drive — a stormed tier makes no forward progress; audit
+        // the freshly-built state directly
+        let (sim, state) = init(&spec, EngineKind::Typed);
+        let mut report = AuditReport::new();
+        audit_conservation(&state, sim.now(), &mut report);
+        assert!(report.violations().iter().any(|v| matches!(
+            v,
+            AuditViolation::PauseDeadlock { cid: u32::MAX, cycle_len: 0 }
+        )));
     }
 
     #[test]

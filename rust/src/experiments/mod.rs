@@ -15,6 +15,7 @@ pub mod fig4b;
 pub mod planner;
 pub mod scaling;
 pub mod table1;
+pub mod tenancy;
 pub mod validate;
 
 use crate::util::json::Json;

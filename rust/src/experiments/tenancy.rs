@@ -1,0 +1,524 @@
+//! E10 — multi-tenant in-switch contention study: tenants × table sizes
+//! × PFC pause rates on one shared leaf–spine reduction tier.
+//!
+//! Up to four disjoint 8-rank jobs (two ranks in each of four leaves, so
+//! every job folds through the *same* spine engine and aggregation
+//! table) post concurrent all-reduces under `CollectiveAlgo::Auto`.  Each
+//! tenant is priced by the planner against the switch tier's *current*
+//! occupancy ([`planner::TenancyLoad`]), then admitted per flow by the
+//! finite [`TableAllocator`].  The study records, per grid point, how the
+//! admission outcomes partition the tenants and where the planner flips
+//! from in-switch reduction to its NIC-ring/hierarchical fallback — the
+//! *occupancy knee*.
+//!
+//! `smartnic tenancy` prints the table and writes `BENCH_tenancy.json`;
+//! the run fails (nonzero exit) unless (a) at the documented default
+//! point (max tenants, table scale 1.0, no pause) the solo tenant wins
+//! in-switch and a later tenant is refused — a knee at tenant ≥ 2, (b)
+//! saturating pause pressure moves the knee no later, (c) an audited
+//! `Checked {4}` re-run of the default point is violation-free and
+//! bit-identical, and (d) a same-seed re-run reproduces the knee and
+//! makespan bit-for-bit.
+//!
+//! [`planner::TenancyLoad`]: crate::cluster::planner::TenancyLoad
+//! [`TableAllocator`]: crate::netsim::switch::TableAllocator
+
+use crate::analytic::model::SystemKind;
+use crate::cluster::{
+    run_scenario, run_scenario_on, ClusterSpec, CollectiveAlgo, EngineKind, JobSpec, Topology,
+};
+use crate::sysconfig::{PfcParams, SwitchParams, SystemParams, Workload};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+/// Fabric shape: every tenant spans all four leaves with two ranks each.
+pub const LEAVES: usize = 4;
+pub const NODES_PER_LEAF: usize = 8;
+
+/// Aggregation-table capacity at `table_scale = 1.0`.
+pub const BASE_TABLE_BYTES: f64 = 8.0 * 1024.0 * 1024.0;
+
+/// Duration of one PFC pause window (s); the sweep varies the rate.
+pub const PAUSE_WINDOW_S: f64 = 1.0e-3;
+
+/// Sweep parameters.
+#[derive(Clone, Debug)]
+pub struct TenancyConfig {
+    /// concurrent tenant counts (≤ [`NODES_PER_LEAF`]/2 so placements
+    /// stay disjoint)
+    pub tenant_counts: Vec<usize>,
+    /// aggregation-table capacities, as multiples of [`BASE_TABLE_BYTES`]
+    pub table_scales: Vec<f64>,
+    /// PFC pause assertions per second (window fixed at
+    /// [`PAUSE_WINDOW_S`])
+    pub pause_rates: Vec<f64>,
+    /// gradient width: hidden² elements per all-reduce
+    pub hidden: usize,
+    /// leaf uplink oversubscription factor
+    pub oversubscription: f64,
+}
+
+impl Default for TenancyConfig {
+    fn default() -> Self {
+        Self {
+            tenant_counts: vec![1, 2, 3, 4],
+            // 1/64 × base sits below one 256 KiB segment: even a solo
+            // tenant is refused (PR 3's per-flow fallback), pinning the
+            // degenerate end of the knee curve
+            table_scales: vec![1.0 / 64.0, 1.0, 4.0],
+            pause_rates: vec![0.0, 100.0, 800.0],
+            hidden: 1024,
+            oversubscription: 4.0,
+        }
+    }
+}
+
+/// One grid point: a full multi-tenant scenario at fixed (tenants, table
+/// scale, pause rate).
+#[derive(Clone, Debug)]
+pub struct TenancyPoint {
+    pub tenants: usize,
+    pub table_scale: f64,
+    pub table_bytes: f64,
+    pub pause_rate: f64,
+    pub pfc_duty: f64,
+    /// per-tenant admission outcome, in post (= job) order
+    pub outcomes: Vec<&'static str>,
+    /// 1-based index of the first tenant *not* admitted in-switch;
+    /// `None` when every tenant was admitted
+    pub knee: Option<usize>,
+    pub admitted: usize,
+    pub evicted: usize,
+    pub fallback: usize,
+    /// sticky-idle table slots displaced by competing tenants
+    pub table_evictions: u64,
+    pub makespan: f64,
+    /// mean AR latency of the first-posted tenant (s)
+    pub mean_ar_first: f64,
+    /// mean AR latency of the last-posted tenant (s)
+    pub mean_ar_last: f64,
+}
+
+/// The knee-defining gates, computed once per study.
+#[derive(Clone, Copy, Debug)]
+pub struct TenancyGates {
+    /// the knee at the documented default point (max tenants, scale 1.0,
+    /// no pause); `None` when the grid does not contain that point
+    pub knee_default: Option<Option<usize>>,
+    /// solo tenant admitted in-switch at (1, 1.0, 0.0)
+    pub solo_inswitch_wins: Option<bool>,
+    /// knee at the max pause rate no later than the unpaused knee
+    pub pause_collapses_knee: Option<bool>,
+    /// audited `Checked {4}` re-run of the default point: zero
+    /// violations and bit-identical makespan
+    pub audited_clean: bool,
+    /// same-seed re-run reproduces knee and makespan bit-for-bit
+    pub deterministic: bool,
+}
+
+impl TenancyGates {
+    /// Overall verdict: every stated gate passes (a gate whose grid
+    /// point is missing reports `None` above and fails here — the study
+    /// must not pass vacuously).
+    pub fn pass(&self) -> bool {
+        matches!(self.knee_default, Some(Some(k)) if k >= 2)
+            && self.solo_inswitch_wins == Some(true)
+            && self.pause_collapses_knee == Some(true)
+            && self.audited_clean
+            && self.deterministic
+    }
+}
+
+/// The shared-tier system under test: a NetReduce-provisioned switch
+/// whose table capacity is overridden to `BASE_TABLE_BYTES × scale`,
+/// with the given PFC pause pattern.
+pub fn tenancy_system(table_scale: f64, pause_rate: f64) -> SystemParams {
+    let base = SystemParams::smartnic_40g();
+    let mut switch = SwitchParams::netreduce(NODES_PER_LEAF, &base.net);
+    switch.reduce_table_bytes = BASE_TABLE_BYTES * table_scale;
+    base.with_switch_reduction(switch).with_pfc(PfcParams {
+        pause_rate,
+        pause_window: PAUSE_WINDOW_S,
+    })
+}
+
+/// Tenant `j`'s placement: ranks `{8l + 2j, 8l + 2j + 1}` in every leaf
+/// `l` — disjoint across tenants, all spanning, all rooted in leaf 0, so
+/// every tenant folds through the same spine engine.
+pub fn tenant_ranks(j: usize) -> Vec<usize> {
+    assert!(2 * (j + 1) <= NODES_PER_LEAF, "tenant {j} does not fit the leaves");
+    (0..LEAVES)
+        .flat_map(|l| [l * NODES_PER_LEAF + 2 * j, l * NODES_PER_LEAF + 2 * j + 1])
+        .collect()
+}
+
+/// The scenario of one grid point: `tenants` identical single-layer jobs
+/// posting at t = 0 under `Auto`, in deterministic job order.
+pub fn point_spec(cfg: &TenancyConfig, tenants: usize, scale: f64, rate: f64) -> ClusterSpec {
+    let sys = tenancy_system(scale, rate);
+    let topo = Topology::leaf_spine(LEAVES, NODES_PER_LEAF, cfg.oversubscription);
+    let w = Workload {
+        layers: 1,
+        hidden: cfg.hidden,
+        batch_per_node: 64,
+    };
+    let mut spec = ClusterSpec::new(sys, topo.nodes()).with_topology(topo);
+    for j in 0..tenants {
+        spec = spec.with_job(
+            JobSpec::new(
+                &format!("tenant{j}"),
+                SystemKind::SmartNic { bfp: false },
+                w,
+                tenant_ranks(j),
+            )
+            .with_layer_algos(vec![CollectiveAlgo::Auto]),
+        );
+    }
+    spec
+}
+
+fn outcome_name(t: &crate::cluster::TenancyStats) -> &'static str {
+    if t.admitted > 0 {
+        "admitted"
+    } else if t.evicted > 0 {
+        "evicted"
+    } else if t.fallback > 0 {
+        "fallback"
+    } else {
+        "not-requested"
+    }
+}
+
+/// Run one grid point on the production engine.
+pub fn run_point(cfg: &TenancyConfig, tenants: usize, scale: f64, rate: f64) -> TenancyPoint {
+    let spec = point_spec(cfg, tenants, scale, rate);
+    let out = run_scenario(&spec);
+    let outcomes: Vec<&'static str> =
+        out.jobs.iter().map(|j| outcome_name(&j.tenancy)).collect();
+    let knee = outcomes.iter().position(|&o| o != "admitted").map(|i| i + 1);
+    TenancyPoint {
+        tenants,
+        table_scale: scale,
+        table_bytes: BASE_TABLE_BYTES * scale,
+        pause_rate: rate,
+        pfc_duty: spec.sys.pfc.duty(),
+        outcomes,
+        knee,
+        admitted: out.tenancy.admitted,
+        evicted: out.tenancy.evicted,
+        fallback: out.tenancy.fallback,
+        table_evictions: out.tenancy.table_evictions,
+        makespan: out.makespan,
+        mean_ar_first: out.jobs[0].mean_ar,
+        mean_ar_last: out.jobs[out.jobs.len() - 1].mean_ar,
+    }
+}
+
+/// Run the full grid, row-major in (scale, rate, tenants) order.
+pub fn run(cfg: &TenancyConfig) -> Vec<TenancyPoint> {
+    let mut out = Vec::new();
+    for &scale in &cfg.table_scales {
+        for &rate in &cfg.pause_rates {
+            for &tenants in &cfg.tenant_counts {
+                out.push(run_point(cfg, tenants, scale, rate));
+            }
+        }
+    }
+    out
+}
+
+fn point_at(
+    points: &[TenancyPoint],
+    tenants: usize,
+    scale: f64,
+    rate: f64,
+) -> Option<&TenancyPoint> {
+    points
+        .iter()
+        .find(|p| p.tenants == tenants && p.table_scale == scale && p.pause_rate == rate)
+}
+
+/// Compute every gate.  The knee/solo/pause gates read the already-run
+/// grid (and report `None` when the grid lacks their point — never a
+/// vacuous pass); the audit and determinism gates re-run the default
+/// point themselves.
+pub fn gates(cfg: &TenancyConfig, points: &[TenancyPoint]) -> TenancyGates {
+    let max_tenants = cfg.tenant_counts.iter().copied().max().unwrap_or(0);
+    let max_rate =
+        cfg.pause_rates.iter().copied().fold(0.0f64, f64::max);
+    let default_point = point_at(points, max_tenants, 1.0, 0.0);
+    let knee_default = default_point.map(|p| p.knee);
+    let solo_inswitch_wins =
+        point_at(points, 1, 1.0, 0.0).map(|p| p.outcomes == ["admitted"]);
+    let pause_collapses_knee = match (default_point, point_at(points, max_tenants, 1.0, max_rate))
+    {
+        (Some(calm), Some(stormy)) if max_rate > 0.0 => {
+            // a missing knee means "never refused" — later than any index
+            let at = |p: &TenancyPoint| p.knee.unwrap_or(usize::MAX);
+            Some(at(stormy) <= at(calm))
+        }
+        _ => None,
+    };
+    let (audited_clean, deterministic) = match default_point {
+        Some(p) => {
+            let spec = point_spec(cfg, p.tenants, p.table_scale, p.pause_rate);
+            let checked = run_scenario_on(&spec, EngineKind::Checked { threads: 4 });
+            let clean = checked
+                .audit
+                .as_ref()
+                .is_some_and(|r| r.is_clean())
+                && checked.makespan.to_bits() == p.makespan.to_bits();
+            let rerun = run_point(cfg, p.tenants, p.table_scale, p.pause_rate);
+            let stable = rerun.knee == p.knee
+                && rerun.outcomes == p.outcomes
+                && rerun.makespan.to_bits() == p.makespan.to_bits();
+            (clean, stable)
+        }
+        None => (false, false),
+    };
+    TenancyGates {
+        knee_default,
+        solo_inswitch_wins,
+        pause_collapses_knee,
+        audited_clean,
+        deterministic,
+    }
+}
+
+pub fn print(points: &[TenancyPoint], cfg: &TenancyConfig, g: &TenancyGates) {
+    let mut t = Table::new(&[
+        "tenants",
+        "table",
+        "pause/s",
+        "duty",
+        "outcomes",
+        "knee",
+        "evictions",
+        "ar first (ms)",
+        "ar last (ms)",
+        "makespan (ms)",
+    ])
+    .with_title(&format!(
+        "tenancy study — {LEAVES}x{NODES_PER_LEAF} leaf-spine at {}:1, shared spine reduction tier",
+        cfg.oversubscription
+    ));
+    for p in points {
+        t.row(&[
+            p.tenants.to_string(),
+            format!("{}x", fnum(p.table_scale, 3)),
+            fnum(p.pause_rate, 0),
+            fnum(p.pfc_duty, 2),
+            p.outcomes.join(","),
+            p.knee.map_or("-".to_string(), |k| k.to_string()),
+            p.table_evictions.to_string(),
+            fnum(p.mean_ar_first * 1e3, 2),
+            fnum(p.mean_ar_last * 1e3, 2),
+            fnum(p.makespan * 1e3, 2),
+        ]);
+    }
+    t.print();
+    match g.knee_default {
+        Some(Some(k)) => println!(
+            "occupancy knee at the default point: tenant {k} refused — {}",
+            if k >= 2 { "PASS" } else { "FAIL (in-switch never won)" }
+        ),
+        Some(None) => println!("occupancy knee at the default point: none — FAIL (never flips)"),
+        None => println!("occupancy knee: not validated (default point not in the sweep) — FAIL"),
+    }
+    let yn = |b: Option<bool>| match b {
+        Some(true) => "PASS",
+        Some(false) => "FAIL",
+        None => "not validated — FAIL",
+    };
+    println!("solo tenant wins in-switch: {}", yn(g.solo_inswitch_wins));
+    println!("pause pressure moves the knee no later: {}", yn(g.pause_collapses_knee));
+    println!(
+        "audited Checked{{4}} re-run clean and bit-identical: {}",
+        if g.audited_clean { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "same-seed re-run reproduces the knee bit-for-bit: {}",
+        if g.deterministic { "PASS" } else { "FAIL" }
+    );
+}
+
+/// Serialize the study to the `BENCH_tenancy.json` schema (pinned by
+/// `rust/tests/bench_schema.rs`, documented in `docs/BENCHMARKS.md`).
+pub fn to_json(cfg: &TenancyConfig, points: &[TenancyPoint], g: &TenancyGates) -> Json {
+    let opt_num = |v: Option<usize>| match v {
+        Some(k) => Json::Num(k as f64),
+        None => Json::Null,
+    };
+    let opt_bool = |v: Option<bool>| match v {
+        Some(b) => Json::Bool(b),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("leaves", Json::Num(LEAVES as f64)),
+                ("nodes_per_leaf", Json::Num(NODES_PER_LEAF as f64)),
+                ("oversubscription", Json::Num(cfg.oversubscription)),
+                ("hidden", Json::Num(cfg.hidden as f64)),
+                ("base_table_bytes", Json::Num(BASE_TABLE_BYTES)),
+                ("pause_window_s", Json::Num(PAUSE_WINDOW_S)),
+                (
+                    "tenant_counts",
+                    Json::Arr(cfg.tenant_counts.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ),
+                (
+                    "table_scales",
+                    Json::Arr(cfg.table_scales.iter().map(|&s| Json::Num(s)).collect()),
+                ),
+                (
+                    "pause_rates",
+                    Json::Arr(cfg.pause_rates.iter().map(|&r| Json::Num(r)).collect()),
+                ),
+            ]),
+        ),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("tenants", Json::Num(p.tenants as f64)),
+                            ("table_scale", Json::Num(p.table_scale)),
+                            ("table_bytes", Json::Num(p.table_bytes)),
+                            ("pause_rate", Json::Num(p.pause_rate)),
+                            ("pfc_duty", Json::Num(p.pfc_duty)),
+                            (
+                                "outcomes",
+                                Json::Arr(
+                                    p.outcomes
+                                        .iter()
+                                        .map(|o| Json::Str(o.to_string()))
+                                        .collect(),
+                                ),
+                            ),
+                            ("knee", opt_num(p.knee)),
+                            ("admitted", Json::Num(p.admitted as f64)),
+                            ("evicted", Json::Num(p.evicted as f64)),
+                            ("fallback", Json::Num(p.fallback as f64)),
+                            ("table_evictions", Json::Num(p.table_evictions as f64)),
+                            ("makespan_s", Json::Num(p.makespan)),
+                            ("mean_ar_first_s", Json::Num(p.mean_ar_first)),
+                            ("mean_ar_last_s", Json::Num(p.mean_ar_last)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "gates",
+            Json::obj(vec![
+                (
+                    "knee_default",
+                    match g.knee_default {
+                        Some(k) => opt_num(k),
+                        None => Json::Null,
+                    },
+                ),
+                ("solo_inswitch_wins", opt_bool(g.solo_inswitch_wins)),
+                ("pause_collapses_knee", opt_bool(g.pause_collapses_knee)),
+                ("audited_clean", Json::Bool(g.audited_clean)),
+                ("deterministic", Json::Bool(g.deterministic)),
+                ("pass", Json::Bool(g.pass())),
+            ]),
+        ),
+    ])
+}
+
+/// Write the study to `path` (repo convention: `BENCH_tenancy.json`,
+/// uploaded as a CI artifact).
+pub fn write_bench(
+    path: &str,
+    cfg: &TenancyConfig,
+    points: &[TenancyPoint],
+    g: &TenancyGates,
+) -> std::io::Result<()> {
+    std::fs::write(path, to_json(cfg, points, g).to_string_pretty())
+}
+
+#[cfg(test)]
+// exact float comparisons pin bit-identical determinism
+#[allow(clippy::float_cmp)]
+mod tests {
+    use super::*;
+
+    /// The default grid restricted to its gate-bearing column.
+    fn gate_cfg() -> TenancyConfig {
+        TenancyConfig {
+            tenant_counts: vec![1, 4],
+            table_scales: vec![1.0],
+            pause_rates: vec![0.0, 800.0],
+            ..TenancyConfig::default()
+        }
+    }
+
+    #[test]
+    fn default_point_passes_every_gate() {
+        let cfg = gate_cfg();
+        let pts = run(&cfg);
+        let g = gates(&cfg, &pts);
+        assert_eq!(g.solo_inswitch_wins, Some(true), "solo tenant must win in-switch");
+        let knee = g.knee_default.expect("default point swept").expect("knee must exist");
+        assert!(knee >= 2, "in-switch must win uncontended (knee {knee})");
+        assert_eq!(g.pause_collapses_knee, Some(true));
+        assert!(g.audited_clean, "Checked{{4}} re-run must be clean and bit-identical");
+        assert!(g.deterministic, "same-seed re-run must reproduce the knee");
+        assert!(g.pass());
+    }
+
+    #[test]
+    fn admission_outcomes_partition_the_tenants() {
+        let cfg = gate_cfg();
+        for p in run(&cfg) {
+            assert_eq!(p.outcomes.len(), p.tenants);
+            // every tenant lands in exactly one bucket ("not-requested"
+            // only when the planner priced in-switch out before asking)
+            let classified = p.admitted
+                + p.evicted
+                + p.fallback
+                + p.outcomes.iter().filter(|&&o| o == "not-requested").count();
+            assert_eq!(classified, p.tenants);
+        }
+    }
+
+    #[test]
+    fn gates_refuse_to_pass_on_a_gridless_sweep() {
+        // a grid without the default point must report None, not PASS
+        let cfg = TenancyConfig {
+            tenant_counts: vec![2],
+            table_scales: vec![4.0],
+            pause_rates: vec![0.0],
+            ..TenancyConfig::default()
+        };
+        let pts = run(&cfg);
+        let g = gates(&cfg, &pts);
+        assert!(g.knee_default.is_none());
+        assert!(g.solo_inswitch_wins.is_none());
+        assert!(!g.pass());
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let cfg = TenancyConfig {
+            tenant_counts: vec![1, 2],
+            table_scales: vec![1.0],
+            pause_rates: vec![0.0],
+            ..TenancyConfig::default()
+        };
+        let pts = run(&cfg);
+        let g = gates(&cfg, &pts);
+        let j = to_json(&cfg, &pts, &g);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed, j);
+        let first = j.get("points").unwrap().idx(0).unwrap();
+        assert_eq!(first.get("tenants").unwrap().as_usize(), Some(1));
+        assert!(first.get("makespan_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("gates").unwrap().get("knee_default").is_some());
+    }
+}

@@ -17,6 +17,7 @@
 //!   cluster-trace  gang-scheduler policy study under churn, BENCH_cluster.json
 //!   scale     hierarchical scaling sweep (6..512 nodes), BENCH_scaling.json
 //!   plan      topology-aware planner study (NIC vs switch offload), BENCH_planner.json
+//!   tenancy   multi-tenant in-switch contention + PFC study, BENCH_tenancy.json
 //!   collectives  collective zoo (broadcast/allgather/reduce-scatter/all-to-all), BENCH_collectives.json
 //!   engine-bench  typed engine vs boxed baseline + parallel scaling, BENCH_engine.json
 //!   bfp       BFP design-space sweep (block size x mantissa bits)
@@ -35,7 +36,7 @@ use ai_smartnic::coordinator::{
 use ai_smartnic::sysconfig::ClusterFaults;
 use ai_smartnic::experiments::{
     ablate, cluster_trace, collectives, engine_bench, fig2a, fig2b, fig4a, fig4b, planner,
-    scaling, table1, validate, write_result,
+    scaling, table1, tenancy, validate, write_result,
 };
 use ai_smartnic::log_info;
 use ai_smartnic::sysconfig::{SystemParams, Workload};
@@ -44,7 +45,7 @@ use ai_smartnic::util::logger::{set_level, Level};
 use ai_smartnic::util::rng::Rng;
 use ai_smartnic::util::table::{fnum, Table};
 
-const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|cluster-trace|scale|plan|collectives|engine-bench|bfp|ablate|all> [--help]";
+const USAGE: &str = "usage: smartnic <fig2a|fig2b|fig4a|fig4b|table1|validate|train|sim|cluster|cluster-trace|scale|plan|tenancy|collectives|engine-bench|bfp|ablate|all> [--help]";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -66,6 +67,7 @@ fn main() {
         "cluster-trace" => cmd_cluster_trace(&rest),
         "scale" => cmd_scale(&rest),
         "plan" => cmd_plan(&rest),
+        "tenancy" => cmd_tenancy(&rest),
         "collectives" => cmd_collectives(&rest),
         "engine-bench" => cmd_engine_bench(&rest),
         "bfp" => cmd_bfp(&rest),
@@ -654,6 +656,96 @@ fn cmd_plan(rest: &[String]) -> i32 {
     }
     if !planner::hierarchical_beats_strided_ring(&points) {
         eprintln!("planner FAILED: hierarchical plan slower than the strided NIC ring");
+        return 1;
+    }
+    0
+}
+
+fn cmd_tenancy(rest: &[String]) -> i32 {
+    let c = Command::new(
+        "tenancy",
+        "multi-tenant in-switch contention study: tenants x table scales x PFC pause rates",
+    )
+    .opt("tenants", "1,2,3,4", "concurrent tenant counts (each <= nodes-per-leaf / 2)")
+    .opt("table-scales", "0.015625,1,4", "aggregation-table capacities, x 8 MiB")
+    .opt("pause-rates", "0,100,800", "PFC pause assertions per second (1 ms windows)")
+    .opt("hidden", "1024", "gradient width (hidden^2 elements per all-reduce)")
+    .opt("oversub", "4", "leaf uplink oversubscription factor")
+    .opt("out", "BENCH_tenancy.json", "machine-readable output path")
+    .flag("no-json", "skip writing the benchmark file");
+    let Ok(a) = parse(c, rest) else { return 2 };
+    let cfg = tenancy::TenancyConfig {
+        tenant_counts: a.get_list("tenants").unwrap_or_default(),
+        table_scales: a.get_list("table-scales").unwrap_or_default(),
+        pause_rates: a.get_list("pause-rates").unwrap_or_default(),
+        hidden: a.get_usize("hidden", 1024),
+        oversubscription: a.get_f64("oversub", 4.0),
+    };
+    // get_list silently drops unparsable entries; a typo must not shrink
+    // the sweep while still reporting PASS
+    let wanted = |raw: &str| raw.split(',').filter(|s| !s.trim().is_empty()).count();
+    for (flag, raw, got) in [
+        ("tenants", a.get_str("tenants", ""), cfg.tenant_counts.len()),
+        ("table-scales", a.get_str("table-scales", ""), cfg.table_scales.len()),
+        ("pause-rates", a.get_str("pause-rates", ""), cfg.pause_rates.len()),
+    ] {
+        if got != wanted(&raw) || got == 0 {
+            eprintln!("--{flag} contains invalid entries: '{raw}'");
+            return 2;
+        }
+    }
+    if cfg.tenant_counts.iter().any(|&t| t == 0 || 2 * t > tenancy::NODES_PER_LEAF) {
+        eprintln!(
+            "--tenants must be in 1..={} so tenant placements stay disjoint",
+            tenancy::NODES_PER_LEAF / 2
+        );
+        return 2;
+    }
+    if cfg.table_scales.iter().any(|&s| !(s >= 0.0 && s.is_finite())) {
+        eprintln!("--table-scales must be finite and non-negative");
+        return 2;
+    }
+    if cfg.pause_rates.iter().any(|&r| !(r >= 0.0 && r.is_finite())) {
+        eprintln!("--pause-rates must be finite and non-negative");
+        return 2;
+    }
+    if cfg.hidden == 0 {
+        eprintln!("--hidden must be positive");
+        return 2;
+    }
+    if !(cfg.oversubscription > 0.0 && cfg.oversubscription.is_finite()) {
+        eprintln!("--oversub must be a positive finite factor");
+        return 2;
+    }
+    let points = tenancy::run(&cfg);
+    let g = tenancy::gates(&cfg, &points);
+    tenancy::print(&points, &cfg, &g);
+    if !a.flag("no-json") {
+        let path = a.get_str("out", "BENCH_tenancy.json");
+        match tenancy::write_bench(&path, &cfg, &points, &g) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("failed to write {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    if !g.pass() {
+        if !matches!(g.knee_default, Some(Some(k)) if k >= 2) {
+            eprintln!("tenancy FAILED: no occupancy knee >= 2 tenants at the default point");
+        }
+        if g.solo_inswitch_wins != Some(true) {
+            eprintln!("tenancy FAILED: solo in-switch tenant does not beat its host fallback");
+        }
+        if g.pause_collapses_knee != Some(true) {
+            eprintln!("tenancy FAILED: heavy PFC pause does not pull the knee earlier");
+        }
+        if !g.audited_clean {
+            eprintln!("tenancy FAILED: audited 4-thread re-run diverged or reported violations");
+        }
+        if !g.deterministic {
+            eprintln!("tenancy FAILED: same-seed re-run did not reproduce the knee bit-for-bit");
+        }
         return 1;
     }
     0

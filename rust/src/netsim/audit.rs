@@ -161,6 +161,31 @@ pub enum AuditViolation {
         /// iterations the trace demanded
         demand: usize,
     },
+    /// the switching tier's aggregation table is over-committed: tenant
+    /// reservations exceed the table's capacity, or two tenants hold
+    /// overlapping byte ranges — admission control must make this
+    /// impossible, so any occurrence is a forged or corrupted allocator
+    TableOvercommit {
+        /// bytes reserved across all tenants
+        reserved: f64,
+        /// the table's capacity in bytes
+        capacity: f64,
+        /// true when two reservations' byte ranges overlap (slot
+        /// aliasing between tenants), false for a pure capacity breach
+        overlapping: bool,
+    },
+    /// PFC pause propagation formed a cycle within one priority class
+    /// (the classic PFC deadlock: every port in the cycle waits for the
+    /// next to unpause), or the configured pause duty cycle is ≤ 0 (a
+    /// pause storm that throttles the reduction tree to a standstill,
+    /// recorded with `cid = u32::MAX` and `cycle_len = 0`)
+    PauseDeadlock {
+        /// the priority class whose pause graph cycles
+        cid: u32,
+        /// number of edges in the detected cycle (0 for a duty-cycle
+        /// storm)
+        cycle_len: u32,
+    },
 }
 
 impl AuditViolation {
@@ -183,6 +208,8 @@ impl AuditViolation {
             AuditViolation::LeakedReservation { .. } => "leaked-reservation",
             AuditViolation::LeakedAllocation { .. } => "leaked-allocation",
             AuditViolation::JobConservation { .. } => "job-conservation",
+            AuditViolation::TableOvercommit { .. } => "table-overcommit",
+            AuditViolation::PauseDeadlock { .. } => "pause-deadlock-free",
         }
     }
 }
@@ -243,6 +270,29 @@ impl fmt::Display for AuditViolation {
                 f,
                 "job {job} finished {done} iterations but the trace demanded {demand}"
             ),
+            AuditViolation::TableOvercommit { reserved, capacity, overlapping } => {
+                if *overlapping {
+                    write!(
+                        f,
+                        "aggregation table slots overlap ({reserved} bytes reserved of {capacity})"
+                    )
+                } else {
+                    write!(
+                        f,
+                        "aggregation table over-committed: {reserved} bytes reserved of {capacity}"
+                    )
+                }
+            }
+            AuditViolation::PauseDeadlock { cid, cycle_len } => {
+                if *cid == u32::MAX {
+                    write!(f, "PFC pause storm: duty cycle <= 0 stalls the reduction tree")
+                } else {
+                    write!(
+                        f,
+                        "PFC pause cycle of {cycle_len} edge(s) in priority class {cid}"
+                    )
+                }
+            }
         }
     }
 }
@@ -532,6 +582,38 @@ mod tests {
         assert_eq!(a.on_schedule(0.5, 1.0), Some(1.0));
         assert_eq!(a.on_schedule(2.0, 1.0), Some(2.0));
         assert_eq!(a.report.total(), 3);
+    }
+
+    #[test]
+    fn tenancy_violations_have_stable_kinds_and_messages() {
+        let over = AuditViolation::TableOvercommit {
+            reserved: 10.0,
+            capacity: 8.0,
+            overlapping: false,
+        };
+        assert_eq!(over.kind(), "table-overcommit");
+        assert_eq!(
+            over.to_string(),
+            "aggregation table over-committed: 10 bytes reserved of 8"
+        );
+        let alias = AuditViolation::TableOvercommit {
+            reserved: 6.0,
+            capacity: 8.0,
+            overlapping: true,
+        };
+        assert_eq!(alias.kind(), "table-overcommit");
+        assert_eq!(
+            alias.to_string(),
+            "aggregation table slots overlap (6 bytes reserved of 8)"
+        );
+        let cycle = AuditViolation::PauseDeadlock { cid: 3, cycle_len: 2 };
+        assert_eq!(cycle.kind(), "pause-deadlock-free");
+        assert_eq!(cycle.to_string(), "PFC pause cycle of 2 edge(s) in priority class 3");
+        let storm = AuditViolation::PauseDeadlock { cid: u32::MAX, cycle_len: 0 };
+        assert_eq!(
+            storm.to_string(),
+            "PFC pause storm: duty cycle <= 0 stalls the reduction tree"
+        );
     }
 
     #[test]

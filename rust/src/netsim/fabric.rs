@@ -30,10 +30,10 @@
 //! incast to a flapping port slows down just like traffic out of it.
 
 use super::link::{Link, Pcie, Server};
-use super::switch::Switch;
+use super::switch::{Switch, TableAllocator};
 use super::topology::Topology;
 use super::Time;
-use crate::sysconfig::{ClusterFaults, SystemParams};
+use crate::sysconfig::{ClusterFaults, PfcParams, SystemParams};
 
 /// All timing resources of one physical node.
 #[derive(Clone, Debug)]
@@ -66,6 +66,11 @@ pub enum Interconnect {
         uplink_reducers: Vec<Server>,
         /// aggregation engine on the spine's egress port toward each leaf
         spine_reducers: Vec<Server>,
+        /// engine-occupancy server per spine engine (port line rate):
+        /// drains the reduced segment out of the engine before
+        /// multicast — tenants folding through one root egress serialize
+        /// here.  Empty without reduction capability.
+        spine_occupancy: Vec<Server>,
         /// per-stage switching latency (same constant as the leaf
         /// switches'; an inter-leaf path pays it three times)
         latency: Time,
@@ -84,6 +89,19 @@ pub struct Fabric {
     /// conservation audit's ledger for switch multicast, which the
     /// reduction ledgers cannot see (replication folds nothing)
     mcast_delivered: f64,
+    /// finite aggregation-table pool of the switching tier, shared by all
+    /// tenants (`None` without reduction capability).  Modeled as one
+    /// fabric-wide pool: every in-switch plan folds through the root
+    /// egress engine's table, so a single shared SRAM budget is the
+    /// first-order contention model.
+    table: Option<TableAllocator>,
+    /// PFC pause behavior of the switching tier (off ⇒ duty 1.0)
+    pfc: PfcParams,
+    /// recorded pause-propagation edges `(cid, from_leaf, to_leaf)`:
+    /// a paused downstream port toward `to_leaf` throttles the uplink out
+    /// of `from_leaf` for priority class `cid`.  The `pause-deadlock-free`
+    /// audit checks each class's graph for cycles.
+    pause_edges: Vec<(u32, usize, usize)>,
 }
 
 /// Result of the source half of a wire path ([`Fabric::hop_split`]):
@@ -142,6 +160,13 @@ impl Fabric {
                         Vec::new()
                     }
                 };
+                let occupancy = || -> Vec<Server> {
+                    if reduce.enabled() {
+                        (0..leaves).map(|_| Server::new(port_bw)).collect()
+                    } else {
+                        Vec::new()
+                    }
+                };
                 Interconnect::LeafSpine {
                     // leaf switches stay plain forwarders: on a leaf–spine
                     // fabric the aggregation engines live on the
@@ -158,6 +183,7 @@ impl Fabric {
                     downlinks: (0..leaves).map(|_| Server::new(bundle_bw)).collect(),
                     uplink_reducers: engines(),
                     spine_reducers: engines(),
+                    spine_occupancy: occupancy(),
                     latency,
                 }
             }
@@ -167,6 +193,9 @@ impl Fabric {
             topology,
             interconnect,
             mcast_delivered: 0.0,
+            table: reduce.enabled().then(|| TableAllocator::new(reduce.reduce_table_bytes)),
+            pfc: sys.pfc,
+            pause_edges: Vec::new(),
         }
     }
 
@@ -287,9 +316,18 @@ impl Fabric {
     /// `leaf`'s aggregated segment through its uplink bundle and fold it
     /// into the spine engine on the egress toward `root`'s leaf.  Returns
     /// the spine fold completion time.
+    ///
+    /// With PFC enabled, the uplink is throttled by the pause duty cycle
+    /// (a paused spine egress propagates `pause_window`-long pauses up the
+    /// reduction tree, first-order: effective uplink bandwidth × duty),
+    /// and the pause edge `(cid, leaf → root's leaf)` is recorded for the
+    /// `pause-deadlock-free` audit.  Each collective's edges form a star
+    /// into its root leaf, so a single class can never cycle — only a
+    /// forged edge set can.
     #[must_use]
     pub fn reduce_fold_spine(
         &mut self,
+        cid: u32,
         leaf: usize,
         root: usize,
         ready: Time,
@@ -297,10 +335,14 @@ impl Fabric {
         elems: f64,
     ) -> Time {
         let root_leaf = self.topology.leaf_of(root);
+        let derate = self.pfc.derate();
+        if self.pfc.enabled() && leaf != root_leaf {
+            self.record_pause_edge(cid, leaf, root_leaf);
+        }
         match &mut self.interconnect {
             Interconnect::Flat(_) => unreachable!("no spine on a flat crossbar"),
             Interconnect::LeafSpine { uplinks, spine_reducers, latency, .. } => {
-                let at_spine = uplinks[leaf].reserve(ready, wire_bytes) + *latency;
+                let at_spine = uplinks[leaf].reserve(ready, wire_bytes * derate) + *latency;
                 spine_reducers[root_leaf].serve(at_spine, elems)
             }
         }
@@ -308,15 +350,77 @@ impl Fabric {
 
     /// In-switch reduction stage 3a (spanning groups): multicast one copy
     /// of the reduced segment from the spine down `leaf`'s bundle.
-    /// Returns arrival at the leaf switch.
+    /// Returns arrival at the leaf switch.  PFC throttles the downlink by
+    /// the same pause duty cycle as the uplink.
     #[must_use]
     pub fn reduce_downlink(&mut self, leaf: usize, ready: Time, wire_bytes: f64) -> Time {
+        let derate = self.pfc.derate();
         match &mut self.interconnect {
             Interconnect::Flat(_) => unreachable!("no spine on a flat crossbar"),
             Interconnect::LeafSpine { downlinks, latency, .. } => {
-                downlinks[leaf].reserve(ready, wire_bytes) + *latency
+                downlinks[leaf].reserve(ready, wire_bytes * derate) + *latency
             }
         }
+    }
+
+    /// Occupy the aggregation engine that served the group rooted at
+    /// `root` for the drain of one reduced segment of `wire_bytes`:
+    /// the root port's engine on the crossbar, the spine engine toward
+    /// the root's leaf on a leaf–spine fabric.  Called once per segment
+    /// when its fold completes, before multicast — two tenants folding
+    /// through one root egress serialize on this server.
+    #[must_use]
+    pub fn reduce_engine_occupancy(&mut self, root: usize, ready: Time, wire_bytes: f64) -> Time {
+        let root_leaf = self.topology.leaf_of(root);
+        match &mut self.interconnect {
+            Interconnect::Flat(sw) => sw.engine_occupancy(root, ready, wire_bytes),
+            Interconnect::LeafSpine { spine_occupancy, .. } => {
+                spine_occupancy[root_leaf].serve(ready, wire_bytes)
+            }
+        }
+    }
+
+    /// PFC pause duty cycle of the switching tier (1.0 with PFC off).
+    #[must_use]
+    pub fn pfc_duty(&self) -> f64 {
+        self.pfc.duty()
+    }
+
+    /// Record a pause-propagation edge for priority class `cid` (also the
+    /// forge hook for the `pause-deadlock-free` audit's negative tests).
+    pub fn record_pause_edge(&mut self, cid: u32, from_leaf: usize, to_leaf: usize) {
+        if !self.pause_edges.contains(&(cid, from_leaf, to_leaf)) {
+            self.pause_edges.push((cid, from_leaf, to_leaf));
+        }
+    }
+
+    /// Every recorded pause-propagation edge `(cid, from_leaf, to_leaf)`.
+    #[must_use]
+    pub fn pause_edges(&self) -> &[(u32, usize, usize)] {
+        &self.pause_edges
+    }
+
+    /// The switching tier's shared aggregation-table allocator (`None`
+    /// without reduction capability).
+    #[must_use]
+    pub fn table(&self) -> Option<&TableAllocator> {
+        self.table.as_ref()
+    }
+
+    /// Mutable access to the table allocator — admission control
+    /// (`request`/`release`/`take_eviction_debt`) and forged-state tests.
+    #[must_use]
+    pub fn table_mut(&mut self) -> Option<&mut TableAllocator> {
+        self.table.as_mut()
+    }
+
+    /// Table bytes a new flow of `job` could obtain right now —
+    /// `INFINITY` on a fabric without in-switch reduction (nothing to
+    /// contend for; the planner's capability gate rejects those plans
+    /// elsewhere).
+    #[must_use]
+    pub fn table_available_to(&self, job: u32) -> f64 {
+        self.table.as_ref().map_or(f64::INFINITY, |t| t.available_to(job))
     }
 
     /// Switch-multicast uplink stage (spanning groups only): ship the
@@ -464,6 +568,7 @@ impl Fabric {
                 downlinks,
                 uplink_reducers,
                 spine_reducers,
+                spine_occupancy,
                 ..
             } => Box::new(
                 leaves
@@ -472,7 +577,8 @@ impl Fabric {
                     .chain(uplinks)
                     .chain(downlinks)
                     .chain(uplink_reducers)
-                    .chain(spine_reducers),
+                    .chain(spine_reducers)
+                    .chain(spine_occupancy),
             ),
         };
         node_servers.chain(interconnect)
@@ -717,13 +823,109 @@ mod tests {
         // each leaf ships its aggregate up and folds at the spine engine
         // toward the root's leaf (uncontended uplink: cut-through start +
         // one latency, then the fold)
-        let s0 = f.reduce_fold_spine(0, 0, f1, bytes, elems);
+        let s0 = f.reduce_fold_spine(0, 0, 0, f1, bytes, elems);
         assert!((s0 - (f1 + lat + elems / rate)).abs() < 1e-12);
         // multicast down and final egress pay one latency per stage
         let down = f.reduce_downlink(1, s0, bytes);
         assert!((down - (s0 + lat)).abs() < 1e-12);
         let at_nic = f.reduce_deliver(3, down, bytes);
         assert!((at_nic - (down + lat)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pfc_derates_spine_stages_and_records_a_star_of_pause_edges() {
+        use crate::sysconfig::{PfcParams, SwitchParams};
+        // near-infinite fold rate so the uplink bundle, not the engine, is
+        // the pinned bottleneck
+        let rate = 1e15;
+        let mk = |pfc: PfcParams| {
+            let sys = SystemParams::smartnic_40g()
+                .with_switch_reduction(SwitchParams {
+                    reduce_flops: rate,
+                    reduce_table_bytes: 16.0 * 1024.0 * 1024.0,
+                })
+                .with_pfc(pfc);
+            (Fabric::with_topology(&sys, Topology::leaf_spine(2, 2, 1.0), &ClusterFaults::none()), sys)
+        };
+        // duty 0.8 (1000 pauses/s x 200 us): uplink/downlink work inflates 1.25x
+        let pfc = PfcParams { pause_rate: 1000.0, pause_window: 200e-6 };
+        let (mut f, sys) = mk(pfc);
+        let (mut f_off, _) = mk(PfcParams::off());
+        assert_eq!(f.pfc_duty(), pfc.duty());
+        assert_eq!(f_off.pfc_duty(), 1.0);
+        let bytes = 1e6;
+        let elems = bytes / 4.0;
+        let bundle = 2.0 * sys.net.effective_bw(); // non-blocking 2-port bundle
+        let lat = sys.net.hop_latency;
+        // contributing leaf 1 folds toward root 0 (leaf 0): a second
+        // reservation on the same uplink queues behind 1.25x the bytes
+        let _ = f.reduce_fold_spine(7, 1, 0, 0.0, bytes, elems);
+        let s = f.reduce_fold_spine(7, 1, 0, 0.0, bytes, elems);
+        let expect = 2.0 * (bytes * pfc.derate()) / bundle + lat + elems / rate;
+        assert!((s - expect).abs() < 1e-12, "{s} vs {expect}");
+        // the pause edge is the star into the root's leaf, deduplicated
+        assert_eq!(f.pause_edges(), &[(7, 1, 0)]);
+        // downlink derates identically; PFC off records nothing
+        let _ = f.reduce_downlink(1, 0.0, bytes);
+        let d = f.reduce_downlink(1, 0.0, bytes);
+        assert!((d - (2.0 * bytes * pfc.derate() / bundle + lat)).abs() < 1e-12);
+        let _ = f_off.reduce_fold_spine(7, 1, 0, 0.0, bytes, elems);
+        assert!(f_off.pause_edges().is_empty());
+        // same-leaf fold never records an edge (no spine pause to see)
+        let (mut f2, _) = mk(pfc);
+        let _ = f2.reduce_fold_spine(3, 0, 0, 0.0, bytes, elems);
+        assert_eq!(f2.pause_edges(), &[] as &[(u32, usize, usize)]);
+    }
+
+    #[test]
+    fn engine_occupancy_serializes_across_the_fabric_api() {
+        use crate::sysconfig::SwitchParams;
+        let sys = SystemParams::smartnic_40g().with_switch_reduction(SwitchParams {
+            reduce_flops: 1e9,
+            reduce_table_bytes: 16.0 * 1024.0 * 1024.0,
+        });
+        let bytes = 1e6;
+        let port = sys.net.effective_bw();
+        // flat: two tenants' segments drain the root-0 engine FIFO
+        let mut flat = Fabric::new(&sys, 4, &ClusterFaults::none());
+        assert_eq!(flat.reduce_engine_occupancy(0, 0.0, bytes), bytes / port);
+        assert_eq!(flat.reduce_engine_occupancy(0, 0.0, bytes), 2.0 * bytes / port);
+        assert_eq!(flat.reduce_engine_occupancy(1, 0.0, bytes), bytes / port);
+        // leaf–spine: the spine engine toward the root's leaf serializes
+        let topo = Topology::leaf_spine(2, 2, 1.0);
+        let mut ls = Fabric::with_topology(&sys, topo, &ClusterFaults::none());
+        assert_eq!(ls.reduce_engine_occupancy(0, 0.0, bytes), bytes / port);
+        // root 1 lives on the same leaf: same occupancy server
+        assert_eq!(ls.reduce_engine_occupancy(1, 0.0, bytes), 2.0 * bytes / port);
+        // roots on leaf 1 are independent
+        assert_eq!(ls.reduce_engine_occupancy(2, 0.0, bytes), bytes / port);
+        // occupancy servers join the audit enumeration (4 + 4 + 4 flat;
+        // per-leaf down-ports + bundles + engines + occupancy on LS)
+        assert_eq!(Fabric::new(&sys, 4, &ClusterFaults::none()).servers().count(), 4 * 5 + 12);
+        let ls2 = Fabric::with_topology(&sys, Topology::leaf_spine(2, 3, 3.0), &ClusterFaults::none());
+        assert_eq!(ls2.servers().count(), 6 * 5 + 2 * (3 + 1 + 1 + 1 + 1 + 1));
+    }
+
+    #[test]
+    fn table_pool_is_shared_and_absent_without_reduction() {
+        use crate::sysconfig::SwitchParams;
+        let plain = Fabric::new(&SystemParams::smartnic_40g(), 4, &ClusterFaults::none());
+        assert!(plain.table().is_none());
+        assert_eq!(plain.table_available_to(0), f64::INFINITY);
+        let cap = 1024.0;
+        let sys = SystemParams::smartnic_40g().with_switch_reduction(SwitchParams {
+            reduce_flops: 1e9,
+            reduce_table_bytes: cap,
+        });
+        let mut f = Fabric::new(&sys, 4, &ClusterFaults::none());
+        assert_eq!(f.table().unwrap().capacity(), cap);
+        assert_eq!(f.table_available_to(0), cap);
+        let got = f.table_mut().unwrap().request(0, cap, 256.0);
+        assert_eq!(got, cap);
+        // the pool is fabric-wide: a second tenant sees nothing left
+        assert_eq!(f.table_available_to(1), 0.0);
+        f.table_mut().unwrap().release(0);
+        assert_eq!(f.table_available_to(1), cap, "idle slot is evictable");
     }
 
     #[test]

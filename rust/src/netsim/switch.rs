@@ -19,6 +19,12 @@ pub struct Switch {
     /// per-egress-port aggregation engines; empty on a plain forwarding
     /// switch (the seed behavior)
     reducers: Vec<Server>,
+    /// per-engine occupancy servers (one per port, port line rate): after
+    /// a fold completes, the engine streams the reduced segment out of
+    /// its egress and is *occupied* for that drain — two tenants folding
+    /// through one root egress genuinely serialize here, not just on the
+    /// fold arithmetic.  Empty without reduction capability.
+    occupancy: Vec<Server>,
     /// per-port aggregation table capacity (bytes of f32 accumulators)
     table_bytes: f64,
     /// port-to-port forwarding latency
@@ -44,6 +50,7 @@ impl Switch {
                 .map(|p| Server::new(port_bw_bytes_per_s * scale_of(p)))
                 .collect(),
             reducers: Vec::new(),
+            occupancy: Vec::new(),
             table_bytes: 0.0,
             latency,
         }
@@ -56,6 +63,8 @@ impl Switch {
     pub fn with_reduction(mut self, reduce_flops: f64, table_bytes: f64) -> Self {
         if reduce_flops > 0.0 && table_bytes > 0.0 {
             self.reducers = (0..self.egress.len()).map(|_| Server::new(reduce_flops)).collect();
+            // one occupancy server per engine at its port's line rate
+            self.occupancy = self.egress.iter().map(|e| Server::new(e.rate)).collect();
             self.table_bytes = table_bytes;
         }
         self
@@ -82,6 +91,17 @@ impl Switch {
     pub fn reduce_contribution(&mut self, port: usize, arrival: Time, elems: f64) -> Time {
         assert!(self.reduce_capable(), "switch has no reduction capability");
         self.reducers[port].serve(arrival, elems)
+    }
+
+    /// Occupy `port`'s aggregation engine for the drain of a reduced
+    /// segment of `wire_bytes` starting no earlier than `ready`; returns
+    /// the time the engine is free again (= the earliest the segment's
+    /// multicast/downlink can start).  FIFO across tenants: two jobs
+    /// folding through one root egress serialize here.
+    #[must_use]
+    pub fn engine_occupancy(&mut self, port: usize, ready: Time, wire_bytes: f64) -> Time {
+        assert!(self.reduce_capable(), "switch has no reduction capability");
+        self.occupancy[port].serve(ready, wire_bytes)
     }
 
     pub fn ports(&self) -> usize {
@@ -131,10 +151,10 @@ impl Switch {
     }
 
     /// Every FIFO server in the switch (egress ports, then aggregation
-    /// engines) — enumerated by the quiescence audit's leaked-reservation
-    /// scan.
+    /// engines, then engine-occupancy servers) — enumerated by the
+    /// quiescence audit's leaked-reservation scan.
     pub fn servers(&self) -> impl Iterator<Item = &Server> + '_ {
-        self.egress.iter().chain(self.reducers.iter())
+        self.egress.iter().chain(self.reducers.iter()).chain(self.occupancy.iter())
     }
 
     pub fn reset(&mut self) {
@@ -144,6 +164,212 @@ impl Switch {
         for r in &mut self.reducers {
             r.reset();
         }
+        for o in &mut self.occupancy {
+            o.reset();
+        }
+    }
+}
+
+/// One job's reservation in a finite aggregation table.
+///
+/// Reservations are per *job*, not per flow: concurrent layer collectives
+/// of one job share the job's slot (the realistic model — they share the
+/// switch's aggregation context — and the one that keeps a solo multi-layer
+/// job's timing identical to the unlimited-table seed behavior).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TableReservation {
+    pub job: u32,
+    /// byte offset of the slot inside the table
+    pub offset: f64,
+    /// granted bytes
+    pub len: f64,
+    /// flows of this job currently folding through the slot; 0 ⇒ idle
+    /// (sticky: the slot stays warm until evicted by a competing tenant)
+    pub active_flows: u32,
+    /// LRU stamp — bumped when the slot goes idle; the lowest idle stamp
+    /// is evicted first
+    pub idle_seq: u64,
+}
+
+/// Finite aggregation-table allocator (NetReduce-style table *pressure*,
+/// arXiv:2009.09736 Sec. 4): tenants request table bytes per flow,
+/// admission grants what fits (after evicting LRU idle slots of other
+/// jobs), and a tenant whose request can't fit even one segment is denied
+/// — that flow falls back to its host/NIC plan, per-flow, not per-switch.
+///
+/// Deterministic by construction: slots live in a `Vec` in insertion
+/// order, placement is first-fit with compaction fallback, eviction is
+/// strictly by `idle_seq`.  No wall-clock, no hashing.
+#[derive(Clone, Debug, Default)]
+pub struct TableAllocator {
+    capacity: f64,
+    slots: Vec<TableReservation>,
+    next_seq: u64,
+    evictions: u64,
+    /// jobs owing an eviction: their *next* denied request reports
+    /// `Evicted` (they lost a warm slot) rather than plain `Fallback`
+    evicted_jobs: Vec<u32>,
+}
+
+impl TableAllocator {
+    #[must_use]
+    pub fn new(capacity: f64) -> Self {
+        Self { capacity, ..Self::default() }
+    }
+
+    #[must_use]
+    pub fn capacity(&self) -> f64 {
+        self.capacity
+    }
+
+    /// Unreserved bytes.
+    #[must_use]
+    pub fn free_bytes(&self) -> f64 {
+        self.capacity - self.slots.iter().map(|s| s.len).sum::<f64>()
+    }
+
+    /// Bytes `job` could obtain right now: its own slot if it holds one,
+    /// else free bytes plus every *other* job's idle (evictable) bytes.
+    #[must_use]
+    pub fn available_to(&self, job: u32) -> f64 {
+        if let Some(s) = self.slots.iter().find(|s| s.job == job) {
+            return s.len;
+        }
+        self.free_bytes()
+            + self
+                .slots
+                .iter()
+                .filter(|s| s.job != job && s.active_flows == 0)
+                .map(|s| s.len)
+                .sum::<f64>()
+    }
+
+    /// Total evictions performed since construction.
+    #[must_use]
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Active tenants: jobs currently holding a slot.
+    #[must_use]
+    pub fn tenants(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Current reservations (audit / test visibility).
+    #[must_use]
+    pub fn slots(&self) -> &[TableReservation] {
+        &self.slots
+    }
+
+    /// Request up to `want` bytes for a flow of `job`, in multiples of
+    /// `unit` (one segment).  Returns granted bytes, 0.0 = denied.
+    ///
+    /// - A job already holding a slot shares it (refcount++) — same-job
+    ///   flows never contend with each other for the table.
+    /// - Otherwise LRU *idle* slots of other jobs are evicted until the
+    ///   request fits or nothing evictable remains; the grant is
+    ///   `min(want, free)` floored to a `unit` multiple, denied if < unit.
+    pub fn request(&mut self, job: u32, want: f64, unit: f64) -> f64 {
+        assert!(want > 0.0 && unit > 0.0 && want >= unit, "malformed table request");
+        if let Some(s) = self.slots.iter_mut().find(|s| s.job == job) {
+            s.active_flows += 1;
+            return s.len;
+        }
+        while self.free_bytes() < want {
+            let victim = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.active_flows == 0)
+                .min_by_key(|(_, s)| s.idle_seq)
+                .map(|(i, _)| i);
+            let Some(i) = victim else { break };
+            let evicted = self.slots.remove(i);
+            self.evictions += 1;
+            if !self.evicted_jobs.contains(&evicted.job) {
+                self.evicted_jobs.push(evicted.job);
+            }
+        }
+        let grant = (want.min(self.free_bytes()) / unit).floor() * unit;
+        if grant < unit {
+            return 0.0;
+        }
+        let offset = self.place(grant);
+        self.slots.push(TableReservation {
+            job,
+            offset,
+            len: grant,
+            active_flows: 1,
+            idle_seq: 0,
+        });
+        grant
+    }
+
+    /// First-fit offset for `len` bytes among current slots; falls back to
+    /// deterministic compaction (slots keep their order, packed from 0).
+    fn place(&mut self, len: f64) -> f64 {
+        let mut by_offset: Vec<&TableReservation> = self.slots.iter().collect();
+        by_offset.sort_by(|a, b| a.offset.total_cmp(&b.offset));
+        let mut cursor = 0.0;
+        for s in &by_offset {
+            if s.offset - cursor >= len {
+                return cursor;
+            }
+            cursor = s.offset + s.len;
+        }
+        if self.capacity - cursor >= len {
+            return cursor;
+        }
+        // fragmented: compact in place (pure bookkeeping — offsets only
+        // matter to the overcommit audit, not to timing)
+        let mut packed = 0.0;
+        let order: Vec<u32> = by_offset.iter().map(|s| s.job).collect();
+        for job in order {
+            let s = self.slots.iter_mut().find(|s| s.job == job).unwrap();
+            s.offset = packed;
+            packed += s.len;
+        }
+        packed
+    }
+
+    /// A flow of `job` finished with the table.  The slot refcount drops;
+    /// at zero it goes idle (sticky — evictable but warm for the job's
+    /// next flow).
+    pub fn release(&mut self, job: u32) {
+        if let Some(s) = self.slots.iter_mut().find(|s| s.job == job) {
+            assert!(s.active_flows > 0, "table release without a matching request");
+            s.active_flows -= 1;
+            if s.active_flows == 0 {
+                self.next_seq += 1;
+                s.idle_seq = self.next_seq;
+            }
+        }
+    }
+
+    /// Consume `job`'s eviction debt: true exactly once after the job's
+    /// warm slot was evicted by a competing tenant — the denial it next
+    /// suffers is classified `Evicted`, not plain `Fallback`.
+    pub fn take_eviction_debt(&mut self, job: u32) -> bool {
+        if let Some(i) = self.evicted_jobs.iter().position(|&j| j == job) {
+            self.evicted_jobs.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Forge a raw reservation (test hook for the overcommit audit —
+    /// bypasses placement and capacity checks entirely).
+    pub fn force_reservation(&mut self, r: TableReservation) {
+        self.slots.push(r);
+    }
+
+    pub fn reset(&mut self) {
+        self.slots.clear();
+        self.next_seq = 0;
+        self.evictions = 0;
+        self.evicted_jobs.clear();
     }
 }
 
@@ -279,6 +505,104 @@ mod tests {
     fn reducing_on_a_plain_switch_panics() {
         let mut sw = Switch::new(2, BW, 0.0);
         let _ = sw.reduce_contribution(0, 0.0, 1.0);
+    }
+
+    #[test]
+    fn engine_occupancy_serializes_tenants_on_one_root_egress() {
+        // two tenants' reduced segments draining the same engine at the
+        // same instant: the second waits out the first's full drain
+        let mut sw = Switch::new(4, BW, 0.0).with_reduction(1e9, 4e6);
+        let a = sw.engine_occupancy(0, 0.0, MB);
+        let b = sw.engine_occupancy(0, 0.0, MB);
+        assert_eq!(a, MB / BW);
+        assert_eq!(b, 2.0 * MB / BW);
+        // a different engine is independent
+        assert_eq!(sw.engine_occupancy(1, 0.0, MB), MB / BW);
+        // occupancy servers reset and are enumerated by the audit scan
+        sw.reset();
+        assert_eq!(sw.engine_occupancy(0, 0.0, MB), MB / BW);
+        assert_eq!(sw.servers().count(), 4 + 4 + 4);
+        assert_eq!(Switch::new(4, BW, 0.0).servers().count(), 4);
+    }
+
+    #[test]
+    fn table_allocator_grants_shares_and_floors_to_units() {
+        let mut t = TableAllocator::new(10.0);
+        // job 0 wants 8 units of 1 byte: full grant
+        assert_eq!(t.request(0, 8.0, 1.0), 8.0);
+        assert_eq!(t.free_bytes(), 2.0);
+        // job 1 wants 4: job 0 is busy (not evictable), grant floors to 2
+        assert_eq!(t.request(1, 4.0, 1.0), 2.0);
+        // job 2 wants even one 1-byte unit... but unit is 2: denied
+        assert_eq!(t.request(2, 2.0, 2.0), 0.0);
+        assert!(!t.take_eviction_debt(2), "a plain denial is not an eviction");
+        // a second flow of job 0 shares the existing slot (refcount, same grant)
+        assert_eq!(t.request(0, 8.0, 1.0), 8.0);
+        assert_eq!(t.tenants(), 2);
+        assert_eq!(t.evictions(), 0);
+    }
+
+    #[test]
+    fn lru_idle_slots_are_evicted_and_leave_a_debt() {
+        let mut t = TableAllocator::new(8.0);
+        assert_eq!(t.request(0, 4.0, 1.0), 4.0);
+        assert_eq!(t.request(1, 4.0, 1.0), 4.0);
+        t.release(0); // job 0 idle first → LRU victim
+        t.release(1);
+        // job 2 needs 6: evicts job 0 (LRU), then job 1
+        assert_eq!(t.request(2, 6.0, 1.0), 6.0);
+        assert_eq!(t.evictions(), 2);
+        // both evicted jobs carry a one-shot debt
+        assert!(t.take_eviction_debt(0));
+        assert!(!t.take_eviction_debt(0));
+        assert!(t.take_eviction_debt(1));
+        // an active slot is never evicted
+        let mut t2 = TableAllocator::new(4.0);
+        assert_eq!(t2.request(7, 4.0, 1.0), 4.0);
+        assert_eq!(t2.request(8, 4.0, 1.0), 0.0, "active tenant must not be evicted");
+        assert_eq!(t2.evictions(), 0);
+    }
+
+    #[test]
+    fn available_to_counts_own_slot_free_and_idle_bytes() {
+        let mut t = TableAllocator::new(10.0);
+        assert_eq!(t.request(0, 4.0, 1.0), 4.0);
+        assert_eq!(t.request(1, 3.0, 1.0), 3.0);
+        // holder sees its own slot
+        assert_eq!(t.available_to(0), 4.0);
+        // outsider sees free bytes only while both tenants are active
+        assert_eq!(t.available_to(9), 3.0);
+        t.release(1);
+        // ... plus job 1's now-idle slot
+        assert_eq!(t.available_to(9), 6.0);
+        assert_eq!(t.available_to(0), 4.0, "own slot still wins");
+    }
+
+    #[test]
+    fn placement_is_first_fit_with_deterministic_compaction() {
+        let mut t = TableAllocator::new(10.0);
+        assert_eq!(t.request(0, 4.0, 1.0), 4.0);
+        assert_eq!(t.request(1, 3.0, 1.0), 3.0);
+        assert_eq!(t.slots()[0].offset, 0.0);
+        assert_eq!(t.slots()[1].offset, 4.0);
+        // free the middle, leaving a 4-byte hole at 0 after job 0 leaves
+        t.release(0);
+        assert_eq!(t.request(2, 3.0, 1.0), 3.0);
+        assert_eq!(t.slots().last().unwrap().offset, 7.0, "first fit uses the tail gap");
+        // now a request that only fits after eviction + compaction
+        t.release(2);
+        let mut t = TableAllocator::new(10.0);
+        let _ = t.request(0, 3.0, 1.0);
+        let _ = t.request(1, 4.0, 1.0);
+        t.release(0);
+        // evicting job 0 leaves holes [0,3) and [7,10): 5 bytes only fit compacted
+        assert_eq!(t.request(2, 5.0, 1.0), 5.0);
+        let s1 = t.slots().iter().find(|s| s.job == 1).unwrap();
+        assert_eq!(s1.offset, 0.0, "compaction packs the survivor to 0");
+        assert_eq!(t.slots().iter().find(|s| s.job == 2).unwrap().offset, 4.0);
+        // no overlap, within capacity
+        let total: f64 = t.slots().iter().map(|s| s.len).sum();
+        assert!(total <= t.capacity());
     }
 
     #[test]

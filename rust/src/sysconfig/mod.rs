@@ -212,6 +212,61 @@ impl SwitchParams {
     }
 }
 
+/// First-order RoCE-style priority flow control on the switching tier:
+/// a congested downstream port asserts PFC pause frames at `pause_rate`
+/// per second, each stalling the upstream stage for one `pause_window`.
+/// The fabric applies the resulting duty cycle as a deterministic
+/// derating of the reduction tree's spine legs
+/// (`Fabric::{reduce_fold_spine,reduce_downlink}`), and
+/// `analytic::model::inswitch_ar_time_contended` prices the same factor
+/// so the planner sees it.  `off()` (both fields 0, duty 1.0) is the
+/// seed behavior.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PfcParams {
+    /// pause assertions per second seen by a switch-tier port
+    pub pause_rate: f64,
+    /// duration of one pause window (s)
+    pub pause_window: f64,
+}
+
+impl PfcParams {
+    /// No flow-control backpressure (duty 1.0) — the seed behavior.
+    pub fn off() -> Self {
+        Self {
+            pause_rate: 0.0,
+            pause_window: 0.0,
+        }
+    }
+
+    /// Is any pause throttling configured?
+    #[must_use]
+    pub fn enabled(&self) -> bool {
+        self.pause_rate > 0.0 && self.pause_window > 0.0
+    }
+
+    /// Transmitting fraction of wall-clock under the pause pattern:
+    /// `1 − rate·window`.  Not clamped — a non-positive duty is a
+    /// saturated pause storm, which the audit reports as a
+    /// `pause-deadlock-free` violation rather than silently flooring.
+    #[must_use]
+    pub fn duty(&self) -> f64 {
+        1.0 - self.pause_rate * self.pause_window
+    }
+
+    /// Work-inflation factor for a paused stage (`1/duty`); infinite
+    /// when the duty is non-positive, so a pause storm surfaces as a
+    /// non-finite time instead of a silently wrong one.
+    #[must_use]
+    pub fn derate(&self) -> f64 {
+        let d = self.duty();
+        if d > 0.0 {
+            1.0 / d
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
 /// Full system description for one experiment configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct SystemParams {
@@ -220,6 +275,8 @@ pub struct SystemParams {
     pub nic: NicHwParams,
     /// reduction capability of the switching tier (passthrough = none)
     pub switch: SwitchParams,
+    /// PFC pause behavior of the switching tier (off = none)
+    pub pfc: PfcParams,
     /// MPI/software per-message overhead for host all-reduce (s per step)
     pub host_step_overhead: f64,
     /// driver overhead for launching one non-blocking NIC all-reduce (s)
@@ -248,6 +305,7 @@ impl SystemParams {
             },
             nic: NicHwParams::arria10_40g(), // unused in baseline
             switch: SwitchParams::passthrough(),
+            pfc: PfcParams::off(),
             host_step_overhead: 15.0e-6,
             nic_request_overhead: 5.0e-6,
         }
@@ -269,6 +327,7 @@ impl SystemParams {
             },
             nic: NicHwParams::arria10_40g(),
             switch: SwitchParams::passthrough(),
+            pfc: PfcParams::off(),
             host_step_overhead: 15.0e-6,
             nic_request_overhead: 5.0e-6,
         }
@@ -286,6 +345,17 @@ impl SystemParams {
     #[must_use]
     pub fn with_switch_reduction(mut self, switch: SwitchParams) -> Self {
         self.switch = switch;
+        self
+    }
+
+    /// Same system with a PFC pause pattern on the switching tier.
+    #[must_use]
+    pub fn with_pfc(mut self, pfc: PfcParams) -> Self {
+        assert!(
+            pfc.pause_rate >= 0.0 && pfc.pause_window >= 0.0,
+            "PFC pause rate/window must be non-negative"
+        );
+        self.pfc = pfc;
         self
     }
 }
@@ -495,6 +565,28 @@ mod tests {
     #[should_panic(expected = "not in (0, 1]")]
     fn beta_out_of_range_panics() {
         let _ = SystemParams::smartnic_40g().net.with_beta(1.5);
+    }
+
+    #[test]
+    fn pfc_duty_and_derate() {
+        let off = PfcParams::off();
+        assert!(!off.enabled());
+        assert_eq!(off.duty(), 1.0);
+        assert_eq!(off.derate(), 1.0);
+        // presets ship with PFC off — the seed behavior is pinned
+        assert_eq!(SystemParams::smartnic_40g().pfc, PfcParams::off());
+        assert_eq!(SystemParams::baseline_100g().pfc, PfcParams::off());
+        // 1000 pauses/s x 200 us pause window: 20% of wall-clock paused
+        let pfc = PfcParams { pause_rate: 1000.0, pause_window: 200.0e-6 };
+        assert!(pfc.enabled());
+        assert!((pfc.duty() - 0.8).abs() < 1e-12);
+        assert!((pfc.derate() - 1.25).abs() < 1e-12);
+        // a saturated pause storm derates to infinity, not a negative time
+        let storm = PfcParams { pause_rate: 1000.0, pause_window: 2.0e-3 };
+        assert!(storm.duty() <= 0.0);
+        assert_eq!(storm.derate(), f64::INFINITY);
+        let sys = SystemParams::smartnic_40g().with_pfc(pfc);
+        assert_eq!(sys.pfc, pfc);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 // (`BENCH_scaling.json` from `smartnic scale`, `BENCH_planner.json` from
 // `smartnic plan`, `BENCH_engine.json` from `smartnic engine-bench`,
 // `BENCH_cluster.json` from `smartnic cluster-trace`,
-// `BENCH_collectives.json` from `smartnic collectives`): the exact key
+// `BENCH_collectives.json` from `smartnic collectives`,
+// `BENCH_tenancy.json` from `smartnic tenancy`): the exact key
 // structure is pinned here and every document must survive a parse
 // round-trip, so the artifact shape cannot drift without a test failure.
 //
@@ -12,7 +13,7 @@
 // that document — the cross-reference is deliberate so docs and tests
 // cannot drift silently.
 
-use ai_smartnic::experiments::{cluster_trace, collectives, engine_bench, planner, scaling};
+use ai_smartnic::experiments::{cluster_trace, collectives, engine_bench, planner, scaling, tenancy};
 use ai_smartnic::util::json::Json;
 
 /// Assert that every `/`-separated key path resolves in `doc`; a leading
@@ -290,6 +291,93 @@ fn bench_collectives_schema_is_pinned() {
         assert!(p.get("measured_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(p.get("gated").unwrap().as_bool().is_some());
     }
+}
+
+#[test]
+fn bench_tenancy_schema_is_pinned() {
+    // a 1x1x1 grid containing the default point (max tenants, scale 1.0,
+    // rate 0): the knee/solo/audit/determinism gates are all decidable
+    let cfg = tenancy::TenancyConfig {
+        tenant_counts: vec![1],
+        table_scales: vec![1.0],
+        pause_rates: vec![0.0],
+        ..tenancy::TenancyConfig::default()
+    };
+    let points = tenancy::run(&cfg);
+    assert_eq!(points.len(), 1, "one grid point");
+    let g = tenancy::gates(&cfg, &points);
+    let j = tenancy::to_json(&cfg, &points, &g);
+    let mut paths = vec![
+        "config/leaves".to_string(),
+        "config/nodes_per_leaf".to_string(),
+        "config/oversubscription".to_string(),
+        "config/hidden".to_string(),
+        "config/base_table_bytes".to_string(),
+        "config/pause_window_s".to_string(),
+        "config/tenant_counts".to_string(),
+        "config/table_scales".to_string(),
+        "config/pause_rates".to_string(),
+        "gates/knee_default".to_string(),
+        "gates/solo_inswitch_wins".to_string(),
+        "gates/pause_collapses_knee".to_string(),
+        "gates/audited_clean".to_string(),
+        "gates/deterministic".to_string(),
+        "gates/pass".to_string(),
+    ];
+    for key in [
+        "tenants",
+        "table_scale",
+        "table_bytes",
+        "pause_rate",
+        "pfc_duty",
+        "outcomes",
+        "knee",
+        "admitted",
+        "evicted",
+        "fallback",
+        "table_evictions",
+        "makespan_s",
+        "mean_ar_first_s",
+        "mean_ar_last_s",
+    ] {
+        paths.push(format!("points/0/{key}"));
+    }
+    let path_refs: Vec<&str> = paths.iter().map(String::as_str).collect();
+    assert_paths(&j, &path_refs);
+    let parsed = Json::parse(&j.to_string_pretty()).expect("BENCH_tenancy must parse");
+    assert_eq!(parsed, j);
+    // the gate fields carry the types the CI gate reads: the decidable
+    // gates are booleans, while a sweep with no pause rate > 0 cannot
+    // decide the pause gate — Null, never a vacuous PASS
+    let gates = j.get("gates").unwrap();
+    assert!(gates.get("solo_inswitch_wins").unwrap().as_bool().is_some());
+    assert!(gates.get("audited_clean").unwrap().as_bool().is_some());
+    assert!(gates.get("deterministic").unwrap().as_bool().is_some());
+    assert_eq!(gates.get("pause_collapses_knee"), Some(&Json::Null));
+    // ... and a solo grid has no knee, so the headline gate cannot pass
+    assert_eq!(gates.get("pass").unwrap().as_bool(), Some(false));
+    // per-point leaves keep the types the plots read
+    let p = j.get("points").unwrap().idx(0).unwrap();
+    assert_eq!(p.get("tenants").unwrap().as_usize(), Some(1));
+    assert!(p.get("makespan_s").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(p.get("outcomes").unwrap().idx(0).unwrap().as_str(), Some("admitted"));
+
+    // null-not-vacuous for the rest: a grid missing the (max tenants,
+    // scale 1.0, rate 0) point cannot decide the knee or solo gates
+    let cfg2 = tenancy::TenancyConfig {
+        tenant_counts: vec![2],
+        table_scales: vec![4.0],
+        pause_rates: vec![0.0],
+        ..tenancy::TenancyConfig::default()
+    };
+    let points2 = tenancy::run(&cfg2);
+    let g2 = tenancy::gates(&cfg2, &points2);
+    let j2 = tenancy::to_json(&cfg2, &points2, &g2);
+    let gates2 = j2.get("gates").unwrap();
+    for key in ["knee_default", "solo_inswitch_wins", "pause_collapses_knee"] {
+        assert_eq!(gates2.get(key), Some(&Json::Null), "gate '{key}' must be Null, not vacuous");
+    }
+    assert_eq!(gates2.get("pass").unwrap().as_bool(), Some(false));
 }
 
 #[test]

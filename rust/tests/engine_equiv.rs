@@ -30,7 +30,7 @@ use ai_smartnic::collective::Scheme;
 use ai_smartnic::coordinator::simulate_iteration_unified_on;
 use ai_smartnic::experiments::planner::{leaf_shape, planner_system};
 use ai_smartnic::netsim::engine::{Sim, World};
-use ai_smartnic::sysconfig::{ClusterFaults, SystemParams, Workload};
+use ai_smartnic::sysconfig::{ClusterFaults, PfcParams, SystemParams, Workload};
 use ai_smartnic::util::stats::{percentile, rel_err};
 
 /// Node counts every plan family is pinned at.
@@ -754,6 +754,127 @@ fn assert_trace_bits_equal(a: &TraceOutput, b: &TraceOutput, label: &str) {
         assert_eq!(x.preemptions, y.preemptions, "{label}/{}: preemptions", x.name);
         assert_eq!(x.restarts, y.restarts, "{label}/{}: restarts", x.name);
         assert_eq!(x.iters, y.iters, "{label}/{}: iteration counts", x.name);
+    }
+}
+
+// ------------------- multi-tenant tenancy equivalence ------------------
+//
+// The in-switch tenancy layer (ISSUE 10) — per-flow table admission, LRU
+// eviction, engine-occupancy serialization, PFC derating — mutates shared
+// fabric state from `Switch*` and job-wake events, all of which route to
+// the global/coordinator partition.  It is therefore held to the full
+// cross-engine bar: contended scenarios (2 and 4 tenants, paused and
+// calm) must agree across `Typed`/`Parallel {1,2,4}`/`Checked {1,2,4}`
+// at both parallel pins, with identical admission tallies, and eviction
+// decisions must be run-to-run deterministic.
+
+/// `tenants` disjoint jobs sharing one reduction tier: two ranks in each
+/// leaf, all rooted in leaf 0, the table sized to hold exactly `slots`
+/// gradients, optional PFC pause pressure, job `j` starting at
+/// `j * stagger`.
+fn tenancy_spec(n: usize, tenants: usize, slots: usize, pause: bool, stagger: f64) -> ClusterSpec {
+    let (leaves, m) = leaf_shape(n);
+    assert!(2 * tenants <= m, "tenant placements must stay disjoint");
+    let hidden = if n >= 2048 { 128 } else { 512 };
+    let payload = (hidden * hidden * 4) as f64;
+    let base = planner_system(leaves, m);
+    let mut switch = base.switch;
+    switch.reduce_table_bytes = payload * slots as f64;
+    let sys = base.with_switch_reduction(switch).with_pfc(if pause {
+        PfcParams { pause_rate: 100.0, pause_window: 1e-3 }
+    } else {
+        PfcParams::off()
+    });
+    let topo = Topology::leaf_spine(leaves, m, 4.0);
+    let w = Workload {
+        layers: 1,
+        hidden,
+        batch_per_node: 64,
+    };
+    let mut spec = ClusterSpec::new(sys, n).with_topology(topo);
+    for j in 0..tenants {
+        let ranks = (0..leaves).flat_map(|l| [l * m + 2 * j, l * m + 2 * j + 1]).collect();
+        spec = spec.with_job(
+            JobSpec::new(&format!("tenant{j}"), SystemKind::SmartNic { bfp: false }, w, ranks)
+                .with_layer_algos(vec![CollectiveAlgo::SwitchReduce])
+                .starting_at(j as f64 * stagger),
+        );
+    }
+    spec
+}
+
+/// The contended matrix: 2 tenants into a 1-slot table and 4 tenants
+/// into a 2-slot table (half admitted, half per-flow fallback), calm and
+/// paused.
+const TENANCY_MATRIX: [(usize, usize, bool); 4] =
+    [(2, 1, false), (2, 1, true), (4, 2, false), (4, 2, true)];
+
+#[test]
+fn parallel_contended_tenancy_matches_typed_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        for (tenants, slots, pause) in TENANCY_MATRIX {
+            assert_parallel_equiv(
+                &tenancy_spec(n, tenants, slots, pause, 0.0),
+                &format!("tenancy/n={n}/k={tenants}/pause={pause}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn checked_contended_tenancy_is_clean_at_pinned_sizes() {
+    for n in PAR_PINNED {
+        for (tenants, slots, pause) in TENANCY_MATRIX {
+            assert_checked_equiv(
+                &tenancy_spec(n, tenants, slots, pause, 0.0),
+                &format!("tenancy/n={n}/k={tenants}/pause={pause}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn tenancy_outcomes_agree_across_every_engine() {
+    // the admission tallies themselves — not just virtual times — must
+    // be engine-independent: same admitted/evicted/fallback partition,
+    // same eviction count, per job and in aggregate
+    for n in PAR_PINNED {
+        let spec = tenancy_spec(n, 4, 2, true, 0.0);
+        let typed = run_scenario_on(&spec, EngineKind::Typed);
+        assert_eq!(typed.tenancy.requested, 4, "n={n}: every tenant must be classified");
+        assert_eq!(typed.tenancy.admitted, 2, "n={n}: a 2-slot table admits two tenants");
+        for t in PAR_THREADS {
+            for kind in [EngineKind::Parallel { threads: t }, EngineKind::Checked { threads: t }] {
+                let out = run_scenario_on(&spec, kind);
+                assert_eq!(out.tenancy, typed.tenancy, "n={n}/{kind:?}: aggregate tallies");
+                for (a, b) in out.jobs.iter().zip(&typed.jobs) {
+                    assert_eq!(a.tenancy, b.tenancy, "n={n}/{kind:?}/{}", a.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn eviction_decisions_are_deterministic_run_to_run_and_across_engines() {
+    // tenant0 finishes and leaves its slot warm (idle, sticky); tenant1
+    // posts half a second later into a full table and must evict it —
+    // the same decision, bit for bit, on every engine and every run
+    let spec = tenancy_spec(128, 2, 1, false, 0.5);
+    let a = run_scenario_on(&spec, EngineKind::Typed);
+    let b = run_scenario_on(&spec, EngineKind::Typed);
+    assert_eq!(a.tenancy, b.tenancy, "run-to-run tenancy tallies diverged");
+    assert!(a.tenancy.table_evictions >= 1, "the late tenant must evict the warm slot");
+    assert_eq!(a.tenancy.admitted, 2, "both tenants should win the table in turn");
+    assert_eq!(a.tenancy.fallback + a.tenancy.evicted, 0);
+    for t in PAR_THREADS {
+        for kind in [EngineKind::Parallel { threads: t }, EngineKind::Checked { threads: t }] {
+            let out = run_scenario_on(&spec, kind);
+            assert_eq!(out.tenancy, a.tenancy, "{kind:?}: tenancy tallies diverged");
+            for (x, y) in out.jobs.iter().zip(&a.jobs) {
+                assert_eq!(x.tenancy, y.tenancy, "{kind:?}/{}", x.name);
+            }
+        }
     }
 }
 

@@ -202,13 +202,49 @@ fn hierarchical_plan_beats_the_strided_ring_on_the_engine() {
 #[test]
 fn switch_reduction_overtakes_the_nic_ring_when_provisioned() {
     // with line-rate engines the switch-side offload beats even the
-    // contiguous NIC ring: one gradient per Tx link instead of ~two
+    // contiguous NIC ring — but only while the switch tier is its own:
+    // the win is conditional on tenancy, not universal (ISSUE 10)
     let sys = netreduce_sys(8);
     let topo = Topology::leaf_spine(4, 8, 4.0);
     let ranks = topo.contiguous_ranks(32);
     let ring = measure_ar(sys, topo, ranks.clone(), CollectiveAlgo::NicRing);
-    let sw = measure_ar(sys, topo, ranks, CollectiveAlgo::SwitchReduce);
+    let sw = measure_ar(sys, topo, ranks.clone(), CollectiveAlgo::SwitchReduce);
     assert!(sw < ring, "in-switch {sw} vs contiguous ring {ring}");
+
+    // uncontended, the planner agrees and picks the in-switch plan ...
+    let elems = 2048 * 2048;
+    let idle = planner::plan_with(&sys, &topo, &ranks, elems, 1.0, planner::TenancyLoad::idle());
+    assert_eq!(idle.kind, planner::PlanKind::InSwitch, "idle tier: in-switch must win");
+
+    // ... but past the occupancy knee it must flip to a host/NIC plan:
+    // eight tenants queueing on the shared engine octuple the pipeline
+    // term while the ring is untouched
+    let crowded = planner::TenancyLoad {
+        tenants: 8,
+        table_bytes: f64::INFINITY,
+        pause_duty: 1.0,
+    };
+    let late = planner::plan_with(&sys, &topo, &ranks, elems, 1.0, crowded);
+    assert_ne!(late.kind, planner::PlanKind::InSwitch, "8 tenants deep: in-switch must lose");
+    assert!(late.predicted < idle.predicted * 8.0, "the fallback must dodge the queue");
+
+    // a granted table share below one segment prices in-switch infeasible
+    let starved = planner::TenancyLoad {
+        tenants: 2,
+        table_bytes: 1024.0,
+        pause_duty: 1.0,
+    };
+    let t = planner::plan_with(&sys, &topo, &ranks, elems, 1.0, starved);
+    assert_ne!(t.kind, planner::PlanKind::InSwitch, "sub-segment share: per-flow fallback");
+
+    // ... and a pause storm (duty <= 0) stalls the tree outright
+    let storm = planner::TenancyLoad {
+        tenants: 1,
+        table_bytes: f64::INFINITY,
+        pause_duty: 0.0,
+    };
+    let s = planner::plan_with(&sys, &topo, &ranks, elems, 1.0, storm);
+    assert_ne!(s.kind, planner::PlanKind::InSwitch, "pause storm: in-switch must be refused");
 }
 
 #[test]

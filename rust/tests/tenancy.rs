@@ -1,0 +1,196 @@
+//! Adversarial multi-tenant tenancy suite (see docs/INVARIANTS.md):
+//!
+//!  * admission partition: every switch-requesting flow lands in exactly
+//!    one of {admitted, evicted, fallback} — across random tenant counts,
+//!    table scales and layer counts
+//!  * per-flow fallback: a refused tenant runs bit-identically to the
+//!    same job's host/NIC plan run standalone
+//!  * occupancy derating: the contended in-switch all-reduce matches the
+//!    closed form with the engine-occupancy pipeline term
+//!  * degenerate table: a zero-capacity table reproduces the per-switch
+//!    fallback (PR 3) exactly; a sub-segment table reproduces it per flow
+//!
+//! Exact float comparisons here are deliberate: the engine is
+//! deterministic, and the fallback paths must be *the same code*, not a
+//! lookalike.
+#![allow(clippy::float_cmp)]
+
+use ai_smartnic::analytic::model::{inswitch_ar_time_contended, SystemKind};
+use ai_smartnic::cluster::{run_scenario, ClusterSpec, CollectiveAlgo, JobSpec, Topology};
+use ai_smartnic::experiments::tenancy::{
+    tenancy_system, tenant_ranks, LEAVES, NODES_PER_LEAF,
+};
+use ai_smartnic::prop::{forall, gens};
+use ai_smartnic::sysconfig::{SwitchParams, SystemParams, Workload};
+
+const HIDDEN: usize = 1024; // 4 MiB payload: 16 segments of 256 KiB
+
+/// `tenants` identical jobs on the shared leaf–spine reduction tier
+/// (the experiment's geometry: two ranks in each of four leaves, all
+/// rooted in leaf 0), every layer forced through `algo`.
+fn contended_spec(
+    tenants: usize,
+    table_scale: f64,
+    layers: usize,
+    algo: CollectiveAlgo,
+) -> ClusterSpec {
+    let sys = tenancy_system(table_scale, 0.0);
+    let topo = Topology::leaf_spine(LEAVES, NODES_PER_LEAF, 4.0);
+    let w = Workload {
+        layers,
+        hidden: HIDDEN,
+        batch_per_node: 64,
+    };
+    let mut spec = ClusterSpec::new(sys, topo.nodes()).with_topology(topo);
+    for j in 0..tenants {
+        spec = spec.with_job(
+            JobSpec::new(
+                &format!("tenant{j}"),
+                SystemKind::SmartNic { bfp: false },
+                w,
+                tenant_ranks(j),
+            )
+            .with_layer_algos(vec![algo; layers]),
+        );
+    }
+    spec
+}
+
+#[test]
+fn admission_outcomes_partition_every_requesting_flow() {
+    // with SwitchReduce forced on a reduction-capable fabric, *every*
+    // flow must be classified: admitted + evicted + fallback == flows,
+    // at the aggregate and per job, whatever the contention level
+    let scales = [1.0 / 64.0, 1.0, 4.0];
+    let cases = gens::pair(
+        gens::usize_in(1..=4),
+        gens::pair(gens::usize_in(0..=2), gens::usize_in(1..=3)),
+    );
+    forall(&cases, 18, |&(tenants, (scale_idx, layers))| {
+        let scale = scales[scale_idx];
+        let out = run_scenario(&contended_spec(tenants, scale, layers, CollectiveAlgo::SwitchReduce));
+        let flows: usize = out.jobs.iter().map(|j| j.ar_count).sum();
+        let agg = out.tenancy;
+        let per_job_ok = out.jobs.iter().all(|j| {
+            j.tenancy.requested == layers
+                && j.tenancy.admitted + j.tenancy.evicted + j.tenancy.fallback == layers
+        });
+        let sums_ok = agg.requested == flows
+            && flows == tenants * layers
+            && agg.admitted == out.jobs.iter().map(|j| j.tenancy.admitted).sum::<usize>()
+            && agg.evicted == out.jobs.iter().map(|j| j.tenancy.evicted).sum::<usize>()
+            && agg.fallback == out.jobs.iter().map(|j| j.tenancy.fallback).sum::<usize>();
+        // a sub-segment table can admit nobody; a 4x table holds every
+        // job's single refcounted reservation
+        let scale_ok = match scale_idx {
+            0 => agg.admitted == 0,
+            2 => agg.fallback == 0 && agg.evicted == 0,
+            _ => true,
+        };
+        per_job_ok && sums_ok && scale_ok
+    });
+}
+
+/// Flat 8-port switch whose table holds exactly one 4 MiB gradient.
+fn one_slot_flat_sys() -> SystemParams {
+    let base = SystemParams::smartnic_40g();
+    let mut switch = SwitchParams::netreduce(8, &base.net);
+    switch.reduce_table_bytes = 4.0 * 1024.0 * 1024.0;
+    base.with_switch_reduction(switch)
+}
+
+fn flat_job(name: &str, ranks: Vec<usize>, algo: CollectiveAlgo) -> JobSpec {
+    let w = Workload {
+        layers: 1,
+        hidden: HIDDEN,
+        batch_per_node: 64,
+    };
+    JobSpec::new(name, SystemKind::SmartNic { bfp: false }, w, ranks).with_layer_algos(vec![algo])
+}
+
+#[test]
+fn refused_tenant_runs_bit_identically_to_its_standalone_host_plan() {
+    // two disjoint 4-rank tenants on one flat switch whose table holds
+    // exactly one gradient: tenant a admits, tenant b is refused per
+    // flow and must execute the *same* NIC ring it would run standalone
+    let sys = one_slot_flat_sys();
+    let contended = run_scenario(
+        &ClusterSpec::new(sys, 8)
+            .with_job(flat_job("a", (0..4).collect(), CollectiveAlgo::SwitchReduce))
+            .with_job(flat_job("b", (4..8).collect(), CollectiveAlgo::SwitchReduce)),
+    );
+    assert_eq!(contended.jobs[0].tenancy.admitted, 1, "tenant a should hold the table");
+    assert_eq!(contended.jobs[1].tenancy.fallback, 1, "tenant b should fall back per flow");
+    assert_eq!(contended.tenancy.requested, 2);
+
+    let solo = run_scenario(
+        &ClusterSpec::new(sys, 8).with_job(flat_job("b", (4..8).collect(), CollectiveAlgo::NicRing)),
+    );
+    assert_eq!(solo.jobs[0].tenancy.requested, 0, "a NIC ring never asks the switch");
+    assert_eq!(
+        contended.jobs[1].duration.to_bits(),
+        solo.jobs[0].duration.to_bits(),
+        "fallback ring {} vs standalone ring {}",
+        contended.jobs[1].duration,
+        solo.jobs[0].duration
+    );
+    assert_eq!(contended.jobs[1].mean_ar.to_bits(), solo.jobs[0].mean_ar.to_bits());
+}
+
+#[test]
+fn contended_inswitch_time_matches_the_occupancy_derated_closed_form() {
+    // a 4x table admits every tenant in full (window == segs), so the
+    // only contention is the shared root engine: the last tenant's
+    // all-reduce must track fill + (tenants*segs - 1) * bottleneck
+    let elems = HIDDEN * HIDDEN;
+    let granted = elems as f64 * 4.0; // each tenant's full reservation
+    let sys = tenancy_system(4.0, 0.0);
+    let last_ar = |tenants: usize| {
+        let out = run_scenario(&contended_spec(tenants, 4.0, 1, CollectiveAlgo::SwitchReduce));
+        assert_eq!(out.tenancy.admitted, tenants, "4x table must admit all {tenants}");
+        out.jobs.iter().map(|j| j.mean_ar).fold(0.0f64, f64::max)
+    };
+    // m = 2 ranks/leaf, l = 4 leaves, effective oversubscription 1.0
+    // (2 of 8 ranks per leaf through a 4x-tapered uplink), duty 1.0
+    let form =
+        |tenants: usize| inswitch_ar_time_contended(&sys, elems, 2, LEAVES, 1.0, 1.0, tenants, granted, 1.0);
+
+    let solo = last_ar(1);
+    let solo_err = (solo - form(1)).abs() / form(1);
+    assert!(solo_err < 1e-9, "solo: engine {} vs closed form {}", solo, form(1));
+
+    let mut prev = solo;
+    for tenants in [2, 4] {
+        let measured = last_ar(tenants);
+        assert!(measured > prev, "{tenants} tenants must finish later than {prev}");
+        let err = (measured - form(tenants)).abs() / form(tenants);
+        assert!(
+            err < 0.05,
+            "{tenants} tenants: engine {} vs contended form {} ({:.2}% off)",
+            measured,
+            form(tenants),
+            err * 100.0
+        );
+        prev = measured;
+    }
+}
+
+#[test]
+fn zero_capacity_table_degenerates_to_the_per_switch_fallback_exactly() {
+    // table = 0 disables the reduction tier outright: the planner never
+    // sees an in-switch candidate, nothing is classified, and the run is
+    // bit-identical to the forced NIC ring (PR 3's per-switch fallback)
+    let zero = run_scenario(&contended_spec(1, 0.0, 1, CollectiveAlgo::SwitchReduce));
+    let ring = run_scenario(&contended_spec(1, 0.0, 1, CollectiveAlgo::NicRing));
+    assert_eq!(zero.tenancy.requested, 0, "no table, no admission request");
+    assert_eq!(zero.jobs[0].duration.to_bits(), ring.jobs[0].duration.to_bits());
+    assert_eq!(zero.jobs[0].mean_ar.to_bits(), ring.jobs[0].mean_ar.to_bits());
+
+    // a sub-segment table keeps the tier alive but refuses each flow
+    // individually: same ring timing, now classified as a fallback
+    let tiny = run_scenario(&contended_spec(1, 1.0 / 64.0, 1, CollectiveAlgo::SwitchReduce));
+    let tiny_ring = run_scenario(&contended_spec(1, 1.0 / 64.0, 1, CollectiveAlgo::NicRing));
+    assert_eq!(tiny.jobs[0].tenancy.fallback, 1, "sub-segment table must refuse per flow");
+    assert_eq!(tiny.jobs[0].duration.to_bits(), tiny_ring.jobs[0].duration.to_bits());
+    assert_eq!(tiny.jobs[0].mean_ar.to_bits(), tiny_ring.jobs[0].mean_ar.to_bits());
+}
